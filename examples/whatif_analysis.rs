@@ -1,0 +1,75 @@
+//! §4.3 usages: what-if analysis (pipeline toggles, re-partitioning) and
+//! runtime monitoring (host vs network straggler classification).
+//!
+//!     cargo run --release --example whatif_analysis
+
+use mxdag::monitor::{detect_stragglers, replan_cpm};
+use mxdag::sched::{evaluate, FairScheduler, Plan, Scheduler};
+use mxdag::sim::{Annotations, Cluster, Policy};
+use mxdag::util::bench::Table;
+use mxdag::whatif::{pipeline_whatif, repartition};
+use mxdag::workloads;
+
+fn main() -> anyhow::Result<()> {
+    // --- what-if: pipeline toggles on the Fig. 3 scenario --------------
+    let (g, _) = workloads::fig3_dag();
+    let cluster = workloads::figs::fig3_cluster();
+    let base = Plan { ann: Annotations::default(), policy: Policy::fifo() };
+    let (baseline, toggles) = pipeline_whatif(&g, &cluster, &base).unwrap();
+    let mut t = Table::new(
+        &format!("what-if: pipeline toggles (baseline JCT {baseline:.2})"),
+        &["JCT", "delta"],
+    );
+    for w in &toggles {
+        t.row_f64(&w.label, &[w.jct, w.delta]);
+    }
+    t.print();
+
+    // --- what-if: re-partition a monolithic compute task ----------------
+    let mut b = mxdag::mxdag::MXDag::builder();
+    let pre = b.compute("extract", 0, 0.5);
+    let heavy = b.compute("transform", 0, 8.0);
+    let post = b.compute("load", 0, 0.5);
+    b.chain(&[pre, heavy, post]);
+    let etl = b.finalize().unwrap();
+    let cluster4 = Cluster::uniform(4);
+    let mono = evaluate(&etl, &cluster4, &FairScheduler.plan(&etl, &cluster4))?.makespan;
+    let mut t = Table::new("what-if: re-partition `transform`", &["JCT", "speedup"]);
+    t.row_f64("monolithic", &[mono, 1.0]);
+    for k in [2usize, 4] {
+        let hosts: Vec<usize> = (0..k).collect();
+        let split = repartition(&etl, heavy, &hosts, 0.2, 0.2).unwrap();
+        let jct = evaluate(&split, &cluster4, &FairScheduler.plan(&split, &cluster4))?.makespan;
+        t.row_f64(&format!("{k}-way shards"), &[jct, mono / jct]);
+    }
+    t.print();
+
+    // --- monitoring: classify stragglers --------------------------------
+    let g = workloads::fig1_dag();
+    let plan = Plan::fair();
+    let healthy = Cluster::uniform(3);
+    let expected = evaluate(&g, &healthy, &plan)?;
+
+    println!("\n== monitor: degraded uplink on host 1 ==");
+    let mut bad = Cluster::uniform(3);
+    bad.hosts[1].nic_up = 0.2;
+    let observed = evaluate(&g, &bad, &plan)?;
+    for s in detect_stragglers(&g, &expected, &observed, 1.5) {
+        println!("  straggler: {} ({:?}) {:.1}x slower", s.name, s.kind, s.slowdown);
+    }
+    let replanned = replan_cpm(&g, &observed);
+    println!(
+        "  re-planned critical path length: {:.2} (was {:.2})",
+        replanned.makespan,
+        mxdag::mxdag::cpm(&g).makespan
+    );
+
+    println!("== monitor: degraded CPU on host 1 ==");
+    let mut bad = Cluster::uniform(3);
+    bad.hosts[1].cores = 0.2;
+    let observed = evaluate(&g, &bad, &plan)?;
+    for s in detect_stragglers(&g, &expected, &observed, 1.5) {
+        println!("  straggler: {} ({:?}) {:.1}x slower", s.name, s.kind, s.slowdown);
+    }
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT lowering: JAX (L2, calling the Pallas L1 kernel) → HLO **text**.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT the serialized
+``HloModuleProto`` — is the interchange format: jax ≥ 0.5 emits protos
+with 64-bit instruction ids which the Rust side's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``). The HLO text parser reassigns ids,
+so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import matmul as pk
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shape_entry(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_all(cfg: M.ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    param_specs = [_spec(s) for s in cfg.param_shapes()]
+    x_spec = _spec((cfg.batch, cfg.input_dim))
+    y_spec = _spec((cfg.batch,), jnp.int32)
+
+    artifacts = {}
+
+    def emit(name: str, fn, specs, n_outputs: int, inputs_desc: List[dict]):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": fname,
+            "inputs": inputs_desc,
+            "n_outputs": n_outputs,
+        }
+        print(f"  wrote {fname}: {len(text)} chars, "
+              f"{len(inputs_desc)} inputs -> {n_outputs} outputs")
+
+    nparam = len(param_specs)
+    pdesc = [_shape_entry(s) for s in cfg.param_shapes()]
+    xdesc = _shape_entry((cfg.batch, cfg.input_dim))
+    ydesc = _shape_entry((cfg.batch,), "s32")
+
+    # forward(params..., x) -> (logits,)
+    emit(
+        "forward",
+        lambda *a: (M.forward(cfg, list(a[:nparam]), a[nparam]),),
+        [*param_specs, x_spec],
+        1,
+        [*pdesc, xdesc],
+    )
+
+    # grad_step(params..., x, y) -> (loss, *grads)
+    emit(
+        "grad_step",
+        lambda *a: M.loss_and_grads(cfg, list(a[:nparam]), a[nparam], a[nparam + 1]),
+        [*param_specs, x_spec, y_spec],
+        1 + nparam,
+        [*pdesc, xdesc, ydesc],
+    )
+
+    # train_step(params..., x, y) -> (loss, *new_params)
+    emit(
+        "train_step",
+        lambda *a: M.train_step(cfg, list(a[:nparam]), a[nparam], a[nparam + 1]),
+        [*param_specs, x_spec, y_spec],
+        1 + nparam,
+        [*pdesc, xdesc, ydesc],
+    )
+
+    # per-layer forward artifacts: the coordinator runs the next step's
+    # forward pass layer by layer so each layer only waits for *its own*
+    # pulled parameters (the ByteScheduler overlap the MXDAG schedule
+    # exploits). act(x @ w + b) via the Pallas fused kernel.
+    sizes = (cfg.input_dim, *cfg.hidden, cfg.classes)
+    for i, (din, dout) in enumerate(cfg.dims):
+        act = "relu" if i < cfg.n_layers - 1 else "none"
+        emit(
+            f"layer_fwd_{i}",
+            lambda x, w, bb, _act=act: (pk.linear(x, w, bb, activation=_act),),
+            [_spec((cfg.batch, din)), _spec((din, dout)), _spec((dout,))],
+            1,
+            [
+                _shape_entry((cfg.batch, din)),
+                _shape_entry((din, dout)),
+                _shape_entry((dout,)),
+            ],
+        )
+    del sizes
+
+    # standalone Pallas matmul artifact (quickstart + runtime bench)
+    mm_m, mm_k, mm_n = 128, 256, 128
+    emit(
+        "matmul",
+        lambda x, w: (pk.matmul(x, w),),
+        [_spec((mm_m, mm_k)), _spec((mm_k, mm_n))],
+        1,
+        [_shape_entry((mm_m, mm_k)), _shape_entry((mm_k, mm_n))],
+    )
+
+    manifest = {
+        "model": {
+            "input_dim": cfg.input_dim,
+            "hidden": list(cfg.hidden),
+            "classes": cfg.classes,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+            "n_layers": cfg.n_layers,
+            "param_shapes": [list(s) for s in cfg.param_shapes()],
+            "param_count": int(cfg.param_count()),
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({cfg.param_count()} params, "
+          f"{cfg.n_layers} layers)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--input-dim", type=int, default=784)
+    ap.add_argument("--hidden", type=int, nargs="*", default=[256, 256])
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.05)
+    args = ap.parse_args()
+    cfg = M.ModelConfig(
+        input_dim=args.input_dim,
+        hidden=tuple(args.hidden),
+        classes=args.classes,
+        batch=args.batch,
+        lr=args.lr,
+    )
+    print(f"AOT-lowering MLP {args.input_dim}-{args.hidden}-{args.classes} "
+          f"batch={args.batch} to {args.out_dir}")
+    lower_all(cfg, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 — Pallas kernels for the paper's compute hot-spot (dense layers)."""
+
+from . import matmul, ref  # noqa: F401

@@ -1,0 +1,178 @@
+"""L1 — Pallas tiled matmul kernels (the compute hot-spot of the DDL use case).
+
+The MXDAG paper's end-to-end example (§4.1.1) is data-parallel distributed
+deep learning; the compute MXTasks (FP_i / BP_i) are dominated by dense
+matmuls. We express them as Pallas kernels tiled for TPU:
+
+  * block sizes default to 128 so the inner tile feeds the 128x128 MXU
+    systolic array directly;
+  * the (bm, bk) + (bk, bn) + (bm, bn) f32 working set is kept well under
+    VMEM (~16 MiB): 128^2 * 4B * 3 = 192 KiB per grid step;
+  * the k dimension is walked by the innermost grid axis with an
+    accumulate-into-output pattern (out_ref += partial), the standard
+    Pallas TPU matmul schedule.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for both testing and
+the AOT artifacts. On a real TPU the same BlockSpecs compile natively;
+DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf carry the
+VMEM/MXU analysis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; grid axis 2 walks k and accumulates."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps, activation):
+    """Fused matmul + bias (+ activation) tile kernel."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "tanh":
+            acc = jnp.tanh(acc)
+        o_ref[...] = acc
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (>=1). Keeps the grid
+    exact without padding when possible."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _pad2(a, bm, bn):
+    m, n = a.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(x, w, *, block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    """``x @ w`` via the Pallas tile kernel.
+
+    Arbitrary (m, k) x (k, n) shapes are handled by zero-padding up to the
+    block grid and slicing the result back; zero padding is exact for
+    matmul.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    xp = _pad2(x.astype(out_dtype), bm, bk)
+    wp = _pad2(w.astype(out_dtype), bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def linear(
+    x,
+    w,
+    b,
+    *,
+    activation: str = "none",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+):
+    """Fused ``act(x @ w + b)`` via a single Pallas kernel.
+
+    ``activation`` in {"none", "relu", "tanh"}.
+    """
+    assert activation in ("none", "relu", "tanh"), activation
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    out_dtype = jnp.promote_types(jnp.promote_types(x.dtype, w.dtype), b.dtype)
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    xp = _pad2(x.astype(out_dtype), bm, bk)
+    wp = _pad2(w.astype(out_dtype), bk, bn)
+    bp = _pad2(b.astype(out_dtype)[None, :], 1, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    kern = functools.partial(
+        _linear_kernel, nsteps=grid[2], activation=activation
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM working-set estimate for one grid step (perf model)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU issue slots doing useful work for an (m,k)x(k,n)
+    matmul padded up to the (bm,bn,bk) grid. 1.0 == perfectly tiled."""
+    pm = ((m + bm - 1) // bm) * bm
+    pn = ((n + bn - 1) // bn) * bn
+    pk = ((k + bk - 1) // bk) * bk
+    return (m * n * k) / float(pm * pn * pk)

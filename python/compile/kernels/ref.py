@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x, w):
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    return jnp.matmul(
+        x.astype(out_dtype), w.astype(out_dtype),
+        preferred_element_type=out_dtype,
+    )
+
+
+def linear(x, w, b, *, activation: str = "none"):
+    out_dtype = jnp.promote_types(jnp.promote_types(x.dtype, w.dtype), b.dtype)
+    y = matmul(x, w).astype(out_dtype) + b.astype(out_dtype)[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    else:
+        assert activation == "none", activation
+    return y

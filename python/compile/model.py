@@ -1,0 +1,163 @@
+"""L2 — the DDL use-case model (§4.1.1): an MLP classifier in JAX.
+
+Every dense layer goes through the Pallas ``linear`` kernel
+(kernels/matmul.py), so the kernel lowers into the same HLO module that
+the Rust coordinator executes via PJRT.
+
+Exported computations (AOT-lowered by aot.py):
+  * ``forward(params, x) -> logits``
+  * ``loss_and_grads(params, x, y) -> (loss, *grads)``   # DDL worker step
+  * ``train_step(params, x, y) -> (loss, *new_params)``  # fused single-host
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pk
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """MLP configuration. Defaults: MNIST-like synthetic classification."""
+
+    input_dim: int = 784
+    hidden: Tuple[int, ...] = (256, 256)
+    classes: int = 10
+    batch: int = 64
+    lr: float = 0.05
+    seed: int = 0
+    use_pallas: bool = True  # False => pure-jnp oracle layers (for tests)
+
+    @property
+    def dims(self) -> List[Tuple[int, int]]:
+        sizes = (self.input_dim, *self.hidden, self.classes)
+        return list(zip(sizes[:-1], sizes[1:]))
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims)
+
+    def param_shapes(self) -> List[Tuple[int, ...]]:
+        """Flat param list: [w0, b0, w1, b1, ...]."""
+        shapes: List[Tuple[int, ...]] = []
+        for din, dout in self.dims:
+            shapes.append((din, dout))
+            shapes.append((dout,))
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for s in self.param_shapes())
+
+
+def init_params(cfg: ModelConfig) -> List[jax.Array]:
+    """He-initialised flat parameter list [w0, b0, w1, b1, ...]."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params: List[jax.Array] = []
+    for din, dout in cfg.dims:
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / din)
+        params.append(jax.random.normal(sub, (din, dout), jnp.float32) * scale)
+        params.append(jnp.zeros((dout,), jnp.float32))
+    return params
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pallas_linear(activation: str, x, w, b):
+    """Fused Pallas linear with a hand-written VJP.
+
+    The Pallas kernel uses ``pl.program_id`` grid accumulation, which JAX
+    cannot JVP through; the backward pass is written explicitly — and is
+    itself three Pallas matmuls, exactly how a TPU implementation would
+    structure dgrad/wgrad.
+    """
+    return pk.linear(x, w, b, activation=activation)
+
+
+def _pallas_linear_fwd(activation, x, w, b):
+    y = pk.linear(x, w, b, activation=activation)
+    return y, (x, w, y)
+
+
+def _pallas_linear_bwd(activation, res, dy):
+    x, w, y = res
+    if activation == "relu":
+        dz = dy * (y > 0).astype(dy.dtype)
+    elif activation == "tanh":
+        dz = dy * (1.0 - y * y)
+    else:
+        dz = dy
+    dx = pk.matmul(dz, w.T)
+    dw = pk.matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+_pallas_linear.defvjp(_pallas_linear_fwd, _pallas_linear_bwd)
+
+
+def _linear(cfg: ModelConfig, x, w, b, activation: str):
+    if cfg.use_pallas:
+        return _pallas_linear(activation, x, w, b)
+    return kref.linear(x, w, b, activation=activation)
+
+
+def forward(cfg: ModelConfig, params: Sequence[jax.Array], x: jax.Array):
+    """MLP forward pass; relu on hidden layers, raw logits out."""
+    h = x
+    nl = cfg.n_layers
+    for i in range(nl):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "relu" if i < nl - 1 else "none"
+        h = _linear(cfg, h, w, b, act)
+    return h
+
+
+def loss_fn(cfg: ModelConfig, params: Sequence[jax.Array], x, y):
+    """Mean softmax cross-entropy; y is int32 class labels."""
+    logits = forward(cfg, params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def loss_and_grads(cfg: ModelConfig, params: Sequence[jax.Array], x, y):
+    """The DDL worker step: returns (loss, *grads) as a flat tuple.
+
+    The Rust coordinator executes this artifact per worker, then runs the
+    push/pull network MXTasks (gradient aggregation) itself.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, x, y)
+    )(list(params))
+    return (loss, *grads)
+
+
+def train_step(cfg: ModelConfig, params: Sequence[jax.Array], x, y):
+    """Fused single-host SGD step: returns (loss, *new_params)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, x, y)
+    )(list(params))
+    new_params = [p - cfg.lr * g for p, g in zip(params, grads)]
+    return (loss, *new_params)
+
+
+def synthetic_batch(cfg: ModelConfig, step: int):
+    """Deterministic synthetic classification data: class-dependent
+    Gaussian blobs, learnable by an MLP (loss provably decreases)."""
+    key = jax.random.PRNGKey(1000 + step)
+    ky, kx = jax.random.split(key)
+    y = jax.random.randint(ky, (cfg.batch,), 0, cfg.classes)
+    centers = jax.random.normal(
+        jax.random.PRNGKey(42), (cfg.classes, cfg.input_dim), jnp.float32
+    )
+    x = centers[y] + 0.3 * jax.random.normal(
+        kx, (cfg.batch, cfg.input_dim), jnp.float32
+    )
+    return x, y

@@ -1,0 +1,70 @@
+"""AOT path: lowering produces parseable HLO text + a consistent manifest."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+
+TINY = M.ModelConfig(input_dim=16, hidden=(8,), classes=4, batch=4, lr=0.1)
+
+
+@pytest.fixture(scope="module")
+def lowered(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.lower_all(TINY, out)
+    return out, manifest
+
+
+def test_all_artifacts_written(lowered):
+    out, manifest = lowered
+    for name, meta in manifest["artifacts"].items():
+        path = os.path.join(out, meta["file"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text, name
+
+
+def test_manifest_roundtrip(lowered):
+    out, manifest = lowered
+    on_disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert on_disk == manifest
+
+
+def test_manifest_model_section(lowered):
+    _, manifest = lowered
+    m = manifest["model"]
+    assert m["param_shapes"] == [[16, 8], [8], [8, 4], [4]]
+    assert m["param_count"] == 16 * 8 + 8 + 8 * 4 + 4
+    assert m["n_layers"] == 2
+
+
+def test_grad_step_signature(lowered):
+    _, manifest = lowered
+    gs = manifest["artifacts"]["grad_step"]
+    nparam = len(manifest["model"]["param_shapes"])
+    # inputs: params..., x, y ; outputs: loss + grads
+    assert len(gs["inputs"]) == nparam + 2
+    assert gs["n_outputs"] == 1 + nparam
+    assert gs["inputs"][-1]["dtype"] == "s32"
+
+
+def test_hlo_text_has_tuple_root(lowered):
+    out, manifest = lowered
+    text = open(os.path.join(out, manifest["artifacts"]["forward"]["file"])).read()
+    # lowered with return_tuple=True: root is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_to_hlo_text_simple_fn():
+    import jax
+
+    def fn(a, b):
+        return (a * b + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text and "ENTRY" in text

@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is THE
+core correctness signal for everything the Rust runtime later executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (256, 512, 128), (64, 64, 64), (128, 384, 256),
+])
+def test_matmul_block_aligned(m, k, n):
+    x = _rand(0, (m, k), jnp.float32)
+    w = _rand(1, (k, n), jnp.float32)
+    # tolerance sized for f32 blocked-vs-flat accumulation order at k<=512
+    np.testing.assert_allclose(
+        pk.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (3, 5, 7), (17, 129, 33), (100, 100, 100), (127, 255, 63),
+])
+def test_matmul_ragged_shapes(m, k, n):
+    x = _rand(2, (m, k), jnp.float32)
+    w = _rand(3, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        pk.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        pk.matmul(x, w), ref.matmul(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dt=st.sampled_from(["float32", "bfloat16"]),
+    m=st.sampled_from([8, 32, 128]),
+    k=st.sampled_from([16, 64, 256]),
+)
+def test_matmul_dtypes(dt, m, k):
+    dtype = jnp.dtype(dt)
+    x = _rand(7, (m, k), dtype)
+    w = _rand(8, (k, 32), dtype)
+    got = pk.matmul(x, w)
+    want = ref.matmul(x, w)
+    assert got.dtype == want.dtype
+    # bf16 keeps ~8 mantissa bits; tiled vs flat accumulation at k<=256
+    # legitimately differs by ~2^-3 relative on near-cancelling sums
+    tol = 1e-4 if dt == "float32" else 1.5e-1
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_custom_blocks():
+    x = _rand(9, (64, 96), jnp.float32)
+    w = _rand(10, (96, 48), jnp.float32)
+    got = pk.matmul(x, w, block_m=16, block_n=16, block_k=32)
+    np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_contraction_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 4))
+    with pytest.raises(AssertionError):
+        pk.matmul(x, w)
+
+
+# ---------------------------------------------------------------- linear
+
+@pytest.mark.parametrize("activation", ["none", "relu", "tanh"])
+@pytest.mark.parametrize("m,k,n", [(64, 128, 32), (33, 77, 11)])
+def test_linear_fused(activation, m, k, n):
+    x = _rand(4, (m, k), jnp.float32)
+    w = _rand(5, (k, n), jnp.float32)
+    b = _rand(6, (n,), jnp.float32)
+    np.testing.assert_allclose(
+        pk.linear(x, w, b, activation=activation),
+        ref.linear(x, w, b, activation=activation),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+    act=st.sampled_from(["none", "relu", "tanh"]),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_hypothesis(m, k, n, act, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+    np.testing.assert_allclose(
+        pk.linear(x, w, b, activation=act),
+        ref.linear(x, w, b, activation=act),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_linear_bad_activation_raises():
+    x = jnp.zeros((4, 4))
+    b = jnp.zeros((4,))
+    with pytest.raises(AssertionError):
+        pk.linear(x, x, b, activation="gelu")
+
+
+# ------------------------------------------------------------ perf model
+
+def test_vmem_estimate_default_blocks_fit():
+    # default 128^3 tiles: 192 KiB << 16 MiB VMEM
+    assert pk.vmem_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert pk.vmem_bytes(128, 128, 128) < 16 * 2**20
+
+
+def test_mxu_utilization_bounds():
+    assert pk.mxu_utilization(128, 128, 128, 128, 128, 128) == 1.0
+    u = pk.mxu_utilization(100, 100, 100, 128, 128, 128)
+    assert 0.0 < u < 1.0
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 100, 128, 129, 1000]:
+        b = pk._pick_block(dim, 128)
+        assert 1 <= b <= min(dim, 128) and dim % b == 0

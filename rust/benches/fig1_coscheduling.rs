@@ -1,0 +1,55 @@
+//! Fig. 1 — network-aware fair share vs compute/network co-scheduling.
+//! Regenerates the T1/T2 comparison and sweeps the flow-size ratio to
+//! show where co-scheduling's win grows.
+
+use mxdag::sched::{run, FairScheduler, MxScheduler};
+use mxdag::sim::Cluster;
+use mxdag::util::bench::{bench, bench_header, Table};
+use mxdag::mxdag::MXDag;
+use mxdag::workloads::fig1_dag;
+
+fn fig1_sized(flow: f64) -> MXDag {
+    let mut b = MXDag::builder();
+    let a = b.compute("A", 0, 0.0);
+    let f1 = b.flow("f1", 0, 1, flow);
+    let bt = b.compute("B", 1, 1.0);
+    let f2 = b.flow("f2", 1, 2, flow);
+    let f3 = b.flow("f3", 0, 2, flow);
+    let c = b.compute("C", 2, 1.0);
+    b.chain(&[a, f1, bt, f2, c]);
+    b.dep(a, f3).dep(f3, c);
+    b.finalize().unwrap()
+}
+
+fn main() {
+    let cluster = Cluster::uniform(3);
+
+    let g = fig1_dag();
+    let fair = run(&FairScheduler, &g, &cluster).unwrap();
+    let mx = run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+    let mut t = Table::new("Fig 1 — fair share (T1) vs co-scheduling (T2)", &["JCT", "C starts"]);
+    let c = g.by_name("C").unwrap();
+    t.row_f64("network-aware fair", &[fair.makespan, fair.start_of(c)]);
+    t.row_f64("mxdag co-schedule", &[mx.makespan, mx.start_of(c)]);
+    t.print();
+    assert!(mx.makespan < fair.makespan, "paper's direction must hold");
+
+    let mut t = Table::new("flow-size sweep (JCT)", &["fair", "mxdag", "speedup"]);
+    for flow in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let g = fig1_sized(flow);
+        let f = run(&FairScheduler, &g, &cluster).unwrap().makespan;
+        let m = run(&MxScheduler::without_pipelining(), &g, &cluster)
+            .unwrap()
+            .makespan;
+        t.row_f64(&format!("flow={flow}"), &[f, m, f / m]);
+    }
+    t.print();
+
+    bench_header("scheduling + simulation cost");
+    bench("fair: plan+simulate fig1", || {
+        run(&FairScheduler, &g, &cluster).unwrap();
+    });
+    bench("mxdag: plan+simulate fig1", || {
+        run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+    });
+}

@@ -1,0 +1,68 @@
+//! Fig. 2 — coflow's two failure modes: (c) asymmetric compute times on
+//! a symmetric topology; (d) the Wukong asymmetric topology under all
+//! three candidate coflow groupings (b1/b2/b3).
+
+use mxdag::sched::{run, CoflowScheduler, Grouping, MxScheduler};
+use mxdag::sim::Cluster;
+use mxdag::util::bench::Table;
+use mxdag::workloads::{fig2a_dag, wukong_dag, WukongCoflows};
+
+fn main() {
+    // (c): sweep compute asymmetry t1/t2
+    let cluster = Cluster::uniform(4);
+    let mut t = Table::new(
+        "Fig 2(c) — symmetric topology, asymmetric compute (t2=1)",
+        &["mxdag", "coflow", "coflow/mxdag"],
+    );
+    for t1 in [1.0, 2.0, 3.0, 5.0] {
+        let (g, flows) = fig2a_dag(t1, 1.0);
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster)
+            .unwrap()
+            .makespan;
+        let co = run(
+            &CoflowScheduler::new(Grouping::Explicit(vec![
+                vec![flows[0], flows[1]],
+                vec![flows[2], flows[3]],
+            ])),
+            &g,
+            &cluster,
+        )
+        .unwrap()
+        .makespan;
+        t.row_f64(&format!("t1={t1}"), &[mx, co, co / mx]);
+        assert!(mx <= co + 1e-9);
+    }
+    t.print();
+
+    // (d): Wukong DAG under the three groupings
+    let (g, flows) = wukong_dag();
+    let cluster = Cluster::uniform(6);
+    let mx = run(&MxScheduler::without_pipelining(), &g, &cluster)
+        .unwrap()
+        .makespan;
+    let mut t = Table::new("Fig 2(d) — Wukong DAG", &["JCT", "vs mxdag"]);
+    t.row_f64("mxdag per-flow", &[mx, 1.0]);
+    for v in WukongCoflows::all() {
+        let co = run(
+            &CoflowScheduler::new(Grouping::Explicit(v.groups(&flows))),
+            &g,
+            &cluster,
+        )
+        .unwrap()
+        .makespan;
+        t.row_f64(v.label(), &[co, co / mx]);
+        assert!(mx < co, "every coflow grouping must lose (paper Fig 2d)");
+    }
+    // auto groupings for reference
+    for (label, grouping) in [
+        ("coflow-auto-bydst", Grouping::ByDst),
+        ("coflow-auto-bysrc", Grouping::BySrc),
+        ("coflow-auto-bylevel", Grouping::ByLevel),
+    ] {
+        let co = run(&CoflowScheduler::new(grouping), &g, &cluster)
+            .unwrap()
+            .makespan;
+        t.row_f64(label, &[co, co / mx]);
+    }
+    t.print();
+}

@@ -1,0 +1,44 @@
+//! Fig. 3 — pipelineability choices: off-critical pipelining is neutral
+//! (case 1), critical-path pipelining helps (case 2), contending
+//! pipelining hurts (case 3). Plus the MXDAG scheduler's automatic
+//! what-if search, which adopts case-2 and refuses case-3.
+
+use mxdag::sched::{evaluate, run, MxScheduler, Plan};
+use mxdag::sim::{Annotations, Policy};
+use mxdag::util::bench::{bench, bench_header, Table};
+use mxdag::workloads::{fig3_dag, fig3_pipeline_sets, figs::fig3_cluster};
+
+fn main() {
+    let (g, _) = fig3_dag();
+    let cluster = fig3_cluster();
+
+    let mut results = Vec::new();
+    let mut t = Table::new("Fig 3 — pipeline choices under the FIFO runtime", &["JCT"]);
+    for (name, pipes) in fig3_pipeline_sets() {
+        let pipelined = pipes.iter().map(|n| g.by_name(n).unwrap()).collect();
+        let plan = Plan {
+            ann: Annotations { pipelined, ..Default::default() },
+            policy: Policy::fifo(),
+        };
+        let jct = evaluate(&g, &cluster, &plan).unwrap().makespan;
+        t.row_f64(name, &[jct]);
+        results.push(jct);
+    }
+    let mx = run(&MxScheduler::default(), &g, &cluster).unwrap().makespan;
+    t.row_f64("mxdag auto (priority + search)", &[mx]);
+    t.print();
+
+    let (base, case1, case2, case3) = (results[0], results[1], results[2], results[3]);
+    assert!((case1 - base).abs() < 1e-9, "case 1: no impact");
+    assert!(case2 < base, "case 2: improves");
+    assert!(case3 > base, "case 3: degrades");
+    assert!(mx <= case2 + 1e-9, "auto search must find the best choice");
+    println!("\ncase ordering holds: case2 {case2} < base {base} = case1 < case3 {case3}; auto {mx}");
+
+    bench_header("pipeline search cost");
+    bench("mxdag plan with what-if search", || {
+        MxScheduler::default();
+        let s = MxScheduler::default();
+        let _ = mxdag::sched::Scheduler::plan(&s, &g, &cluster);
+    });
+}

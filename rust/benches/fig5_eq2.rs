@@ -1,0 +1,60 @@
+//! Fig. 5 / Eq. (2) — the pipelined-path closed form vs the chunk-level
+//! simulation: Len = Σ Unit_i + max Size_i − max Unit_i (full resources).
+//! The sim must match the analytic value exactly on unit-divisible sizes.
+
+use mxdag::mxdag::{path, MXDag};
+use mxdag::sim::{expand, simulate, Annotations, Cluster, SimConfig};
+use mxdag::util::bench::{bench, bench_header, Table};
+
+fn two_stage(s1: f64, u1: f64, s2: f64, u2: f64) -> (MXDag, usize, usize) {
+    let mut b = MXDag::builder();
+    let a = b.compute_full("producer", 0, s1, u1);
+    let f = b.flow_full("stream", 0, 1, s2, u2);
+    b.dep(a, f);
+    (b.finalize().unwrap(), a, f)
+}
+
+fn main() {
+    let cluster = Cluster::uniform(2);
+    let mut t = Table::new(
+        "Fig 5 / Eq 2 — analytic vs simulated pipelined pair",
+        &["Eq.(2)", "simulated", "sequential"],
+    );
+    // aligned chunk counts: Eq.(2) is exact (see integration_sim for the
+    // ±one-unit quantization bound on mismatched counts)
+    let cases = [
+        (4.0, 1.0, 4.0, 1.0),
+        (8.0, 2.0, 4.0, 1.0),
+        (6.0, 2.0, 9.0, 3.0),
+        (10.0, 2.5, 2.0, 0.5),
+        (5.0, 5.0, 5.0, 1.0), // producer not pipelineable
+    ];
+    for (s1, u1, s2, u2) in cases {
+        let (g, a, f) = two_stage(s1, u1, s2, u2);
+        let eq2 = if g.task(a).pipelineable() && g.task(f).pipelineable() {
+            path::len_pipe(&g, &[a, f], &path::full_rsrc)
+        } else {
+            // one-sided: no overlap possible
+            path::len_seq(&g, &[a, f], &path::full_rsrc)
+        };
+        let ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+        let sim = simulate(&expand(&g, &ann), &cluster, &SimConfig::default())
+            .unwrap()
+            .makespan;
+        let seq = path::len_seq(&g, &[a, f], &path::full_rsrc);
+        t.row_f64(&format!("S=({s1},{s2}) U=({u1},{u2})"), &[eq2, sim, seq]);
+        assert!(
+            (eq2 - sim).abs() < 1e-9,
+            "Eq.(2) {eq2} must equal simulation {sim}"
+        );
+    }
+    t.print();
+    println!("\nEq.(2) == chunk-level simulation on all cases");
+
+    bench_header("chunk-expansion + simulation cost");
+    let (g, a, f) = two_stage(100.0, 1.0, 100.0, 1.0); // 100-chunk pipeline
+    bench("expand+simulate 2x100 chunks", || {
+        let ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+        simulate(&expand(&g, &ann), &cluster, &SimConfig::default()).unwrap();
+    });
+}

@@ -1,0 +1,67 @@
+//! PJRT runtime latency: artifact execution cost on the coordinator hot
+//! path (L3 §Perf: the trainer step should be dominated by this compute,
+//! not by coordination). Skips gracefully when artifacts are missing.
+
+use std::path::Path;
+
+use mxdag::runtime::{Engine, Tensor};
+use mxdag::util::bench::{bench, bench_header};
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let engine = match Engine::load(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP runtime_exec (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    println!("platform: {}", engine.platform());
+    let m = engine.manifest.clone();
+
+    bench_header("artifact execution latency");
+
+    // matmul
+    let spec = &m.artifact("matmul").unwrap().inputs;
+    let x = Tensor::f32(&spec[0].shape, vec![1.0; spec[0].elements()]);
+    let w = Tensor::f32(&spec[1].shape, vec![1.0; spec[1].elements()]);
+    bench("matmul (pallas tile kernel)", || {
+        engine.execute("matmul", &[x.clone(), w.clone()]).unwrap();
+    });
+
+    // per-layer forwards
+    for l in 0..m.model.n_layers {
+        let name = format!("layer_fwd_{l}");
+        let spec = &m.artifact(&name).unwrap().inputs;
+        let inputs: Vec<Tensor> = spec
+            .iter()
+            .map(|s| Tensor::f32(&s.shape, vec![0.01; s.elements()]))
+            .collect();
+        bench(&name, || {
+            engine.execute(&name, &inputs).unwrap();
+        });
+    }
+
+    // grad step (the DDL worker hot path)
+    let params = mxdag::coordinator::ddl::init_params(&m.model.param_shapes, 0);
+    let gen = mxdag::coordinator::ddl::DataGen::new(
+        m.model.input_dim,
+        m.model.classes,
+        m.model.batch,
+        0,
+    );
+    let (xb, yb) = gen.batch(0, 0);
+    let mut inputs = params.clone();
+    inputs.push(xb);
+    inputs.push(yb);
+    bench("grad_step (fwd+bwd, full model)", || {
+        engine.execute("grad_step", &inputs).unwrap();
+    });
+
+    // tensor conversion overhead (coordination tax)
+    let big = Tensor::f32(&[784, 256], vec![0.5; 784 * 256]);
+    bench("to_literal+from_literal 800KB", || {
+        let l = mxdag::runtime::to_literal(&big).unwrap();
+        let _ = mxdag::runtime::from_literal_f32(&l).unwrap();
+    });
+}

@@ -1,0 +1,40 @@
+//! Scheduler planning cost vs DAG size, per scheduler — plan time must
+//! stay far below simulated makespan for online use (L3 §Perf).
+
+use mxdag::sched::{
+    CoflowScheduler, FairScheduler, FifoScheduler, Grouping, MxScheduler, PackingScheduler,
+    Scheduler,
+};
+use mxdag::sim::Cluster;
+use mxdag::util::bench::{bench, bench_header};
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn main() {
+    for (layers, width) in [(6usize, 6usize), (12, 12), (20, 20)] {
+        let p = RandomParams { layers, width, hosts: 16, seed: 3, ..Default::default() };
+        let g = random_dag(&p);
+        let cluster = Cluster::uniform(16);
+        bench_header(&format!(
+            "plan cost on {} tasks ({} edges)",
+            g.real_tasks().count(),
+            g.n_edges()
+        ));
+        let schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(FairScheduler),
+            Box::new(FifoScheduler),
+            Box::new(PackingScheduler),
+            Box::new(CoflowScheduler::new(Grouping::ByDst)),
+            Box::new(MxScheduler::without_pipelining()),
+        ];
+        for s in &schedulers {
+            bench(s.name(), || {
+                let _ = s.plan(&g, &cluster);
+            });
+        }
+        // the full scheduler with what-if search (simulations inside)
+        bench("mxdag+pipeline-search", || {
+            let s = MxScheduler::default();
+            let _ = s.plan(&g, &cluster);
+        });
+    }
+}

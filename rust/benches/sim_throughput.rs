@@ -1,0 +1,62 @@
+//! Simulator capability bench: events/second and wall time vs DAG size
+//! — the L3 §Perf target (≥1e6 events/s on figure-scale DAGs).
+
+use std::time::Instant;
+
+use mxdag::sched::{evaluate, Plan};
+use mxdag::sim::Cluster;
+use mxdag::util::bench::{bench, bench_header, Table};
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn main() {
+    let mut t = Table::new(
+        "fluid simulator scaling",
+        &["tasks", "events", "wall µs", "events/s"],
+    );
+    for (layers, width) in [(4usize, 4usize), (8, 8), (12, 12), (16, 16), (20, 20)] {
+        let p = RandomParams {
+            layers,
+            width,
+            hosts: 16,
+            seed: 42,
+            ..Default::default()
+        };
+        let g = random_dag(&p);
+        let cluster = Cluster::uniform(16);
+        let plan = Plan::fair();
+        // measure
+        let t0 = Instant::now();
+        let mut events = 0usize;
+        let mut iters = 0u32;
+        while t0.elapsed().as_millis() < 200 {
+            events += evaluate(&g, &cluster, &plan).unwrap().events;
+            iters += 1;
+        }
+        let wall_us = t0.elapsed().as_micros() as f64 / iters as f64;
+        let ev = events as f64 / iters as f64;
+        t.row(
+            &format!("{layers}x{width}"),
+            &[
+                format!("{}", g.real_tasks().count()),
+                format!("{ev:.0}"),
+                format!("{wall_us:.0}"),
+                format!("{:.2e}", ev / (wall_us / 1e6)),
+            ],
+        );
+    }
+    t.print();
+
+    bench_header("per-policy simulation cost (12x12 DAG)");
+    let g = random_dag(&RandomParams { layers: 12, width: 12, hosts: 16, seed: 7, ..Default::default() });
+    let cluster = Cluster::uniform(16);
+    for (name, plan) in [
+        ("fair", Plan::fair()),
+        ("priority", Plan { ann: Default::default(), policy: mxdag::sim::Policy::priority() }),
+        ("fifo", Plan { ann: Default::default(), policy: mxdag::sim::Policy::fifo() }),
+        ("coflow", Plan { ann: Default::default(), policy: mxdag::sim::Policy::coflow() }),
+    ] {
+        bench(name, || {
+            evaluate(&g, &cluster, &plan).unwrap();
+        });
+    }
+}

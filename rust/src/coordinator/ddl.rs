@@ -1,0 +1,381 @@
+//! Data-parallel distributed-training coordinator — the §4.1.1 use case
+//! run for real on the three-layer stack.
+//!
+//! Topology: `workers` worker hosts (ids 0..W) plus a parameter server
+//! (id W). Each worker thread owns its own PJRT [`Engine`] (the xla
+//! client is not `Send`) and per step:
+//!
+//! 1. executes the AOT `grad_step` artifact (JAX bwd, Pallas matmuls);
+//! 2. *pushes* per-layer gradients through the [`NicPacer`] in the
+//!    schedule's layer order;
+//! 3. the leader aggregates each layer once all workers pushed it,
+//!    applies SGD to the master copy, and hands the layer to per-worker
+//!    pull threads (paced *pull* flows);
+//! 4. the worker runs the next forward pass **layer by layer** via the
+//!    `layer_fwd_i` artifacts, each layer waiting only for its own pull —
+//!    so the transmission order chosen by the scheduler (MXDAG:
+//!    lowest-layer-first; FIFO: BP production order) directly moves the
+//!    step time, exactly like Fig. 6.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::pacer::NicPacer;
+use crate::runtime::{Engine, Tensor};
+use crate::util::rng::Rng;
+
+/// Which transmission order the coordinator uses (Fig. 6 comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncSchedule {
+    /// Critical-path order from the MXDAG analysis: lowest layer first,
+    /// strict priority (ByteScheduler-equivalent).
+    Mxdag,
+    /// Plain FIFO: tensors go out in BP production order (top layer
+    /// first), no priorities.
+    Fifo,
+}
+
+impl SyncSchedule {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SyncSchedule::Mxdag => "mxdag",
+            SyncSchedule::Fifo => "fifo",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DdlConfig {
+    pub artifacts_dir: PathBuf,
+    pub workers: usize,
+    pub steps: usize,
+    /// Simulated NIC bandwidth, bytes/sec.
+    pub bandwidth: f64,
+    /// Wall-clock scale of simulated transfer time (0 = don't sleep).
+    pub time_scale: f64,
+    pub schedule: SyncSchedule,
+    pub seed: u64,
+    pub log_every: usize,
+    /// Forward repetitions per layer (validation microbatches) — sets the
+    /// compute available to overlap with pulls.
+    pub fwd_reps: usize,
+}
+
+impl Default for DdlConfig {
+    fn default() -> Self {
+        DdlConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            workers: 2,
+            steps: 20,
+            bandwidth: 25e6,
+            time_scale: 1.0,
+            schedule: SyncSchedule::Mxdag,
+            seed: 0,
+            log_every: 5,
+            fwd_reps: 6,
+        }
+    }
+}
+
+/// Per-step record.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f64,
+    pub wall: Duration,
+}
+
+/// Training outcome.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub steps: Vec<StepStats>,
+    pub total: Duration,
+    pub schedule: SyncSchedule,
+}
+
+impl TrainReport {
+    pub fn first_loss(&self) -> f64 {
+        self.steps.first().map(|s| s.loss).unwrap_or(f64::NAN)
+    }
+    pub fn last_loss(&self) -> f64 {
+        self.steps.last().map(|s| s.loss).unwrap_or(f64::NAN)
+    }
+    /// Mean steady-state step time (skips step 0, which pays PJRT
+    /// compilation in every worker engine).
+    pub fn mean_step_wall(&self) -> Duration {
+        let steady: Vec<&StepStats> = self.steps.iter().skip(1).collect();
+        if steady.is_empty() {
+            return self.steps.first().map(|s| s.wall).unwrap_or(Duration::ZERO);
+        }
+        steady.iter().map(|s| s.wall).sum::<Duration>() / steady.len() as u32
+    }
+}
+
+/// Deterministic synthetic classification data (class-center Gaussians,
+/// mirroring python/compile/model.py::synthetic_batch).
+pub struct DataGen {
+    centers: Vec<Vec<f32>>, // [classes][input_dim]
+    input_dim: usize,
+    classes: usize,
+    batch: usize,
+}
+
+impl DataGen {
+    pub fn new(input_dim: usize, classes: usize, batch: usize, seed: u64) -> DataGen {
+        let mut rng = Rng::new(seed ^ 0xDA7A);
+        let centers = (0..classes)
+            .map(|_| (0..input_dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        DataGen { centers, input_dim, classes, batch }
+    }
+
+    /// Batch for (step, worker): (x [batch, input_dim] f32, y [batch] s32).
+    pub fn batch(&self, step: usize, worker: usize) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(((step as u64) << 20) | ((worker as u64) << 8) | 7);
+        let mut xs = Vec::with_capacity(self.batch * self.input_dim);
+        let mut ys = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let y = rng.below(self.classes);
+            ys.push(y as i32);
+            for d in 0..self.input_dim {
+                xs.push(self.centers[y][d] + 0.3 * rng.normal() as f32);
+            }
+        }
+        (
+            Tensor::f32(&[self.batch, self.input_dim], xs),
+            Tensor::s32(&[self.batch], ys),
+        )
+    }
+}
+
+/// He-style init matching python's scale (seeded; numerics validated
+/// end-to-end by the decreasing loss, not bit-exactness).
+pub fn init_params(shapes: &[Vec<usize>], seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed ^ 0x1217);
+    shapes
+        .iter()
+        .map(|s| {
+            if s.len() == 2 {
+                let scale = (2.0 / s[0] as f64).sqrt();
+                let data = (0..s[0] * s[1])
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect();
+                Tensor::f32(s, data)
+            } else {
+                Tensor::zeros(s)
+            }
+        })
+        .collect()
+}
+
+enum ToLeader {
+    Loss { step: usize, worker: usize, loss: f64 },
+    LayerGrads { step: usize, layer: usize, w: Tensor, b: Tensor },
+}
+
+impl ToLeader {
+    fn step(&self) -> usize {
+        match self {
+            ToLeader::Loss { step, .. } | ToLeader::LayerGrads { step, .. } => *step,
+        }
+    }
+}
+
+/// Run data-parallel training; see module docs for the step anatomy.
+pub fn train(cfg: &DdlConfig) -> Result<TrainReport> {
+    assert!(cfg.workers >= 1 && cfg.steps >= 1);
+    // Leader engine provides the manifest (compute happens on workers).
+    let leader = Engine::load(&cfg.artifacts_dir).context("loading artifacts (leader)")?;
+    let m = leader.manifest.clone();
+    let layers = m.model.n_layers;
+    let ps_host = cfg.workers; // parameter-server host id
+    let pacer = Arc::new(NicPacer::new(cfg.workers + 1, cfg.bandwidth, cfg.time_scale));
+    let data = Arc::new(DataGen::new(
+        m.model.input_dim,
+        m.model.classes,
+        m.model.batch,
+        cfg.seed,
+    ));
+
+    let layer_prio: Arc<Vec<i64>> = Arc::new(
+        (0..layers)
+            .map(|l| match cfg.schedule {
+                SyncSchedule::Mxdag => (layers - l) as i64, // lower layer wins
+                SyncSchedule::Fifo => 0,                    // pure arrival order
+            })
+            .collect(),
+    );
+    let push_order: Arc<Vec<usize>> = Arc::new(match cfg.schedule {
+        SyncSchedule::Mxdag => (0..layers).collect(),
+        SyncSchedule::Fifo => (0..layers).rev().collect(), // BP production order
+    });
+    let layer_bytes: Arc<Vec<usize>> =
+        Arc::new((0..layers).map(|l| m.layer_param_bytes(l)).collect());
+
+    let mut master = init_params(&m.model.param_shapes, cfg.seed);
+    let lr = m.model.lr as f32;
+
+    // persistent workers: engines compile once
+    let (to_leader_tx, to_leader_rx) = mpsc::channel::<ToLeader>();
+    let mut pull_txs = Vec::new();
+    let mut worker_handles = Vec::new();
+    for w in 0..cfg.workers {
+        let (pull_tx, pull_rx) = mpsc::channel::<(usize, Tensor, Tensor)>();
+        pull_txs.push(pull_tx);
+        let to_leader = to_leader_tx.clone();
+        let pacer = Arc::clone(&pacer);
+        let data = Arc::clone(&data);
+        let dir = cfg.artifacts_dir.clone();
+        let push_order = Arc::clone(&push_order);
+        let layer_prio = Arc::clone(&layer_prio);
+        let layer_bytes = Arc::clone(&layer_bytes);
+        let mut params = master.clone();
+        let steps = cfg.steps;
+        let fwd_reps = cfg.fwd_reps.max(1);
+
+        worker_handles.push(std::thread::spawn(move || -> Result<()> {
+            // each worker owns its runtime (xla client is not Send)
+            let engine = Engine::load(&dir).context("worker engine")?;
+            let nl = layer_prio.len();
+            for step in 0..steps {
+                let (x, y) = data.batch(step, w);
+
+                // 1. gradient step on the local replica
+                let mut inputs = params.clone();
+                inputs.push(x.clone());
+                inputs.push(y);
+                let out = engine.execute("grad_step", &inputs)?;
+                let loss = out[0].scalar_f32() as f64;
+                to_leader
+                    .send(ToLeader::Loss { step, worker: w, loss })
+                    .ok();
+                let grads = &out[1..];
+
+                // 2. push per-layer grads in schedule order (paced flows)
+                for &l in push_order.iter() {
+                    pacer.transfer(w, ps_host, layer_bytes[l], layer_prio[l]);
+                    to_leader
+                        .send(ToLeader::LayerGrads {
+                            step,
+                            layer: l,
+                            w: grads[2 * l].clone(),
+                            b: grads[2 * l + 1].clone(),
+                        })
+                        .ok();
+                }
+
+                // 3. consume pulls; run next forward layer by layer
+                let mut have: Vec<Option<(Tensor, Tensor)>> = vec![None; nl];
+                let mut h = x; // probe activations
+                let mut next_fwd = 0usize;
+                let mut received = 0usize;
+                while received < nl {
+                    let (l, wt, bt) = pull_rx.recv().map_err(|e| anyhow!("pull: {e}"))?;
+                    received += 1;
+                    have[l] = Some((wt, bt));
+                    while next_fwd < nl {
+                        let Some((wt, bt)) = have[next_fwd].take() else { break };
+                        let name = format!("layer_fwd_{next_fwd}");
+                        // validation microbatches: the per-layer compute that
+                        // overlapping pulls can hide
+                        for _ in 0..fwd_reps - 1 {
+                            engine.execute(&name, &[h.clone(), wt.clone(), bt.clone()])?;
+                        }
+                        h = engine
+                            .execute(&name, &[h, wt.clone(), bt.clone()])?
+                            .pop()
+                            .unwrap();
+                        params[2 * next_fwd] = wt;
+                        params[2 * next_fwd + 1] = bt;
+                        next_fwd += 1;
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    drop(to_leader_tx);
+
+    // Leader loop: per step, aggregate W losses + W×L layer pushes,
+    // update master per layer, fan out paced pulls.
+    let mut stats = Vec::with_capacity(cfg.steps);
+    let t_total = Instant::now();
+    let pull_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    // fast workers may race one step ahead of the leader loop
+    let mut stash: Vec<ToLeader> = Vec::new();
+    for step in 0..cfg.steps {
+        let t_step = Instant::now();
+        let mut acc: Vec<Option<(Tensor, Tensor, usize)>> = vec![None; layers];
+        let mut losses = vec![0.0; cfg.workers];
+        let mut pending = cfg.workers * (layers + 1);
+        let mut queue: Vec<ToLeader> = std::mem::take(&mut stash);
+        while pending > 0 {
+            let msg = match queue.pop() {
+                Some(m) => m,
+                None => to_leader_rx
+                    .recv()
+                    .map_err(|e| anyhow!("leader channel: {e}"))?,
+            };
+            if msg.step() != step {
+                debug_assert!(msg.step() == step + 1, "messages skew by at most one step");
+                stash.push(msg);
+                continue;
+            }
+            pending -= 1;
+            match msg {
+                ToLeader::Loss { worker, loss, .. } => losses[worker] = loss,
+                ToLeader::LayerGrads { layer, w: gw, b: gb, .. } => {
+                    let slot = acc[layer].get_or_insert_with(|| {
+                        (Tensor::zeros(gw.shape()), Tensor::zeros(gb.shape()), 0)
+                    });
+                    slot.0.add_assign(&gw);
+                    slot.1.add_assign(&gb);
+                    slot.2 += 1;
+                    if slot.2 == cfg.workers {
+                        let (mut aw, mut ab, _) = acc[layer].take().unwrap();
+                        aw.scale(1.0 / cfg.workers as f32);
+                        ab.scale(1.0 / cfg.workers as f32);
+                        master[2 * layer].axpy_neg(lr, &aw);
+                        master[2 * layer + 1].axpy_neg(lr, &ab);
+                        let wt = master[2 * layer].clone();
+                        let bt = master[2 * layer + 1].clone();
+                        let bytes = layer_bytes[layer];
+                        let prio = layer_prio[layer];
+                        for (wkr, tx) in pull_txs.iter().enumerate() {
+                            let tx = tx.clone();
+                            let pacer = Arc::clone(&pacer);
+                            let (wt, bt) = (wt.clone(), bt.clone());
+                            let h = std::thread::spawn(move || {
+                                pacer.transfer(ps_host, wkr, bytes, prio);
+                                tx.send((layer, wt, bt)).ok();
+                            });
+                            pull_threads.lock().unwrap().push(h);
+                        }
+                    }
+                }
+            }
+        }
+        // pulls of this step must land before we time the step boundary
+        for h in std::mem::take(&mut *pull_threads.lock().unwrap()) {
+            h.join().ok();
+        }
+        let loss = losses.iter().sum::<f64>() / cfg.workers as f64;
+        let wall = t_step.elapsed();
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            println!(
+                "[{}] step {step:>4}  loss {loss:.4}  wall {wall:?}",
+                cfg.schedule.label()
+            );
+        }
+        stats.push(StepStats { step, loss, wall });
+    }
+
+    for h in worker_handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))??;
+    }
+    Ok(TrainReport { steps: stats, total: t_total.elapsed(), schedule: cfg.schedule })
+}

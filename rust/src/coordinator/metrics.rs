@@ -1,0 +1,147 @@
+//! Lightweight runtime metrics: counters and duration histograms for the
+//! coordinator hot path (no external metrics crate in this image).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    timings: BTreeMap<String, Vec<f64>>, // seconds
+}
+
+/// Thread-safe metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self
+            .inner
+            .lock()
+            .unwrap()
+            .counters
+            .entry(name.to_string())
+            .or_insert(0) += by;
+    }
+
+    pub fn observe(&self, name: &str, d: Duration) {
+        self.inner
+            .lock()
+            .unwrap()
+            .timings
+            .entry(name.to_string())
+            .or_default()
+            .push(d.as_secs_f64());
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// (count, mean, p50, p99) seconds for a timing series.
+    pub fn summary(&self, name: &str) -> Option<(usize, f64, f64, f64)> {
+        let inner = self.inner.lock().unwrap();
+        let xs = inner.timings.get(name)?;
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+        let p = |q: f64| sorted[((sorted.len() - 1) as f64 * q) as usize];
+        Some((sorted.len(), mean, p(0.5), p(0.99)))
+    }
+
+    pub fn report(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &inner.counters {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, xs) in &inner.timings {
+            if xs.is_empty() {
+                continue;
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+            out.push_str(&format!(
+                "{k}: n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms\n",
+                sorted.len(),
+                mean * 1e3,
+                sorted[sorted.len() / 2] * 1e3,
+                sorted[(sorted.len() - 1) * 99 / 100] * 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("x", 2);
+        m.incr("x", 3);
+        assert_eq!(m.counter("x"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timing_summary() {
+        let m = Metrics::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            m.observe("t", Duration::from_millis(ms));
+        }
+        let (n, mean, p50, p99) = m.summary("t").unwrap();
+        assert_eq!(n, 5);
+        assert!(mean > 0.0 && p50 <= p99);
+        assert!(m.summary("none").is_none());
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        m.incr("req", 1);
+        m.observe("lat", Duration::from_millis(5));
+        let r = m.report();
+        assert!(r.contains("req: 1"));
+        assert!(r.contains("lat:"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.incr("c", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("c"), 800);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the real execution path. A thread-pool executor
+//! drains MXDAGs (compute = PJRT executions, flows = paced prioritised
+//! transfers), and the DDL trainer (§4.1.1) runs data-parallel training
+//! end-to-end under MXDAG vs FIFO transmission schedules.
+
+pub mod ddl;
+pub mod executor;
+pub mod metrics;
+pub mod pacer;
+
+pub use ddl::{train, DdlConfig, StepStats, SyncSchedule, TrainReport};
+pub use executor::{execute_mxdag, ExecEvent, ExecReport, Work};
+pub use metrics::Metrics;
+pub use pacer::NicPacer;

@@ -1,0 +1,27 @@
+//! # MXDAG — a hybrid abstraction for cluster applications
+//!
+//! Reproduction of Wang et al., *"MXDAG: A Hybrid Abstraction for
+//! Cluster Applications"* (2021). Compute **and** network tasks are both
+//! first-class nodes of a DAG (`MXTask`s with `Size`/`Unit`), enabling
+//! explicit co-scheduling of CPU/GPU slots and NIC bandwidth.
+//!
+//! Layer map (DESIGN.md §2):
+//! * [`mxdag`] — the abstraction: graphs, Copaths, Eqs. (1)/(2), CPM;
+//! * [`sim`] — fluid cluster substrate with fair/priority/FIFO/coflow
+//!   bandwidth sharing and chunk-level pipelining;
+//! * [`sched`] — the co-scheduler (Principles 1 & 2) and all baselines;
+//! * [`workloads`] — the paper's figure scenarios + generators;
+//! * [`whatif`], [`monitor`] — §4.3 usages;
+//! * [`runtime`], [`coordinator`] — the real execution path: PJRT-CPU
+//!   executes AOT-compiled JAX/Pallas artifacts under MXDAG scheduling;
+//! * [`util`] — substrates built in-repo (JSON, RNG, CLI, bench, propcheck).
+
+pub mod coordinator;
+pub mod monitor;
+pub mod mxdag;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod whatif;
+pub mod workloads;

@@ -1,0 +1,327 @@
+//! `mxdag` — CLI for the MXDAG reproduction.
+//!
+//! Subcommands:
+//!   figures   — run every paper-figure experiment and print the tables
+//!   train     — DDL training end-to-end (PJRT compute + paced network)
+//!   whatif    — pipeline what-if analysis on a scenario DAG
+//!   monitor   — straggler-detection demo (host vs network)
+//!   simulate  — schedule+simulate a DAG from a JSON file
+//!   info      — artifact/platform info
+
+use std::path::Path;
+
+use mxdag::coordinator::{self, DdlConfig, SyncSchedule};
+use mxdag::mxdag::MXDag;
+use mxdag::sched::{
+    self, evaluate, AltruisticScheduler, CoflowScheduler, FairScheduler, FifoScheduler,
+    Grouping, MxScheduler, PackingScheduler, Plan, Scheduler, SelfishScheduler,
+};
+use mxdag::sim::{Annotations, Cluster, Policy};
+use mxdag::util::bench::Table;
+use mxdag::util::cli::Args;
+use mxdag::workloads::{self, WukongCoflows};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("figures") => cmd_figures(),
+        Some("train") => cmd_train(&args),
+        Some("whatif") => cmd_whatif(),
+        Some("monitor") => cmd_monitor(),
+        Some("simulate") => cmd_simulate(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "mxdag — compute/network co-scheduling (MXDAG reproduction)\n\n\
+         USAGE: mxdag <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+           figures                       reproduce Figs. 1, 2, 3, 6, 7\n\
+           train [--workers N] [--steps N] [--schedule mxdag|fifo]\n\
+                 [--bandwidth BYTES_PER_S] [--time-scale X] [--artifacts DIR]\n\
+           whatif                        pipeline what-if on the Fig. 3 DAG\n\
+           monitor                       straggler classification demo\n\
+           simulate --dag FILE.json [--scheduler mxdag|fair|fifo|coflow|packing]\n\
+           info [--artifacts DIR]        platform + artifact inventory"
+    );
+}
+
+fn cmd_figures() -> i32 {
+    fig1();
+    fig2();
+    fig3();
+    fig6();
+    fig7();
+    0
+}
+
+fn fig1() {
+    let g = workloads::fig1_dag();
+    let cluster = Cluster::uniform(3);
+    let fair = sched::run(&FairScheduler, &g, &cluster).unwrap();
+    let mx = sched::run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+    let mut t = Table::new(
+        "Fig 1 — network-aware fair share vs MXDAG co-scheduling",
+        &["JCT", "C starts"],
+    );
+    let c = g.by_name("C").unwrap();
+    t.row_f64("fair share (T1)", &[fair.makespan, fair.start_of(c)]);
+    t.row_f64("mxdag (T2)", &[mx.makespan, mx.start_of(c)]);
+    t.print();
+}
+
+fn fig2() {
+    // 2(a/c): asymmetric compute times
+    let (g, flows) = workloads::fig2a_dag(3.0, 1.0);
+    let cluster = Cluster::uniform(4);
+    let mx = sched::run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+    let co = sched::run(
+        &CoflowScheduler::new(Grouping::Explicit(vec![
+            vec![flows[0], flows[1]],
+            vec![flows[2], flows[3]],
+        ])),
+        &g,
+        &cluster,
+    )
+    .unwrap();
+    let mut t = Table::new(
+        "Fig 2(c) — asymmetric compute times (t1=3, t2=1)",
+        &["JCT"],
+    );
+    t.row_f64("mxdag per-flow", &[mx.makespan]);
+    t.row_f64("coflow {f1,f2},{f3,f4}", &[co.makespan]);
+    t.print();
+
+    // 2(b/d): Wukong topology and the three coflow definitions
+    let (g, flows) = workloads::wukong_dag();
+    let cluster = Cluster::uniform(6);
+    let mut t = Table::new("Fig 2(d) — Wukong DAG, coflow definition ambiguity", &["JCT"]);
+    let mx = sched::run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+    t.row_f64("mxdag per-flow", &[mx.makespan]);
+    for v in WukongCoflows::all() {
+        let r = sched::run(
+            &CoflowScheduler::new(Grouping::Explicit(v.groups(&flows))),
+            &g,
+            &cluster,
+        )
+        .unwrap();
+        t.row_f64(v.label(), &[r.makespan]);
+    }
+    t.print();
+}
+
+fn fig3() {
+    let (g, _) = workloads::fig3_dag();
+    let cluster = workloads::figs::fig3_cluster();
+    let mut t = Table::new("Fig 3 — pipelineability choices (FIFO runtime)", &["JCT"]);
+    for (name, pipes) in workloads::fig3_pipeline_sets() {
+        let pipelined = pipes.iter().map(|n| g.by_name(n).unwrap()).collect();
+        let plan = Plan {
+            ann: Annotations { pipelined, ..Default::default() },
+            policy: Policy::fifo(),
+        };
+        t.row_f64(name, &[evaluate(&g, &cluster, &plan).unwrap().makespan]);
+    }
+    let mx = sched::run(&MxScheduler::default(), &g, &cluster).unwrap();
+    t.row_f64("mxdag (auto pipeline search)", &[mx.makespan]);
+    t.print();
+}
+
+fn fig6() {
+    let cluster = Cluster::with_cores(2, 2.0);
+    let mut t = Table::new(
+        "Fig 6 — DDL layer-wise sync (simulated)",
+        &["iter time (fifo)", "iter time (mxdag)", "speedup"],
+    );
+    for layers in [2usize, 4, 8] {
+        let p = workloads::DdlParams { layers, ..Default::default() };
+        let (g, _) = workloads::ddl_dag(&p);
+        let fifo = sched::run(&FifoScheduler, &g, &cluster).unwrap().makespan;
+        let mx = sched::run(&MxScheduler::without_pipelining(), &g, &cluster)
+            .unwrap()
+            .makespan;
+        t.row_f64(&format!("{layers} layers"), &[fifo, mx, fifo / mx]);
+    }
+    t.print();
+}
+
+fn fig7() {
+    let (j1, j2) = workloads::fig7_jobs();
+    let multi = mxdag::sched::altruistic::merge(&[j1, j2]);
+    let cluster = Cluster::uniform(4);
+    let selfish = evaluate(&multi.dag, &cluster, &SelfishScheduler.plan_multi(&multi)).unwrap();
+    let altru = evaluate(&multi.dag, &cluster, &AltruisticScheduler.plan_multi_checked(&multi, &cluster)).unwrap();
+    let mut t = Table::new("Fig 7 — altruistic multi-job scheduling", &["job1 JCT", "job2 JCT"]);
+    t.row_f64("selfish (c)", &[multi.jct(0, &selfish), multi.jct(1, &selfish)]);
+    t.row_f64("altruistic (d)", &[multi.jct(0, &altru), multi.jct(1, &altru)]);
+    t.print();
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let schedule = match args.get_or("schedule", "both").as_str() {
+        "mxdag" => vec![SyncSchedule::Mxdag],
+        "fifo" => vec![SyncSchedule::Fifo],
+        _ => vec![SyncSchedule::Fifo, SyncSchedule::Mxdag],
+    };
+    let mut rows = Vec::new();
+    for s in schedule {
+        let cfg = DdlConfig {
+            artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+            workers: args.usize_or("workers", 2),
+            steps: args.usize_or("steps", 20),
+            bandwidth: args.f64_or("bandwidth", 25e6),
+            time_scale: args.f64_or("time-scale", 1.0),
+            schedule: s,
+            seed: args.usize_or("seed", 0) as u64,
+            log_every: args.usize_or("log-every", 5),
+            fwd_reps: args.usize_or("fwd-reps", 6),
+        };
+        match coordinator::train(&cfg) {
+            Ok(r) => {
+                println!(
+                    "[{}] loss {:.4} -> {:.4}, mean step {:?}",
+                    s.label(),
+                    r.first_loss(),
+                    r.last_loss(),
+                    r.mean_step_wall()
+                );
+                rows.push((s.label(), r));
+            }
+            Err(e) => {
+                eprintln!("train failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+    if rows.len() == 2 {
+        let fifo = rows[0].1.mean_step_wall().as_secs_f64();
+        let mx = rows[1].1.mean_step_wall().as_secs_f64();
+        println!("\nstep-time speedup (fifo/mxdag): {:.3}x", fifo / mx);
+    }
+    0
+}
+
+fn cmd_whatif() -> i32 {
+    let (g, _) = workloads::fig3_dag();
+    let cluster = workloads::figs::fig3_cluster();
+    let base = Plan { ann: Annotations::default(), policy: Policy::fifo() };
+    let (baseline, results) = mxdag::whatif::pipeline_whatif(&g, &cluster, &base).unwrap();
+    println!("baseline JCT: {baseline:.3}");
+    let mut t = Table::new("what-if: single pipeline toggles", &["JCT", "delta"]);
+    for w in results {
+        t.row_f64(&w.label, &[w.jct, w.delta]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_monitor() -> i32 {
+    use mxdag::monitor::detect_stragglers;
+    let g = workloads::fig1_dag();
+    let plan = Plan::fair();
+    let healthy = Cluster::uniform(3);
+    let exp = evaluate(&g, &healthy, &plan).unwrap();
+
+    let mut net_bad = Cluster::uniform(3);
+    net_bad.hosts[1].nic_up = 0.25;
+    let obs = evaluate(&g, &net_bad, &plan).unwrap();
+    println!("== degraded uplink on host 1 ==");
+    for s in detect_stragglers(&g, &exp, &obs, 1.5) {
+        println!("  {} ({:?}) {:.1}x slower", s.name, s.kind, s.slowdown);
+    }
+
+    let mut cpu_bad = Cluster::uniform(3);
+    cpu_bad.hosts[1].cores = 0.25;
+    let obs = evaluate(&g, &cpu_bad, &plan).unwrap();
+    println!("== degraded CPU on host 1 ==");
+    for s in detect_stragglers(&g, &exp, &obs, 1.5) {
+        println!("  {} ({:?}) {:.1}x slower", s.name, s.kind, s.slowdown);
+    }
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let Some(path) = args.get("dag") else {
+        eprintln!("--dag FILE.json required");
+        return 1;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 1;
+        }
+    };
+    let json = match mxdag::util::json::Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("parse {path}: {e}");
+            return 1;
+        }
+    };
+    let g = match MXDag::from_json(&json) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("invalid DAG: {e}");
+            return 1;
+        }
+    };
+    let hosts = g.hosts().into_iter().max().map(|h| h + 1).unwrap_or(1);
+    let cluster = Cluster::uniform(hosts.max(1));
+    let sched: Box<dyn Scheduler> = match args.get_or("scheduler", "mxdag").as_str() {
+        "fair" => Box::new(FairScheduler),
+        "fifo" => Box::new(FifoScheduler),
+        "packing" => Box::new(PackingScheduler),
+        "coflow" => Box::new(CoflowScheduler::new(Grouping::ByDst)),
+        _ => Box::new(MxScheduler::default()),
+    };
+    match sched::run(sched.as_ref(), &g, &cluster) {
+        Ok(r) => {
+            println!(
+                "scheduler={} tasks={} makespan={:.4} events={}",
+                sched.name(),
+                g.real_tasks().count(),
+                r.makespan,
+                r.events
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("simulation failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    match mxdag::runtime::Engine::load(Path::new(&dir)) {
+        Ok(e) => {
+            println!("platform: {}", e.platform());
+            println!(
+                "model: {}-{:?}-{} batch={} params={}",
+                e.manifest.model.input_dim,
+                e.manifest.model.hidden,
+                e.manifest.model.classes,
+                e.manifest.model.batch,
+                e.manifest.model.param_count
+            );
+            for name in e.artifact_names() {
+                let a = e.manifest.artifact(name).unwrap();
+                println!("  {name}: {} inputs -> {} outputs", a.inputs.len(), a.n_outputs);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("info failed (run `make artifacts`?): {e:#}");
+            1
+        }
+    }
+}

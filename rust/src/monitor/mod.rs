@@ -1,0 +1,159 @@
+//! Monitoring & debugging (§4.3): compare the planned execution against
+//! an observed one, classify *host* vs *network* stragglers — which a
+//! traditional DAG cannot distinguish — and re-derive the critical path
+//! from observed progress for runtime re-planning.
+
+use crate::mxdag::{cpm_with, Cpm, MXDag, TaskId, TaskKind};
+use crate::sim::SimResult;
+
+/// A detected straggler.
+#[derive(Debug, Clone)]
+pub struct Straggler {
+    pub task: TaskId,
+    pub name: String,
+    pub kind: StragglerKind,
+    /// observed duration / expected duration.
+    pub slowdown: f64,
+}
+
+/// The distinction MXDAG makes possible (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StragglerKind {
+    /// A compute MXTask ran slow: the *host* (CPU/GPU contention, thermal…)
+    Host { host: usize },
+    /// A network MXTask ran slow: the *path* src→dst is congested.
+    Network { src: usize, dst: usize },
+}
+
+/// Compare expected and observed per-task durations; report tasks slower
+/// than `threshold`× their expectation. `expected`/`observed` give
+/// (start, finish) per logical task.
+pub fn detect_stragglers(
+    dag: &MXDag,
+    expected: &SimResult,
+    observed: &SimResult,
+    threshold: f64,
+) -> Vec<Straggler> {
+    let mut out = Vec::new();
+    for t in dag.real_tasks() {
+        let task = dag.task(t);
+        let exp = expected.finish_of(t) - expected.start_of(t);
+        let obs = observed.finish_of(t) - observed.start_of(t);
+        if exp <= 0.0 {
+            continue;
+        }
+        let slowdown = obs / exp;
+        if slowdown > threshold {
+            let kind = match task.kind {
+                TaskKind::Compute { host } => StragglerKind::Host { host },
+                TaskKind::Flow { src, dst } => StragglerKind::Network { src, dst },
+                _ => continue,
+            };
+            out.push(Straggler { task: t, name: task.name.clone(), kind, slowdown });
+        }
+    }
+    out.sort_by(|a, b| b.slowdown.partial_cmp(&a.slowdown).unwrap());
+    out
+}
+
+/// Re-derive the critical path using *observed* durations for finished
+/// tasks and planned sizes for the rest — the §4.3 runtime re-planning
+/// input ("determine the new critical paths to optimize the scheduling
+/// plan at runtime").
+pub fn replan_cpm(dag: &MXDag, observed: &SimResult) -> Cpm {
+    let dur: Vec<f64> = dag
+        .tasks()
+        .iter()
+        .map(|t| {
+            if t.kind.is_dummy() {
+                return 0.0;
+            }
+            let obs = observed.finish_of(t.id) - observed.start_of(t.id);
+            if obs.is_finite() && obs > 0.0 {
+                obs
+            } else {
+                t.size
+            }
+        })
+        .collect();
+    cpm_with(dag, &dur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{evaluate, Plan};
+    use crate::sim::{Cluster, Host};
+    use crate::workloads;
+
+    /// Run fig1 on a healthy cluster and one with a degraded NIC; the
+    /// monitor must finger the network straggler, not the hosts.
+    #[test]
+    fn network_straggler_classified() {
+        let g = workloads::fig1_dag();
+        let healthy = Cluster::uniform(3);
+        let mut degraded = Cluster::uniform(3);
+        degraded.hosts[1] = Host { nic_up: 0.25, ..Host::default() }; // B's uplink
+        let plan = Plan::fair();
+        let exp = evaluate(&g, &healthy, &plan).unwrap();
+        let obs = evaluate(&g, &degraded, &plan).unwrap();
+        let s = detect_stragglers(&g, &exp, &obs, 1.5);
+        assert!(!s.is_empty());
+        assert_eq!(s[0].name, "f2"); // the flow out of B
+        assert!(matches!(s[0].kind, StragglerKind::Network { src: 1, dst: 2 }));
+    }
+
+    #[test]
+    fn host_straggler_classified() {
+        let g = workloads::fig1_dag();
+        let healthy = Cluster::uniform(3);
+        let mut degraded = Cluster::uniform(3);
+        degraded.hosts[1].cores = 0.25; // B computes 4x slower
+        let plan = Plan::fair();
+        let exp = evaluate(&g, &healthy, &plan).unwrap();
+        let obs = evaluate(&g, &degraded, &plan).unwrap();
+        let s = detect_stragglers(&g, &exp, &obs, 1.5);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].name, "B");
+        assert!(matches!(s[0].kind, StragglerKind::Host { host: 1 }));
+        assert!((s[0].slowdown - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn healthy_run_reports_nothing() {
+        let g = workloads::fig1_dag();
+        let cluster = Cluster::uniform(3);
+        let plan = Plan::fair();
+        let exp = evaluate(&g, &cluster, &plan).unwrap();
+        assert!(detect_stragglers(&g, &exp, &exp, 1.1).is_empty());
+    }
+
+    #[test]
+    fn replan_shifts_critical_path() {
+        // a -> f_fast -> b   (healthy critical path: 0.1 + 1 + 1 = 2.1)
+        // a -> f_slow -> c   (healthy: 0.1 + 1 + 0.5 = 1.6, has slack)
+        let mut bld = crate::mxdag::MXDag::builder();
+        let a = bld.compute("a", 0, 0.1);
+        let f_fast = bld.flow("f_fast", 0, 1, 1.0);
+        let b = bld.compute("b", 1, 1.0);
+        let f_slow = bld.flow("f_slow", 0, 2, 1.0);
+        let c = bld.compute("c", 2, 0.5);
+        bld.dep(a, f_fast).dep(f_fast, b).dep(a, f_slow).dep(f_slow, c);
+        let g = bld.finalize().unwrap();
+
+        let plan = Plan::fair();
+        let exp = evaluate(&g, &Cluster::uniform(3), &plan).unwrap();
+        let c0 = replan_cpm(&g, &exp);
+        assert!(!c0.is_critical(f_slow), "healthy: f_slow has slack");
+        assert!(c0.is_critical(f_fast));
+
+        // degrade ONLY host 2's downlink: f_slow runs at 0.2 => dur 5
+        let mut degraded = Cluster::uniform(3);
+        degraded.hosts[2].nic_down = 0.2;
+        let obs = evaluate(&g, &degraded, &plan).unwrap();
+        let c1 = replan_cpm(&g, &obs);
+        assert!(c1.makespan > c0.makespan);
+        assert!(c1.is_critical(f_slow), "replan must flip the critical path");
+        assert!(!c1.is_critical(f_fast));
+    }
+}

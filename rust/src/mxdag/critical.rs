@@ -1,0 +1,199 @@
+//! Critical-path analysis (CPM) over an MXDAG.
+//!
+//! Durations default to `Size(v)` (full-resource completion time, §3.1).
+//! Produces earliest/latest start/finish, slack, the makespan lower
+//! bound, and one zero-slack critical path — the quantities Principles 1
+//! and 2 (§4) schedule by.
+
+use super::graph::MXDag;
+use super::task::TaskId;
+
+/// Result of a CPM pass.
+#[derive(Debug, Clone)]
+pub struct Cpm {
+    pub est: Vec<f64>,
+    pub eft: Vec<f64>,
+    pub lst: Vec<f64>,
+    pub lft: Vec<f64>,
+    pub slack: Vec<f64>,
+    /// Contention-free makespan lower bound (length of the critical path).
+    pub makespan: f64,
+    /// One critical (zero-slack) path from `v_S` to `v_E`, inclusive.
+    pub critical: Vec<TaskId>,
+}
+
+const EPS: f64 = 1e-9;
+
+/// CPM with explicit per-task durations.
+pub fn cpm_with(dag: &MXDag, dur: &[f64]) -> Cpm {
+    let n = dag.len();
+    assert_eq!(dur.len(), n, "durations must cover every task");
+    let mut est = vec![0.0; n];
+    let mut eft = vec![0.0; n];
+    for &u in dag.topo() {
+        est[u] = dag
+            .preds(u)
+            .iter()
+            .map(|&p| eft[p])
+            .fold(0.0, f64::max);
+        eft[u] = est[u] + dur[u];
+    }
+    let makespan = eft[dag.end()];
+
+    let mut lft = vec![makespan; n];
+    let mut lst = vec![makespan; n];
+    for &u in dag.topo().iter().rev() {
+        lft[u] = dag
+            .succs(u)
+            .iter()
+            .map(|&s| lst[s])
+            .fold(makespan, f64::min);
+        lst[u] = lft[u] - dur[u];
+    }
+
+    let slack: Vec<f64> = (0..n).map(|i| (lst[i] - est[i]).max(0.0)).collect();
+
+    // follow a zero-slack chain from start to end
+    let mut critical = vec![dag.start()];
+    let mut cur = dag.start();
+    while cur != dag.end() {
+        let next = dag
+            .succs(cur)
+            .iter()
+            .copied()
+            .filter(|&s| slack[s] <= EPS)
+            // among zero-slack succs prefer the one whose EST matches our EFT
+            .min_by(|&a, &b| {
+                let ka = (est[a] - eft[cur]).abs();
+                let kb = (est[b] - eft[cur]).abs();
+                ka.partial_cmp(&kb).unwrap()
+            })
+            .expect("critical path must reach v_E");
+        critical.push(next);
+        cur = next;
+    }
+
+    Cpm { est, eft, lst, lft, slack, makespan, critical }
+}
+
+/// CPM with durations = `Size(v)` (full resource assigned).
+pub fn cpm(dag: &MXDag) -> Cpm {
+    let dur: Vec<f64> = dag.tasks().iter().map(|t| t.size).collect();
+    cpm_with(dag, &dur)
+}
+
+impl Cpm {
+    /// Is `t` on the (a) critical path?
+    pub fn is_critical(&self, t: TaskId) -> bool {
+        self.slack[t] <= EPS
+    }
+
+    /// Rank tasks by criticality: ascending slack. Tasks with (numerically)
+    /// equal slack share one priority level, so symmetric siblings — e.g.
+    /// the flows of a balanced shuffle — are served fairly within the
+    /// level instead of being serialized arbitrarily. Higher = more
+    /// critical.
+    pub fn priorities(&self) -> Vec<i64> {
+        let n = self.slack.len();
+        let mut order: Vec<TaskId> = (0..n).collect();
+        order.sort_by(|&a, &b| self.slack[a].partial_cmp(&self.slack[b]).unwrap());
+        let mut prio = vec![0i64; n];
+        let mut level = n as i64;
+        let mut prev_slack = f64::NEG_INFINITY;
+        for &t in &order {
+            if (self.slack[t] - prev_slack).abs() > EPS {
+                level -= 1;
+                prev_slack = self.slack[t];
+            }
+            prio[t] = level;
+        }
+        prio
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxdag::graph::MXDag;
+
+    /// a(2) -> f1(3) -> c(1); a -> f2(1) -> c   => critical a,f1,c = 6
+    fn diamond() -> MXDag {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 2.0);
+        let f1 = b.flow("f1", 0, 1, 3.0);
+        let f2 = b.flow("f2", 0, 2, 1.0);
+        let c = b.compute("c", 1, 1.0);
+        b.dep(a, f1).dep(a, f2).dep(f1, c).dep(f2, c);
+        b.finalize().unwrap()
+    }
+
+    #[test]
+    fn makespan_is_longest_path() {
+        let g = diamond();
+        let r = cpm(&g);
+        assert_eq!(r.makespan, 6.0);
+    }
+
+    #[test]
+    fn est_lst_slack() {
+        let g = diamond();
+        let r = cpm(&g);
+        let f1 = g.by_name("f1").unwrap();
+        let f2 = g.by_name("f2").unwrap();
+        assert_eq!(r.est[f1], 2.0);
+        assert_eq!(r.est[f2], 2.0);
+        assert_eq!(r.slack[f1], 0.0);
+        assert_eq!(r.slack[f2], 2.0); // can be delayed by 2 without hurting
+        assert_eq!(r.lst[f2], 4.0);
+    }
+
+    #[test]
+    fn critical_path_follows_zero_slack() {
+        let g = diamond();
+        let r = cpm(&g);
+        let names: Vec<&str> = r.critical.iter().map(|&t| g.task(t).name.as_str()).collect();
+        assert_eq!(names, vec!["v_S", "a", "f1", "c", "v_E"]);
+    }
+
+    #[test]
+    fn critical_membership() {
+        let g = diamond();
+        let r = cpm(&g);
+        assert!(r.is_critical(g.by_name("f1").unwrap()));
+        assert!(!r.is_critical(g.by_name("f2").unwrap()));
+    }
+
+    #[test]
+    fn priorities_rank_critical_highest() {
+        let g = diamond();
+        let r = cpm(&g);
+        let p = r.priorities();
+        assert!(p[g.by_name("f1").unwrap()] > p[g.by_name("f2").unwrap()]);
+    }
+
+    #[test]
+    fn custom_durations() {
+        let g = diamond();
+        let mut dur: Vec<f64> = g.tasks().iter().map(|t| t.size).collect();
+        dur[g.by_name("f2").unwrap()] = 10.0; // now f2 path dominates
+        let r = cpm_with(&g, &dur);
+        assert_eq!(r.makespan, 13.0);
+        assert!(r.is_critical(g.by_name("f2").unwrap()));
+        assert!(!r.is_critical(g.by_name("f1").unwrap()));
+    }
+
+    #[test]
+    fn chain_slack_zero_everywhere() {
+        let mut b = MXDag::builder();
+        let x = b.compute("x", 0, 1.0);
+        let y = b.compute("y", 0, 2.0);
+        let z = b.compute("z", 0, 3.0);
+        b.chain(&[x, y, z]);
+        let g = b.finalize().unwrap();
+        let r = cpm(&g);
+        assert_eq!(r.makespan, 6.0);
+        for t in [x, y, z] {
+            assert!(r.is_critical(t));
+        }
+    }
+}

@@ -1,0 +1,408 @@
+//! MXDAG — the graph G = (V, E) of MXTasks (§3.1).
+//!
+//! Built through [`MXDagBuilder`]; `finalize()` validates acyclicity,
+//! attaches the dummy `v_S`/`v_E` nodes to all sources/sinks, and caches
+//! the topological order.
+
+use std::collections::BTreeMap;
+
+use super::task::{HostId, MXTask, TaskId, TaskKind};
+use crate::util::json::Json;
+
+/// Errors surfaced by graph construction/validation.
+#[derive(Debug, thiserror::Error)]
+pub enum GraphError {
+    #[error("cycle detected involving task {0}")]
+    Cycle(TaskId),
+    #[error("unknown task id {0}")]
+    UnknownTask(TaskId),
+    #[error("self-dependency on task {0}")]
+    SelfDep(TaskId),
+    #[error("invalid task: {0}")]
+    Invalid(String),
+}
+
+/// An immutable, validated MXDAG.
+#[derive(Debug, Clone)]
+pub struct MXDag {
+    tasks: Vec<MXTask>,
+    succs: Vec<Vec<TaskId>>,
+    preds: Vec<Vec<TaskId>>,
+    topo: Vec<TaskId>,
+    start: TaskId,
+    end: TaskId,
+}
+
+impl MXDag {
+    pub fn builder() -> MXDagBuilder {
+        MXDagBuilder::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+    pub fn task(&self, id: TaskId) -> &MXTask {
+        &self.tasks[id]
+    }
+    pub fn tasks(&self) -> &[MXTask] {
+        &self.tasks
+    }
+    pub fn succs(&self, id: TaskId) -> &[TaskId] {
+        &self.succs[id]
+    }
+    pub fn preds(&self, id: TaskId) -> &[TaskId] {
+        &self.preds[id]
+    }
+    /// Cached topological order (starts with `v_S`, ends with `v_E`).
+    pub fn topo(&self) -> &[TaskId] {
+        &self.topo
+    }
+    pub fn start(&self) -> TaskId {
+        self.start
+    }
+    pub fn end(&self) -> TaskId {
+        self.end
+    }
+
+    /// Ids of all real (non-dummy) tasks.
+    pub fn real_tasks(&self) -> impl Iterator<Item = TaskId> + '_ {
+        self.tasks
+            .iter()
+            .filter(|t| !t.kind.is_dummy())
+            .map(|t| t.id)
+    }
+
+    /// Find a task id by name (test/bench convenience).
+    pub fn by_name(&self, name: &str) -> Option<TaskId> {
+        self.tasks.iter().find(|t| t.name == name).map(|t| t.id)
+    }
+
+    /// Number of edges.
+    pub fn n_edges(&self) -> usize {
+        self.succs.iter().map(|s| s.len()).sum()
+    }
+
+    /// All hosts referenced by any task.
+    pub fn hosts(&self) -> Vec<HostId> {
+        let mut hs: Vec<HostId> = self
+            .tasks
+            .iter()
+            .flat_map(|t| match t.kind {
+                TaskKind::Compute { host } => vec![host],
+                TaskKind::Flow { src, dst } => vec![src, dst],
+                _ => vec![],
+            })
+            .collect();
+        hs.sort();
+        hs.dedup();
+        hs
+    }
+
+    /// JSON dump (used by the CLI and trace tooling).
+    pub fn to_json(&self) -> Json {
+        let tasks: Vec<Json> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let (kind, a, b) = match t.kind {
+                    TaskKind::Start => ("start", 0, 0),
+                    TaskKind::End => ("end", 0, 0),
+                    TaskKind::Compute { host } => ("compute", host, 0),
+                    TaskKind::Flow { src, dst } => ("flow", src, dst),
+                };
+                Json::obj(vec![
+                    ("id", Json::Num(t.id as f64)),
+                    ("name", Json::Str(t.name.clone())),
+                    ("kind", Json::Str(kind.into())),
+                    ("a", Json::Num(a as f64)),
+                    ("b", Json::Num(b as f64)),
+                    ("size", Json::Num(t.size)),
+                    ("unit", Json::Num(t.unit)),
+                ])
+            })
+            .collect();
+        let edges: Vec<Json> = self
+            .succs
+            .iter()
+            .enumerate()
+            .flat_map(|(u, vs)| {
+                vs.iter()
+                    .map(move |&v| Json::Arr(vec![Json::Num(u as f64), Json::Num(v as f64)]))
+            })
+            .collect();
+        Json::obj(vec![("tasks", Json::Arr(tasks)), ("edges", Json::Arr(edges))])
+    }
+
+    /// Parse back a graph dumped by [`MXDag::to_json`].
+    pub fn from_json(j: &Json) -> Result<MXDag, GraphError> {
+        let mut b = MXDag::builder();
+        let mut id_map: BTreeMap<usize, Option<TaskId>> = BTreeMap::new();
+        let tasks = j
+            .get("tasks")
+            .and_then(|t| t.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| GraphError::Invalid(e.to_string()))?;
+        for t in &tasks {
+            let get = |k: &str| t.get(k).map_err(|e| GraphError::Invalid(e.to_string()));
+            let id = get("id")?.as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let kind = get("kind")?.as_str().map_err(|e| GraphError::Invalid(e.to_string()))?.to_string();
+            let name = get("name")?.as_str().map_err(|e| GraphError::Invalid(e.to_string()))?.to_string();
+            let a = get("a")?.as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let bb = get("b")?.as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let size = get("size")?.as_f64().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let unit = get("unit")?.as_f64().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let new_id = match kind.as_str() {
+                "start" | "end" => None, // re-added by finalize
+                "compute" => Some(b.compute_full(&name, a, size, unit)),
+                "flow" => Some(b.flow_full(&name, a, bb, size, unit)),
+                other => return Err(GraphError::Invalid(format!("kind `{other}`"))),
+            };
+            id_map.insert(id, new_id);
+        }
+        let edges = j
+            .get("edges")
+            .and_then(|e| e.as_arr().map(|a| a.to_vec()))
+            .map_err(|e| GraphError::Invalid(e.to_string()))?;
+        for e in &edges {
+            let pair = e.as_arr().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let u = pair[0].as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let v = pair[1].as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            if let (Some(Some(u)), Some(Some(v))) = (id_map.get(&u), id_map.get(&v)) {
+                b.dep(*u, *v);
+            }
+        }
+        b.finalize()
+    }
+}
+
+/// Mutable builder for [`MXDag`].
+#[derive(Debug, Default)]
+pub struct MXDagBuilder {
+    tasks: Vec<MXTask>,
+    edges: Vec<(TaskId, TaskId)>,
+}
+
+impl MXDagBuilder {
+    fn push(&mut self, name: &str, kind: TaskKind, size: f64, unit: f64) -> TaskId {
+        assert!(size >= 0.0 && unit >= 0.0, "sizes must be non-negative");
+        let unit = if unit == 0.0 || unit > size { size } else { unit };
+        let id = self.tasks.len();
+        self.tasks.push(MXTask { id, name: name.to_string(), kind, size, unit });
+        id
+    }
+
+    /// Add a non-pipelineable compute task.
+    pub fn compute(&mut self, name: &str, host: HostId, size: f64) -> TaskId {
+        self.push(name, TaskKind::Compute { host }, size, size)
+    }
+
+    /// Add a compute task with an explicit pipeline unit.
+    pub fn compute_full(&mut self, name: &str, host: HostId, size: f64, unit: f64) -> TaskId {
+        self.push(name, TaskKind::Compute { host }, size, unit)
+    }
+
+    /// Add a non-pipelineable network flow.
+    pub fn flow(&mut self, name: &str, src: HostId, dst: HostId, size: f64) -> TaskId {
+        self.push(name, TaskKind::Flow { src, dst }, size, size)
+    }
+
+    /// Add a network flow with an explicit pipeline unit.
+    pub fn flow_full(&mut self, name: &str, src: HostId, dst: HostId, size: f64, unit: f64) -> TaskId {
+        self.push(name, TaskKind::Flow { src, dst }, size, unit)
+    }
+
+    /// Declare that `b` cannot start before `a` ends.
+    pub fn dep(&mut self, a: TaskId, b: TaskId) -> &mut Self {
+        self.edges.push((a, b));
+        self
+    }
+
+    /// Chain of dependencies a -> b -> c ...
+    pub fn chain(&mut self, ids: &[TaskId]) -> &mut Self {
+        for w in ids.windows(2) {
+            self.dep(w[0], w[1]);
+        }
+        self
+    }
+
+    /// Validate, attach `v_S`/`v_E`, compute the topological order.
+    pub fn finalize(mut self) -> Result<MXDag, GraphError> {
+        let n_real = self.tasks.len();
+        for &(a, b) in &self.edges {
+            if a >= n_real {
+                return Err(GraphError::UnknownTask(a));
+            }
+            if b >= n_real {
+                return Err(GraphError::UnknownTask(b));
+            }
+            if a == b {
+                return Err(GraphError::SelfDep(a));
+            }
+        }
+
+        // dummy start/end
+        let start = self.push("v_S", TaskKind::Start, 0.0, 0.0);
+        let end = self.push("v_E", TaskKind::End, 0.0, 0.0);
+        let n = self.tasks.len();
+
+        let mut succs = vec![Vec::new(); n];
+        let mut preds = vec![Vec::new(); n];
+        let mut seen = std::collections::BTreeSet::new();
+        for &(a, b) in &self.edges {
+            if seen.insert((a, b)) {
+                succs[a].push(b);
+                preds[b].push(a);
+            }
+        }
+        for id in 0..n_real {
+            if preds[id].is_empty() {
+                succs[start].push(id);
+                preds[id].push(start);
+            }
+            if succs[id].is_empty() {
+                succs[id].push(end);
+                preds[end].push(id);
+            }
+        }
+
+        // Kahn topological order
+        let mut indeg: Vec<usize> = preds.iter().map(|p| p.len()).collect();
+        let mut queue: Vec<TaskId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        while let Some(u) = queue.pop() {
+            topo.push(u);
+            for &v in &succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if topo.len() != n {
+            let culprit = (0..n).find(|&i| indeg[i] > 0).unwrap();
+            return Err(GraphError::Cycle(culprit));
+        }
+
+        Ok(MXDag { tasks: self.tasks, succs, preds, topo, start, end })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> MXDag {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 1.0);
+        let f1 = b.flow("f1", 0, 1, 2.0);
+        let f2 = b.flow("f2", 0, 2, 2.0);
+        let c = b.compute("c", 1, 1.0);
+        b.dep(a, f1).dep(a, f2).dep(f1, c).dep(f2, c);
+        b.finalize().unwrap()
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = diamond();
+        assert_eq!(g.len(), 6); // 4 real + start + end
+        assert_eq!(g.real_tasks().count(), 4);
+        assert_eq!(g.topo()[0], g.start());
+        assert_eq!(*g.topo().last().unwrap(), g.end());
+    }
+
+    #[test]
+    fn start_end_attached() {
+        let g = diamond();
+        let a = g.by_name("a").unwrap();
+        let c = g.by_name("c").unwrap();
+        assert_eq!(g.preds(a), &[g.start()]);
+        assert_eq!(g.succs(c), &[g.end()]);
+    }
+
+    #[test]
+    fn topo_respects_edges() {
+        let g = diamond();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, &t) in g.topo().iter().enumerate() {
+                p[t] = i;
+            }
+            p
+        };
+        for u in 0..g.len() {
+            for &v in g.succs(u) {
+                assert!(pos[u] < pos[v], "edge {u}->{v} violates topo");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let mut b = MXDag::builder();
+        let x = b.compute("x", 0, 1.0);
+        let y = b.compute("y", 0, 1.0);
+        b.dep(x, y).dep(y, x);
+        assert!(matches!(b.finalize(), Err(GraphError::Cycle(_))));
+    }
+
+    #[test]
+    fn self_dep_rejected() {
+        let mut b = MXDag::builder();
+        let x = b.compute("x", 0, 1.0);
+        b.dep(x, x);
+        assert!(matches!(b.finalize(), Err(GraphError::SelfDep(_))));
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        let mut b = MXDag::builder();
+        let x = b.compute("x", 0, 1.0);
+        b.dep(x, 99);
+        assert!(matches!(b.finalize(), Err(GraphError::UnknownTask(99))));
+    }
+
+    #[test]
+    fn duplicate_edges_deduped() {
+        let mut b = MXDag::builder();
+        let x = b.compute("x", 0, 1.0);
+        let y = b.compute("y", 0, 1.0);
+        b.dep(x, y).dep(x, y);
+        let g = b.finalize().unwrap();
+        assert_eq!(g.succs(x), &[y]);
+    }
+
+    #[test]
+    fn unit_clamped_to_size() {
+        let mut b = MXDag::builder();
+        let x = b.compute_full("x", 0, 1.0, 5.0); // unit > size -> clamp
+        let g = b.finalize().unwrap();
+        assert_eq!(g.task(x).unit, 1.0);
+        assert!(!g.task(x).pipelineable());
+    }
+
+    #[test]
+    fn hosts_collected() {
+        let g = diamond();
+        assert_eq!(g.hosts(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let g = diamond();
+        let j = g.to_json();
+        let g2 = MXDag::from_json(&j).unwrap();
+        assert_eq!(g.len(), g2.len());
+        assert_eq!(g.n_edges(), g2.n_edges());
+        for t in g.tasks() {
+            if t.kind.is_dummy() {
+                continue;
+            }
+            let t2 = g2.task(g2.by_name(&t.name).unwrap());
+            assert_eq!(t.kind, t2.kind);
+            assert_eq!(t.size, t2.size);
+            assert_eq!(t.unit, t2.unit);
+        }
+    }
+}

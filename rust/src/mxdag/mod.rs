@@ -1,0 +1,12 @@
+//! The MXDAG abstraction (§3): compute and network tasks as first-class
+//! DAG nodes, with `Size`/`Unit` annotations, Copath analysis, the
+//! path-length equations, and critical-path machinery.
+
+pub mod critical;
+pub mod graph;
+pub mod path;
+pub mod task;
+
+pub use critical::{cpm, cpm_with, Cpm};
+pub use graph::{GraphError, MXDag, MXDagBuilder};
+pub use task::{HostId, MXTask, TaskId, TaskKind};

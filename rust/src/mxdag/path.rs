@@ -1,0 +1,257 @@
+//! Paths, Copaths, and the path-length equations (1) and (2) of §3.2.
+//!
+//! * `Len(P_seq) = Σ Size(v_i)/Rsrc(v_i)`                       (Eq. 1)
+//! * `Len(P_pipe) = Σ Unit(v_i)/Rsrc(v_i) + max_i Size(v_i)/Rsrc(v_i)
+//!                  − max_i Unit(v_i)/Rsrc(v_i)`                 (Eq. 2)
+//!
+//! A *Copath* is a group of paths sharing the same head and tail task;
+//! its length is the length of its longest member (its critical path).
+
+use super::graph::MXDag;
+use super::task::TaskId;
+
+/// Eq. (1): sequential path length given per-task resource shares.
+pub fn len_seq(dag: &MXDag, path: &[TaskId], rsrc: &dyn Fn(TaskId) -> f64) -> f64 {
+    path.iter().map(|&v| dag.task(v).size / rsrc(v)).sum()
+}
+
+/// Eq. (2): pipelineable-only path length given per-task resource shares.
+///
+/// The sum of unit times is the pipeline fill; steady state is dominated
+/// by the slowest stage (`max Size/Rsrc`), whose own fill unit is counted
+/// once already (`− max Unit/Rsrc`).
+pub fn len_pipe(dag: &MXDag, path: &[TaskId], rsrc: &dyn Fn(TaskId) -> f64) -> f64 {
+    if path.is_empty() {
+        return 0.0;
+    }
+    let unit_sum: f64 = path.iter().map(|&v| dag.task(v).unit / rsrc(v)).sum();
+    let size_max = path
+        .iter()
+        .map(|&v| dag.task(v).size / rsrc(v))
+        .fold(0.0, f64::max);
+    let unit_max = path
+        .iter()
+        .map(|&v| dag.task(v).unit / rsrc(v))
+        .fold(0.0, f64::max);
+    unit_sum + size_max - unit_max
+}
+
+/// Mixed path length: consecutive tasks that are both in `pipelined`
+/// form pipeline segments evaluated by Eq. (2); everything else is
+/// sequential (Eq. 1). This is the recursive decomposition of §3.2
+/// specialised to a single path.
+pub fn len_mixed(
+    dag: &MXDag,
+    path: &[TaskId],
+    pipelined: &dyn Fn(TaskId) -> bool,
+    rsrc: &dyn Fn(TaskId) -> f64,
+) -> f64 {
+    let mut total = 0.0;
+    let mut i = 0;
+    while i < path.len() {
+        if pipelined(path[i]) && dag.task(path[i]).pipelineable() {
+            let mut j = i + 1;
+            while j < path.len() && pipelined(path[j]) && dag.task(path[j]).pipelineable() {
+                j += 1;
+            }
+            if j - i >= 2 {
+                total += len_pipe(dag, &path[i..j], rsrc);
+            } else {
+                total += len_seq(dag, &path[i..j], rsrc);
+            }
+            i = j;
+        } else {
+            total += dag.task(path[i]).size / rsrc(path[i]);
+            i += 1;
+        }
+    }
+    total
+}
+
+/// Enumerate all simple paths from `head` to `tail` (inclusive), up to
+/// `limit` paths (DAG path counts can be exponential).
+pub fn enumerate_paths(dag: &MXDag, head: TaskId, tail: TaskId, limit: usize) -> Vec<Vec<TaskId>> {
+    let mut out = Vec::new();
+    let mut stack = vec![head];
+    fn dfs(
+        dag: &MXDag,
+        cur: TaskId,
+        tail: TaskId,
+        stack: &mut Vec<TaskId>,
+        out: &mut Vec<Vec<TaskId>>,
+        limit: usize,
+    ) {
+        if out.len() >= limit {
+            return;
+        }
+        if cur == tail {
+            out.push(stack.clone());
+            return;
+        }
+        for &s in dag.succs(cur) {
+            stack.push(s);
+            dfs(dag, s, tail, stack, out, limit);
+            stack.pop();
+        }
+    }
+    dfs(dag, head, tail, &mut stack, &mut out, limit);
+    out
+}
+
+/// The Copath between `head` and `tail`: all simple paths joining them.
+/// Returns `None` if fewer than two paths exist (not a Copath).
+pub fn copath(dag: &MXDag, head: TaskId, tail: TaskId, limit: usize) -> Option<Vec<Vec<TaskId>>> {
+    let paths = enumerate_paths(dag, head, tail, limit);
+    if paths.len() >= 2 {
+        Some(paths)
+    } else {
+        None
+    }
+}
+
+/// Length of a Copath = length of its longest member path (its critical
+/// path), interior tasks only evaluated (head/tail excluded so Copath
+/// composition does not double-count).
+pub fn copath_length(
+    dag: &MXDag,
+    paths: &[Vec<TaskId>],
+    pipelined: &dyn Fn(TaskId) -> bool,
+    rsrc: &dyn Fn(TaskId) -> f64,
+) -> f64 {
+    paths
+        .iter()
+        .map(|p| {
+            let interior = if p.len() > 2 { &p[1..p.len() - 1] } else { &[] as &[TaskId] };
+            len_mixed(dag, interior, pipelined, rsrc)
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Critical member of a Copath (index into `paths`).
+pub fn copath_critical(
+    dag: &MXDag,
+    paths: &[Vec<TaskId>],
+    pipelined: &dyn Fn(TaskId) -> bool,
+    rsrc: &dyn Fn(TaskId) -> f64,
+) -> usize {
+    let mut best = 0;
+    let mut best_len = f64::MIN;
+    for (i, p) in paths.iter().enumerate() {
+        let interior = if p.len() > 2 { &p[1..p.len() - 1] } else { &[] as &[TaskId] };
+        let l = len_mixed(dag, interior, pipelined, rsrc);
+        if l > best_len {
+            best_len = l;
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn full_rsrc(_: TaskId) -> f64 {
+    1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxdag::graph::MXDag;
+
+    fn job_x() -> MXDag {
+        // Fig 4(a)-like: A -> f1 -> B -> f2 -> C and A -> f3 -> C
+        let mut b = MXDag::builder();
+        let a = b.compute("A", 0, 1.0);
+        let f1 = b.flow("f1", 0, 1, 2.0);
+        let bb = b.compute("B", 1, 1.0);
+        let f2 = b.flow("f2", 1, 2, 2.0);
+        let f3 = b.flow("f3", 0, 2, 3.0);
+        let c = b.compute("C", 2, 1.0);
+        b.chain(&[a, f1, bb, f2, c]);
+        b.dep(a, f3).dep(f3, c);
+        b.finalize().unwrap()
+    }
+
+    #[test]
+    fn eq1_sums_sizes() {
+        let g = job_x();
+        let p = vec![g.by_name("A").unwrap(), g.by_name("f1").unwrap(), g.by_name("B").unwrap()];
+        assert_eq!(len_seq(&g, &p, &full_rsrc), 4.0);
+        // half resource on everything doubles the length
+        assert_eq!(len_seq(&g, &p, &|_| 0.5), 8.0);
+    }
+
+    #[test]
+    fn eq2_pipeline_dominated_by_slowest() {
+        // two pipelineable tasks: sizes 10, 6; units 1, 2
+        let mut b = MXDag::builder();
+        let t1 = b.compute_full("t1", 0, 10.0, 1.0);
+        let t2 = b.flow_full("t2", 0, 1, 6.0, 2.0);
+        b.dep(t1, t2);
+        let g = b.finalize().unwrap();
+        let p = vec![t1, t2];
+        // Eq2 = (1+2) + max(10,6) - max(1,2) = 3 + 10 - 2 = 11
+        assert_eq!(len_pipe(&g, &p, &full_rsrc), 11.0);
+        // sequential would be 16
+        assert_eq!(len_seq(&g, &p, &full_rsrc), 16.0);
+    }
+
+    #[test]
+    fn eq2_empty_path() {
+        let g = job_x();
+        assert_eq!(len_pipe(&g, &[], &full_rsrc), 0.0);
+    }
+
+    #[test]
+    fn mixed_groups_consecutive_pipelined() {
+        let mut b = MXDag::builder();
+        let t1 = b.compute_full("t1", 0, 4.0, 1.0);
+        let t2 = b.flow_full("t2", 0, 1, 4.0, 1.0);
+        let t3 = b.compute("t3", 1, 5.0); // not pipelineable
+        b.chain(&[t1, t2, t3]);
+        let g = b.finalize().unwrap();
+        let p = vec![t1, t2, t3];
+        let all = |_: TaskId| true;
+        // pipe(t1,t2) = (1+1) + 4 - 1 = 5, then t3 = 5 => 10
+        assert_eq!(len_mixed(&g, &p, &all, &full_rsrc), 10.0);
+        let none = |_: TaskId| false;
+        assert_eq!(len_mixed(&g, &p, &none, &full_rsrc), 13.0);
+    }
+
+    #[test]
+    fn enumerate_finds_both_paths() {
+        let g = job_x();
+        let paths = enumerate_paths(&g, g.by_name("A").unwrap(), g.by_name("C").unwrap(), 100);
+        assert_eq!(paths.len(), 2);
+    }
+
+    #[test]
+    fn copath_requires_two_paths() {
+        let g = job_x();
+        let a = g.by_name("A").unwrap();
+        let c = g.by_name("C").unwrap();
+        let b = g.by_name("B").unwrap();
+        assert!(copath(&g, a, c, 100).is_some());
+        assert!(copath(&g, a, b, 100).is_none()); // single path only
+    }
+
+    #[test]
+    fn copath_length_is_max_member() {
+        let g = job_x();
+        let a = g.by_name("A").unwrap();
+        let c = g.by_name("C").unwrap();
+        let paths = copath(&g, a, c, 100).unwrap();
+        let none = |_: TaskId| false;
+        // interiors: f1,B,f2 = 5 ; f3 = 3 -> copath length 5
+        assert_eq!(copath_length(&g, &paths, &none, &full_rsrc), 5.0);
+        let crit = copath_critical(&g, &paths, &none, &full_rsrc);
+        assert_eq!(paths[crit].len(), 5); // A f1 B f2 C
+    }
+
+    #[test]
+    fn path_limit_respected() {
+        let g = job_x();
+        let a = g.by_name("A").unwrap();
+        let c = g.by_name("C").unwrap();
+        let paths = enumerate_paths(&g, a, c, 1);
+        assert_eq!(paths.len(), 1);
+    }
+}

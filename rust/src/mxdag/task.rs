@@ -1,0 +1,113 @@
+//! MXTask — the node type of an MXDAG (§3.1).
+//!
+//! An MXTask is either a *compute* task pinned to a host (CPU/GPU) or a
+//! *network* task: one flow with a single sender and a single receiver.
+//! Both carry `Size` (completion time at full resource) and `Unit` (the
+//! smallest pipelineable unit; `unit == size` means not pipelineable).
+
+/// Index of a task within its MXDAG.
+pub type TaskId = usize;
+/// Index of a host within the cluster.
+pub type HostId = usize;
+
+/// What kind of physical process a task is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Dummy source node `v_S`.
+    Start,
+    /// Dummy sink node `v_E`.
+    End,
+    /// Host-local computation occupying one compute slot on `host`.
+    Compute { host: HostId },
+    /// A single network flow from `src`'s NIC-up to `dst`'s NIC-down.
+    Flow { src: HostId, dst: HostId },
+}
+
+impl TaskKind {
+    pub fn is_flow(&self) -> bool {
+        matches!(self, TaskKind::Flow { .. })
+    }
+    pub fn is_compute(&self) -> bool {
+        matches!(self, TaskKind::Compute { .. })
+    }
+    pub fn is_dummy(&self) -> bool {
+        matches!(self, TaskKind::Start | TaskKind::End)
+    }
+}
+
+/// One node of an MXDAG.
+#[derive(Debug, Clone)]
+pub struct MXTask {
+    pub id: TaskId,
+    pub name: String,
+    pub kind: TaskKind,
+    /// `Size(v)`: completion time with maximum resource assigned.
+    pub size: f64,
+    /// `Unit(v)`: smallest pipeline unit; == `size` when not pipelineable.
+    pub unit: f64,
+}
+
+impl MXTask {
+    /// A task is pipelineable iff its unit is strictly smaller than its size.
+    pub fn pipelineable(&self) -> bool {
+        self.unit < self.size && self.size > 0.0
+    }
+
+    /// Number of pipeline chunks when executed in a pipeline.
+    pub fn chunks(&self) -> usize {
+        if !self.pipelineable() {
+            1
+        } else {
+            (self.size / self.unit).ceil() as usize
+        }
+    }
+
+    /// Completion time with `rsrc` (fraction of max resource, 0 < rsrc <= 1).
+    pub fn len_with(&self, rsrc: f64) -> f64 {
+        assert!(rsrc > 0.0, "resource share must be positive");
+        self.size / rsrc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(size: f64, unit: f64) -> MXTask {
+        MXTask { id: 0, name: "t".into(), kind: TaskKind::Compute { host: 0 }, size, unit }
+    }
+
+    #[test]
+    fn pipelineable_iff_unit_lt_size() {
+        assert!(t(10.0, 1.0).pipelineable());
+        assert!(!t(10.0, 10.0).pipelineable());
+        assert!(!t(0.0, 0.0).pipelineable());
+    }
+
+    #[test]
+    fn chunk_count() {
+        assert_eq!(t(10.0, 1.0).chunks(), 10);
+        assert_eq!(t(10.0, 3.0).chunks(), 4); // ceil
+        assert_eq!(t(5.0, 5.0).chunks(), 1);
+    }
+
+    #[test]
+    fn len_scales_with_resource() {
+        assert_eq!(t(10.0, 10.0).len_with(1.0), 10.0);
+        assert_eq!(t(10.0, 10.0).len_with(0.5), 20.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_resource_rejected() {
+        t(1.0, 1.0).len_with(0.0);
+    }
+
+    #[test]
+    fn kind_predicates() {
+        assert!(TaskKind::Flow { src: 0, dst: 1 }.is_flow());
+        assert!(TaskKind::Compute { host: 0 }.is_compute());
+        assert!(TaskKind::Start.is_dummy() && TaskKind::End.is_dummy());
+        assert!(!TaskKind::Start.is_flow());
+    }
+}

@@ -1,0 +1,103 @@
+//! The PJRT execution engine: loads `artifacts/*.hlo.txt` (HLO **text**
+//! — see DESIGN.md §2 for why not serialized protos), compiles each once
+//! on the CPU PJRT client, and executes them from the coordinator's hot
+//! path. Python never runs here.
+
+use std::path::Path;
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::{from_literal_f32, to_literal, Tensor};
+
+/// A loaded artifact set, ready to execute.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load + compile every artifact in `dir` on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = BTreeMap::new();
+        for (name, meta) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text for `{name}`"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling `{name}`"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Engine { client, executables, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute artifact `name` with shape-checked inputs; returns the
+    /// untupled outputs as host tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.manifest.artifact(name).map_err(|e| anyhow!(e))?;
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "`{name}` wants {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if !t.matches(spec) {
+                return Err(anyhow!(
+                    "`{name}` input {i}: shape/dtype mismatch (got {:?}, want {:?})",
+                    t.shape(),
+                    spec.shape
+                ));
+            }
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not loaded"))?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True: always a tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != meta.n_outputs {
+            return Err(anyhow!(
+                "`{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                meta.n_outputs
+            ));
+        }
+        parts.iter().map(from_literal_f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests needing real artifacts live in
+    //! `rust/tests/integration_runtime.rs`; here we only check error paths
+    //! that don't require a compiled artifact.
+
+    use super::*;
+
+    #[test]
+    fn load_missing_dir_fails() {
+        assert!(Engine::load(Path::new("/nonexistent-artifacts")).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! The artifact manifest emitted by `python/compile/aot.py`.
+//!
+//! Describes every AOT-lowered HLO module: file name, ordered input
+//! shapes/dtypes (flattened params first), and output arity. The Rust
+//! side is driven entirely by this file — no Python at runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "s32" => Ok(DType::S32),
+            other => Err(format!("unsupported dtype `{other}`")),
+        }
+    }
+}
+
+/// One input tensor spec.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+}
+
+/// The model section (layer/param layout of the DDL example).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub n_layers: usize,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelMeta,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("parse manifest: {e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Manifest, String> {
+        let e = |x: crate::util::json::JsonError| x.to_string();
+        let m = j.get("model").map_err(e)?;
+        let model = ModelMeta {
+            input_dim: m.get("input_dim").map_err(e)?.as_usize().map_err(e)?,
+            hidden: m.get("hidden").map_err(e)?.usize_vec().map_err(e)?,
+            classes: m.get("classes").map_err(e)?.as_usize().map_err(e)?,
+            batch: m.get("batch").map_err(e)?.as_usize().map_err(e)?,
+            lr: m.get("lr").map_err(e)?.as_f64().map_err(e)?,
+            n_layers: m.get("n_layers").map_err(e)?.as_usize().map_err(e)?,
+            param_shapes: m
+                .get("param_shapes")
+                .map_err(e)?
+                .as_arr()
+                .map_err(e)?
+                .iter()
+                .map(|s| s.usize_vec().map_err(e))
+                .collect::<Result<_, _>>()?,
+            param_count: m.get("param_count").map_err(e)?.as_usize().map_err(e)?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts").map_err(e)?.as_obj().map_err(e)? {
+            let inputs = a
+                .get("inputs")
+                .map_err(e)?
+                .as_arr()
+                .map_err(e)?
+                .iter()
+                .map(|i| {
+                    Ok(TensorSpec {
+                        shape: i.get("shape").map_err(e)?.usize_vec().map_err(e)?,
+                        dtype: DType::parse(i.get("dtype").map_err(e)?.as_str().map_err(e)?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: dir.join(a.get("file").map_err(e)?.as_str().map_err(e)?),
+                    inputs,
+                    n_outputs: a.get("n_outputs").map_err(e)?.as_usize().map_err(e)?,
+                },
+            );
+        }
+        Ok(Manifest { model, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta, String> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact `{name}`"))
+    }
+
+    /// Bytes moved for layer `i`'s parameters (push or pull) — drives the
+    /// network MXTask sizes of the DDL coordinator.
+    pub fn layer_param_bytes(&self, layer: usize) -> usize {
+        // params are [w0, b0, w1, b1, ...]; each f32 = 4 bytes
+        let w = &self.model.param_shapes[2 * layer];
+        let b = &self.model.param_shapes[2 * layer + 1];
+        4 * (w.iter().product::<usize>() + b.iter().product::<usize>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+              "model": {"input_dim": 16, "hidden": [8], "classes": 4,
+                        "batch": 4, "lr": 0.1, "n_layers": 2,
+                        "param_shapes": [[16,8],[8],[8,4],[4]],
+                        "param_count": 172},
+              "artifacts": {
+                "forward": {"file": "forward.hlo.txt",
+                  "inputs": [{"shape":[16,8],"dtype":"f32"},
+                             {"shape":[8],"dtype":"f32"},
+                             {"shape":[8,4],"dtype":"f32"},
+                             {"shape":[4],"dtype":"f32"},
+                             {"shape":[4,16],"dtype":"f32"}],
+                  "n_outputs": 1}
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_model_and_artifacts() {
+        let m = Manifest::from_json(&sample(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.model.param_count, 172);
+        assert_eq!(m.model.param_shapes.len(), 4);
+        let f = m.artifact("forward").unwrap();
+        assert_eq!(f.inputs.len(), 5);
+        assert_eq!(f.inputs[0].elements(), 128);
+        assert_eq!(f.n_outputs, 1);
+        assert_eq!(f.file, Path::new("/tmp/a/forward.hlo.txt"));
+    }
+
+    #[test]
+    fn layer_bytes() {
+        let m = Manifest::from_json(&sample(), Path::new("/tmp")).unwrap();
+        assert_eq!(m.layer_param_bytes(0), 4 * (16 * 8 + 8));
+        assert_eq!(m.layer_param_bytes(1), 4 * (8 * 4 + 4));
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::from_json(&sample(), Path::new("/tmp")).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn bad_dtype_rejected() {
+        let j = Json::parse(
+            r#"{"model": {"input_dim":1,"hidden":[],"classes":1,"batch":1,
+                "lr":0.1,"n_layers":1,"param_shapes":[[1]],"param_count":1},
+               "artifacts": {"x": {"file":"x","inputs":[{"shape":[1],"dtype":"c64"}],"n_outputs":1}}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_json(&j, Path::new("/")).is_err());
+    }
+}

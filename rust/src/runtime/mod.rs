@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT-CPU execution of the AOT-compiled JAX/Pallas
+//! artifacts. `Engine::load` parses HLO text, compiles once, and the
+//! coordinator calls `Engine::execute` on its hot path — Python is
+//! compile-time only.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactMeta, DType, Manifest, ModelMeta, TensorSpec};
+pub use tensor::{from_literal_f32, to_literal, Tensor};

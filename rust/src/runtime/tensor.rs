@@ -1,0 +1,175 @@
+//! Host-side tensors: the plain-`Vec<f32>` values the coordinator moves
+//! between workers, converted to/from PJRT `Literal`s at execute time.
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor (f32 or i32), shape-carrying.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    S32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn s32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        Tensor::S32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::S32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::S32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes occupied (both dtypes are 4-byte).
+    pub fn bytes(&self) -> usize {
+        4 * self.len()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("not an f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("not an f32 tensor"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        assert_eq!(self.len(), 1, "not a scalar");
+        self.as_f32()[0]
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        let dt_ok = matches!(
+            (self, &spec.dtype),
+            (Tensor::F32 { .. }, DType::F32) | (Tensor::S32 { .. }, DType::S32)
+        );
+        dt_ok && self.shape() == spec.shape.as_slice()
+    }
+
+    /// In-place `self -= lr * other` (the coordinator-side SGD update).
+    pub fn axpy_neg(&mut self, lr: f32, other: &Tensor) {
+        let a = self.as_f32_mut();
+        let b = other.as_f32();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter_mut().zip(b) {
+            *x -= lr * *y;
+        }
+    }
+
+    /// In-place `self += other` (gradient accumulation).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        let a = self.as_f32_mut();
+        let b = other.as_f32();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += *y;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for x in self.as_f32_mut() {
+            *x *= s;
+        }
+    }
+}
+
+/// Convert to an XLA literal.
+pub fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()).reshape(&dims)?,
+        Tensor::S32 { data, .. } => xla::Literal::vec1(data.as_slice()).reshape(&dims)?,
+    };
+    Ok(lit)
+}
+
+/// Convert back from an XLA literal (f32 only — all our outputs are f32).
+pub fn from_literal_f32(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::f32(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(&[2, 3], vec![1.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.bytes(), 24);
+        let z = Tensor::zeros(&[4]);
+        assert_eq!(z.as_f32(), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_data_mismatch_panics() {
+        Tensor::f32(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn sgd_update() {
+        let mut p = Tensor::f32(&[3], vec![1.0, 2.0, 3.0]);
+        let g = Tensor::f32(&[3], vec![1.0, 1.0, 1.0]);
+        p.axpy_neg(0.5, &g);
+        assert_eq!(p.as_f32(), &[0.5, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut a = Tensor::f32(&[2], vec![1.0, 2.0]);
+        a.add_assign(&Tensor::f32(&[2], vec![3.0, 4.0]));
+        a.scale(0.5);
+        assert_eq!(a.as_f32(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        use crate::runtime::manifest::{DType, TensorSpec};
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert!(t.matches(&TensorSpec { shape: vec![2, 3], dtype: DType::F32 }));
+        assert!(!t.matches(&TensorSpec { shape: vec![3, 2], dtype: DType::F32 }));
+        assert!(!t.matches(&TensorSpec { shape: vec![2, 3], dtype: DType::S32 }));
+        let y = Tensor::s32(&[2], vec![0, 1]);
+        assert!(y.matches(&TensorSpec { shape: vec![2], dtype: DType::S32 }));
+    }
+
+    #[test]
+    fn scalar_accessor() {
+        assert_eq!(Tensor::f32(&[], vec![7.5]).scalar_f32(), 7.5);
+    }
+}

@@ -1,0 +1,255 @@
+//! Multi-MXDAG scheduling — Principle 2 (§4.2).
+//!
+//! *"Let each MXDAG be altruistic by delaying its non-critical path
+//! resource allocation to benefit other MXDAGs' critical paths, without
+//! increasing its own end-to-end completion time."*
+//!
+//! Mechanism: per-job CPM; each job's non-critical tasks are gated to
+//! their latest start time (LST) and demoted below every critical task,
+//! so the resources they would have idly held flow to other jobs'
+//! critical tasks (the CARBYNE-compatible behaviour of Fig. 7(d)).
+
+use std::collections::BTreeMap;
+
+use super::{Plan, Scheduler};
+use crate::mxdag::{cpm, MXDag, TaskId, TaskKind};
+use crate::sim::{Annotations, Cluster, Policy, SimResult};
+
+/// Several MXDAGs merged onto one shared cluster.
+#[derive(Debug, Clone)]
+pub struct MultiDag {
+    /// The merged graph (single global v_S/v_E).
+    pub dag: MXDag,
+    /// Tasks of each job, in merged-graph ids.
+    pub jobs: Vec<Vec<TaskId>>,
+}
+
+/// Merge independent job MXDAGs into one graph over the shared cluster.
+pub fn merge(job_dags: &[MXDag]) -> MultiDag {
+    let mut b = MXDag::builder();
+    let mut jobs = Vec::with_capacity(job_dags.len());
+    for jd in job_dags {
+        let mut map: BTreeMap<TaskId, TaskId> = BTreeMap::new();
+        let mut mine = Vec::new();
+        for t in jd.tasks() {
+            if t.kind.is_dummy() {
+                continue;
+            }
+            let nid = match t.kind {
+                TaskKind::Compute { host } => b.compute_full(&t.name, host, t.size, t.unit),
+                TaskKind::Flow { src, dst } => b.flow_full(&t.name, src, dst, t.size, t.unit),
+                _ => unreachable!(),
+            };
+            map.insert(t.id, nid);
+            mine.push(nid);
+        }
+        for t in jd.tasks() {
+            for &s in jd.succs(t.id) {
+                if let (Some(&a), Some(&bb)) = (map.get(&t.id), map.get(&s)) {
+                    b.dep(a, bb);
+                }
+            }
+        }
+        jobs.push(mine);
+    }
+    MultiDag { dag: b.finalize().expect("merged multi-dag must be acyclic"), jobs }
+}
+
+impl MultiDag {
+    /// Job completion time: latest finish among the job's tasks.
+    pub fn jct(&self, job: usize, r: &SimResult) -> f64 {
+        self.jobs[job]
+            .iter()
+            .map(|&t| r.finish_of(t))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Per-job CPM restricted to the merged graph: durations of other jobs'
+/// tasks are zeroed so each job sees only its own structure.
+fn per_job_cpm(multi: &MultiDag, job: usize) -> crate::mxdag::Cpm {
+    let mut dur: Vec<f64> = vec![0.0; multi.dag.len()];
+    for &t in &multi.jobs[job] {
+        dur[t] = multi.dag.task(t).size;
+    }
+    crate::mxdag::cpm_with(&multi.dag, &dur)
+}
+
+/// Principle-2 scheduler.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AltruisticScheduler;
+
+impl AltruisticScheduler {
+    /// The raw Principle-2 plan: critical tasks of any job outrank all
+    /// non-critical tasks; non-critical tasks are gated to
+    /// `max(EST, LST − Size)` — one task-size of margin so that even at
+    /// half rate (fair sharing after the gate) the task still meets its
+    /// latest finish time.
+    pub fn plan_multi_raw(&self, multi: &MultiDag) -> Plan {
+        let mut ann = Annotations::default();
+        let n = multi.dag.len();
+        for (job, tasks) in multi.jobs.iter().enumerate() {
+            let c = per_job_cpm(multi, job);
+            let prios = c.priorities();
+            for &t in tasks {
+                if c.is_critical(t) {
+                    ann.priorities.insert(t, n as i64 + prios[t]);
+                } else {
+                    ann.priorities.insert(t, prios[t]);
+                    let margin_gate =
+                        (c.lst[t] - multi.dag.task(t).size).max(c.est[t]);
+                    ann.gates.insert(t, margin_gate);
+                }
+            }
+        }
+        Plan { ann, policy: Policy::priority() }
+    }
+
+    /// Principle-2 plan with the paper's guarantee enforced ("without
+    /// increasing its own end-to-end completion time"): the raw plan is
+    /// what-if simulated against the selfish plan on `cluster`; if any
+    /// job would regress, fall back to selfish.
+    pub fn plan_multi_checked(
+        &self,
+        multi: &MultiDag,
+        cluster: &crate::sim::Cluster,
+    ) -> Plan {
+        let altru = self.plan_multi_raw(multi);
+        let selfish = SelfishScheduler.plan_multi(multi);
+        let (Ok(ra), Ok(rs)) = (
+            super::evaluate(&multi.dag, cluster, &altru),
+            super::evaluate(&multi.dag, cluster, &selfish),
+        ) else {
+            return selfish;
+        };
+        for j in 0..multi.jobs.len() {
+            if multi.jct(j, &ra) > multi.jct(j, &rs) + 1e-9 {
+                return selfish; // not Pareto: honour the guarantee
+            }
+        }
+        altru
+    }
+
+    /// Backwards-compatible alias for the raw plan.
+    pub fn plan_multi(&self, multi: &MultiDag) -> Plan {
+        self.plan_multi_raw(multi)
+    }
+}
+
+impl Scheduler for AltruisticScheduler {
+    fn name(&self) -> &'static str {
+        "altruistic"
+    }
+    /// Single-DAG degenerate case: behaves like critical-path priority.
+    fn plan(&self, dag: &MXDag, _cluster: &Cluster) -> Plan {
+        let c = cpm(dag);
+        let prios = c.priorities();
+        let mut ann = Annotations::default();
+        for t in dag.real_tasks() {
+            ann.priorities.insert(t, prios[t]);
+        }
+        Plan { ann, policy: Policy::priority() }
+    }
+}
+
+/// Baseline for Fig. 7(c): every job grabs resources as soon as tasks are
+/// ready; critical-path priorities exist only *within* a job but nothing
+/// is delayed for anyone else.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SelfishScheduler;
+
+impl SelfishScheduler {
+    pub fn plan_multi(&self, multi: &MultiDag) -> Plan {
+        let mut ann = Annotations::default();
+        for (job, tasks) in multi.jobs.iter().enumerate() {
+            let c = per_job_cpm(multi, job);
+            let prios = c.priorities();
+            for &t in tasks {
+                ann.priorities.insert(t, prios[t]);
+            }
+        }
+        Plan { ann, policy: Policy::fair() }
+    }
+}
+
+impl Scheduler for SelfishScheduler {
+    fn name(&self) -> &'static str {
+        "selfish"
+    }
+    fn plan(&self, _dag: &MXDag, _cluster: &Cluster) -> Plan {
+        Plan::fair()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::evaluate;
+    use crate::sim::Cluster;
+    use crate::workloads;
+
+    #[test]
+    fn merge_preserves_structure() {
+        let (j1, j2) = workloads::fig7_jobs();
+        let multi = merge(&[j1.clone(), j2.clone()]);
+        assert_eq!(
+            multi.dag.real_tasks().count(),
+            j1.real_tasks().count() + j2.real_tasks().count()
+        );
+        assert_eq!(multi.jobs.len(), 2);
+    }
+
+    #[test]
+    fn fig7_altruism_helps_job2_without_hurting_job1() {
+        let (j1, j2) = workloads::fig7_jobs();
+        let multi = merge(&[j1, j2]);
+        let cluster = Cluster::uniform(4);
+
+        let selfish = evaluate(
+            &multi.dag,
+            &cluster,
+            &SelfishScheduler.plan_multi(&multi),
+        )
+        .unwrap();
+        let altru = evaluate(
+            &multi.dag,
+            &cluster,
+            &AltruisticScheduler.plan_multi(&multi),
+        )
+        .unwrap();
+
+        let t2_selfish = multi.jct(1, &selfish);
+        let t1_altru = multi.jct(1, &altru);
+        assert!(
+            t1_altru < t2_selfish - 1e-9,
+            "job2 must improve: selfish {t2_selfish} vs altruistic {t1_altru}"
+        );
+        // job1 unchanged (its critical path owns its resources either way)
+        let j1_selfish = multi.jct(0, &selfish);
+        let j1_altru = multi.jct(0, &altru);
+        assert!(
+            j1_altru <= j1_selfish + 1e-9,
+            "job1 must not get worse: {j1_selfish} -> {j1_altru}"
+        );
+    }
+
+    #[test]
+    fn per_job_cpm_ignores_other_jobs() {
+        let (j1, j2) = workloads::fig7_jobs();
+        let multi = merge(&[j1, j2]);
+        let c0 = per_job_cpm(&multi, 0);
+        // job 1's critical path length is its own 5.0, not inflated by job 2
+        assert!((c0.makespan - 5.0).abs() < 1e-9, "got {}", c0.makespan);
+    }
+
+    #[test]
+    fn single_dag_altruistic_equals_critical_priority() {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 1.0);
+        let f = b.flow("f", 0, 1, 1.0);
+        b.dep(a, f);
+        let g = b.finalize().unwrap();
+        let r = crate::sched::run(&AltruisticScheduler, &g, &Cluster::uniform(2)).unwrap();
+        assert!((r.makespan - 2.0).abs() < 1e-9);
+    }
+}

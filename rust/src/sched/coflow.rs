@@ -1,0 +1,185 @@
+//! Coflow baseline (§2.2): Varys-style SEBF + MADD with all-or-nothing
+//! semantics, and the *grouping ambiguity* of Fig. 2(b1,b2,b3) made
+//! explicit as a pluggable strategy.
+
+use std::collections::BTreeMap;
+
+use super::{Plan, Scheduler};
+use crate::mxdag::{MXDag, TaskId};
+use crate::sim::{Annotations, Cluster, Policy};
+
+/// How flows are grouped into coflows — the definitional choice the
+/// application programmer "must commit to" per §2.2.
+#[derive(Debug, Clone)]
+pub enum Grouping {
+    /// Hand-specified groups (used for Fig. 2's b1/b2/b3 variants).
+    Explicit(Vec<Vec<TaskId>>),
+    /// Aggregation view: flows sharing a destination compute task.
+    ByDst,
+    /// Broadcast view: flows sharing a source compute task.
+    BySrc,
+    /// Stage view: flows at the same topological depth form one coflow.
+    ByLevel,
+}
+
+#[derive(Debug, Clone)]
+pub struct CoflowScheduler {
+    pub grouping: Grouping,
+}
+
+impl CoflowScheduler {
+    pub fn new(grouping: Grouping) -> Self {
+        CoflowScheduler { grouping }
+    }
+
+    /// Derive the coflow groups for `dag` under this grouping.
+    pub fn groups(&self, dag: &MXDag) -> Vec<Vec<TaskId>> {
+        let flows: Vec<TaskId> = dag
+            .real_tasks()
+            .filter(|&t| dag.task(t).kind.is_flow())
+            .collect();
+        match &self.grouping {
+            Grouping::Explicit(groups) => groups.clone(),
+            Grouping::ByDst => {
+                let mut by: BTreeMap<Vec<TaskId>, Vec<TaskId>> = BTreeMap::new();
+                for &f in &flows {
+                    by.entry(dag.succs(f).to_vec()).or_default().push(f);
+                }
+                by.into_values().collect()
+            }
+            Grouping::BySrc => {
+                let mut by: BTreeMap<Vec<TaskId>, Vec<TaskId>> = BTreeMap::new();
+                for &f in &flows {
+                    by.entry(dag.preds(f).to_vec()).or_default().push(f);
+                }
+                by.into_values().collect()
+            }
+            Grouping::ByLevel => {
+                // topological depth of each task
+                let mut depth = vec![0usize; dag.len()];
+                for &u in dag.topo() {
+                    for &v in dag.succs(u) {
+                        depth[v] = depth[v].max(depth[u] + 1);
+                    }
+                }
+                let mut by: BTreeMap<usize, Vec<TaskId>> = BTreeMap::new();
+                for &f in &flows {
+                    by.entry(depth[f]).or_default().push(f);
+                }
+                by.into_values().collect()
+            }
+        }
+    }
+}
+
+impl Scheduler for CoflowScheduler {
+    fn name(&self) -> &'static str {
+        "coflow"
+    }
+    fn plan(&self, dag: &MXDag, _cluster: &Cluster) -> Plan {
+        Plan {
+            ann: Annotations { coflows: self.groups(dag), ..Default::default() },
+            policy: Policy::coflow(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::run;
+    use crate::sim::Cluster;
+
+    /// shuffle: two mappers send to two reducers
+    fn shuffle() -> (MXDag, Vec<TaskId>) {
+        let mut b = MXDag::builder();
+        let m0 = b.compute("m0", 0, 1.0);
+        let m1 = b.compute("m1", 1, 1.0);
+        let r0 = b.compute("r0", 2, 1.0);
+        let r1 = b.compute("r1", 3, 1.0);
+        let f00 = b.flow("f00", 0, 2, 1.0);
+        let f01 = b.flow("f01", 0, 3, 1.0);
+        let f10 = b.flow("f10", 1, 2, 1.0);
+        let f11 = b.flow("f11", 1, 3, 1.0);
+        b.dep(m0, f00).dep(m0, f01).dep(m1, f10).dep(m1, f11);
+        b.dep(f00, r0).dep(f10, r0).dep(f01, r1).dep(f11, r1);
+        (b.finalize().unwrap(), vec![f00, f01, f10, f11])
+    }
+
+    #[test]
+    fn by_dst_groups_aggregations() {
+        let (g, flows) = shuffle();
+        let s = CoflowScheduler::new(Grouping::ByDst);
+        let groups = s.groups(&g);
+        assert_eq!(groups.len(), 2);
+        // f00,f10 -> r0 and f01,f11 -> r1
+        let mut sizes: Vec<usize> = groups.iter().map(|g| g.len()).collect();
+        sizes.sort();
+        assert_eq!(sizes, vec![2, 2]);
+        let _ = flows;
+    }
+
+    #[test]
+    fn by_src_groups_broadcasts() {
+        let (g, _) = shuffle();
+        let s = CoflowScheduler::new(Grouping::BySrc);
+        let groups = s.groups(&g);
+        assert_eq!(groups.len(), 2);
+    }
+
+    #[test]
+    fn by_level_one_shuffle_stage() {
+        let (g, _) = shuffle();
+        let s = CoflowScheduler::new(Grouping::ByLevel);
+        let groups = s.groups(&g);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].len(), 4);
+    }
+
+    #[test]
+    fn explicit_groups_pass_through() {
+        let (g, flows) = shuffle();
+        let s = CoflowScheduler::new(Grouping::Explicit(vec![flows.clone()]));
+        assert_eq!(s.groups(&g), vec![flows]);
+    }
+
+    #[test]
+    fn coflow_runs_to_completion() {
+        let (g, _) = shuffle();
+        for grouping in [Grouping::ByDst, Grouping::BySrc, Grouping::ByLevel] {
+            let r = run(&CoflowScheduler::new(grouping), &g, &Cluster::uniform(4)).unwrap();
+            assert!(r.makespan > 0.0 && r.makespan.is_finite());
+        }
+    }
+
+    /// §2.2: coflow forces simultaneous completion; per-flow scheduling
+    /// can finish one side earlier. With asymmetric compute after the
+    /// flows, the coflow plan is strictly worse.
+    #[test]
+    fn coflow_obscures_critical_path() {
+        // A sends f1 (then long compute) and f2 (then short compute).
+        let mut b = MXDag::builder();
+        let a = b.compute("A", 0, 0.5);
+        let f1 = b.flow("f1", 0, 1, 1.0);
+        let f2 = b.flow("f2", 0, 2, 1.0);
+        let long = b.compute("long", 1, 3.0);
+        let short = b.compute("short", 2, 1.0);
+        b.dep(a, f1).dep(a, f2).dep(f1, long).dep(f2, short);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(3);
+
+        let co = run(
+            &CoflowScheduler::new(Grouping::Explicit(vec![vec![f1, f2]])),
+            &g,
+            &cluster,
+        )
+        .unwrap();
+        let mx = run(&crate::sched::MxScheduler::default(), &g, &cluster).unwrap();
+        assert!(
+            mx.makespan < co.makespan - 1e-9,
+            "mxdag {} should beat coflow {}",
+            mx.makespan,
+            co.makespan
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Network-aware fair-share baseline (§2.1, Fig. 1(b)).
+//!
+//! Models the behaviour of network-aware DAG schedulers (Graphene,
+//! Tetris): bandwidth is a divisible resource shared max-min fairly, but
+//! there is *no explicit flow-level scheduling* — no priorities, no
+//! gating, no pipelining decisions.
+
+use super::{Plan, Scheduler};
+use crate::mxdag::MXDag;
+use crate::sim::Cluster;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FairScheduler;
+
+impl Scheduler for FairScheduler {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+    fn plan(&self, _dag: &MXDag, _cluster: &Cluster) -> Plan {
+        Plan::fair()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::run;
+    use crate::sim::Cluster;
+
+    /// Fig. 1(b): two unit flows out of host A share the NIC fairly and
+    /// both finish at t=2 — delaying the downstream task.
+    #[test]
+    fn fig1b_fair_sharing_delays_downstream() {
+        let mut b = MXDag::builder();
+        let f1 = b.flow("f1", 0, 1, 1.0);
+        let f3 = b.flow("f3", 0, 2, 1.0);
+        let c = b.compute("c", 1, 1.0);
+        b.dep(f1, c);
+        let _ = f3;
+        let g = b.finalize().unwrap();
+        let r = run(&FairScheduler, &g, &Cluster::uniform(3)).unwrap();
+        // f1 shares with f3 -> finishes at 2 -> c at 3
+        assert!((r.finish_of(g.by_name("c").unwrap()) - 3.0).abs() < 1e-9);
+    }
+}

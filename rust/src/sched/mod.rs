@@ -1,0 +1,84 @@
+//! Schedulers over MXDAGs.
+//!
+//! The MXDAG co-scheduler (`MxScheduler`, Principle 1; `AltruisticScheduler`,
+//! Principle 2) and the baselines the paper argues against:
+//! network-aware fair sharing, plain-DAG FIFO, Varys-style coflow with
+//! pluggable grouping (the Fig. 2(b1..b3) ambiguity), and a Tetris-like
+//! packing heuristic.
+
+pub mod altruistic;
+pub mod coflow;
+pub mod fair;
+pub mod fifo;
+pub mod mxsched;
+pub mod packing;
+
+use crate::mxdag::MXDag;
+use crate::sim::{
+    expand, simulate, Annotations, Cluster, Policy, SimConfig, SimError, SimResult,
+};
+
+pub use altruistic::{AltruisticScheduler, SelfishScheduler};
+pub use coflow::{CoflowScheduler, Grouping};
+pub use fair::FairScheduler;
+pub use fifo::FifoScheduler;
+pub use mxsched::MxScheduler;
+pub use packing::PackingScheduler;
+
+/// A concrete schedule: per-task annotations + a sharing policy.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub ann: Annotations,
+    pub policy: Policy,
+}
+
+impl Plan {
+    pub fn fair() -> Plan {
+        Plan { ann: Annotations::default(), policy: Policy::fair() }
+    }
+}
+
+/// A scheduler maps (MXDAG, cluster) to a Plan.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn plan(&self, dag: &MXDag, cluster: &Cluster) -> Plan;
+}
+
+/// Expand + simulate a plan. The single evaluation entry point used by
+/// benches, what-if analysis and the pipeline search.
+pub fn evaluate(dag: &MXDag, cluster: &Cluster, plan: &Plan) -> Result<SimResult, SimError> {
+    let sim = expand(dag, &plan.ann);
+    simulate(&sim, cluster, &SimConfig { policy: plan.policy, ..Default::default() })
+}
+
+/// Convenience: schedule with `s` and return the simulated result.
+pub fn run(s: &dyn Scheduler, dag: &MXDag, cluster: &Cluster) -> Result<SimResult, SimError> {
+    evaluate(dag, cluster, &s.plan(dag, cluster))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxdag::MXDag;
+
+    #[test]
+    fn evaluate_fair_plan() {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 2.0);
+        let f = b.flow("f", 0, 1, 1.0);
+        b.dep(a, f);
+        let g = b.finalize().unwrap();
+        let r = evaluate(&g, &Cluster::uniform(2), &Plan::fair()).unwrap();
+        assert!((r.makespan - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_uses_scheduler_plan() {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 1.0);
+        let _ = a;
+        let g = b.finalize().unwrap();
+        let r = run(&FairScheduler, &g, &Cluster::uniform(1)).unwrap();
+        assert!((r.makespan - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,238 @@
+//! The MXDAG co-scheduler — Principle 1 (§4.1).
+//!
+//! *"Prioritize the critical path over non-critical paths within any
+//! Copath, without letting the non-critical paths have longer completion
+//! time than the critical path."*
+//!
+//! Mechanism:
+//! 1. CPM over the MXDAG (durations = `Size`) gives slack per task;
+//!    priority = criticality rank; NICs and cores serve strictly by
+//!    priority (fair within a level).
+//! 2. Pipelining is decided by *what-if search*: a pipelineable task is
+//!    only pipelined if the simulated JCT shrinks (§4.1: "the pipelines
+//!    will only be applied when they can shrink the overall execution
+//!    time") — this is what rejects Fig. 3 case 3.
+
+use super::{evaluate, Plan, Scheduler};
+use crate::mxdag::{cpm, MXDag, TaskId};
+use crate::sim::{Annotations, Cluster, Policy};
+
+#[derive(Debug, Clone)]
+pub struct MxScheduler {
+    /// Run the greedy pipeline what-if search (candidate tasks ordered by
+    /// criticality; keep a pipeline only if JCT improves).
+    pub pipeline_search: bool,
+    /// Improvement threshold for keeping a pipeline decision.
+    pub min_gain: f64,
+    /// Budget for what-if evaluations (each costs one simulation); the
+    /// most-critical moves are tried first, so a small budget keeps
+    /// planning online-fast on large DAGs.
+    pub max_moves: usize,
+}
+
+impl Default for MxScheduler {
+    fn default() -> Self {
+        MxScheduler { pipeline_search: true, min_gain: 1e-9, max_moves: 64 }
+    }
+}
+
+impl MxScheduler {
+    pub fn without_pipelining() -> Self {
+        MxScheduler { pipeline_search: false, ..Default::default() }
+    }
+
+    /// The priority-only plan (no pipeline search).
+    fn base_plan(&self, dag: &MXDag) -> Plan {
+        let c = cpm(dag);
+        let prios = c.priorities();
+        let mut ann = Annotations::default();
+        for t in dag.real_tasks() {
+            ann.priorities.insert(t, prios[t]);
+        }
+        Plan { ann, policy: Policy::priority() }
+    }
+
+    /// Greedy pipeline what-if search on top of `plan`.
+    ///
+    /// Candidate moves are (a) adjacent pipelineable *pairs* u→v — a
+    /// pipeline only overlaps anything when both producer and consumer
+    /// chunk, so single toggles cannot discover the useful moves — and
+    /// (b) single tasks (useful once a chain partner is already in).
+    fn search_pipelines(&self, dag: &MXDag, cluster: &Cluster, mut plan: Plan) -> Plan {
+        let c = cpm(dag);
+        let mut moves: Vec<Vec<TaskId>> = Vec::new();
+        for u in dag.real_tasks() {
+            if !dag.task(u).pipelineable() {
+                continue;
+            }
+            for &v in dag.succs(u) {
+                if !dag.task(v).kind.is_dummy() && dag.task(v).pipelineable() {
+                    moves.push(vec![u, v]);
+                }
+            }
+            moves.push(vec![u]);
+        }
+        // most critical move first (by min slack of its members)
+        let key = |m: &Vec<TaskId>| {
+            m.iter()
+                .map(|&t| c.slack[t])
+                .fold(f64::INFINITY, f64::min)
+        };
+        moves.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
+        moves.truncate(self.max_moves);
+
+        let Ok(mut best) = evaluate(dag, cluster, &plan) else {
+            return plan;
+        };
+        for mv in moves {
+            if mv.iter().all(|t| plan.ann.pipelined.contains(t)) {
+                continue;
+            }
+            let mut trial = plan.clone();
+            for &t in &mv {
+                if !trial.ann.pipelined.contains(&t) {
+                    trial.ann.pipelined.push(t);
+                }
+            }
+            if let Ok(r) = evaluate(dag, cluster, &trial) {
+                if r.makespan < best.makespan - self.min_gain {
+                    best = r;
+                    plan = trial;
+                }
+            }
+        }
+        plan
+    }
+}
+
+impl Scheduler for MxScheduler {
+    fn name(&self) -> &'static str {
+        "mxdag"
+    }
+
+    fn plan(&self, dag: &MXDag, cluster: &Cluster) -> Plan {
+        // Principle 1's guard ("without letting the non-critical paths
+        // have longer completion time than the critical path") can be
+        // violated by over-serialization on symmetric DAGs, where strict
+        // priority idles downstream NICs. The co-scheduler has the global
+        // view, so it checks its priority plan against plain fair sharing
+        // and keeps the better one before searching pipelines.
+        let prio_plan = self.base_plan(dag);
+        let fair_plan = Plan::fair();
+        let plan = match (
+            evaluate(dag, cluster, &prio_plan),
+            evaluate(dag, cluster, &fair_plan),
+        ) {
+            (Ok(p), Ok(f)) if f.makespan < p.makespan - self.min_gain => fair_plan,
+            _ => prio_plan,
+        };
+        if self.pipeline_search {
+            self.search_pipelines(dag, cluster, plan)
+        } else {
+            plan
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{run, FairScheduler};
+    use crate::sim::Cluster;
+
+    /// Fig. 1: co-scheduling prioritises flow 1 over flow 3 so the
+    /// downstream task starts at T2 < T1.
+    fn fig1_dag() -> MXDag {
+        let mut b = MXDag::builder();
+        let a = b.compute("A", 0, 0.0);
+        let f1 = b.flow("f1", 0, 1, 1.0);
+        let bt = b.compute("B", 1, 1.0);
+        let f2 = b.flow("f2", 1, 2, 1.0);
+        let f3 = b.flow("f3", 0, 2, 1.0);
+        let c = b.compute("C", 2, 1.0);
+        b.chain(&[a, f1, bt, f2, c]);
+        b.dep(a, f3).dep(f3, c);
+        b.finalize().unwrap()
+    }
+
+    #[test]
+    fn fig1_beats_fair() {
+        let g = fig1_dag();
+        let cluster = Cluster::uniform(3);
+        let fair = run(&FairScheduler, &g, &cluster).unwrap();
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+        // fair: f1 & f3 share -> f1 at 2, B at 3, f2 at 4, C at 5 (T1)
+        assert!((fair.makespan - 5.0).abs() < 1e-9, "fair {}", fair.makespan);
+        // mx: f1 first (critical), f3 next; C starts at 3, ends 4 (T2)
+        assert!((mx.makespan - 4.0).abs() < 1e-9, "mx {}", mx.makespan);
+    }
+
+    #[test]
+    fn noncritical_not_overdelayed() {
+        // Principle 1's guard: non-critical path must not become longer
+        // than the critical path.
+        let g = fig1_dag();
+        let cluster = Cluster::uniform(3);
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+        let crit_finish = mx.finish_of(g.by_name("f2").unwrap());
+        let noncrit_finish = mx.finish_of(g.by_name("f3").unwrap());
+        assert!(noncrit_finish <= crit_finish + 1e-9);
+    }
+
+    #[test]
+    fn pipeline_search_keeps_only_helpful() {
+        // producer(4,u=1) -> flow(4,u=1): pipelining shrinks 8 -> 5.
+        let mut b = MXDag::builder();
+        let p = b.compute_full("p", 0, 4.0, 1.0);
+        let f = b.flow_full("f", 0, 1, 4.0, 1.0);
+        b.dep(p, f);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(2);
+        let s = MxScheduler::default();
+        let plan = s.plan(&g, &cluster);
+        assert!(!plan.ann.pipelined.is_empty(), "should adopt helpful pipeline");
+        let r = evaluate(&g, &cluster, &plan).unwrap();
+        assert!((r.makespan - 5.0).abs() < 1e-9, "got {}", r.makespan);
+    }
+
+    #[test]
+    fn pipeline_search_rejects_harmful() {
+        // Fig. 3 case 3 in miniature: pipelining f3 with A makes f3
+        // contend with critical f1 on A's uplink.
+        let mut b = MXDag::builder();
+        let a = b.compute_full("A", 0, 2.0, 0.5);
+        let f1 = b.flow("f1", 0, 1, 2.0);
+        let bt = b.compute("B", 1, 2.0);
+        let f3 = b.flow_full("f3", 0, 2, 2.0, 0.5);
+        let c = b.compute("C", 2, 0.5);
+        b.chain(&[a, f1, bt]);
+        b.dep(a, f3).dep(f3, c);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(3);
+        let s = MxScheduler::default();
+        let plan = s.plan(&g, &cluster);
+        let with_plan = evaluate(&g, &cluster, &plan).unwrap();
+        // force-pipeline everything for comparison
+        let mut forced = plan.clone();
+        forced.ann.pipelined = vec![a, f1, bt, f3, c]
+            .into_iter()
+            .filter(|&t| g.task(t).pipelineable())
+            .collect();
+        let with_forced = evaluate(&g, &cluster, &forced).unwrap();
+        assert!(with_plan.makespan <= with_forced.makespan + 1e-9);
+    }
+
+    #[test]
+    fn mx_never_worse_than_fair_on_chain() {
+        let mut b = MXDag::builder();
+        let x = b.compute("x", 0, 1.0);
+        let f = b.flow("f", 0, 1, 2.0);
+        let y = b.compute("y", 1, 3.0);
+        b.chain(&[x, f, y]);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(2);
+        let fair = run(&FairScheduler, &g, &cluster).unwrap();
+        let mx = run(&MxScheduler::default(), &g, &cluster).unwrap();
+        assert!(mx.makespan <= fair.makespan + 1e-9);
+    }
+}

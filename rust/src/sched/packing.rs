@@ -1,0 +1,87 @@
+//! Tetris/Graphene-flavoured packing baseline (§2.1, related work).
+//!
+//! Network-aware DAG schedulers model bandwidth as one more divisible
+//! resource and pack greedily; the usual tie-breaker is
+//! "longest remaining work first" (Graphene's troublesome-task boost).
+//! We model that as: priority = total downstream work, served by the
+//! strict-priority fluid policy. Unlike the MXDAG scheduler there is no
+//! Copath / slack reasoning and no pipelining.
+
+use super::{Plan, Scheduler};
+use crate::mxdag::MXDag;
+use crate::sim::{Annotations, Cluster, Policy};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PackingScheduler;
+
+impl PackingScheduler {
+    /// Total work (sum of sizes) on the heaviest downstream path of each
+    /// task — the packing score.
+    pub fn downstream_work(dag: &MXDag) -> Vec<f64> {
+        let mut down = vec![0.0; dag.len()];
+        for &u in dag.topo().iter().rev() {
+            let best = dag
+                .succs(u)
+                .iter()
+                .map(|&s| down[s])
+                .fold(0.0, f64::max);
+            down[u] = best + dag.task(u).size;
+        }
+        down
+    }
+}
+
+impl Scheduler for PackingScheduler {
+    fn name(&self) -> &'static str {
+        "packing"
+    }
+    fn plan(&self, dag: &MXDag, _cluster: &Cluster) -> Plan {
+        let down = Self::downstream_work(dag);
+        // rank to integer priorities
+        let mut order: Vec<usize> = (0..dag.len()).collect();
+        order.sort_by(|&a, &b| down[a].partial_cmp(&down[b]).unwrap());
+        let mut ann = Annotations::default();
+        for (rank, &t) in order.iter().enumerate() {
+            ann.priorities.insert(t, rank as i64);
+        }
+        Plan { ann, policy: Policy::priority() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::run;
+    use crate::sim::Cluster;
+
+    #[test]
+    fn downstream_work_is_longest_path_weight() {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 1.0);
+        let f1 = b.flow("f1", 0, 1, 5.0);
+        let f2 = b.flow("f2", 0, 2, 1.0);
+        let c = b.compute("c", 1, 1.0);
+        b.dep(a, f1).dep(a, f2).dep(f1, c).dep(f2, c);
+        let g = b.finalize().unwrap();
+        let down = PackingScheduler::downstream_work(&g);
+        assert_eq!(down[a], 7.0); // a + f1 + c
+        assert_eq!(down[f1], 6.0);
+        assert_eq!(down[f2], 2.0);
+    }
+
+    #[test]
+    fn heavy_branch_prioritized() {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 0.0);
+        let f1 = b.flow("f1", 0, 1, 2.0);
+        let heavy = b.compute("heavy", 1, 10.0);
+        let f2 = b.flow("f2", 0, 2, 2.0);
+        let light = b.compute("light", 2, 1.0);
+        b.dep(a, f1).dep(f1, heavy).dep(a, f2).dep(f2, light);
+        let g = b.finalize().unwrap();
+        let r = run(&PackingScheduler, &g, &Cluster::uniform(3)).unwrap();
+        // f1 gets the uplink first: heavy starts at 2
+        assert!((r.start_of(heavy) - 2.0).abs() < 1e-9);
+        assert!((r.finish_of(light) - 5.0).abs() < 1e-9); // f2 2->4, light 4->5
+    }
+}

@@ -1,0 +1,426 @@
+//! Rate allocation: who gets how much of each NIC / core right now.
+//!
+//! All policies operate on the same fluid model: every active task draws
+//! on 1–2 resources (a core, or src-NIC-up + dst-NIC-down) and can run at
+//! rate ≤ 1. Policies differ in how contended capacity is divided:
+//!
+//! * **max-min fair** — progressive filling (the network-aware baseline);
+//! * **strict priority** — higher priority first, fair within a level
+//!   (how the MXDAG co-scheduler expresses critical-path preference);
+//! * **coflow (Varys)** — SEBF group ordering + MADD rates so all flows
+//!   of a coflow finish together (the abstraction Fig. 2 critiques).
+//!
+//! Hot path note (§Perf): these run on every simulator event, so they
+//! work on flat precomputed resource arrays ([`TaskRes`]) — no maps, no
+//! per-iteration allocation, no task cloning.
+
+use std::collections::BTreeMap;
+
+use super::spec::{SimDag, SimKind};
+
+const EPS: f64 = 1e-12;
+
+/// Precomputed resource footprint of one task (≤ 2 resources).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TaskRes {
+    pub res: [usize; 2],
+    pub n: u8,
+}
+
+impl TaskRes {
+    pub fn of(kind: &SimKind) -> TaskRes {
+        match *kind {
+            SimKind::Compute { host } => TaskRes { res: [super::spec::res_core(host), 0], n: 1 },
+            SimKind::Flow { src, dst } => {
+                TaskRes { res: [super::spec::res_up(src), super::spec::res_down(dst)], n: 2 }
+            }
+            SimKind::Dummy => TaskRes { res: [0, 0], n: 0 },
+        }
+    }
+
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.res[..self.n as usize].iter().copied()
+    }
+}
+
+/// Max-min progressive filling. `tasks[i]` are the active tasks'
+/// resource footprints; `caps` is mutated to residuals; `rates[i]` is
+/// written per active index. `users` is caller-provided scratch of
+/// `caps.len()` (reset internally).
+pub fn maxmin_fill_res(
+    tasks: &[TaskRes],
+    caps: &mut [f64],
+    rates: &mut [f64],
+    users: &mut [f64],
+) {
+    debug_assert_eq!(users.len(), caps.len());
+    let n = tasks.len();
+    let mut frozen: Vec<bool> = tasks.iter().map(|t| t.n == 0).collect();
+    loop {
+        // count unfrozen users per resource
+        for u in users.iter_mut() {
+            *u = 0.0;
+        }
+        let mut n_unfrozen = 0usize;
+        for (i, t) in tasks.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            n_unfrozen += 1;
+            for r in t.iter() {
+                users[r] += 1.0;
+            }
+        }
+        if n_unfrozen == 0 {
+            break;
+        }
+        // largest uniform increment bounded by residual/users and
+        // per-task headroom to rate 1
+        let mut delta = f64::INFINITY;
+        for (i, t) in tasks.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            delta = delta.min(1.0 - rates[i]);
+            for r in t.iter() {
+                delta = delta.min(caps[r].max(0.0) / users[r]);
+            }
+        }
+        if delta > EPS {
+            for (i, t) in tasks.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                rates[i] += delta;
+                for r in t.iter() {
+                    caps[r] -= delta;
+                }
+            }
+        }
+        // freeze saturated / capped tasks; stop when nothing moves
+        let mut any_unfrozen = false;
+        let mut any_frozen_now = false;
+        for (i, t) in tasks.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            let at_cap = rates[i] >= 1.0 - EPS;
+            let starved = t.iter().any(|r| caps[r] <= EPS);
+            if at_cap || starved {
+                frozen[i] = true;
+                any_frozen_now = true;
+            } else {
+                any_unfrozen = true;
+            }
+        }
+        if !any_unfrozen {
+            break;
+        }
+        if delta <= EPS && !any_frozen_now {
+            break; // numerically stuck
+        }
+        let _ = n;
+    }
+}
+
+/// Strict priority: levels high→low, max-min within a level on residuals.
+pub fn priority_fill_res(
+    tasks: &[TaskRes],
+    prios: &[i64],
+    caps: &mut [f64],
+    rates: &mut [f64],
+    users: &mut [f64],
+) {
+    let n = tasks.len();
+    debug_assert_eq!(prios.len(), n);
+    // sort indices by priority descending (small n: simple sort)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(prios[i]));
+    let mut level_tasks: Vec<TaskRes> = Vec::with_capacity(n);
+    let mut level_idx: Vec<usize> = Vec::with_capacity(n);
+    let mut level_rates: Vec<f64> = Vec::with_capacity(n);
+    let mut k = 0;
+    while k < n {
+        let p = prios[order[k]];
+        level_tasks.clear();
+        level_idx.clear();
+        while k < n && prios[order[k]] == p {
+            level_idx.push(order[k]);
+            level_tasks.push(tasks[order[k]]);
+            k += 1;
+        }
+        level_rates.clear();
+        level_rates.resize(level_tasks.len(), 0.0);
+        maxmin_fill_res(&level_tasks, caps, &mut level_rates, users);
+        for (j, &i) in level_idx.iter().enumerate() {
+            rates[i] = level_rates[j];
+        }
+    }
+}
+
+/// Varys-style coflow allocation over the active *flows*: SEBF group
+/// ordering + MADD rates on residual capacity. Ungrouped flows are
+/// singleton groups. `remaining[i]` per active index.
+pub fn coflow_fill_res(
+    tasks: &[TaskRes],
+    coflow: &[Option<usize>],
+    remaining: &[f64],
+    caps: &mut [f64],
+    rates: &mut [f64],
+) {
+    let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for i in 0..tasks.len() {
+        let key = match coflow[i] {
+            Some(g) => (0usize, g),
+            None => (1usize, i),
+        };
+        groups.entry(key).or_default().push(i);
+    }
+
+    // SEBF: smallest bottleneck first (on full capacity)
+    let mut ordered: Vec<(f64, Vec<usize>)> = groups
+        .into_values()
+        .map(|members| {
+            let mut per_res: BTreeMap<usize, f64> = BTreeMap::new();
+            let mut max_rem: f64 = 0.0;
+            for &i in &members {
+                max_rem = max_rem.max(remaining[i]);
+                for r in tasks[i].iter() {
+                    *per_res.entry(r).or_insert(0.0) += remaining[i];
+                }
+            }
+            let bottleneck = per_res.values().copied().fold(max_rem, f64::max);
+            (bottleneck, members)
+        })
+        .collect();
+    ordered.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    for (_, members) in ordered {
+        // MADD: all members finish at the same τ, feasible on residuals
+        let mut tau: f64 = 0.0;
+        let mut per_res: BTreeMap<usize, f64> = BTreeMap::new();
+        for &i in &members {
+            tau = tau.max(remaining[i]); // rate ≤ 1 per flow
+            for r in tasks[i].iter() {
+                *per_res.entry(r).or_insert(0.0) += remaining[i];
+            }
+        }
+        for (&r, &load) in &per_res {
+            if caps[r] <= EPS {
+                tau = f64::INFINITY;
+            } else {
+                tau = tau.max(load / caps[r]);
+            }
+        }
+        if !tau.is_finite() || tau <= EPS {
+            continue;
+        }
+        for &i in &members {
+            let rate = remaining[i] / tau;
+            rates[i] = rate;
+            for r in tasks[i].iter() {
+                caps[r] = (caps[r] - rate).max(0.0);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Compatibility wrappers over &SimDag + task-id subsets (tests, tools).
+// ------------------------------------------------------------------
+
+fn subset_res(dag: &SimDag, active: &[usize]) -> Vec<TaskRes> {
+    active.iter().map(|&t| TaskRes::of(&dag.tasks[t].kind)).collect()
+}
+
+/// Max-min fair over a task-id subset (wrapper; see `maxmin_fill_res`).
+pub fn maxmin_fill(dag: &SimDag, active: &[usize], caps: &mut [f64], rates: &mut [f64]) {
+    let tasks = subset_res(dag, active);
+    let mut users = vec![0.0; caps.len()];
+    maxmin_fill_res(&tasks, caps, rates, &mut users);
+}
+
+/// Strict priority over a task-id subset (wrapper).
+pub fn priority_fill(dag: &SimDag, active: &[usize], caps: &mut [f64], rates: &mut [f64]) {
+    let tasks = subset_res(dag, active);
+    let prios: Vec<i64> = active.iter().map(|&t| dag.tasks[t].priority).collect();
+    let mut users = vec![0.0; caps.len()];
+    priority_fill_res(&tasks, &prios, caps, rates, &mut users);
+}
+
+/// Coflow allocation over a task-id subset (wrapper). `remaining` is
+/// indexed by *task id* here (engine-internal layout).
+pub fn coflow_fill(
+    dag: &SimDag,
+    active: &[usize],
+    remaining: &[f64],
+    caps: &mut [f64],
+    rates: &mut [f64],
+) {
+    let tasks = subset_res(dag, active);
+    let coflow: Vec<Option<usize>> = active.iter().map(|&t| dag.tasks[t].coflow).collect();
+    let rem: Vec<f64> = active.iter().map(|&t| remaining[t]).collect();
+    coflow_fill_res(&tasks, &coflow, &rem, caps, rates);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::{SimDag, SimKind, SimTask};
+
+    fn flow(dag: &mut SimDag, src: usize, dst: usize, prio: i64, coflow: Option<usize>) -> usize {
+        dag.push(SimTask {
+            orig: 0,
+            chunk: (0, 1),
+            kind: SimKind::Flow { src, dst },
+            size: 1.0,
+            priority: prio,
+            gate: 0.0,
+            coflow,
+        })
+    }
+
+    #[test]
+    fn fair_shares_common_nic() {
+        let mut d = SimDag::default();
+        let a = flow(&mut d, 0, 1, 0, None);
+        let b = flow(&mut d, 0, 2, 0, None);
+        let mut caps = vec![1.0; 9];
+        let mut rates = vec![0.0; 2];
+        maxmin_fill(&d, &[a, b], &mut caps, &mut rates);
+        assert!((rates[0] - 0.5).abs() < 1e-9);
+        assert!((rates[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_no_contention_full_rate() {
+        let mut d = SimDag::default();
+        let a = flow(&mut d, 0, 1, 0, None);
+        let b = flow(&mut d, 2, 1, 0, None); // shares only dst downlink
+        let mut caps = vec![1.0; 9];
+        caps[5] = 2.0; // beefy downlink on host 1
+        let mut rates = vec![0.0; 2];
+        maxmin_fill(&d, &[a, b], &mut caps, &mut rates);
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+        assert!((rates[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_three_way_bottleneck() {
+        let mut d = SimDag::default();
+        let ids: Vec<usize> = (1..4).map(|dst| flow(&mut d, 0, dst, 0, None)).collect();
+        let mut caps = vec![1.0; 12];
+        let mut rates = vec![0.0; 3];
+        maxmin_fill(&d, &ids, &mut caps, &mut rates);
+        for r in rates {
+            assert!((r - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn priority_starves_lower_level() {
+        let mut d = SimDag::default();
+        let hi = flow(&mut d, 0, 1, 10, None);
+        let lo = flow(&mut d, 0, 2, 1, None);
+        let mut caps = vec![1.0; 9];
+        let mut rates = vec![0.0; 2];
+        priority_fill(&d, &[hi, lo], &mut caps, &mut rates);
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+        assert!(rates[1] < 1e-9);
+    }
+
+    #[test]
+    fn priority_equal_level_is_fair() {
+        let mut d = SimDag::default();
+        let a = flow(&mut d, 0, 1, 5, None);
+        let b = flow(&mut d, 0, 2, 5, None);
+        let mut caps = vec![1.0; 9];
+        let mut rates = vec![0.0; 2];
+        priority_fill(&d, &[a, b], &mut caps, &mut rates);
+        assert!((rates[0] - 0.5).abs() < 1e-9);
+        assert!((rates[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priority_lower_uses_leftover() {
+        let mut d = SimDag::default();
+        let hi = flow(&mut d, 0, 1, 10, None); // up0 + down1
+        let lo = flow(&mut d, 2, 1, 1, None); // up2 + down1 (shared down)
+        let mut caps = vec![1.0; 9];
+        caps[5] = 1.5; // down1
+        let mut rates = vec![0.0; 2];
+        priority_fill(&d, &[hi, lo], &mut caps, &mut rates);
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+        assert!((rates[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coflow_madd_finishes_together() {
+        let mut d = SimDag::default();
+        let a = flow(&mut d, 0, 1, 0, Some(0));
+        let b = flow(&mut d, 0, 2, 0, Some(0));
+        let mut caps = vec![1.0; 9];
+        let mut rates = vec![0.0; 2];
+        let mut remaining = vec![0.0; d.len()];
+        remaining[a] = 2.0;
+        remaining[b] = 1.0;
+        coflow_fill(&d, &[a, b], &remaining, &mut caps, &mut rates);
+        assert!((rates[0] - 2.0 / 3.0).abs() < 1e-9);
+        assert!((rates[1] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((remaining[a] / rates[0] - remaining[b] / rates[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coflow_sebf_orders_small_group_first() {
+        let mut d = SimDag::default();
+        let small = flow(&mut d, 0, 1, 0, Some(0));
+        let big = flow(&mut d, 0, 2, 0, Some(1));
+        let mut remaining = vec![0.0; d.len()];
+        remaining[small] = 1.0;
+        remaining[big] = 10.0;
+        let mut caps = vec![1.0; 9];
+        let mut rates = vec![0.0; 2];
+        coflow_fill(&d, &[small, big], &remaining, &mut caps, &mut rates);
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+        assert!(rates[1] < 1e-9);
+    }
+
+    #[test]
+    fn compute_tasks_share_cores() {
+        let mut d = SimDag::default();
+        let mk = |d: &mut SimDag| {
+            d.push(SimTask {
+                orig: 0,
+                chunk: (0, 1),
+                kind: SimKind::Compute { host: 0 },
+                size: 1.0,
+                priority: 0,
+                gate: 0.0,
+                coflow: None,
+            })
+        };
+        let a = mk(&mut d);
+        let b = mk(&mut d);
+        let mut caps = vec![1.0, 1.0, 1.0];
+        let mut rates = vec![0.0; 2];
+        maxmin_fill(&d, &[a, b], &mut caps, &mut rates);
+        assert!((rates[0] - 0.5).abs() < 1e-9);
+        assert!((rates[1] - 0.5).abs() < 1e-9);
+
+        let mut caps = vec![2.0, 1.0, 1.0];
+        let mut rates = vec![0.0; 2];
+        maxmin_fill(&d, &[a, b], &mut caps, &mut rates);
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+        assert!((rates[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn task_res_footprints() {
+        assert_eq!(TaskRes::of(&SimKind::Dummy).n, 0);
+        let c = TaskRes::of(&SimKind::Compute { host: 2 });
+        assert_eq!((c.n, c.res[0]), (1, 6));
+        let f = TaskRes::of(&SimKind::Flow { src: 0, dst: 1 });
+        assert_eq!((f.n, f.res), (2, [1, 5]));
+    }
+}

@@ -1,0 +1,507 @@
+//! The fluid discrete-event engine.
+//!
+//! Tasks become ready when all predecessors finish (chunk-level deps
+//! encode pipelining), their gate time has passed and — under coflow
+//! semantics — their whole group is ready (all-or-nothing). At every
+//! event boundary the policy recomputes rates; the engine advances to
+//! the next completion or gate expiry.
+
+use std::collections::BTreeMap;
+
+use super::alloc;
+use super::spec::{CpuPolicy, Cluster, NetPolicy, Policy, SimDag};
+use crate::mxdag::TaskId;
+
+const EPS: f64 = 1e-9;
+
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("deadlock at t={0}: {1} tasks can make no progress")]
+    Deadlock(f64, usize),
+    #[error("event limit exceeded ({0} events)")]
+    EventLimit(usize),
+}
+
+/// Per-task execution record.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskTrace {
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Completion time of the whole DAG.
+    pub makespan: f64,
+    /// Per physical task trace.
+    pub trace: Vec<TaskTrace>,
+    /// Aggregated per *logical* MXTask: earliest chunk start.
+    pub orig_start: BTreeMap<TaskId, f64>,
+    /// Aggregated per logical MXTask: latest chunk finish.
+    pub orig_finish: BTreeMap<TaskId, f64>,
+    /// Number of engine iterations (profiling).
+    pub events: usize,
+}
+
+impl SimResult {
+    /// Finish time of a logical task.
+    pub fn finish_of(&self, orig: TaskId) -> f64 {
+        *self.orig_finish.get(&orig).expect("unknown task")
+    }
+    pub fn start_of(&self, orig: TaskId) -> f64 {
+        *self.orig_start.get(&orig).expect("unknown task")
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub policy: Policy,
+    pub max_events: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { policy: Policy::fair(), max_events: 20_000_000 }
+    }
+}
+
+/// Run the fluid simulation to completion.
+pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimResult, SimError> {
+    let n = dag.len();
+    let caps0 = cluster.capacities();
+    // §Perf: precompute per-task resource footprints once; reuse scratch
+    // buffers across events (no allocation in the rate re-fill loop).
+    let task_res: Vec<alloc::TaskRes> =
+        dag.tasks.iter().map(|t| alloc::TaskRes::of(&t.kind)).collect();
+    let mut users_scratch = vec![0.0; caps0.len()];
+    let mut sub_res: Vec<alloc::TaskRes> = Vec::with_capacity(n);
+    let mut sub_aux: Vec<f64> = Vec::with_capacity(n);
+    let mut sub_prios: Vec<i64> = Vec::with_capacity(n);
+    let mut sub_coflow: Vec<Option<usize>> = Vec::with_capacity(n);
+    let mut sub_rates: Vec<f64> = Vec::with_capacity(n);
+    let mut remaining: Vec<f64> = dag.tasks.iter().map(|t| t.size).collect();
+    let mut indeg: Vec<usize> = dag.preds.iter().map(|p| p.len()).collect();
+    let mut done = vec![false; n];
+    let mut started = vec![false; n];
+    let mut trace = vec![TaskTrace { start: f64::NAN, finish: f64::NAN }; n];
+    let mut n_done = 0;
+    let mut now = 0.0;
+    let mut events = 0;
+    // FIFO queue positions, assigned per *logical* task at its first
+    // chunk's readiness. Semantics of a blocking send queue + concurrent
+    // pipelined streams: single-chunk tasks get strictly increasing
+    // positions (serialized even when ready simultaneously — the order
+    // the application issued them), while multi-chunk (pipelined) tasks
+    // ready at the same instant share one position and therefore share
+    // bandwidth fairly (concurrent streams). This is what makes Fig. 3's
+    // baseline serialize f1 before f3 but lets case-3's pipelined f1/f3
+    // contend.
+    let mut fifo_prio_orig: BTreeMap<TaskId, i64> = BTreeMap::new();
+    let mut fifo_tie_time: i64 = i64::MIN;
+    let mut fifo_tie_count: i64 = 0;
+    let mut was_ready = vec![false; n];
+
+    // coflow membership: group -> all member task ids (static)
+    let mut coflow_members: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, t) in dag.tasks.iter().enumerate() {
+        if let Some(g) = t.coflow {
+            coflow_members.entry(g).or_default().push(i);
+        }
+    }
+
+    // §Perf: incremental live set — tasks whose indeg reached 0 and are
+    // not yet done. Avoids O(n) full scans per event.
+    let mut live: Vec<usize> = (0..n).filter(|&t| indeg[t] == 0).collect();
+
+    while n_done < n {
+        events += 1;
+        if events > cfg.max_events {
+            return Err(SimError::EventLimit(events));
+        }
+
+        // 1. instantly complete zero-size ready tasks (dummies) — cascades.
+        //    NB: removal must preserve `live` order — FIFO queue positions
+        //    are assigned in readiness-scan order.
+        let mut progressed = true;
+        while progressed {
+            progressed = false;
+            let mut i = 0;
+            while i < live.len() {
+                let t = live[i];
+                if !done[t] && remaining[t] <= EPS && now + EPS >= dag.tasks[t].gate {
+                    done[t] = true;
+                    n_done += 1;
+                    if !started[t] {
+                        started[t] = true;
+                        trace[t].start = now;
+                    }
+                    trace[t].finish = now;
+                    for &s in &dag.succs[t] {
+                        indeg[s] -= 1;
+                        if indeg[s] == 0 {
+                            live.push(s);
+                        }
+                    }
+                    progressed = true;
+                }
+                i += 1;
+            }
+        }
+        live.retain(|&t| !done[t]);
+        if n_done == n {
+            break;
+        }
+
+        // 2. collect ready tasks (live = indeg 0, not done)
+        let mut next_gate = f64::INFINITY;
+        let mut ready: Vec<usize> = Vec::with_capacity(live.len());
+        for idx in 0..live.len() {
+            let t = live[idx];
+            debug_assert!(!done[t] && indeg[t] == 0);
+            if now + EPS < dag.tasks[t].gate {
+                next_gate = next_gate.min(dag.tasks[t].gate);
+                continue;
+            }
+            // coflow all-or-nothing: every member must have indeg 0
+            if cfg.policy.net == NetPolicy::Coflow {
+                if let Some(g) = dag.tasks[t].coflow {
+                    let all_ready = coflow_members[&g]
+                        .iter()
+                        .all(|&m| done[m] || indeg[m] == 0);
+                    if !all_ready {
+                        continue;
+                    }
+                }
+            }
+            if !was_ready[t] {
+                was_ready[t] = true;
+                let orig = dag.tasks[t].orig;
+                fifo_prio_orig.entry(orig).or_insert_with(|| {
+                    let tq = (now * 1e6).round() as i64;
+                    if tq != fifo_tie_time {
+                        fifo_tie_time = tq;
+                        fifo_tie_count = 0;
+                    }
+                    let tie = if dag.tasks[t].chunk.1 > 1 {
+                        // pipelined stream: concurrent connection — shares
+                        // the slot after the singles issued so far, so
+                        // same-instant streams fair-share each other
+                        (fifo_tie_count + 1).min(1023)
+                    } else {
+                        // blocking send: takes the next exclusive slot
+                        fifo_tie_count += 1;
+                        fifo_tie_count.min(1023)
+                    };
+                    -(tq.saturating_mul(1024) + tie)
+                });
+            }
+            ready.push(t);
+        }
+
+        if ready.is_empty() {
+            if next_gate.is_finite() {
+                now = next_gate;
+                continue;
+            }
+            let stuck = n - n_done;
+            return Err(SimError::Deadlock(now, stuck));
+        }
+
+        // 3. allocate rates
+        let flows: Vec<usize> = ready.iter().copied().filter(|&t| dag.tasks[t].kind.is_flow()).collect();
+        let computes: Vec<usize> =
+            ready.iter().copied().filter(|&t| !dag.tasks[t].kind.is_flow()).collect();
+        let mut caps = caps0.clone();
+        let mut rate = vec![0.0; n];
+
+        // FIFO priority override
+        let effective_prio = |t: usize| -> i64 {
+            let fifo = || fifo_prio_orig.get(&dag.tasks[t].orig).copied().unwrap_or(0);
+            match dag.tasks[t].kind.is_flow() {
+                true if cfg.policy.net == NetPolicy::Fifo => fifo(),
+                false if cfg.policy.cpu == CpuPolicy::Fifo => fifo(),
+                _ => dag.tasks[t].priority,
+            }
+        };
+
+        // compute slots first (independent resources from NICs)
+        {
+            sub_res.clear();
+            sub_res.extend(computes.iter().map(|&t| task_res[t]));
+            sub_rates.clear();
+            sub_rates.resize(computes.len(), 0.0);
+            match cfg.policy.cpu {
+                CpuPolicy::Fair => alloc::maxmin_fill_res(
+                    &sub_res,
+                    &mut caps,
+                    &mut sub_rates,
+                    &mut users_scratch,
+                ),
+                CpuPolicy::Priority | CpuPolicy::Fifo => {
+                    sub_prios.clear();
+                    sub_prios.extend(computes.iter().map(|&t| effective_prio(t)));
+                    alloc::priority_fill_res(
+                        &sub_res,
+                        &sub_prios,
+                        &mut caps,
+                        &mut sub_rates,
+                        &mut users_scratch,
+                    )
+                }
+            }
+            for (i, &t) in computes.iter().enumerate() {
+                rate[t] = sub_rates[i];
+            }
+        }
+        {
+            sub_res.clear();
+            sub_res.extend(flows.iter().map(|&t| task_res[t]));
+            sub_rates.clear();
+            sub_rates.resize(flows.len(), 0.0);
+            match cfg.policy.net {
+                NetPolicy::Fair => alloc::maxmin_fill_res(
+                    &sub_res,
+                    &mut caps,
+                    &mut sub_rates,
+                    &mut users_scratch,
+                ),
+                NetPolicy::Priority | NetPolicy::Fifo => {
+                    sub_prios.clear();
+                    sub_prios.extend(flows.iter().map(|&t| effective_prio(t)));
+                    alloc::priority_fill_res(
+                        &sub_res,
+                        &sub_prios,
+                        &mut caps,
+                        &mut sub_rates,
+                        &mut users_scratch,
+                    )
+                }
+                NetPolicy::Coflow => {
+                    sub_coflow.clear();
+                    sub_coflow.extend(flows.iter().map(|&t| dag.tasks[t].coflow));
+                    sub_aux.clear();
+                    sub_aux.extend(flows.iter().map(|&t| remaining[t]));
+                    alloc::coflow_fill_res(
+                        &sub_res,
+                        &sub_coflow,
+                        &sub_aux,
+                        &mut caps,
+                        &mut sub_rates,
+                    )
+                }
+            }
+            for (i, &t) in flows.iter().enumerate() {
+                rate[t] = sub_rates[i];
+            }
+        }
+
+        // 4. find next event horizon
+        let mut dt = f64::INFINITY;
+        for &t in &ready {
+            if rate[t] > EPS {
+                if !started[t] {
+                    started[t] = true;
+                    trace[t].start = now;
+                }
+                dt = dt.min(remaining[t] / rate[t]);
+            }
+        }
+        if next_gate.is_finite() {
+            dt = dt.min(next_gate - now);
+        }
+        if !dt.is_finite() || dt <= 0.0 {
+            let stuck = n - n_done;
+            return Err(SimError::Deadlock(now, stuck));
+        }
+
+        // 5. advance
+        now += dt;
+        for &t in &ready {
+            if rate[t] > EPS {
+                remaining[t] -= rate[t] * dt;
+                if remaining[t] <= EPS {
+                    remaining[t] = 0.0;
+                    done[t] = true;
+                    n_done += 1;
+                    trace[t].finish = now;
+                    for &s in &dag.succs[t] {
+                        indeg[s] -= 1;
+                        if indeg[s] == 0 {
+                            live.push(s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // aggregate per logical task
+    let mut orig_start: BTreeMap<TaskId, f64> = BTreeMap::new();
+    let mut orig_finish: BTreeMap<TaskId, f64> = BTreeMap::new();
+    for (i, t) in dag.tasks.iter().enumerate() {
+        let e = orig_start.entry(t.orig).or_insert(f64::INFINITY);
+        *e = e.min(trace[i].start);
+        let e = orig_finish.entry(t.orig).or_insert(f64::NEG_INFINITY);
+        *e = e.max(trace[i].finish);
+    }
+
+    Ok(SimResult { makespan: now, trace, orig_start, orig_finish, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::{Cluster, SimKind, SimTask};
+
+    fn task(kind: SimKind, size: f64) -> SimTask {
+        SimTask { orig: 0, chunk: (0, 1), kind, size, priority: 0, gate: 0.0, coflow: None }
+    }
+
+    #[test]
+    fn single_task_runs_at_full_rate() {
+        let mut d = SimDag::default();
+        let mut t = task(SimKind::Compute { host: 0 }, 5.0);
+        t.orig = 1;
+        d.push(t);
+        let r = simulate(&d, &Cluster::uniform(1), &SimConfig::default()).unwrap();
+        assert!((r.makespan - 5.0).abs() < 1e-9);
+        assert!((r.finish_of(1) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chain_respects_dependencies() {
+        let mut d = SimDag::default();
+        let a = d.push({ let mut t = task(SimKind::Compute { host: 0 }, 2.0); t.orig = 1; t });
+        let f = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 3.0); t.orig = 2; t });
+        let b = d.push({ let mut t = task(SimKind::Compute { host: 1 }, 1.0); t.orig = 3; t });
+        d.dep(a, f);
+        d.dep(f, b);
+        let r = simulate(&d, &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        assert!((r.makespan - 6.0).abs() < 1e-9);
+        assert!((r.start_of(2) - 2.0).abs() < 1e-9);
+        assert!((r.start_of(3) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_sharing_extends_completion() {
+        // two unit flows from host 0: fair => both finish at 2
+        let mut d = SimDag::default();
+        let a = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 1.0); t.orig = 1; t });
+        let b = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0); t.orig = 2; t });
+        let _ = (a, b);
+        let r = simulate(&d, &Cluster::uniform(3), &SimConfig::default()).unwrap();
+        assert!((r.finish_of(1) - 2.0).abs() < 1e-9);
+        assert!((r.finish_of(2) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priority_serializes_flows() {
+        let mut d = SimDag::default();
+        let mut t1 = task(SimKind::Flow { src: 0, dst: 1 }, 1.0);
+        t1.orig = 1;
+        t1.priority = 10;
+        let mut t2 = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+        t2.orig = 2;
+        t2.priority = 1;
+        d.push(t1);
+        d.push(t2);
+        let cfg = SimConfig { policy: Policy::priority(), ..Default::default() };
+        let r = simulate(&d, &Cluster::uniform(3), &cfg).unwrap();
+        assert!((r.finish_of(1) - 1.0).abs() < 1e-9);
+        assert!((r.finish_of(2) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gate_delays_start() {
+        let mut d = SimDag::default();
+        let mut t = task(SimKind::Compute { host: 0 }, 1.0);
+        t.orig = 1;
+        t.gate = 4.0;
+        d.push(t);
+        let r = simulate(&d, &Cluster::uniform(1), &SimConfig::default()).unwrap();
+        assert!((r.start_of(1) - 4.0).abs() < 1e-9);
+        assert!((r.makespan - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_orders_by_readiness() {
+        // a(2) -> f1 ; b(1) -> f2 ; both flows share up0.
+        // b finishes first so f2 ready first => f2 runs to completion first.
+        let mut d = SimDag::default();
+        let a = d.push({ let mut t = task(SimKind::Compute { host: 0 }, 2.0); t.orig = 1; t });
+        let b = d.push({ let mut t = task(SimKind::Compute { host: 0 }, 1.0); t.orig = 2; t });
+        let f1 = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 1.0); t.orig = 3; t });
+        let f2 = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0); t.orig = 4; t });
+        d.dep(a, f1);
+        d.dep(b, f2);
+        let cluster = Cluster::with_cores(3, 2.0);
+        let cfg = SimConfig { policy: Policy::fifo(), ..Default::default() };
+        let r = simulate(&d, &cluster, &cfg).unwrap();
+        // b done t=1, f2 runs 1->2 ; a done t=2, f1 runs 2->3
+        assert!((r.finish_of(4) - 2.0).abs() < 1e-9);
+        assert!((r.finish_of(3) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coflow_all_or_nothing_barrier() {
+        // f1 ready at 0 (coflow 0 with f2); f2 gated behind compute(3).
+        // Under coflow policy f1 must wait for f2's readiness.
+        let mut d = SimDag::default();
+        let c = d.push({ let mut t = task(SimKind::Compute { host: 3 }, 3.0); t.orig = 1; t });
+        let f1 = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 1.0);
+            t.orig = 2;
+            t.coflow = Some(0);
+            t
+        });
+        let f2 = d.push({
+            let mut t = task(SimKind::Flow { src: 2, dst: 1 }, 1.0);
+            t.orig = 3;
+            t.coflow = Some(0);
+            t
+        });
+        d.dep(c, f2);
+        let _ = f1;
+        let cfg = SimConfig { policy: Policy::coflow(), ..Default::default() };
+        let r = simulate(&d, &Cluster::uniform(4), &cfg).unwrap();
+        assert!(r.start_of(2) >= 3.0 - 1e-9, "f1 must wait for the whole coflow");
+    }
+
+    #[test]
+    fn deadlock_reported_not_hung() {
+        // flow into a zero-capacity NIC can never progress
+        let mut d = SimDag::default();
+        d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 1.0); t.orig = 1; t });
+        let mut cluster = Cluster::uniform(2);
+        cluster.hosts[0].nic_up = 0.0;
+        let err = simulate(&d, &cluster, &SimConfig::default()).unwrap_err();
+        assert!(matches!(err, SimError::Deadlock(_, _)));
+    }
+
+    #[test]
+    fn dummy_tasks_cost_nothing() {
+        let mut d = SimDag::default();
+        let s = d.push({ let mut t = task(SimKind::Dummy, 0.0); t.orig = 0; t });
+        let c = d.push({ let mut t = task(SimKind::Compute { host: 0 }, 1.0); t.orig = 1; t });
+        let e = d.push({ let mut t = task(SimKind::Dummy, 0.0); t.orig = 2; t });
+        d.dep(s, c);
+        d.dep(c, e);
+        let r = simulate(&d, &Cluster::uniform(1), &SimConfig::default()).unwrap();
+        assert!((r.makespan - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn makespan_monotone_in_sizes() {
+        let build = |sz: f64| {
+            let mut d = SimDag::default();
+            let a = d.push({ let mut t = task(SimKind::Compute { host: 0 }, sz); t.orig = 1; t });
+            let f = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 1.0); t.orig = 2; t });
+            d.dep(a, f);
+            d
+        };
+        let r1 = simulate(&build(1.0), &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        let r2 = simulate(&build(2.0), &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        assert!(r2.makespan > r1.makespan);
+    }
+}

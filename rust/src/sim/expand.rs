@@ -1,0 +1,243 @@
+//! Pipeline expansion: logical MXDAG → physical SimDag.
+//!
+//! A task selected for pipelining with `Size S`, `Unit U` becomes
+//! `K = ⌈S/U⌉` chunk tasks of size `S/K` chained in order. Along an edge
+//! u→v where *both* ends are pipelined, chunk `j` of `v` depends on the
+//! chunk of `u` that produces data fraction `(j+1)/K_v` — so the
+//! downstream task starts as soon as the first unit is available
+//! (Fig. 5). For any non-pipelined end the edge binds to the whole task
+//! (last chunk of `u` → first chunk of `v`).
+
+use std::collections::BTreeMap;
+
+use super::spec::{SimDag, SimKind, SimTask};
+use crate::mxdag::{MXDag, TaskId, TaskKind};
+
+/// Scheduling annotations applied during expansion.
+#[derive(Debug, Clone, Default)]
+pub struct Annotations {
+    /// Per logical task: priority (higher = first). Missing = 0.
+    pub priorities: BTreeMap<TaskId, i64>,
+    /// Per logical task: earliest start gate. Missing = 0.
+    pub gates: BTreeMap<TaskId, f64>,
+    /// Logical tasks to execute in pipeline (chunk-expanded).
+    pub pipelined: Vec<TaskId>,
+    /// Coflow groups over logical *flow* tasks (must not be pipelined).
+    pub coflows: Vec<Vec<TaskId>>,
+}
+
+fn kind_of(dag: &MXDag, t: TaskId) -> SimKind {
+    match dag.task(t).kind {
+        TaskKind::Start | TaskKind::End => SimKind::Dummy,
+        TaskKind::Compute { host } => SimKind::Compute { host },
+        TaskKind::Flow { src, dst } => SimKind::Flow { src, dst },
+    }
+}
+
+/// Expand `dag` into a physical SimDag under `ann`.
+pub fn expand(dag: &MXDag, ann: &Annotations) -> SimDag {
+    let n = dag.len();
+    let piped: Vec<bool> = {
+        let mut v = vec![false; n];
+        for &t in &ann.pipelined {
+            if dag.task(t).pipelineable() {
+                v[t] = true;
+            }
+        }
+        v
+    };
+    let mut coflow_of: BTreeMap<TaskId, usize> = BTreeMap::new();
+    for (g, members) in ann.coflows.iter().enumerate() {
+        for &m in members {
+            debug_assert!(
+                !piped[m],
+                "coflow semantics are defined on unpipelined flows"
+            );
+            coflow_of.insert(m, g);
+        }
+    }
+
+    let mut out = SimDag::default();
+    // logical task -> its chunk ids (in order)
+    let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); n];
+
+    // Create chunks in *task-id* (insertion) order — not topo order — so
+    // that FIFO tie-breaking between same-instant-ready tasks follows the
+    // order the application issued them (the NIC send-queue semantics the
+    // Fig. 3 baseline assumes).
+    for t in 0..n {
+        let task = dag.task(t);
+        let k = if piped[t] { task.chunks() } else { 1 };
+        let chunk_size = if k == 0 { 0.0 } else { task.size / k as f64 };
+        let prio = ann.priorities.get(&t).copied().unwrap_or(0);
+        let gate = ann.gates.get(&t).copied().unwrap_or(0.0);
+        for j in 0..k {
+            let id = out.push(SimTask {
+                orig: t,
+                chunk: (j, k),
+                kind: kind_of(dag, t),
+                size: chunk_size,
+                priority: prio,
+                gate: if j == 0 { gate } else { 0.0 },
+                coflow: coflow_of.get(&t).copied(),
+            });
+            chunks[t].push(id);
+            if j > 0 {
+                let prev = chunks[t][j - 1];
+                out.dep(prev, id);
+            }
+        }
+    }
+
+    // cross edges
+    for u in 0..n {
+        for &v in dag.succs(u) {
+            let ku = chunks[u].len();
+            let kv = chunks[v].len();
+            if piped[u] && piped[v] && ku > 1 && kv > 1 {
+                // chunk j of v needs input fraction (j+1)/kv from u
+                for j in 0..kv {
+                    let frac = (j + 1) as f64 / kv as f64;
+                    let need = ((ku as f64 * frac).ceil() as usize).clamp(1, ku) - 1;
+                    out.dep(chunks[u][need], chunks[v][j]);
+                }
+            } else {
+                // whole-task dependency
+                out.dep(*chunks[u].last().unwrap(), chunks[v][0]);
+            }
+        }
+    }
+    out
+}
+
+/// Chunk ids of a logical task inside the expanded DAG (test helper).
+pub fn chunk_ids(sim: &SimDag, orig: TaskId) -> Vec<usize> {
+    sim.tasks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.orig == orig)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::{simulate, SimConfig};
+    use crate::sim::spec::Cluster;
+    use crate::mxdag::path;
+
+    /// Two pipelineable tasks in a chain (Fig. 5 setup).
+    fn two_stage(s1: f64, u1: f64, s2: f64, u2: f64) -> (MXDag, TaskId, TaskId) {
+        let mut b = MXDag::builder();
+        let a = b.compute_full("a", 0, s1, u1);
+        let f = b.flow_full("f", 0, 1, s2, u2);
+        b.dep(a, f);
+        (b.finalize().unwrap(), a, f)
+    }
+
+    #[test]
+    fn no_pipeline_single_chunks() {
+        let (g, a, f) = two_stage(4.0, 1.0, 4.0, 1.0);
+        let sim = expand(&g, &Annotations::default());
+        assert_eq!(chunk_ids(&sim, a).len(), 1);
+        assert_eq!(chunk_ids(&sim, f).len(), 1);
+        let r = simulate(&sim, &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        assert!((r.makespan - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_matches_eq2_equal_units() {
+        let (g, a, f) = two_stage(4.0, 1.0, 4.0, 1.0);
+        let ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+        let sim = expand(&g, &ann);
+        assert_eq!(chunk_ids(&sim, a).len(), 4);
+        let r = simulate(&sim, &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        // Eq2: (1+1) + max(4,4) - max(1,1) = 5
+        let eq2 = path::len_pipe(&g, &[a, f], &path::full_rsrc);
+        assert!((r.makespan - eq2).abs() < 1e-9, "sim {} vs eq2 {}", r.makespan, eq2);
+    }
+
+    #[test]
+    fn pipeline_dominated_by_slow_stage() {
+        // slow producer: consumer waits per chunk
+        let (g, a, f) = two_stage(8.0, 2.0, 4.0, 1.0);
+        let ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+        let sim = expand(&g, &ann);
+        let r = simulate(&sim, &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        // Eq2: (2+1) + 8 - 2 = 9
+        let eq2 = path::len_pipe(&g, &[a, f], &path::full_rsrc);
+        assert!((r.makespan - eq2).abs() < 1e-9, "sim {} vs eq2 {}", r.makespan, eq2);
+    }
+
+    #[test]
+    fn one_sided_pipeline_binds_whole_task() {
+        let (g, a, f) = two_stage(4.0, 1.0, 4.0, 4.0); // f not pipelineable
+        let ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+        let sim = expand(&g, &ann);
+        assert_eq!(chunk_ids(&sim, f).len(), 1);
+        let r = simulate(&sim, &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        assert!((r.makespan - 8.0).abs() < 1e-9); // no overlap possible
+    }
+
+    #[test]
+    fn annotations_propagate() {
+        let (g, a, f) = two_stage(4.0, 1.0, 4.0, 1.0);
+        let mut ann = Annotations::default();
+        ann.priorities.insert(f, 7);
+        ann.gates.insert(a, 2.0);
+        let sim = expand(&g, &ann);
+        for id in chunk_ids(&sim, f) {
+            assert_eq!(sim.tasks[id].priority, 7);
+        }
+        let a0 = chunk_ids(&sim, a)[0];
+        assert_eq!(sim.tasks[a0].gate, 2.0);
+        let r = simulate(&sim, &Cluster::uniform(2), &SimConfig::default()).unwrap();
+        assert!(r.start_of(a) >= 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn coflow_group_ids_assigned() {
+        let mut b = MXDag::builder();
+        let f1 = b.flow("f1", 0, 1, 1.0);
+        let f2 = b.flow("f2", 0, 2, 1.0);
+        let g = {
+            let _ = (f1, f2);
+            b.finalize().unwrap()
+        };
+        let ann = Annotations { coflows: vec![vec![f1, f2]], ..Default::default() };
+        let sim = expand(&g, &ann);
+        assert_eq!(sim.tasks[chunk_ids(&sim, f1)[0]].coflow, Some(0));
+        assert_eq!(sim.tasks[chunk_ids(&sim, f2)[0]].coflow, Some(0));
+    }
+
+    #[test]
+    fn mismatched_chunk_counts_align_by_fraction() {
+        // ku=2, kv=4: v chunks 0,1 need u chunk 0; v chunks 2,3 need u chunk 1
+        let (g, a, f) = two_stage(4.0, 2.0, 4.0, 1.0);
+        let ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+        let sim = expand(&g, &ann);
+        let ua = chunk_ids(&sim, a);
+        let uf = chunk_ids(&sim, f);
+        assert_eq!(ua.len(), 2);
+        assert_eq!(uf.len(), 4);
+        assert!(sim.preds[uf[0]].contains(&ua[0]));
+        assert!(sim.preds[uf[1]].contains(&ua[0]));
+        assert!(sim.preds[uf[2]].contains(&ua[1]));
+        assert!(sim.preds[uf[3]].contains(&ua[1]));
+    }
+
+    #[test]
+    fn expansion_preserves_logical_semantics() {
+        // whatever we pipeline, a topological execution completes
+        let (g, a, f) = two_stage(6.0, 1.5, 3.0, 1.0);
+        for pipe in [vec![], vec![a], vec![f], vec![a, f]] {
+            let ann = Annotations { pipelined: pipe, ..Default::default() };
+            let sim = expand(&g, &ann);
+            let r = simulate(&sim, &Cluster::uniform(2), &SimConfig::default()).unwrap();
+            assert!(r.makespan > 0.0);
+            // pipelining never violates: f cannot finish before a's first chunk
+            assert!(r.finish_of(f) >= r.start_of(a));
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Simulator input spec: the cluster substrate and the *physical* DAG
+//! (MXDAG after pipeline expansion) that the fluid engine executes.
+
+use crate::mxdag::TaskId;
+
+/// One host: compute slots plus a full-duplex NIC.
+///
+/// Rates are normalised: a compute task at full resource runs at rate 1
+/// (occupying one core); a flow at full NIC runs at rate 1.
+#[derive(Debug, Clone)]
+pub struct Host {
+    pub cores: f64,
+    pub nic_up: f64,
+    pub nic_down: f64,
+}
+
+impl Default for Host {
+    fn default() -> Self {
+        Host { cores: 1.0, nic_up: 1.0, nic_down: 1.0 }
+    }
+}
+
+/// The cluster: a set of hosts.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub hosts: Vec<Host>,
+}
+
+impl Cluster {
+    /// `n` identical single-core hosts with unit NICs.
+    pub fn uniform(n: usize) -> Cluster {
+        Cluster { hosts: vec![Host::default(); n] }
+    }
+
+    pub fn with_cores(n: usize, cores: f64) -> Cluster {
+        Cluster { hosts: vec![Host { cores, ..Host::default() }; n] }
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// Resource vector layout: [core_0, up_0, down_0, core_1, ...].
+    pub fn capacities(&self) -> Vec<f64> {
+        let mut caps = Vec::with_capacity(self.hosts.len() * 3);
+        for h in &self.hosts {
+            caps.push(h.cores);
+            caps.push(h.nic_up);
+            caps.push(h.nic_down);
+        }
+        caps
+    }
+}
+
+/// Resource index helpers (see [`Cluster::capacities`]).
+pub fn res_core(h: usize) -> usize {
+    3 * h
+}
+pub fn res_up(h: usize) -> usize {
+    3 * h + 1
+}
+pub fn res_down(h: usize) -> usize {
+    3 * h + 2
+}
+
+/// Physical task kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimKind {
+    Compute { host: usize },
+    Flow { src: usize, dst: usize },
+    /// Zero-cost synchronisation node (dummy start/end).
+    Dummy,
+}
+
+impl SimKind {
+    /// Resources this task draws from (0, 1 or 2 entries).
+    pub fn resources(&self) -> Vec<usize> {
+        match *self {
+            SimKind::Compute { host } => vec![res_core(host)],
+            SimKind::Flow { src, dst } => vec![res_up(src), res_down(dst)],
+            SimKind::Dummy => vec![],
+        }
+    }
+    pub fn is_flow(&self) -> bool {
+        matches!(self, SimKind::Flow { .. })
+    }
+}
+
+/// One physical (possibly chunk-level) task.
+#[derive(Debug, Clone)]
+pub struct SimTask {
+    /// Originating MXTask in the logical MXDAG.
+    pub orig: TaskId,
+    /// (chunk index, total chunks) of the originating task.
+    pub chunk: (usize, usize),
+    pub kind: SimKind,
+    pub size: f64,
+    /// Higher = scheduled first under the Priority/Fifo policies.
+    pub priority: i64,
+    /// Earliest start time (scheduler gate; Principle 2 altruism).
+    pub gate: f64,
+    /// Coflow group id (flows only; all-or-nothing + MADD semantics).
+    pub coflow: Option<usize>,
+}
+
+/// The physical DAG the engine executes.
+#[derive(Debug, Clone, Default)]
+pub struct SimDag {
+    pub tasks: Vec<SimTask>,
+    pub preds: Vec<Vec<usize>>,
+    pub succs: Vec<Vec<usize>>,
+}
+
+impl SimDag {
+    pub fn push(&mut self, t: SimTask) -> usize {
+        let id = self.tasks.len();
+        self.tasks.push(t);
+        self.preds.push(Vec::new());
+        self.succs.push(Vec::new());
+        id
+    }
+
+    pub fn dep(&mut self, a: usize, b: usize) {
+        debug_assert!(a != b);
+        self.succs[a].push(b);
+        self.preds[b].push(a);
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+/// Bandwidth-sharing policy for network flows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetPolicy {
+    /// Max-min fair progressive filling (network-aware DAG baseline).
+    Fair,
+    /// Strict priority by `SimTask::priority`, fair within a level.
+    Priority,
+    /// Per-NIC FIFO: ready-order strict priority (plain-DAG baseline).
+    Fifo,
+    /// Varys-style coflow: SEBF ordering + MADD rates + all-or-nothing.
+    Coflow,
+}
+
+/// Compute-slot sharing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuPolicy {
+    Fair,
+    Priority,
+    Fifo,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Policy {
+    pub net: NetPolicy,
+    pub cpu: CpuPolicy,
+}
+
+impl Policy {
+    pub fn fair() -> Policy {
+        Policy { net: NetPolicy::Fair, cpu: CpuPolicy::Fair }
+    }
+    pub fn priority() -> Policy {
+        Policy { net: NetPolicy::Priority, cpu: CpuPolicy::Priority }
+    }
+    pub fn fifo() -> Policy {
+        Policy { net: NetPolicy::Fifo, cpu: CpuPolicy::Fifo }
+    }
+    pub fn coflow() -> Policy {
+        Policy { net: NetPolicy::Coflow, cpu: CpuPolicy::Fair }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacities_layout() {
+        let c = Cluster::uniform(2);
+        assert_eq!(c.capacities(), vec![1.0; 6]);
+        assert_eq!(res_core(1), 3);
+        assert_eq!(res_up(1), 4);
+        assert_eq!(res_down(1), 5);
+    }
+
+    #[test]
+    fn kind_resources() {
+        assert_eq!(SimKind::Compute { host: 2 }.resources(), vec![6]);
+        assert_eq!(SimKind::Flow { src: 0, dst: 1 }.resources(), vec![1, 5]);
+        assert!(SimKind::Dummy.resources().is_empty());
+    }
+
+    #[test]
+    fn dag_push_dep() {
+        let mut d = SimDag::default();
+        let a = d.push(SimTask {
+            orig: 0,
+            chunk: (0, 1),
+            kind: SimKind::Dummy,
+            size: 0.0,
+            priority: 0,
+            gate: 0.0,
+            coflow: None,
+        });
+        let b = d.push(SimTask {
+            orig: 1,
+            chunk: (0, 1),
+            kind: SimKind::Compute { host: 0 },
+            size: 1.0,
+            priority: 0,
+            gate: 0.0,
+            coflow: None,
+        });
+        d.dep(a, b);
+        assert_eq!(d.succs[a], vec![b]);
+        assert_eq!(d.preds[b], vec![a]);
+    }
+
+    #[test]
+    fn cluster_with_cores() {
+        let c = Cluster::with_cores(1, 4.0);
+        assert_eq!(c.capacities()[0], 4.0);
+    }
+}

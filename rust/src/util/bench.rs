@@ -1,0 +1,180 @@
+//! Micro-benchmark substrate (criterion is not vendored).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Auto-calibrates iteration counts, reports min/median/mean, and renders
+//! aligned tables for the paper-figure benches.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly, auto-scaling the iteration count so that total
+/// measurement time is ~`target`. Returns timing stats.
+pub fn bench_with<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Sample {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as u64;
+    let per_round = (target.as_nanos() as u64 / 8 / once).clamp(1, 1_000_000);
+
+    let mut times = Vec::with_capacity(8);
+    for _ in 0..8 {
+        let t = Instant::now();
+        for _ in 0..per_round {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / per_round as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Sample {
+        name: name.to_string(),
+        iters: per_round * 8,
+        min_ns: min,
+        median_ns: median,
+        mean_ns: mean,
+    }
+}
+
+/// Convenience wrapper: ~200 ms per case and immediate printing.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> Sample {
+    let s = bench_with(name, Duration::from_millis(200), f);
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+        s.name,
+        fmt_ns(s.min_ns),
+        fmt_ns(s.median_ns),
+        fmt_ns(s.mean_ns),
+        s.iters
+    );
+    s
+}
+
+pub fn bench_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12}",
+        "case", "min", "median", "mean"
+    );
+}
+
+/// Aligned result table for figure benches (rows of label -> columns).
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: &[String]) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values.to_vec()));
+    }
+
+    pub fn row_f64(&mut self, label: &str, values: &[f64]) {
+        let vs: Vec<String> = values.iter().map(|v| format!("{v:.4}")).collect();
+        self.row(label, &vs);
+    }
+
+    pub fn print(&self) {
+        let mut widths = vec![self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(4))
+            .max()
+            .unwrap()];
+        for (i, c) in self.columns.iter().enumerate() {
+            let w = self
+                .rows
+                .iter()
+                .map(|(_, v)| v[i].len())
+                .chain(std::iter::once(c.len()))
+                .max()
+                .unwrap();
+            widths.push(w);
+        }
+        println!("\n== {} ==", self.title);
+        print!("{:<w$}", "", w = widths[0] + 2);
+        for (i, c) in self.columns.iter().enumerate() {
+            print!("{:>w$}", c, w = widths[i + 1] + 2);
+        }
+        println!();
+        for (label, vals) in &self.rows {
+            print!("{:<w$}", label, w = widths[0] + 2);
+            for (i, v) in vals.iter().enumerate() {
+                print!("{:>w$}", v, w = widths[i + 1] + 2);
+            }
+            println!();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench_with("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.iters >= 8);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn table_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row_f64("r1", &[1.0, 2.0]);
+        t.row("r2", &["x".into(), "y".into()]);
+        assert_eq!(t.rows.len(), 2);
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("r", &["only-one".into()]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal CLI argument parser substrate (clap is not vendored).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if matches!(it.peek(), Some(nxt) if !nxt.starts_with("--")) {
+                    out.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: `--key value` binds greedily, so bare flags go last (or use
+        // `--flag` followed by another `--…` token).
+        let a = p("run --steps 10 --lr 0.5 trace.json --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.usize_or("steps", 1), 10);
+        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["trace.json"]);
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = p("bench --n=32 --mode=fast");
+        assert_eq!(a.usize_or("n", 0), 32);
+        assert_eq!(a.get("mode"), Some("fast"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = p("x --quiet");
+        assert!(a.flag("quiet"));
+        assert!(a.get("quiet").is_none());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = p("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p("run");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 1.5), 1.5);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrates this repo had to build because the offline image only
+//! vendors the `xla` crate's dependency closure (see DESIGN.md §5):
+//! JSON, PRNG, CLI parsing, micro-benchmarking, property testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;

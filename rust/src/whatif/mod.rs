@@ -1,0 +1,201 @@
+//! What-if analysis (§4.3): evaluate hypothetical application revisions
+//! on the MXDAG *before* changing the application — pipelining choices
+//! and work re-partitioning — which "are not possible with traditional
+//! DAG".
+
+use crate::mxdag::{MXDag, TaskId, TaskKind};
+use crate::sched::{evaluate, Plan};
+use crate::sim::{Cluster, SimError};
+
+/// Outcome of one hypothetical.
+#[derive(Debug, Clone)]
+pub struct WhatIf {
+    pub label: String,
+    pub jct: f64,
+    /// JCT delta vs the baseline plan (negative = improvement).
+    pub delta: f64,
+}
+
+/// Evaluate every single-task pipelining toggle on top of `base`.
+/// Returns the baseline JCT and one entry per pipelineable task.
+pub fn pipeline_whatif(
+    dag: &MXDag,
+    cluster: &Cluster,
+    base: &Plan,
+) -> Result<(f64, Vec<WhatIf>), SimError> {
+    let baseline = evaluate(dag, cluster, base)?.makespan;
+    let mut out = Vec::new();
+    for t in dag.real_tasks() {
+        if !dag.task(t).pipelineable() || base.ann.pipelined.contains(&t) {
+            continue;
+        }
+        let mut plan = base.clone();
+        plan.ann.pipelined.push(t);
+        let jct = evaluate(dag, cluster, &plan)?.makespan;
+        out.push(WhatIf {
+            label: format!("pipeline({})", dag.task(t).name),
+            jct,
+            delta: jct - baseline,
+        });
+    }
+    Ok((baseline, out))
+}
+
+/// Re-partitioning hypothetical: split compute task `target` into `k`
+/// parallel shards on hosts `shard_hosts`, fed by scatter flows from the
+/// original host and merged by gather flows back. Returns the revised
+/// MXDAG (the original is untouched).
+///
+/// `scatter`/`gather` are per-shard transfer times; each shard computes
+/// `size/k`.
+pub fn repartition(
+    dag: &MXDag,
+    target: TaskId,
+    shard_hosts: &[usize],
+    scatter: f64,
+    gather: f64,
+) -> Result<MXDag, String> {
+    let t = dag.task(target);
+    let TaskKind::Compute { host } = t.kind else {
+        return Err(format!("task {} is not a compute task", t.name));
+    };
+    let k = shard_hosts.len();
+    if k < 2 {
+        return Err("need at least 2 shards".into());
+    }
+
+    let mut b = MXDag::builder();
+    let mut map = std::collections::BTreeMap::new();
+    for old in dag.tasks() {
+        if old.kind.is_dummy() || old.id == target {
+            continue;
+        }
+        let nid = match old.kind {
+            TaskKind::Compute { host } => b.compute_full(&old.name, host, old.size, old.unit),
+            TaskKind::Flow { src, dst } => b.flow_full(&old.name, src, dst, old.size, old.unit),
+            _ => unreachable!(),
+        };
+        map.insert(old.id, nid);
+    }
+
+    // shards + scatter/gather plumbing
+    let mut shard_ids = Vec::with_capacity(k);
+    for (i, &h) in shard_hosts.iter().enumerate() {
+        let sc = if h != host {
+            Some(b.flow(&format!("{}_scatter{i}", t.name), host, h, scatter))
+        } else {
+            None
+        };
+        let sh = b.compute(&format!("{}_shard{i}", t.name), h, t.size / k as f64);
+        let ga = if h != host {
+            Some(b.flow(&format!("{}_gather{i}", t.name), h, host, gather))
+        } else {
+            None
+        };
+        if let Some(sc) = sc {
+            b.dep(sc, sh);
+        }
+        if let Some(ga) = ga {
+            b.dep(sh, ga);
+        }
+        shard_ids.push((sc, sh, ga));
+    }
+
+    // rewire edges
+    for old in dag.tasks() {
+        if old.kind.is_dummy() {
+            continue;
+        }
+        for &s in dag.succs(old.id) {
+            if dag.task(s).kind.is_dummy() {
+                continue;
+            }
+            match (old.id == target, s == target) {
+                (false, false) => {
+                    b.dep(map[&old.id], map[&s]);
+                }
+                (true, false) => {
+                    // successors wait for every shard's gather (or shard)
+                    for &(_, sh, ga) in &shard_ids {
+                        b.dep(ga.unwrap_or(sh), map[&s]);
+                    }
+                }
+                (false, true) => {
+                    for &(sc, sh, _) in &shard_ids {
+                        b.dep(map[&old.id], sc.unwrap_or(sh));
+                    }
+                }
+                (true, true) => unreachable!("self edge"),
+            }
+        }
+    }
+    b.finalize().map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{FairScheduler, Scheduler};
+    use crate::sim::Cluster;
+    use crate::workloads;
+
+    #[test]
+    fn pipeline_whatif_signs_match_fig3() {
+        let (g, _) = workloads::fig3_dag();
+        let cluster = crate::workloads::figs::fig3_cluster();
+        let base = Plan { ann: Default::default(), policy: crate::sim::Policy::fifo() };
+        let (baseline, results) = pipeline_whatif(&g, &cluster, &base).unwrap();
+        assert!(baseline > 0.0);
+        let by_label = |l: &str| {
+            results
+                .iter()
+                .find(|w| w.label == format!("pipeline({l})"))
+                .unwrap()
+        };
+        // pipelining D alone (off-critical): no harm
+        assert!(by_label("D").delta.abs() < 1e-9);
+        // pipelining f3 alone: its stream still queues behind the blocking
+        // f1 send (issue order), so nothing changes
+        assert!(by_label("f3").delta.abs() < 1e-6);
+    }
+
+    #[test]
+    fn repartition_splits_compute() {
+        let mut b = MXDag::builder();
+        let pre = b.compute("pre", 0, 0.5);
+        let big = b.compute("big", 0, 8.0);
+        let post = b.compute("post", 0, 0.5);
+        b.chain(&[pre, big, post]);
+        let g = b.finalize().unwrap();
+
+        let g2 = repartition(&g, big, &[0, 1, 2, 3], 0.1, 0.1).unwrap();
+        assert!(g2.by_name("big_shard2").is_some());
+        assert!(g2.by_name("big").is_none());
+
+        // 4-way split on 4 hosts beats the single 8s task
+        let cluster = Cluster::uniform(4);
+        let before = evaluate(&g, &cluster, &FairScheduler.plan(&g, &cluster))
+            .unwrap()
+            .makespan;
+        let after = evaluate(&g2, &cluster, &FairScheduler.plan(&g2, &cluster))
+            .unwrap()
+            .makespan;
+        assert!(after < before - 1.0, "split {after} vs mono {before}");
+    }
+
+    #[test]
+    fn repartition_rejects_flows() {
+        let mut b = MXDag::builder();
+        let f = b.flow("f", 0, 1, 1.0);
+        let g = b.finalize().unwrap();
+        assert!(repartition(&g, f, &[0, 1], 0.1, 0.1).is_err());
+    }
+
+    #[test]
+    fn repartition_needs_two_shards() {
+        let mut b = MXDag::builder();
+        let c = b.compute("c", 0, 1.0);
+        let g = b.finalize().unwrap();
+        assert!(repartition(&g, c, &[1], 0.1, 0.1).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! The distributed-deep-learning MXDAG of Fig. 6 (§4.1.1).
+//!
+//! Layer-wise parameter synchronisation between a worker and a parameter
+//! server: per layer i, `BP_i → push_i → pull_i → FP_i`; BP runs top
+//! layer first (L-1 … 0), FP bottom first (0 … L-1). All pushes share
+//! the worker's uplink, all pulls its downlink — the scheduling question
+//! is the tensor transmission *order* (ByteScheduler's insight, which
+//! the MXDAG analysis recovers via critical-path priority).
+
+use crate::mxdag::{MXDag, TaskId};
+
+#[derive(Debug, Clone)]
+pub struct DdlParams {
+    pub layers: usize,
+    /// Back-propagation compute time per layer.
+    pub bp: f64,
+    /// Forward-propagation compute time per layer.
+    pub fp: f64,
+    /// Transfer time per layer's parameters (push and pull each).
+    pub comm: f64,
+    /// Worker host id; parameter server is `worker + 1`.
+    pub worker: usize,
+}
+
+impl Default for DdlParams {
+    fn default() -> Self {
+        // FP-heavy regime: reordering tensor transmission lets lower-layer
+        // pulls hide behind the FP chain (the ByteScheduler sweet spot).
+        DdlParams { layers: 4, bp: 0.5, fp: 2.0, comm: 1.0, worker: 0 }
+    }
+}
+
+/// Task handles for one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct DdlLayer {
+    pub bp: TaskId,
+    pub push: TaskId,
+    pub pull: TaskId,
+    pub fp: TaskId,
+}
+
+/// Build the Fig. 6 DAG. Returns (dag, layer handles bottom-up).
+pub fn ddl_dag(p: &DdlParams) -> (MXDag, Vec<DdlLayer>) {
+    let w = p.worker;
+    let ps = p.worker + 1;
+    let mut b = MXDag::builder();
+    let mut layers = Vec::with_capacity(p.layers);
+    for i in 0..p.layers {
+        let bp = b.compute(&format!("BP{i}"), w, p.bp);
+        let push = b.flow(&format!("push{i}"), w, ps, p.comm);
+        let pull = b.flow(&format!("pull{i}"), ps, w, p.comm);
+        let fp = b.compute(&format!("FP{i}"), w, p.fp);
+        b.dep(bp, push).dep(push, pull).dep(pull, fp);
+        layers.push(DdlLayer { bp, push, pull, fp });
+    }
+    // BP chain: top layer first (L-1 -> ... -> 0)
+    for i in (1..p.layers).rev() {
+        b.dep(layers[i].bp, layers[i - 1].bp);
+    }
+    // FP chain: bottom layer first (0 -> ... -> L-1)
+    for i in 1..p.layers {
+        b.dep(layers[i - 1].fp, layers[i].fp);
+    }
+    (b.finalize().unwrap(), layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxdag::cpm;
+    use crate::sched::{run, FifoScheduler, MxScheduler};
+    use crate::sim::Cluster;
+
+    #[test]
+    fn structure_bp_reverse_fp_forward() {
+        let (g, layers) = ddl_dag(&DdlParams::default());
+        // BP3 has no real preds; BP0 is last in the BP chain
+        assert_eq!(g.preds(layers[3].bp), &[g.start()]);
+        assert!(g.preds(layers[0].bp).contains(&layers[1].bp));
+        assert!(g.preds(layers[3].fp).contains(&layers[2].fp));
+    }
+
+    #[test]
+    fn critical_path_goes_through_lowest_layer() {
+        let (g, layers) = ddl_dag(&DdlParams::default());
+        let c = cpm(&g);
+        assert!(c.is_critical(layers[0].push), "push0 is critical");
+        assert!(!c.is_critical(layers[3].push), "push3 has slack");
+    }
+
+    /// Fig. 6 headline: layer-priority (MXDAG) beats FIFO tensor order.
+    #[test]
+    fn mxdag_beats_fifo_transmission_order() {
+        let p = DdlParams::default();
+        let (g, _) = ddl_dag(&p);
+        let cluster = Cluster::with_cores(2, 2.0);
+        let fifo = run(&FifoScheduler, &g, &cluster).unwrap().makespan;
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster)
+            .unwrap()
+            .makespan;
+        assert!(mx < fifo - 1e-9, "mx {mx} must beat fifo {fifo}");
+    }
+
+    #[test]
+    fn mx_never_loses_across_comm_sweep() {
+        let cluster = Cluster::with_cores(2, 2.0);
+        for comm in [0.25, 0.5, 1.0, 2.0, 4.0] {
+            let (g, _) = ddl_dag(&DdlParams { comm, ..Default::default() });
+            let fifo = run(&FifoScheduler, &g, &cluster).unwrap().makespan;
+            let mx = run(&MxScheduler::without_pipelining(), &g, &cluster)
+                .unwrap()
+                .makespan;
+            assert!(mx <= fifo + 1e-9, "comm={comm}: mx {mx} vs fifo {fifo}");
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! The concrete scenarios of Figures 1, 2(a), 3 and 7.
+//!
+//! Sizes are chosen so that every qualitative claim in the paper holds
+//! in the fluid model and is *checked by tests/benches*:
+//! who wins, in which direction, and where the crossovers sit.
+
+use crate::mxdag::{MXDag, TaskId};
+
+/// Fig. 1: host A sends flow 1 to B (which computes, then sends flow 2
+/// to C) and flow 3 directly to C. Fair sharing of A's uplink delays the
+/// critical flow 1; co-scheduling prioritises it.
+pub fn fig1_dag() -> MXDag {
+    let mut b = MXDag::builder();
+    let a = b.compute("A", 0, 0.0);
+    let f1 = b.flow("f1", 0, 1, 1.0);
+    let bt = b.compute("B", 1, 1.0);
+    let f2 = b.flow("f2", 1, 2, 1.0);
+    let f3 = b.flow("f3", 0, 2, 1.0);
+    let c = b.compute("C", 2, 1.0);
+    b.chain(&[a, f1, bt, f2, c]);
+    b.dep(a, f3).dep(f3, c);
+    b.finalize().unwrap()
+}
+
+/// Fig. 2(a): symmetric diamond topology with *asymmetric compute times*
+/// `t1 != t2`. Returns (dag, [f1, f2, f3, f4]) — the flows the coflow
+/// baseline groups as {f1,f2} and {f3,f4}.
+pub fn fig2a_dag(t1: f64, t2: f64) -> (MXDag, [TaskId; 4]) {
+    let mut b = MXDag::builder();
+    let a = b.compute("A", 0, 0.5);
+    let f1 = b.flow("f1", 0, 1, 1.0);
+    let f2 = b.flow("f2", 0, 2, 1.0);
+    let bt = b.compute("B", 1, t1);
+    let ct = b.compute("C", 2, t2);
+    let f3 = b.flow("f3", 1, 3, 1.0);
+    let f4 = b.flow("f4", 2, 3, 1.0);
+    let d = b.compute("D", 3, 0.5);
+    b.dep(a, f1).dep(a, f2);
+    b.dep(f1, bt).dep(f2, ct);
+    b.dep(bt, f3).dep(ct, f4);
+    b.dep(f3, d).dep(f4, d);
+    (b.finalize().unwrap(), [f1, f2, f3, f4])
+}
+
+/// Fig. 3: 4-node DAG with critical path A→B→C. D is off the critical
+/// path. Flows f1 (A→B), f2 (B→C), f3 (A→C), f4 (D→C).
+///
+/// Returns (dag, names->ids of [A, f1, B, f2, f3, D, f4, C]).
+pub fn fig3_dag() -> (MXDag, [TaskId; 8]) {
+    let mut b = MXDag::builder();
+    let a = b.compute_full("A", 0, 4.0, 1.0);
+    let f1 = b.flow_full("f1", 0, 1, 6.0, 1.5);
+    let bt = b.compute("B", 1, 2.0);
+    let f2 = b.flow("f2", 1, 2, 2.0);
+    let f3 = b.flow_full("f3", 0, 2, 4.0, 1.0);
+    let d = b.compute_full("D", 3, 2.0, 0.5);
+    let f4 = b.flow_full("f4", 3, 2, 1.0, 0.25);
+    let c = b.compute("C", 2, 2.0);
+    b.chain(&[a, f1, bt, f2, c]);
+    b.dep(a, f3).dep(f3, c);
+    b.dep(d, f4).dep(f4, c);
+    (b.finalize().unwrap(), [a, f1, bt, f2, f3, d, f4, c])
+}
+
+/// Cluster for the Fig. 3 scenario: 4 uniform hosts, but C (host 2) has
+/// a wide ingress so the analysis isolates the contention the paper
+/// reasons about — A's *uplink* shared by f1 and f3.
+pub fn fig3_cluster() -> crate::sim::Cluster {
+    let mut c = crate::sim::Cluster::uniform(4);
+    c.hosts[2].nic_down = 3.0;
+    c
+}
+
+/// The four pipelineability choices of Fig. 3(b–e):
+/// baseline (no pipeline), case 1 (off-critical D+f4), case 2 (+A,f1 on
+/// the critical path), case 3 (+f3, which contends with f1 on A's NIC).
+pub fn fig3_pipeline_sets() -> Vec<(&'static str, Vec<&'static str>)> {
+    vec![
+        ("baseline(no pipeline)", vec![]),
+        ("case1(+D,f4 off-critical)", vec!["D", "f4"]),
+        ("case2(+A,f1 critical)", vec!["D", "f4", "A", "f1"]),
+        ("case3(+f3 contends)", vec!["D", "f4", "A", "f1", "f3"]),
+    ]
+}
+
+/// Fig. 7: two map-reduce jobs sharing host 1's compute slot (tasks b, d)
+/// and host 1's uplink (flows f2, f3).
+///
+/// Job 1: a(h0,2), b(h1,1), f1:h0→h2(2), f2:h1→h2(1), r1(h2,1).
+/// Job 2: d(h1,1), f3:h1→h3(1), r2(h3,1).
+pub fn fig7_jobs() -> (MXDag, MXDag) {
+    let j1 = {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 2.0);
+        let bb = b.compute("b", 1, 1.0);
+        let f1 = b.flow("f1", 0, 2, 2.0);
+        let f2 = b.flow("f2", 1, 2, 1.0);
+        let r1 = b.compute("r1", 2, 1.0);
+        b.dep(a, f1).dep(bb, f2).dep(f1, r1).dep(f2, r1);
+        b.finalize().unwrap()
+    };
+    let j2 = {
+        let mut b = MXDag::builder();
+        let d = b.compute("d", 1, 1.0);
+        let f3 = b.flow("f3", 1, 3, 1.0);
+        let r2 = b.compute("r2", 3, 1.0);
+        b.dep(d, f3).dep(f3, r2);
+        b.finalize().unwrap()
+    };
+    (j1, j2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxdag::cpm;
+    use crate::sched::{evaluate, run, FairScheduler, MxScheduler, Plan, Scheduler};
+    use crate::sim::{Annotations, Cluster, Policy};
+
+    #[test]
+    fn fig1_t2_beats_t1() {
+        let g = fig1_dag();
+        let cluster = Cluster::uniform(3);
+        let t1 = run(&FairScheduler, &g, &cluster).unwrap().makespan;
+        let t2 = run(&MxScheduler::without_pipelining(), &g, &cluster)
+            .unwrap()
+            .makespan;
+        assert!(t2 < t1 - 1e-9, "T2 {t2} must beat T1 {t1}");
+        assert!((t1 - 5.0).abs() < 1e-9);
+        assert!((t2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig2a_asymmetric_compute_times() {
+        let (g, _) = fig2a_dag(3.0, 1.0);
+        let c = cpm(&g);
+        // critical path goes through the long compute B
+        assert!(c.is_critical(g.by_name("B").unwrap()));
+        assert!(!c.is_critical(g.by_name("C").unwrap()));
+    }
+
+    #[test]
+    fn fig3_critical_path_is_abc() {
+        let (g, _) = fig3_dag();
+        let c = cpm(&g);
+        for name in ["A", "f1", "B", "f2", "C"] {
+            assert!(c.is_critical(g.by_name(name).unwrap()), "{name} critical");
+        }
+        assert!(!c.is_critical(g.by_name("D").unwrap()));
+        assert!(!c.is_critical(g.by_name("f4").unwrap()));
+    }
+
+    /// The headline Fig. 3 series under the FIFO runtime:
+    /// baseline == case1, case2 < baseline, case3 > baseline.
+    #[test]
+    fn fig3_cases_ordering() {
+        let (g, _) = fig3_dag();
+        let cluster = super::fig3_cluster();
+        let mut results = Vec::new();
+        for (name, pipes) in fig3_pipeline_sets() {
+            let pipelined = pipes.iter().map(|n| g.by_name(n).unwrap()).collect();
+            let plan = Plan {
+                ann: Annotations { pipelined, ..Default::default() },
+                policy: Policy::fifo(),
+            };
+            let r = evaluate(&g, &cluster, &plan).unwrap();
+            results.push((name, r.makespan));
+        }
+        let base = results[0].1;
+        let case1 = results[1].1;
+        let case2 = results[2].1;
+        let case3 = results[3].1;
+        assert!((case1 - base).abs() < 1e-9, "case1 {case1} == base {base}");
+        assert!(case2 < base - 1e-9, "case2 {case2} < base {base}");
+        assert!(case3 > base + 1e-9, "case3 {case3} > base {base}");
+    }
+
+    #[test]
+    fn fig7_jobs_share_resources() {
+        let (j1, j2) = fig7_jobs();
+        // b and d on host 1 compute; f2 and f3 on host 1 uplink
+        assert!(j1.by_name("b").is_some() && j2.by_name("d").is_some());
+        let c1 = cpm(&j1);
+        assert!((c1.makespan - 5.0).abs() < 1e-9); // a->f1->r1
+        let c2 = cpm(&j2);
+        assert!((c2.makespan - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mx_scheduler_handles_fig3() {
+        // The full MXDAG scheduler (priority + pipeline search) must be at
+        // least as good as the best hand-picked case under FIFO.
+        let (g, _) = fig3_dag();
+        let cluster = super::fig3_cluster();
+        let mx = run(&MxScheduler::default(), &g, &cluster).unwrap();
+        let case2 = {
+            let pipelined = ["D", "f4", "A", "f1"]
+                .iter()
+                .map(|n| g.by_name(n).unwrap())
+                .collect();
+            let plan = Plan {
+                ann: Annotations { pipelined, ..Default::default() },
+                policy: Policy::fifo(),
+            };
+            evaluate(&g, &cluster, &plan).unwrap()
+        };
+        assert!(
+            mx.makespan <= case2.makespan + 1e-9,
+            "mx {} vs best-fifo-case {}",
+            mx.makespan,
+            case2.makespan
+        );
+        let _ = MxScheduler::default().name();
+    }
+}

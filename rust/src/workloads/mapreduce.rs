@@ -1,0 +1,124 @@
+//! General map-reduce MXDAG generator (maps → shuffle flows → reduces).
+
+use crate::util::rng::Rng;
+use crate::mxdag::{MXDag, TaskId};
+
+#[derive(Debug, Clone)]
+pub struct MapReduceParams {
+    pub mappers: usize,
+    pub reducers: usize,
+    /// Host of mapper i = `map_hosts[i % len]`; likewise reducers.
+    pub map_hosts: Vec<usize>,
+    pub red_hosts: Vec<usize>,
+    pub map_time: f64,
+    pub red_time: f64,
+    /// Shuffle bytes (time at full NIC) per mapper→reducer pair.
+    pub shuffle: f64,
+    /// ± jitter fraction applied to task sizes (heterogeneity, §2.2).
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for MapReduceParams {
+    fn default() -> Self {
+        MapReduceParams {
+            mappers: 4,
+            reducers: 2,
+            map_hosts: vec![0, 1, 2, 3],
+            red_hosts: vec![4, 5],
+            map_time: 1.0,
+            red_time: 1.0,
+            shuffle: 0.5,
+            jitter: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Handles into a generated map-reduce DAG.
+#[derive(Debug, Clone)]
+pub struct MapReduceDag {
+    pub maps: Vec<TaskId>,
+    pub reduces: Vec<TaskId>,
+    /// `flows[m][r]` = shuffle flow mapper m → reducer r.
+    pub flows: Vec<Vec<TaskId>>,
+}
+
+pub fn mapreduce_dag(p: &MapReduceParams) -> (MXDag, MapReduceDag) {
+    assert!(!p.map_hosts.is_empty() && !p.red_hosts.is_empty());
+    let mut rng = Rng::new(p.seed);
+    let jit = |base: f64, rng: &mut Rng| {
+        if p.jitter > 0.0 {
+            base * (1.0 + rng.range_f64(-p.jitter, p.jitter))
+        } else {
+            base
+        }
+    };
+    let mut b = MXDag::builder();
+    let maps: Vec<TaskId> = (0..p.mappers)
+        .map(|m| {
+            let host = p.map_hosts[m % p.map_hosts.len()];
+            let size = jit(p.map_time, &mut rng);
+            b.compute(&format!("map{m}"), host, size)
+        })
+        .collect();
+    let reduces: Vec<TaskId> = (0..p.reducers)
+        .map(|r| {
+            let host = p.red_hosts[r % p.red_hosts.len()];
+            let size = jit(p.red_time, &mut rng);
+            b.compute(&format!("red{r}"), host, size)
+        })
+        .collect();
+    let mut flows = vec![vec![0; p.reducers]; p.mappers];
+    for m in 0..p.mappers {
+        let src = p.map_hosts[m % p.map_hosts.len()];
+        for r in 0..p.reducers {
+            let dst = p.red_hosts[r % p.red_hosts.len()];
+            let size = jit(p.shuffle, &mut rng);
+            let f = b.flow(&format!("sh{m}_{r}"), src, dst, size);
+            b.dep(maps[m], f);
+            b.dep(f, reduces[r]);
+            flows[m][r] = f;
+        }
+    }
+    (b.finalize().unwrap(), MapReduceDag { maps, reduces, flows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{run, FairScheduler, MxScheduler};
+    use crate::sim::Cluster;
+
+    #[test]
+    fn shape_is_bipartite_shuffle() {
+        let (g, h) = mapreduce_dag(&MapReduceParams::default());
+        assert_eq!(h.maps.len(), 4);
+        assert_eq!(h.reduces.len(), 2);
+        assert_eq!(g.real_tasks().count(), 4 + 2 + 8);
+        // every reduce depends on a flow from every mapper
+        for &r in &h.reduces {
+            assert_eq!(g.preds(r).len(), 4);
+        }
+    }
+
+    #[test]
+    fn jitter_changes_sizes_deterministically() {
+        let p = MapReduceParams { jitter: 0.5, seed: 9, ..Default::default() };
+        let (g1, h1) = mapreduce_dag(&p);
+        let (g2, _) = mapreduce_dag(&p);
+        assert_eq!(g1.task(h1.maps[0]).size, g2.task(h1.maps[0]).size);
+        let (g3, h3) = mapreduce_dag(&MapReduceParams { seed: 10, ..p });
+        assert_ne!(g1.task(h1.maps[0]).size, g3.task(h3.maps[0]).size);
+    }
+
+    #[test]
+    fn schedulers_complete_shuffle() {
+        let p = MapReduceParams { jitter: 0.3, ..Default::default() };
+        let (g, _) = mapreduce_dag(&p);
+        let cluster = Cluster::uniform(6);
+        let fair = run(&FairScheduler, &g, &cluster).unwrap();
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+        assert!(mx.makespan <= fair.makespan + 1e-6);
+    }
+}

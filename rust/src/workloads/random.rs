@@ -1,0 +1,147 @@
+//! Random layered MXDAG generator — scale/property-test workloads.
+
+use crate::util::rng::Rng;
+use crate::mxdag::{MXDag, TaskId};
+
+#[derive(Debug, Clone)]
+pub struct RandomParams {
+    pub layers: usize,
+    pub width: usize,
+    pub hosts: usize,
+    /// Probability of an edge between adjacent-layer tasks.
+    pub edge_p: f64,
+    /// Fraction of tasks that are pipelineable (unit = size / 4).
+    pub pipe_frac: f64,
+    pub min_size: f64,
+    pub max_size: f64,
+    pub seed: u64,
+}
+
+impl Default for RandomParams {
+    fn default() -> Self {
+        RandomParams {
+            layers: 4,
+            width: 4,
+            hosts: 8,
+            edge_p: 0.5,
+            pipe_frac: 0.25,
+            min_size: 0.5,
+            max_size: 2.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Generate a layered DAG: alternating compute layers and flow layers.
+/// Every flow's endpoints match its adjacent computes' hosts, so the
+/// graph is physically realisable.
+pub fn random_dag(p: &RandomParams) -> MXDag {
+    assert!(p.hosts >= 2 && p.layers >= 1 && p.width >= 1);
+    let mut rng = Rng::new(p.seed);
+    let mut b = MXDag::builder();
+    let mut prev: Vec<(TaskId, usize)> = Vec::new(); // (task, host)
+
+    for layer in 0..p.layers {
+        let mut cur: Vec<(TaskId, usize)> = Vec::new();
+        for wi in 0..p.width {
+            let host = rng.below(p.hosts);
+            let size = rng.range_f64(p.min_size, p.max_size);
+            let unit = if rng.bool(p.pipe_frac) { size / 4.0 } else { size };
+            let t = b.compute_full(&format!("c{layer}_{wi}"), host, size, unit);
+            cur.push((t, host));
+        }
+        if layer > 0 {
+            let mut any = vec![false; cur.len()];
+            for (pi, &(pt, ph)) in prev.iter().enumerate() {
+                for (ci, &(ct, ch)) in cur.iter().enumerate() {
+                    if rng.bool(p.edge_p) {
+                        any[ci] = true;
+                        if ph == ch {
+                            b.dep(pt, ct); // same host: no flow needed
+                        } else {
+                            let size = rng.range_f64(p.min_size, p.max_size);
+                            let unit = if rng.bool(p.pipe_frac) { size / 4.0 } else { size };
+                            let f = b.flow_full(
+                                &format!("f{layer}_{pi}_{ci}"),
+                                ph,
+                                ch,
+                                size,
+                                unit,
+                            );
+                            b.dep(pt, f);
+                            b.dep(f, ct);
+                        }
+                    }
+                }
+            }
+            // keep the graph connected layer-to-layer
+            for (ci, &(ct, ch)) in cur.iter().enumerate() {
+                if !any[ci] {
+                    let &(pt, ph) = rng.choice(&prev);
+                    if ph == ch {
+                        b.dep(pt, ct);
+                    } else {
+                        let f = b.flow(&format!("fx{layer}_{ci}"), ph, ch, 1.0);
+                        b.dep(pt, f);
+                        b.dep(f, ct);
+                    }
+                }
+            }
+        }
+        prev = cur;
+    }
+    b.finalize().expect("layered generator cannot create cycles")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{run, FairScheduler, FifoScheduler, MxScheduler, PackingScheduler};
+    use crate::sim::Cluster;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let p = RandomParams::default();
+        let g1 = random_dag(&p);
+        let g2 = random_dag(&p);
+        assert_eq!(g1.len(), g2.len());
+        assert_eq!(g1.n_edges(), g2.n_edges());
+    }
+
+    #[test]
+    fn flows_connect_distinct_hosts() {
+        let g = random_dag(&RandomParams { seed: 3, ..Default::default() });
+        for t in g.tasks() {
+            if let crate::mxdag::TaskKind::Flow { src, dst } = t.kind {
+                assert_ne!(src, dst, "flow {} loops", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn all_schedulers_complete_random_dags() {
+        for seed in 0..5 {
+            let p = RandomParams { seed, ..Default::default() };
+            let g = random_dag(&p);
+            let cluster = Cluster::uniform(p.hosts);
+            for r in [
+                run(&FairScheduler, &g, &cluster),
+                run(&FifoScheduler, &g, &cluster),
+                run(&PackingScheduler, &g, &cluster),
+                run(&MxScheduler::without_pipelining(), &g, &cluster),
+            ] {
+                let r = r.unwrap();
+                assert!(r.makespan.is_finite() && r.makespan > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn scales_to_hundreds_of_tasks() {
+        let p = RandomParams { layers: 10, width: 10, hosts: 16, seed: 11, ..Default::default() };
+        let g = random_dag(&p);
+        assert!(g.real_tasks().count() > 100);
+        let r = run(&FairScheduler, &g, &Cluster::uniform(16)).unwrap();
+        assert!(r.makespan.is_finite());
+    }
+}

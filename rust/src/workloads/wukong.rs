@@ -1,0 +1,123 @@
+//! The asymmetric-topology DAG of Fig. 2(b), adopted from Wukong, and
+//! its three candidate coflow abstractions (b1, b2, b3).
+//!
+//! Tasks A..F on hosts 0..5; flows
+//!   f1: A→B, f2: B→E, f3: C→D, f4: C→E, f5: D→F, f6: E→F.
+//! The asymmetry: B→D is absent, and D's compute is heavier, so the
+//! C→f3→D→f5→F path is critical. The optimal schedule delays f4 on C's
+//! uplink and, as a cascading effect, f5/f6 do not share F's downlink.
+
+use crate::mxdag::{MXDag, TaskId};
+
+/// The three coflow definitions a programmer could commit to (§2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WukongCoflows {
+    /// b1: broadcast from C {f3,f4} + aggregation at F {f5,f6}.
+    B1,
+    /// b2: aggregation at E {f2,f4}.
+    B2,
+    /// b3: all flows between {B,C} and {D,E}: {f2,f3,f4}.
+    B3,
+}
+
+/// Build the Fig. 2(b) DAG. Returns (dag, [f1..f6]).
+pub fn wukong_dag() -> (MXDag, [TaskId; 6]) {
+    let mut b = MXDag::builder();
+    let a = b.compute("A", 0, 1.0);
+    let bt = b.compute("B", 1, 1.0);
+    let c = b.compute("C", 2, 1.0);
+    let d = b.compute("D", 3, 4.0); // heavier: makes the f3 path critical
+    let e = b.compute("E", 4, 1.0);
+    let f = b.compute("F", 5, 1.0);
+    let f1 = b.flow("f1", 0, 1, 1.0);
+    let f2 = b.flow("f2", 1, 4, 1.0);
+    let f3 = b.flow("f3", 2, 3, 1.0);
+    let f4 = b.flow("f4", 2, 4, 1.0);
+    let f5 = b.flow("f5", 3, 5, 1.0);
+    let f6 = b.flow("f6", 4, 5, 1.0);
+    b.dep(a, f1).dep(f1, bt);
+    b.dep(bt, f2).dep(f2, e);
+    b.dep(c, f3).dep(f3, d);
+    b.dep(c, f4).dep(f4, e);
+    b.dep(d, f5).dep(f5, f);
+    b.dep(e, f6).dep(f6, f);
+    (b.finalize().unwrap(), [f1, f2, f3, f4, f5, f6])
+}
+
+impl WukongCoflows {
+    pub fn groups(&self, flows: &[TaskId; 6]) -> Vec<Vec<TaskId>> {
+        let [_, f2, f3, f4, f5, f6] = *flows;
+        match self {
+            WukongCoflows::B1 => vec![vec![f3, f4], vec![f5, f6]],
+            WukongCoflows::B2 => vec![vec![f2, f4]],
+            WukongCoflows::B3 => vec![vec![f2, f3, f4]],
+        }
+    }
+    pub fn all() -> [WukongCoflows; 3] {
+        [WukongCoflows::B1, WukongCoflows::B2, WukongCoflows::B3]
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            WukongCoflows::B1 => "coflow-b1{f3,f4}{f5,f6}",
+            WukongCoflows::B2 => "coflow-b2{f2,f4}",
+            WukongCoflows::B3 => "coflow-b3{f2,f3,f4}",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxdag::cpm;
+    use crate::sched::{run, CoflowScheduler, Grouping, MxScheduler};
+    use crate::sim::Cluster;
+
+    #[test]
+    fn topology_is_asymmetric() {
+        let (g, _) = wukong_dag();
+        // B sends only to E; C sends to both D and E — no B→D edge.
+        let c = g.by_name("C").unwrap();
+        let b = g.by_name("B").unwrap();
+        assert_eq!(g.succs(c).len(), 2);
+        assert_eq!(g.succs(b).len(), 1);
+    }
+
+    #[test]
+    fn critical_path_through_d() {
+        let (g, _) = wukong_dag();
+        let r = cpm(&g);
+        assert!(r.is_critical(g.by_name("f3").unwrap()));
+        assert!(r.is_critical(g.by_name("D").unwrap()));
+        assert!(!r.is_critical(g.by_name("f4").unwrap()));
+        assert_eq!(r.makespan, 8.0); // C f3 D f5 F = 1+1+4+1+1
+    }
+
+    /// Fig. 2(d): the MXDAG schedule beats *all three* coflow groupings.
+    #[test]
+    fn mxdag_beats_every_coflow_grouping() {
+        let (g, flows) = wukong_dag();
+        let cluster = Cluster::uniform(6);
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster)
+            .unwrap()
+            .makespan;
+        for variant in WukongCoflows::all() {
+            let s = CoflowScheduler::new(Grouping::Explicit(variant.groups(&flows)));
+            let co = run(&s, &g, &cluster).unwrap().makespan;
+            assert!(
+                mx < co - 1e-9,
+                "mxdag {mx} must beat {} with {co}",
+                variant.label()
+            );
+        }
+    }
+
+    #[test]
+    fn mxdag_delays_f4_behind_f3() {
+        let (g, flows) = wukong_dag();
+        let cluster = Cluster::uniform(6);
+        let r = run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+        let [_, _, f3, f4, ..] = flows;
+        // f3 owns C's uplink first; f4 follows
+        assert!(r.finish_of(f3) <= r.start_of(f4) + 1e-9);
+    }
+}

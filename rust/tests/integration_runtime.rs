@@ -1,0 +1,156 @@
+//! Integration over the PJRT runtime: load real artifacts, check
+//! numerics against host-side references, and run a short end-to-end
+//! training burst. Tests skip (with a notice) when `make artifacts`
+//! hasn't been run.
+
+use std::path::Path;
+
+use mxdag::coordinator::{train, DdlConfig, SyncSchedule};
+use mxdag::runtime::{Engine, Tensor};
+
+fn engine() -> Option<Engine> {
+    match Engine::load(Path::new("artifacts")) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn matmul_artifact_matches_host() {
+    let Some(engine) = engine() else { return };
+    let spec = &engine.manifest.artifact("matmul").unwrap().inputs;
+    let (m, k) = (spec[0].shape[0], spec[0].shape[1]);
+    let n = spec[1].shape[1];
+    let x: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let w: Vec<f32> = (0..k * n).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+    let out = engine
+        .execute("matmul", &[Tensor::f32(&[m, k], x.clone()), Tensor::f32(&[k, n], w.clone())])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[m, n]);
+    // full host-side check
+    let o = out[0].as_f32();
+    for i in [0usize, m / 2, m - 1] {
+        for j in [0usize, n / 2, n - 1] {
+            let want: f32 = (0..k).map(|p| x[i * k + p] * w[p * n + j]).sum();
+            assert!(
+                (o[i * n + j] - want).abs() < 1e-3,
+                "({i},{j}): {} vs {}",
+                o[i * n + j],
+                want
+            );
+        }
+    }
+}
+
+#[test]
+fn layer_forwards_compose_into_full_forward() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest.clone();
+    let params = mxdag::coordinator::ddl::init_params(&m.model.param_shapes, 3);
+    let gen = mxdag::coordinator::ddl::DataGen::new(
+        m.model.input_dim,
+        m.model.classes,
+        m.model.batch,
+        3,
+    );
+    let (x, _) = gen.batch(0, 0);
+
+    // layer-by-layer
+    let mut h = x.clone();
+    for l in 0..m.model.n_layers {
+        h = engine
+            .execute(
+                &format!("layer_fwd_{l}"),
+                &[h, params[2 * l].clone(), params[2 * l + 1].clone()],
+            )
+            .unwrap()
+            .pop()
+            .unwrap();
+    }
+    // fused forward
+    let mut inputs = params.clone();
+    inputs.push(x);
+    let logits = engine.execute("forward", &inputs).unwrap().pop().unwrap();
+
+    assert_eq!(h.shape(), logits.shape());
+    for (a, b) in h.as_f32().iter().zip(logits.as_f32()) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn grad_step_loss_matches_train_step() {
+    let Some(engine) = engine() else { return };
+    let m = engine.manifest.clone();
+    let params = mxdag::coordinator::ddl::init_params(&m.model.param_shapes, 5);
+    let gen = mxdag::coordinator::ddl::DataGen::new(
+        m.model.input_dim,
+        m.model.classes,
+        m.model.batch,
+        5,
+    );
+    let (x, y) = gen.batch(1, 0);
+    let mut inputs = params.clone();
+    inputs.push(x);
+    inputs.push(y);
+    let g = engine.execute("grad_step", &inputs).unwrap();
+    let t = engine.execute("train_step", &inputs).unwrap();
+    assert_eq!(g.len(), 1 + params.len());
+    assert_eq!(t.len(), 1 + params.len());
+    assert!((g[0].scalar_f32() - t[0].scalar_f32()).abs() < 1e-5);
+    // train_step == params - lr * grads
+    let lr = m.model.lr as f32;
+    for i in 0..params.len() {
+        let mut want = params[i].clone();
+        want.axpy_neg(lr, &g[1 + i]);
+        for (a, b) in want.as_f32().iter().zip(t[1 + i].as_f32()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(engine) = engine() else { return };
+    let bad = vec![Tensor::zeros(&[1, 1]), Tensor::zeros(&[1, 1])];
+    assert!(engine.execute("matmul", &bad).is_err());
+    assert!(engine.execute("matmul", &bad[..1]).is_err());
+    assert!(engine.execute("nonexistent", &[]).is_err());
+}
+
+/// Short end-to-end burst: loss decreases and both schedules agree.
+#[test]
+fn e2e_training_loss_decreases() {
+    if engine().is_none() {
+        return;
+    }
+    let mut finals = Vec::new();
+    for schedule in [SyncSchedule::Fifo, SyncSchedule::Mxdag] {
+        let cfg = DdlConfig {
+            workers: 2,
+            steps: 4,
+            schedule,
+            time_scale: 0.0, // don't sleep in tests
+            log_every: 0,
+            fwd_reps: 1,
+            ..Default::default()
+        };
+        let r = train(&cfg).unwrap();
+        assert!(
+            r.last_loss() < r.first_loss(),
+            "{}: {} -> {}",
+            schedule.label(),
+            r.first_loss(),
+            r.last_loss()
+        );
+        finals.push(r.last_loss());
+    }
+    assert!(
+        (finals[0] - finals[1]).abs() < 1e-6,
+        "synchronous SGD must be schedule-invariant: {finals:?}"
+    );
+}

@@ -1,0 +1,138 @@
+//! Integration: scheduler-vs-scheduler guarantees over generated
+//! workloads, and multi-DAG altruism invariants.
+
+use mxdag::sched::altruistic::{merge, AltruisticScheduler, SelfishScheduler};
+use mxdag::sched::{
+    evaluate, run, CoflowScheduler, FairScheduler, FifoScheduler, Grouping, MxScheduler,
+    PackingScheduler, Scheduler,
+};
+use mxdag::sim::Cluster;
+use mxdag::workloads::{mapreduce_dag, random_dag, MapReduceParams, RandomParams};
+
+/// The MXDAG scheduler (which guards against over-serialization by
+/// checking the fair plan, §sched::mxsched) never loses to plain fair
+/// sharing on any generated workload.
+#[test]
+fn mx_never_worse_than_fair() {
+    for seed in 0..15u64 {
+        let g = random_dag(&RandomParams { seed, ..Default::default() });
+        let cluster = Cluster::uniform(8);
+        let fair = run(&FairScheduler, &g, &cluster).unwrap().makespan;
+        let mx = run(&MxScheduler::default(), &g, &cluster).unwrap().makespan;
+        assert!(mx <= fair + 1e-6, "seed {seed}: mx {mx} vs fair {fair}");
+    }
+}
+
+/// All schedulers produce valid executions on heterogeneous clusters.
+#[test]
+fn heterogeneous_cluster_support() {
+    let g = random_dag(&RandomParams { seed: 23, hosts: 4, ..Default::default() });
+    let mut cluster = Cluster::uniform(4);
+    cluster.hosts[0].cores = 4.0; // beefy host
+    cluster.hosts[1].nic_up = 0.5; // slow uplink
+    cluster.hosts[2].nic_down = 2.0; // fast downlink
+    let schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(FairScheduler),
+        Box::new(FifoScheduler),
+        Box::new(PackingScheduler),
+        Box::new(CoflowScheduler::new(Grouping::ByDst)),
+        Box::new(MxScheduler::default()),
+    ];
+    for s in schedulers {
+        let r = run(s.as_ref(), &g, &cluster).unwrap();
+        assert!(r.makespan.is_finite(), "{} failed", s.name());
+    }
+}
+
+/// Altruism invariant (Principle 2): no job's JCT may regress vs selfish
+/// scheduling, and at least one contended job should improve on the
+/// Fig. 7 style workloads.
+#[test]
+fn altruism_pareto_on_contended_jobs() {
+    // fig7-shaped jobs with randomized sizes: job 1 has a dominant branch
+    // on host 0 (critical) and a small branch on the shared host 1; job 2
+    // lives entirely on the shared resources.
+    let mut improved = 0;
+    for seed in 0..8u64 {
+        let mut rng = mxdag::util::rng::Rng::new(seed);
+        let big = 2.0 + rng.range_f64(0.0, 2.0);
+        let small = 0.5 + rng.range_f64(0.0, 0.5);
+        let j1 = {
+            let mut b = mxdag::mxdag::MXDag::builder();
+            let a = b.compute("a", 0, big);
+            let bb = b.compute("b", 1, small);
+            let f1 = b.flow("f1", 0, 2, big);
+            let f2 = b.flow("f2", 1, 2, small);
+            let r1 = b.compute("r1", 2, 1.0);
+            b.dep(a, f1).dep(bb, f2).dep(f1, r1).dep(f2, r1);
+            b.finalize().unwrap()
+        };
+        let j2 = mapreduce_dag(&MapReduceParams {
+            mappers: 2,
+            reducers: 1,
+            map_hosts: vec![1],
+            red_hosts: vec![3],
+            map_time: small,
+            shuffle: small,
+            seed: seed + 50,
+            ..Default::default()
+        })
+        .0;
+        let multi = merge(&[j1, j2]);
+        let cluster = Cluster::uniform(4);
+        let s = evaluate(&multi.dag, &cluster, &SelfishScheduler.plan_multi(&multi)).unwrap();
+        let al = evaluate(
+            &multi.dag,
+            &cluster,
+            &AltruisticScheduler.plan_multi_checked(&multi, &cluster),
+        )
+        .unwrap();
+        for j in 0..2 {
+            assert!(
+                multi.jct(j, &al) <= multi.jct(j, &s) + 1e-6,
+                "seed {seed}: job {j} regressed {} -> {}",
+                multi.jct(j, &s),
+                multi.jct(j, &al)
+            );
+        }
+        if multi.jct(1, &al) < multi.jct(1, &s) - 1e-9 {
+            improved += 1;
+        }
+    }
+    assert!(improved >= 1, "altruism (Pareto-checked) should help at least some contended cases: {improved}/8");
+}
+
+/// Merging N jobs preserves each job's own critical path length.
+#[test]
+fn merge_preserves_per_job_cpm() {
+    let jobs: Vec<_> = (0..4u64)
+        .map(|s| {
+            mapreduce_dag(&MapReduceParams { seed: s, jitter: 0.3, ..Default::default() }).0
+        })
+        .collect();
+    let multi = merge(&jobs);
+    assert_eq!(multi.jobs.len(), 4);
+    let total: usize = jobs.iter().map(|j| j.real_tasks().count()).sum();
+    assert_eq!(multi.dag.real_tasks().count(), total);
+}
+
+/// Coflow grouping strategies give different groups on a shuffle — the
+/// Fig. 2(b) definitional ambiguity, machine-checked.
+#[test]
+fn grouping_ambiguity_is_real() {
+    let (g, _) = mapreduce_dag(&MapReduceParams::default());
+    let by_dst = CoflowScheduler::new(Grouping::ByDst).groups(&g);
+    let by_src = CoflowScheduler::new(Grouping::BySrc).groups(&g);
+    let by_level = CoflowScheduler::new(Grouping::ByLevel).groups(&g);
+    assert_ne!(by_dst.len(), by_level.len());
+    assert_eq!(by_dst.len(), 2); // per reducer
+    assert_eq!(by_src.len(), 4); // per mapper
+    assert_eq!(by_level.len(), 1); // one shuffle stage
+    // ...and they lead to different JCTs
+    let cluster = Cluster::uniform(6);
+    let jcts: Vec<f64> = [Grouping::ByDst, Grouping::BySrc, Grouping::ByLevel]
+        .into_iter()
+        .map(|gr| run(&CoflowScheduler::new(gr), &g, &cluster).unwrap().makespan)
+        .collect();
+    assert!(jcts.iter().all(|j| j.is_finite()));
+}

@@ -1,0 +1,183 @@
+//! Integration: abstraction + expansion + simulator across modules.
+
+use mxdag::mxdag::{cpm, path, MXDag};
+use mxdag::sched::{evaluate, Plan};
+use mxdag::sim::{expand, simulate, Annotations, Cluster, Policy, SimConfig};
+use mxdag::workloads::{self, DdlParams, MapReduceParams, RandomParams};
+
+/// The simulated makespan can never beat the contention-free CPM bound.
+#[test]
+fn makespan_never_beats_cpm_bound() {
+    for seed in 0..10 {
+        let g = workloads::random_dag(&RandomParams { seed, ..Default::default() });
+        let cluster = Cluster::uniform(8);
+        let bound = cpm(&g).makespan;
+        for plan in [
+            Plan::fair(),
+            Plan { ann: Default::default(), policy: Policy::fifo() },
+            Plan { ann: Default::default(), policy: Policy::priority() },
+        ] {
+            let r = evaluate(&g, &cluster, &plan).unwrap();
+            assert!(
+                r.makespan >= bound - 1e-6,
+                "seed {seed}: {} < bound {bound}",
+                r.makespan
+            );
+        }
+    }
+}
+
+/// Single-task-per-resource DAGs hit the CPM bound exactly (no contention).
+#[test]
+fn no_contention_hits_cpm_bound() {
+    let mut b = MXDag::builder();
+    let a = b.compute("a", 0, 1.5);
+    let f = b.flow("f", 0, 1, 2.5);
+    let c = b.compute("c", 1, 0.5);
+    b.chain(&[a, f, c]);
+    let g = b.finalize().unwrap();
+    let bound = cpm(&g).makespan;
+    let r = evaluate(&g, &Cluster::uniform(2), &Plan::fair()).unwrap();
+    assert!((r.makespan - bound).abs() < 1e-9);
+}
+
+/// Eq. (2) vs chunk-level simulation across a parameter sweep.
+///
+/// With *aligned* chunk counts the closed form is exact; with mismatched
+/// counts the chunked execution quantizes the hand-off, so the sim may
+/// exceed Eq.(2) by at most one (largest) unit — never undershoot it.
+#[test]
+fn eq2_matches_simulation_sweep() {
+    let cluster = Cluster::uniform(2);
+    for (s1, k1) in [(4.0, 4usize), (6.0, 3), (9.0, 9)] {
+        for (s2, k2) in [(4.0, 4usize), (8.0, 8), (3.0, 3)] {
+            let u1 = s1 / k1 as f64;
+            let u2 = s2 / k2 as f64;
+            let mut b = MXDag::builder();
+            let a = b.compute_full("a", 0, s1, u1);
+            let f = b.flow_full("f", 0, 1, s2, u2);
+            b.dep(a, f);
+            let g = b.finalize().unwrap();
+            let eq2 = path::len_pipe(&g, &[a, f], &path::full_rsrc);
+            let ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+            let sim = simulate(&expand(&g, &ann), &cluster, &SimConfig::default())
+                .unwrap()
+                .makespan;
+            let ctx = format!("S=({s1},{s2}) K=({k1},{k2}): eq2 {eq2} vs sim {sim}");
+            if k1 == k2 {
+                assert!((eq2 - sim).abs() < 1e-9, "aligned chunks must be exact: {ctx}");
+            } else {
+                assert!(sim >= eq2 - 1e-9, "sim can't beat the fluid bound: {ctx}");
+                assert!(
+                    sim <= eq2 + u1.max(u2) + 1e-9,
+                    "quantization is at most one unit: {ctx}"
+                );
+            }
+        }
+    }
+}
+
+/// Pipelining a full chain can never be slower than the analytic Eq (1)
+/// sequential bound on an uncontended cluster.
+#[test]
+fn pipeline_bounded_by_sequential() {
+    let mut b = MXDag::builder();
+    let a = b.compute_full("a", 0, 6.0, 1.0);
+    let f = b.flow_full("f", 0, 1, 4.0, 1.0);
+    let c = b.compute_full("c", 1, 5.0, 1.0);
+    b.chain(&[a, f, c]);
+    let g = b.finalize().unwrap();
+    let seq = path::len_seq(&g, &[a, f, c], &path::full_rsrc);
+    let ann = Annotations { pipelined: vec![a, f, c], ..Default::default() };
+    let piped = simulate(&expand(&g, &ann), &Cluster::uniform(2), &SimConfig::default())
+        .unwrap()
+        .makespan;
+    assert!(piped <= seq + 1e-9, "pipelined {piped} vs sequential {seq}");
+    // and it should actually help here
+    assert!(piped < seq - 1.0);
+}
+
+/// Coflow all-or-nothing + MADD vs per-flow: per-flow never loses on the
+/// paper's scenarios.
+#[test]
+fn coflow_never_beats_mx_on_figures() {
+    use mxdag::sched::{run, CoflowScheduler, Grouping, MxScheduler};
+    // fig2a at several asymmetries
+    for t1 in [1.0, 2.0, 4.0] {
+        let (g, flows) = workloads::fig2a_dag(t1, 1.0);
+        let cluster = Cluster::uniform(4);
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster)
+            .unwrap()
+            .makespan;
+        let co = run(
+            &CoflowScheduler::new(Grouping::Explicit(vec![
+                vec![flows[0], flows[1]],
+                vec![flows[2], flows[3]],
+            ])),
+            &g,
+            &cluster,
+        )
+        .unwrap()
+        .makespan;
+        assert!(mx <= co + 1e-9, "t1={t1}: mx {mx} vs coflow {co}");
+    }
+}
+
+/// DDL: MXDAG ≥ parity with FIFO across depth and comm ratio.
+#[test]
+fn ddl_sweep_mx_never_loses() {
+    use mxdag::sched::{run, FifoScheduler, MxScheduler};
+    let cluster = Cluster::with_cores(2, 2.0);
+    for layers in [2usize, 4, 8] {
+        for comm in [0.5, 1.0, 2.0] {
+            let (g, _) = workloads::ddl_dag(&DdlParams { layers, comm, ..Default::default() });
+            let fifo = run(&FifoScheduler, &g, &cluster).unwrap().makespan;
+            let mx = run(&MxScheduler::without_pipelining(), &g, &cluster)
+                .unwrap()
+                .makespan;
+            assert!(
+                mx <= fifo + 1e-9,
+                "layers={layers} comm={comm}: mx {mx} vs fifo {fifo}"
+            );
+        }
+    }
+}
+
+/// The full scheduler pipeline handles a jittered shuffle end to end.
+#[test]
+fn shuffle_all_policies_complete() {
+    let (g, _) = workloads::mapreduce_dag(&MapReduceParams {
+        mappers: 6,
+        reducers: 3,
+        map_hosts: vec![0, 1, 2],
+        red_hosts: vec![3, 4, 5],
+        jitter: 0.4,
+        seed: 17,
+        ..Default::default()
+    });
+    let cluster = Cluster::uniform(6);
+    for policy in [Policy::fair(), Policy::fifo(), Policy::priority(), Policy::coflow()] {
+        let r = evaluate(&g, &cluster, &Plan { ann: Default::default(), policy }).unwrap();
+        assert!(r.makespan.is_finite() && r.makespan > 0.0);
+        // every task finished after it started
+        for t in g.real_tasks() {
+            assert!(r.finish_of(t) >= r.start_of(t) - 1e-12);
+        }
+    }
+}
+
+/// Gates (altruism) delay starts but never deadlock the DAG.
+#[test]
+fn gates_respected_without_deadlock() {
+    let g = workloads::fig1_dag();
+    let mut ann = Annotations::default();
+    let f3 = g.by_name("f3").unwrap();
+    ann.gates.insert(f3, 2.5);
+    let r = evaluate(
+        &g,
+        &Cluster::uniform(3),
+        &Plan { ann, policy: Policy::priority() },
+    )
+    .unwrap();
+    assert!(r.start_of(f3) >= 2.5 - 1e-9);
+}

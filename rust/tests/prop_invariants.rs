@@ -1,0 +1,264 @@
+//! Property-based invariants (util::propcheck) over random MXDAGs:
+//! graph validity, simulator conservation laws, allocation feasibility,
+//! Eq.(1)/(2) ordering, and schedule-independence of completion.
+
+use mxdag::mxdag::{cpm, path, MXDag, TaskKind};
+use mxdag::sched::{evaluate, Plan};
+use mxdag::sim::{alloc, Cluster, Policy, SimDag, SimKind, SimTask};
+use mxdag::util::propcheck::{check, Config};
+use mxdag::util::rng::Rng;
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn gen_params(rng: &mut Rng) -> RandomParams {
+    RandomParams {
+        layers: rng.range(2, 6),
+        width: rng.range(2, 6),
+        hosts: rng.range(2, 10),
+        edge_p: rng.range_f64(0.2, 0.9),
+        pipe_frac: rng.range_f64(0.0, 0.8),
+        min_size: 0.1,
+        max_size: 3.0,
+        seed: rng.next_u64(),
+    }
+}
+
+#[test]
+fn prop_topo_order_valid() {
+    check(
+        "topo-order-valid",
+        &Config { cases: 40, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let mut pos = vec![0usize; g.len()];
+            for (i, &t) in g.topo().iter().enumerate() {
+                pos[t] = i;
+            }
+            for u in 0..g.len() {
+                for &v in g.succs(u) {
+                    if pos[u] >= pos[v] {
+                        return Err(format!("edge {u}->{v} violates topo"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulation_conserves_and_bounds() {
+    check(
+        "sim-conservation",
+        &Config { cases: 30, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let cluster = Cluster::uniform(p.hosts);
+            let bound = cpm(&g).makespan;
+            for policy in [Policy::fair(), Policy::fifo(), Policy::priority()] {
+                let r = evaluate(&g, &cluster, &Plan { ann: Default::default(), policy })
+                    .map_err(|e| e.to_string())?;
+                if !r.makespan.is_finite() {
+                    return Err("non-finite makespan".into());
+                }
+                if r.makespan < bound - 1e-6 {
+                    return Err(format!("makespan {} beats CPM bound {bound}", r.makespan));
+                }
+                // work conservation-ish: every real task ran start<=finish
+                for t in g.real_tasks() {
+                    let (s, f) = (r.start_of(t), r.finish_of(t));
+                    if !(s.is_finite() && f.is_finite() && f + 1e-9 >= s) {
+                        return Err(format!("task {t} trace invalid: {s}..{f}"));
+                    }
+                    // deps respected at the logical level
+                    for &pr in g.preds(t) {
+                        if g.task(pr).kind.is_dummy() {
+                            continue;
+                        }
+                        // pipelined preds may overlap; only whole-task
+                        // deps are strict — check via CPM-free rule:
+                        // finish of pred's FIRST chunk <= finish of t
+                        if r.finish_of(t) + 1e-9 < r.start_of(pr) {
+                            return Err(format!("task {t} finished before pred {pr} started"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_maxmin_allocation_feasible() {
+    check(
+        "maxmin-feasible",
+        &Config { cases: 60, ..Default::default() },
+        |rng| {
+            let hosts = rng.range(2, 8);
+            let n = rng.range(1, 12);
+            let mut dag = SimDag::default();
+            let mut ids = Vec::new();
+            for _ in 0..n {
+                let src = rng.below(hosts);
+                let dst = (src + 1 + rng.below(hosts - 1)) % hosts;
+                let kind = if rng.bool(0.5) {
+                    SimKind::Flow { src, dst }
+                } else {
+                    SimKind::Compute { host: src }
+                };
+                ids.push(dag.push(SimTask {
+                    orig: 0,
+                    chunk: (0, 1),
+                    kind,
+                    size: 1.0,
+                    priority: rng.below(5) as i64,
+                    gate: 0.0,
+                    coflow: None,
+                }));
+            }
+            (hosts, dag, ids)
+        },
+        |(hosts, dag, ids)| {
+            let cluster = Cluster::uniform(*hosts);
+            for fill in [0usize, 1] {
+                let mut caps = cluster.capacities();
+                let mut rates = vec![0.0; ids.len()];
+                if fill == 0 {
+                    alloc::maxmin_fill(dag, ids, &mut caps, &mut rates);
+                } else {
+                    alloc::priority_fill(dag, ids, &mut caps, &mut rates);
+                }
+                // rates within [0,1]
+                for &r in &rates {
+                    if !(0.0 - 1e-9..=1.0 + 1e-9).contains(&r) {
+                        return Err(format!("rate {r} out of range"));
+                    }
+                }
+                // capacity feasibility: recompute usage
+                let caps0 = cluster.capacities();
+                let mut used = vec![0.0; caps0.len()];
+                for (i, &t) in ids.iter().enumerate() {
+                    for r in dag.tasks[t].kind.resources() {
+                        used[r] += rates[i];
+                    }
+                }
+                for (r, (&u, &c)) in used.iter().zip(&caps0).enumerate() {
+                    if u > c + 1e-6 {
+                        return Err(format!("resource {r} oversubscribed: {u} > {c}"));
+                    }
+                }
+                // non-trivial: at least one task makes progress
+                if !rates.iter().any(|&r| r > 1e-9) {
+                    return Err("no task progresses".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eq2_never_exceeds_eq1() {
+    check(
+        "eq2-le-eq1",
+        &Config { cases: 80, ..Default::default() },
+        |rng| {
+            let n = rng.range(2, 6);
+            let mut b = MXDag::builder();
+            let mut prev = None;
+            let mut ids = Vec::new();
+            for i in 0..n {
+                let size = rng.range_f64(0.5, 10.0);
+                let unit = size / rng.range(1, 10) as f64;
+                let t = if i % 2 == 0 {
+                    b.compute_full(&format!("c{i}"), i, size, unit)
+                } else {
+                    b.flow_full(&format!("f{i}"), i - 1, i, size, unit)
+                };
+                if let Some(p) = prev {
+                    b.dep(p, t);
+                }
+                prev = Some(t);
+                ids.push(t);
+            }
+            (b.finalize().unwrap(), ids)
+        },
+        |(g, ids)| {
+            let pipe = path::len_pipe(g, ids, &path::full_rsrc);
+            let seq = path::len_seq(g, ids, &path::full_rsrc);
+            if pipe > seq + 1e-9 {
+                return Err(format!("Eq2 {pipe} > Eq1 {seq}"));
+            }
+            // Eq2 lower bound: the slowest stage
+            let max_size = ids
+                .iter()
+                .map(|&t| g.task(t).size)
+                .fold(0.0f64, f64::max);
+            if pipe < max_size - 1e-9 {
+                return Err(format!("Eq2 {pipe} beats slowest stage {max_size}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_dags() {
+    check(
+        "dag-json-roundtrip",
+        &Config { cases: 30, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let j = g.to_json();
+            let g2 = MXDag::from_json(&j).map_err(|e| e.to_string())?;
+            if g.len() != g2.len() || g.n_edges() != g2.n_edges() {
+                return Err("structure changed".into());
+            }
+            for t in g.tasks() {
+                if t.kind.is_dummy() {
+                    continue;
+                }
+                let t2 = g2.task(g2.by_name(&t.name).ok_or("name lost")?);
+                if t.size != t2.size || t.unit != t2.unit {
+                    return Err(format!("task {} fields changed", t.name));
+                }
+                match (t.kind, t2.kind) {
+                    (TaskKind::Compute { host: a }, TaskKind::Compute { host: b }) if a == b => {}
+                    (TaskKind::Flow { src: a, dst: b }, TaskKind::Flow { src: c, dst: d })
+                        if a == c && b == d => {}
+                    _ => return Err(format!("kind changed for {}", t.name)),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_priorities_permutation_of_levels() {
+    check(
+        "cpm-priorities-levels",
+        &Config { cases: 30, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let c = cpm(&g);
+            let prios = c.priorities();
+            // strictly smaller slack => strictly larger priority
+            for a in 0..g.len() {
+                for b in 0..g.len() {
+                    if c.slack[a] + 1e-9 < c.slack[b] && prios[a] <= prios[b] {
+                        return Err(format!(
+                            "slack {} < {} but prio {} <= {}",
+                            c.slack[a], c.slack[b], prios[a], prios[b]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
