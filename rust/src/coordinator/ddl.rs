@@ -21,7 +21,7 @@ use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 
 use super::pacer::NicPacer;
 use crate::runtime::{Engine, Tensor};

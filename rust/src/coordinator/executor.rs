@@ -7,7 +7,7 @@ use std::collections::BinaryHeap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use super::pacer::NicPacer;
 use crate::mxdag::{MXDag, TaskId, TaskKind};

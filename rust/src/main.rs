@@ -49,6 +49,9 @@ fn print_usage() {
            whatif                        pipeline what-if on the Fig. 3 DAG\n\
            monitor                       straggler classification demo\n\
            simulate --dag FILE.json [--scheduler mxdag|fair|fifo|coflow|packing]\n\
+                    [--topology bigswitch|oversub:RACKS:RATIO|fabrics:K:TRUNK[:hash|bysrc]]\n\
+                    (the DAG file may also declare a \"cluster\" object;\n\
+                     --topology overrides it)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -273,8 +276,40 @@ fn cmd_simulate(args: &Args) -> i32 {
             return 1;
         }
     };
-    let hosts = g.hosts().into_iter().max().map(|h| h + 1).unwrap_or(1);
-    let cluster = Cluster::uniform(hosts.max(1));
+    let hosts = g.hosts().into_iter().max().map(|h| h + 1).unwrap_or(1).max(1);
+    // cluster: a declared one must cover every referenced host (padding
+    // would silently shift the rack partition); otherwise default to a
+    // uniform big switch sized to the DAG
+    let mut cluster = match json.get("cluster") {
+        Ok(cj) => match Cluster::from_json(cj) {
+            Ok(c) => {
+                if c.n_hosts() < hosts {
+                    eprintln!(
+                        "invalid cluster: declares {} hosts but the DAG references host {}",
+                        c.n_hosts(),
+                        hosts - 1
+                    );
+                    return 1;
+                }
+                c
+            }
+            Err(e) => {
+                eprintln!("invalid cluster: {e}");
+                return 1;
+            }
+        },
+        Err(_) => Cluster::uniform(hosts),
+    };
+    // --topology overrides whatever the scenario declared
+    if let Some(spec) = args.get("topology") {
+        match mxdag::sim::Topology::parse(spec) {
+            Ok(t) => cluster.topology = t,
+            Err(e) => {
+                eprintln!("--topology: {e}");
+                return 1;
+            }
+        }
+    }
     let sched: Box<dyn Scheduler> = match args.get_or("scheduler", "mxdag").as_str() {
         "fair" => Box::new(FairScheduler),
         "fifo" => Box::new(FifoScheduler),
@@ -285,8 +320,10 @@ fn cmd_simulate(args: &Args) -> i32 {
     match sched::run(sched.as_ref(), &g, &cluster) {
         Ok(r) => {
             println!(
-                "scheduler={} tasks={} makespan={:.4} events={}",
+                "scheduler={} hosts={} topology={:?} tasks={} makespan={:.4} events={}",
                 sched.name(),
+                cluster.n_hosts(),
+                cluster.topology,
                 g.real_tasks().count(),
                 r.makespan,
                 r.events

@@ -10,17 +10,26 @@ use super::task::{HostId, MXTask, TaskId, TaskKind};
 use crate::util::json::Json;
 
 /// Errors surfaced by graph construction/validation.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum GraphError {
-    #[error("cycle detected involving task {0}")]
     Cycle(TaskId),
-    #[error("unknown task id {0}")]
     UnknownTask(TaskId),
-    #[error("self-dependency on task {0}")]
     SelfDep(TaskId),
-    #[error("invalid task: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Cycle(t) => write!(f, "cycle detected involving task {t}"),
+            GraphError::UnknownTask(t) => write!(f, "unknown task id {t}"),
+            GraphError::SelfDep(t) => write!(f, "self-dependency on task {t}"),
+            GraphError::Invalid(msg) => write!(f, "invalid task: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 /// An immutable, validated MXDAG.
 #[derive(Debug, Clone)]

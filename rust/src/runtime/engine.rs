@@ -6,7 +6,10 @@
 use std::path::Path;
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
+
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
 
 use super::manifest::Manifest;
 use super::tensor::{from_literal_f32, to_literal, Tensor};

@@ -7,6 +7,11 @@ pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
+/// Stand-in for the `xla` crate when the `pjrt` feature is off: the
+/// same API surface, every entry point failing with a clear message.
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
+
 pub use engine::Engine;
 pub use manifest::{ArtifactMeta, DType, Manifest, ModelMeta, TensorSpec};
 pub use tensor::{from_literal_f32, to_literal, Tensor};

@@ -1,6 +1,11 @@
 //! Host-side tensors: the plain-`Vec<f32>` values the coordinator moves
 //! between workers, converted to/from PJRT `Literal`s at execute time.
 
+use crate::util::error::Result;
+
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 use super::manifest::{DType, TensorSpec};
 
 /// A host tensor (f32 or i32), shape-carrying.
@@ -104,7 +109,7 @@ impl Tensor {
 }
 
 /// Convert to an XLA literal.
-pub fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
     let lit = match t {
         Tensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()).reshape(&dims)?,
@@ -114,7 +119,7 @@ pub fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
 }
 
 /// Convert back from an XLA literal (f32 only — all our outputs are f32).
-pub fn from_literal_f32(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+pub fn from_literal_f32(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
     let data = lit.to_vec::<f32>()?;

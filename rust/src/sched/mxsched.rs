@@ -5,17 +5,18 @@
 //! time than the critical path."*
 //!
 //! Mechanism:
-//! 1. CPM over the MXDAG (durations = `Size`) gives slack per task;
-//!    priority = criticality rank; NICs and cores serve strictly by
-//!    priority (fair within a level).
+//! 1. CPM over the MXDAG ([`cpm_on`]: durations = `Size` divided by the
+//!    task's per-path bottleneck rate under the cluster topology) gives
+//!    slack per task; priority = criticality rank; NICs and cores serve
+//!    strictly by priority (fair within a level).
 //! 2. Pipelining is decided by *what-if search*: a pipelineable task is
 //!    only pipelined if the simulated JCT shrinks (§4.1: "the pipelines
 //!    will only be applied when they can shrink the overall execution
 //!    time") — this is what rejects Fig. 3 case 3.
 
 use super::{evaluate, Plan, Scheduler};
-use crate::mxdag::{cpm, MXDag, TaskId};
-use crate::sim::{Annotations, Cluster, Policy};
+use crate::mxdag::{cpm_with, Cpm, MXDag, TaskId, TaskKind};
+use crate::sim::{Annotations, Cluster, Policy, SimKind};
 
 #[derive(Debug, Clone)]
 pub struct MxScheduler {
@@ -36,14 +37,42 @@ impl Default for MxScheduler {
     }
 }
 
+/// CPM over durations costed against the cluster: a task's duration is
+/// `size / solo-bottleneck-rate`, so a flow squeezed through an
+/// oversubscribed aggregation link (or a degraded NIC/core) is costed by
+/// its real per-path bandwidth, not the unit-NIC assumption. On a
+/// uniform big-switch cluster every solo rate is 1 and this reduces
+/// exactly to the size-based CPM.
+pub fn cpm_on(dag: &MXDag, cluster: &Cluster) -> Cpm {
+    let caps = cluster.capacities();
+    let dur: Vec<f64> = dag
+        .tasks()
+        .iter()
+        .map(|t| {
+            let kind = match t.kind {
+                TaskKind::Compute { host } => SimKind::Compute { host },
+                TaskKind::Flow { src, dst } => SimKind::Flow { src, dst },
+                TaskKind::Start | TaskKind::End => return t.size,
+            };
+            let rate = cluster.solo_rate_with(&caps, &kind);
+            if rate > 1e-12 {
+                t.size / rate
+            } else {
+                t.size // dead resource: fall back to the optimistic cost
+            }
+        })
+        .collect();
+    cpm_with(dag, &dur)
+}
+
 impl MxScheduler {
     pub fn without_pipelining() -> Self {
         MxScheduler { pipeline_search: false, ..Default::default() }
     }
 
     /// The priority-only plan (no pipeline search).
-    fn base_plan(&self, dag: &MXDag) -> Plan {
-        let c = cpm(dag);
+    fn base_plan(&self, dag: &MXDag, cluster: &Cluster) -> Plan {
+        let c = cpm_on(dag, cluster);
         let prios = c.priorities();
         let mut ann = Annotations::default();
         for t in dag.real_tasks() {
@@ -59,7 +88,7 @@ impl MxScheduler {
     /// chunk, so single toggles cannot discover the useful moves — and
     /// (b) single tasks (useful once a chain partner is already in).
     fn search_pipelines(&self, dag: &MXDag, cluster: &Cluster, mut plan: Plan) -> Plan {
-        let c = cpm(dag);
+        let c = cpm_on(dag, cluster);
         let mut moves: Vec<Vec<TaskId>> = Vec::new();
         for u in dag.real_tasks() {
             if !dag.task(u).pipelineable() {
@@ -117,7 +146,7 @@ impl Scheduler for MxScheduler {
         // priority idles downstream NICs. The co-scheduler has the global
         // view, so it checks its priority plan against plain fair sharing
         // and keeps the better one before searching pipelines.
-        let prio_plan = self.base_plan(dag);
+        let prio_plan = self.base_plan(dag, cluster);
         let fair_plan = Plan::fair();
         let plan = match (
             evaluate(dag, cluster, &prio_plan),
@@ -220,6 +249,41 @@ mod tests {
             .collect();
         let with_forced = evaluate(&g, &cluster, &forced).unwrap();
         assert!(with_plan.makespan <= with_forced.makespan + 1e-9);
+    }
+
+    /// Topology-aware CPM: a size-2 flow squeezed through a 0.5-capacity
+    /// aggregation link really takes 4 — longer than the size-3
+    /// intra-rack flow it contends with on the shared downlink — so the
+    /// co-scheduler must prioritize it. Size-based CPM would pick the
+    /// size-3 flow and serialize the wrong way (JCT 7 instead of 5).
+    #[test]
+    fn oversub_flips_critical_flow_priority() {
+        let mut b = MXDag::builder();
+        let fx = b.flow("fx", 2, 3, 3.0); // intra rack {2,3}
+        let fy = b.flow("fy", 0, 3, 2.0); // cross-rack, same dst NIC
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::oversubscribed(4, 2, 4.0); // agg cap 0.5
+
+        let s = MxScheduler::without_pipelining();
+        let plan = s.plan(&g, &cluster);
+        if plan.policy == Policy::priority() {
+            assert!(
+                plan.ann.priorities[&fy] > plan.ann.priorities[&fx],
+                "cross-rack flow must outrank the intra-rack one: {:?}",
+                plan.ann.priorities
+            );
+        }
+        let r = evaluate(&g, &cluster, &plan).unwrap();
+        assert!(r.makespan <= 5.0 + 1e-9, "topology-aware plan: {}", r.makespan);
+    }
+
+    #[test]
+    fn cpm_on_reduces_to_sizes_on_uniform_cluster() {
+        let g = fig1_dag();
+        let by_size = crate::mxdag::cpm(&g);
+        let by_topo = cpm_on(&g, &Cluster::uniform(3));
+        assert_eq!(by_size.makespan, by_topo.makespan);
+        assert_eq!(by_size.priorities(), by_topo.priorities());
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Rate allocation: who gets how much of each NIC / core right now.
+//! Rate allocation: who gets how much of each NIC / core / fabric link
+//! right now.
 //!
 //! All policies operate on the same fluid model: every active task draws
-//! on 1–2 resources (a core, or src-NIC-up + dst-NIC-down) and can run at
-//! rate ≤ 1. Policies differ in how contended capacity is divided:
+//! on a small set of resources (a core; or src-NIC-up + dst-NIC-down
+//! plus whatever fabric links the [`Topology`](super::topology::Topology)
+//! routes it through) and can run at rate ≤ 1. Policies differ in how
+//! contended capacity is divided:
 //!
 //! * **max-min fair** — progressive filling (the network-aware baseline);
 //! * **strict priority** — higher priority first, fair within a level
@@ -12,7 +15,8 @@
 //!
 //! Hot path note (§Perf): these run on every simulator event, so they
 //! work on flat precomputed resource arrays ([`TaskRes`]) — no maps, no
-//! per-iteration allocation, no task cloning.
+//! per-iteration allocation, no task cloning. A task's footprint is
+//! variable-arity but bounded by [`MAX_TASK_RES`] so it stays `Copy`.
 
 use std::collections::BTreeMap;
 
@@ -20,22 +24,39 @@ use super::spec::{SimDag, SimKind};
 
 const EPS: f64 = 1e-12;
 
-/// Precomputed resource footprint of one task (≤ 2 resources).
+/// Maximum resources one task can touch (core | up + down + agg_up +
+/// agg_down is the widest current footprint).
+pub const MAX_TASK_RES: usize = 4;
+
+/// Precomputed resource footprint of one task (≤ [`MAX_TASK_RES`]
+/// resources: endpoint NICs plus up to two fabric links).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TaskRes {
-    pub res: [usize; 2],
+    pub res: [usize; MAX_TASK_RES],
     pub n: u8,
 }
 
 impl TaskRes {
+    /// Big-switch footprint (endpoint NICs only). Topology-aware callers
+    /// use [`Cluster::task_res`](super::spec::Cluster::task_res).
     pub fn of(kind: &SimKind) -> TaskRes {
+        let mut tr = TaskRes::default();
         match *kind {
-            SimKind::Compute { host } => TaskRes { res: [super::spec::res_core(host), 0], n: 1 },
+            SimKind::Compute { host } => tr.push(super::spec::res_core(host)),
             SimKind::Flow { src, dst } => {
-                TaskRes { res: [super::spec::res_up(src), super::spec::res_down(dst)], n: 2 }
+                tr.push(super::spec::res_up(src));
+                tr.push(super::spec::res_down(dst));
             }
-            SimKind::Dummy => TaskRes { res: [0, 0], n: 0 },
+            SimKind::Dummy => {}
         }
+        tr
+    }
+
+    /// Append a resource index (panics past [`MAX_TASK_RES`]).
+    #[inline]
+    pub fn push(&mut self, r: usize) {
+        self.res[self.n as usize] = r;
+        self.n += 1;
     }
 
     #[inline]
@@ -161,11 +182,15 @@ pub fn priority_fill_res(
 
 /// Varys-style coflow allocation over the active *flows*: SEBF group
 /// ordering + MADD rates on residual capacity. Ungrouped flows are
-/// singleton groups. `remaining[i]` per active index.
+/// singleton groups. `remaining[i]` per active index. `caps0` holds the
+/// *full* capacities: the SEBF bottleneck of a group is its completion
+/// lower bound `max_r load_r / caps0[r]`, so narrow fabric links (e.g.
+/// an oversubscribed aggregation uplink) correctly dominate wide NICs.
 pub fn coflow_fill_res(
     tasks: &[TaskRes],
     coflow: &[Option<usize>],
     remaining: &[f64],
+    caps0: &[f64],
     caps: &mut [f64],
     rates: &mut [f64],
 ) {
@@ -178,7 +203,7 @@ pub fn coflow_fill_res(
         groups.entry(key).or_default().push(i);
     }
 
-    // SEBF: smallest bottleneck first (on full capacity)
+    // SEBF: smallest bottleneck-completion-bound first (on full capacity)
     let mut ordered: Vec<(f64, Vec<usize>)> = groups
         .into_values()
         .map(|members| {
@@ -190,7 +215,16 @@ pub fn coflow_fill_res(
                     *per_res.entry(r).or_insert(0.0) += remaining[i];
                 }
             }
-            let bottleneck = per_res.values().copied().fold(max_rem, f64::max);
+            let bottleneck = per_res
+                .iter()
+                .map(|(&r, &load)| {
+                    if caps0[r] <= EPS {
+                        f64::INFINITY
+                    } else {
+                        load / caps0[r]
+                    }
+                })
+                .fold(max_rem, f64::max);
             (bottleneck, members)
         })
         .collect();
@@ -250,7 +284,8 @@ pub fn priority_fill(dag: &SimDag, active: &[usize], caps: &mut [f64], rates: &m
 }
 
 /// Coflow allocation over a task-id subset (wrapper). `remaining` is
-/// indexed by *task id* here (engine-internal layout).
+/// indexed by *task id* here (engine-internal layout); `caps` must hold
+/// the full capacities on entry (they double as the SEBF reference).
 pub fn coflow_fill(
     dag: &SimDag,
     active: &[usize],
@@ -261,7 +296,8 @@ pub fn coflow_fill(
     let tasks = subset_res(dag, active);
     let coflow: Vec<Option<usize>> = active.iter().map(|&t| dag.tasks[t].coflow).collect();
     let rem: Vec<f64> = active.iter().map(|&t| remaining[t]).collect();
-    coflow_fill_res(&tasks, &coflow, &rem, caps, rates);
+    let caps0 = caps.to_vec();
+    coflow_fill_res(&tasks, &coflow, &rem, &caps0, caps, rates);
 }
 
 #[cfg(test)]
@@ -421,6 +457,65 @@ mod tests {
         let c = TaskRes::of(&SimKind::Compute { host: 2 });
         assert_eq!((c.n, c.res[0]), (1, 6));
         let f = TaskRes::of(&SimKind::Flow { src: 0, dst: 1 });
-        assert_eq!((f.n, f.res), (2, [1, 5]));
+        assert_eq!((f.n, f.res[0], f.res[1]), (2, 1, 5));
+    }
+
+    #[test]
+    fn task_res_push_variable_arity() {
+        let mut tr = TaskRes::default();
+        for r in [3, 9, 12, 15] {
+            tr.push(r);
+        }
+        assert_eq!(tr.n as usize, MAX_TASK_RES);
+        assert_eq!(tr.iter().collect::<Vec<_>>(), vec![3, 9, 12, 15]);
+    }
+
+    #[test]
+    fn maxmin_k_resource_task() {
+        // one 4-resource task: rate bounded by its narrowest resource
+        let tasks = [{
+            let mut tr = TaskRes::default();
+            for r in 0..4 {
+                tr.push(r);
+            }
+            tr
+        }];
+        let mut caps = vec![1.0, 0.25, 1.0, 0.5];
+        let mut rates = vec![0.0];
+        let mut users = vec![0.0; caps.len()];
+        maxmin_fill_res(&tasks, &mut caps, &mut rates, &mut users);
+        assert!((rates[0] - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sebf_bottleneck_normalized_by_capacity() {
+        // Two singleton groups with equal remaining bytes, but group B's
+        // flow crosses a narrow shared link (capacity 0.25): its
+        // completion bound is 4x worse, so SEBF must serve A first.
+        // separate NIC pairs so only the narrow link distinguishes them
+        let a = {
+            let mut tr = TaskRes::default();
+            tr.push(2);
+            tr.push(3);
+            tr
+        };
+        let b = {
+            let mut tr = TaskRes::default();
+            tr.push(0);
+            tr.push(1);
+            tr.push(4); // the narrow shared link
+            tr
+        };
+        let tasks = [a, b];
+        let coflow = [Some(0), Some(1)];
+        let remaining = [1.0, 1.0];
+        let caps0 = vec![1.0, 1.0, 1.0, 1.0, 0.25];
+        let mut caps = caps0.clone();
+        let mut rates = vec![0.0; 2];
+        coflow_fill_res(&tasks, &coflow, &remaining, &caps0, &mut caps, &mut rates);
+        // A (bound 1.0) ordered before B (bound 4.0); both can still run
+        // (disjoint resources), but B is pinned to the narrow link rate.
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+        assert!((rates[1] - 0.25).abs() < 1e-9);
     }
 }

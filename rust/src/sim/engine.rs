@@ -14,13 +14,24 @@ use crate::mxdag::TaskId;
 
 const EPS: f64 = 1e-9;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("deadlock at t={0}: {1} tasks can make no progress")]
     Deadlock(f64, usize),
-    #[error("event limit exceeded ({0} events)")]
     EventLimit(usize),
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock(t, n) => {
+                write!(f, "deadlock at t={t}: {n} tasks can make no progress")
+            }
+            SimError::EventLimit(n) => write!(f, "event limit exceeded ({n} events)"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Per-task execution record.
 #[derive(Debug, Clone, Copy)]
@@ -70,10 +81,11 @@ impl Default for SimConfig {
 pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimResult, SimError> {
     let n = dag.len();
     let caps0 = cluster.capacities();
-    // §Perf: precompute per-task resource footprints once; reuse scratch
-    // buffers across events (no allocation in the rate re-fill loop).
+    // §Perf: precompute per-task resource footprints once (topology-aware:
+    // a flow's footprint includes the fabric links it crosses); reuse
+    // scratch buffers across events (no allocation in the re-fill loop).
     let task_res: Vec<alloc::TaskRes> =
-        dag.tasks.iter().map(|t| alloc::TaskRes::of(&t.kind)).collect();
+        dag.tasks.iter().map(|t| cluster.task_res(&t.kind)).collect();
     let mut users_scratch = vec![0.0; caps0.len()];
     let mut sub_res: Vec<alloc::TaskRes> = Vec::with_capacity(n);
     let mut sub_aux: Vec<f64> = Vec::with_capacity(n);
@@ -97,9 +109,18 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     // bandwidth fairly (concurrent streams). This is what makes Fig. 3's
     // baseline serialize f1 before f3 but lets case-3's pipelined f1/f3
     // contend.
+    //
+    // Encoding: a global slot counter. Assignments happen in
+    // chronological scan order, so time ordering falls out of the
+    // counter; `fifo_base` jumps past every slot of earlier instants so
+    // tasks from different instants can never share a priority level.
+    // (The previous packed `time*1024 + tie.min(1023)` encoding silently
+    // collapsed ≥1023 same-instant tasks into one level.)
     let mut fifo_prio_orig: BTreeMap<TaskId, i64> = BTreeMap::new();
     let mut fifo_tie_time: i64 = i64::MIN;
     let mut fifo_tie_count: i64 = 0;
+    let mut fifo_base: i64 = 0;
+    let mut fifo_max: i64 = 0;
     let mut was_ready = vec![false; n];
 
     // coflow membership: group -> all member task ids (static)
@@ -182,18 +203,21 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                     if tq != fifo_tie_time {
                         fifo_tie_time = tq;
                         fifo_tie_count = 0;
+                        fifo_base = fifo_max + 1;
                     }
                     let tie = if dag.tasks[t].chunk.1 > 1 {
                         // pipelined stream: concurrent connection — shares
                         // the slot after the singles issued so far, so
                         // same-instant streams fair-share each other
-                        (fifo_tie_count + 1).min(1023)
+                        fifo_tie_count + 1
                     } else {
                         // blocking send: takes the next exclusive slot
                         fifo_tie_count += 1;
-                        fifo_tie_count.min(1023)
+                        fifo_tie_count
                     };
-                    -(tq.saturating_mul(1024) + tie)
+                    let slot = fifo_base + tie;
+                    fifo_max = fifo_max.max(slot);
+                    -slot
                 });
             }
             ready.push(t);
@@ -286,6 +310,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                         &sub_res,
                         &sub_coflow,
                         &sub_aux,
+                        &caps0,
                         &mut caps,
                         &mut sub_rates,
                     )
@@ -489,6 +514,97 @@ mod tests {
         d.dep(c, e);
         let r = simulate(&d, &Cluster::uniform(1), &SimConfig::default()).unwrap();
         assert!((r.makespan - 1.0).abs() < 1e-9);
+    }
+
+    /// Regression for the FIFO tie-slot cap: the old packed encoding
+    /// collapsed same-instant singles past the 1023rd into one shared
+    /// priority level, which made them fair-share instead of serialize.
+    #[test]
+    fn fifo_many_simultaneous_singles_stay_serialized() {
+        let n = 1100usize;
+        let mut d = SimDag::default();
+        for i in 0..n {
+            d.push(SimTask {
+                orig: i,
+                chunk: (0, 1),
+                kind: SimKind::Flow { src: 0, dst: 1 },
+                size: 1.0,
+                priority: 0,
+                gate: 0.0,
+                coflow: None,
+            });
+        }
+        let cfg = SimConfig { policy: Policy::fifo(), ..Default::default() };
+        let r = simulate(&d, &Cluster::uniform(2), &cfg).unwrap();
+        assert!((r.makespan - n as f64).abs() < 1e-6);
+        // strict serialization: the k-th flow to finish does so at k
+        let mut finishes: Vec<f64> = (0..n).map(|i| r.finish_of(i)).collect();
+        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (k, f) in finishes.iter().enumerate() {
+            assert!(
+                (f - (k + 1) as f64).abs() < 1e-6,
+                "flow #{k} finished at {f}, want {}",
+                k + 1
+            );
+        }
+    }
+
+    #[test]
+    fn oversubscribed_agg_link_throttles_cross_rack_flow() {
+        // 4 hosts, 2 racks, ratio 4: agg capacity 2/4 = 0.5. A unit
+        // cross-rack flow takes 2; the same flow intra-rack takes 1.
+        let mk = |src: usize, dst: usize| {
+            let mut d = SimDag::default();
+            d.push({
+                let mut t = task(SimKind::Flow { src, dst }, 1.0);
+                t.orig = 1;
+                t
+            });
+            d
+        };
+        let cluster = Cluster::oversubscribed(4, 2, 4.0);
+        let cross = simulate(&mk(0, 3), &cluster, &SimConfig::default()).unwrap();
+        assert!((cross.makespan - 2.0).abs() < 1e-9, "cross {}", cross.makespan);
+        let intra = simulate(&mk(0, 1), &cluster, &SimConfig::default()).unwrap();
+        assert!((intra.makespan - 1.0).abs() < 1e-9, "intra {}", intra.makespan);
+    }
+
+    #[test]
+    fn nonblocking_ratio_matches_bigswitch() {
+        // ratio small enough that the agg links can never bind: results
+        // must equal the plain big switch exactly.
+        let mut d = SimDag::default();
+        let a = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0); t.orig = 1; t });
+        let b = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 3 }, 1.0); t.orig = 2; t });
+        let _ = (a, b);
+        let big = simulate(&d, &Cluster::uniform(4), &SimConfig::default()).unwrap();
+        let slack = simulate(&d, &Cluster::oversubscribed(4, 2, 0.01), &SimConfig::default())
+            .unwrap();
+        assert!((big.makespan - slack.makespan).abs() < 1e-12);
+        for i in 0..d.len() {
+            assert!((big.trace[i].finish - slack.trace[i].finish).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_fabric_path_selection_decides_contention() {
+        // flows (0->2) and (1->3): under Hash both map to trunk (s+d)%2=0
+        // and halve its 0.5 capacity; under BySrc they split trunks and
+        // each gets the full 0.5.
+        use crate::sim::topology::{PathSelect, Topology};
+        let mut d = SimDag::default();
+        d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0); t.orig = 1; t });
+        d.push({ let mut t = task(SimKind::Flow { src: 1, dst: 3 }, 1.0); t.orig = 2; t });
+        let hash = Cluster::parallel_fabrics(4, 2, 0.5);
+        let r = simulate(&d, &hash, &SimConfig::default()).unwrap();
+        assert!((r.makespan - 4.0).abs() < 1e-9, "hash-collision {}", r.makespan);
+        let bysrc = Cluster::uniform(4).with_topology(Topology::ParallelFabrics {
+            k: 2,
+            select: PathSelect::BySrc,
+            trunk: 0.5,
+        });
+        let r = simulate(&d, &bysrc, &SimConfig::default()).unwrap();
+        assert!((r.makespan - 2.0).abs() < 1e-9, "split-fabrics {}", r.makespan);
     }
 
     #[test]

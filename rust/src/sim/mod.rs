@@ -1,13 +1,17 @@
 //! Cluster substrate: a fluid (rate-based) discrete-event simulator of
-//! hosts and full-duplex NICs, with pluggable sharing policies. This is
-//! the testbed every scheduler in `sched/` is evaluated on (DESIGN.md §5
-//! records why a fluid model preserves the paper's comparisons).
+//! hosts, full-duplex NICs and a pluggable network topology (big switch,
+//! oversubscribed leaf/spine, parallel fabrics), with pluggable sharing
+//! policies. This is the testbed every scheduler in `sched/` is
+//! evaluated on (DESIGN.md §5 records why a fluid model preserves the
+//! paper's comparisons).
 
 pub mod alloc;
 pub mod engine;
 pub mod expand;
 pub mod spec;
+pub mod topology;
 
 pub use engine::{simulate, SimConfig, SimError, SimResult};
 pub use expand::{expand, Annotations};
 pub use spec::{Cluster, CpuPolicy, Host, NetPolicy, Policy, SimDag, SimKind, SimTask};
+pub use topology::{PathSelect, Topology};

@@ -2,6 +2,10 @@
 //! (MXDAG after pipeline expansion) that the fluid engine executes.
 
 use crate::mxdag::TaskId;
+use crate::util::json::{Json, JsonError};
+
+use super::alloc::TaskRes;
+use super::topology::Topology;
 
 /// One host: compute slots plus a full-duplex NIC.
 ///
@@ -20,35 +24,196 @@ impl Default for Host {
     }
 }
 
-/// The cluster: a set of hosts.
+/// The cluster: a set of hosts wired together by a [`Topology`].
+///
+/// The default topology is [`Topology::BigSwitch`], which reproduces the
+/// pre-topology semantics bit-for-bit (flows touch only their endpoint
+/// NICs, and the resource vector is exactly `3 × hosts` long).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub hosts: Vec<Host>,
+    pub topology: Topology,
 }
 
 impl Cluster {
-    /// `n` identical single-core hosts with unit NICs.
+    /// `n` identical single-core hosts with unit NICs on a big switch.
     pub fn uniform(n: usize) -> Cluster {
-        Cluster { hosts: vec![Host::default(); n] }
+        Cluster { hosts: vec![Host::default(); n], topology: Topology::BigSwitch }
     }
 
     pub fn with_cores(n: usize, cores: f64) -> Cluster {
-        Cluster { hosts: vec![Host { cores, ..Host::default() }; n] }
+        Cluster {
+            hosts: vec![Host { cores, ..Host::default() }; n],
+            topology: Topology::BigSwitch,
+        }
+    }
+
+    /// Builder-style topology override.
+    pub fn with_topology(mut self, topology: Topology) -> Cluster {
+        self.topology = topology;
+        self
+    }
+
+    /// `n` uniform hosts on a two-tier leaf/spine fabric with `racks`
+    /// leaves oversubscribed `ratio : 1`.
+    pub fn oversubscribed(n: usize, racks: usize, ratio: f64) -> Cluster {
+        assert!(racks >= 1 && ratio > 0.0, "racks >= 1 and ratio > 0 required");
+        Cluster::uniform(n).with_topology(Topology::Oversubscribed { racks, ratio })
+    }
+
+    /// `n` uniform hosts behind `k` parallel fabrics of capacity `trunk`
+    /// each, with hash-based path selection.
+    pub fn parallel_fabrics(n: usize, k: usize, trunk: f64) -> Cluster {
+        assert!(k >= 1 && trunk > 0.0, "k >= 1 and trunk > 0 required");
+        Cluster::uniform(n).with_topology(Topology::ParallelFabrics {
+            k,
+            select: super::topology::PathSelect::Hash,
+            trunk,
+        })
     }
 
     pub fn n_hosts(&self) -> usize {
         self.hosts.len()
     }
 
-    /// Resource vector layout: [core_0, up_0, down_0, core_1, ...].
+    /// Total resources: `3 × hosts` per-host slots plus fabric extras.
+    pub fn n_resources(&self) -> usize {
+        3 * self.hosts.len() + self.topology.n_extra(self.hosts.len())
+    }
+
+    /// Resource vector layout: `[core_0, up_0, down_0, core_1, ...]`
+    /// followed by the topology's fabric resources (aggregation links or
+    /// parallel trunks).
     pub fn capacities(&self) -> Vec<f64> {
-        let mut caps = Vec::with_capacity(self.hosts.len() * 3);
+        let n = self.hosts.len();
+        let mut caps = Vec::with_capacity(self.n_resources());
         for h in &self.hosts {
             caps.push(h.cores);
             caps.push(h.nic_up);
             caps.push(h.nic_down);
         }
+        match &self.topology {
+            Topology::BigSwitch => {}
+            Topology::Oversubscribed { racks, ratio } => {
+                // one pass over hosts, accumulating per-rack NIC sums
+                let mut up = vec![0.0; *racks];
+                let mut down = vec![0.0; *racks];
+                for (h, host) in self.hosts.iter().enumerate() {
+                    let r = self.topology.rack_of(h, n).unwrap();
+                    up[r] += host.nic_up;
+                    down[r] += host.nic_down;
+                }
+                for r in 0..*racks {
+                    caps.push(up[r] / ratio);
+                    caps.push(down[r] / ratio);
+                }
+            }
+            Topology::ParallelFabrics { k, trunk, .. } => {
+                for _ in 0..*k {
+                    caps.push(*trunk);
+                }
+            }
+        }
         caps
+    }
+
+    /// Resource footprint of a physical task under this topology.
+    pub fn task_res(&self, kind: &SimKind) -> TaskRes {
+        let mut tr = TaskRes::default();
+        match *kind {
+            SimKind::Compute { host } => tr.push(res_core(host)),
+            SimKind::Flow { src, dst } => {
+                tr.push(res_up(src));
+                tr.push(res_down(dst));
+                self.topology.push_flow_extras(src, dst, self.hosts.len(), &mut tr);
+            }
+            SimKind::Dummy => {}
+        }
+        tr
+    }
+
+    /// Resource indices of a task (allocating convenience form).
+    pub fn resources_of(&self, kind: &SimKind) -> Vec<usize> {
+        self.task_res(kind).iter().collect()
+    }
+
+    /// Rate the task runs at when alone in the cluster: `min(1,
+    /// bottleneck capacity along its resources)`. This is the per-path
+    /// bottleneck bandwidth schedulers cost critical paths with.
+    pub fn solo_rate(&self, kind: &SimKind) -> f64 {
+        let caps = self.capacities();
+        self.solo_rate_with(&caps, kind)
+    }
+
+    /// As [`Cluster::solo_rate`], reusing a precomputed capacity vector.
+    pub fn solo_rate_with(&self, caps: &[f64], kind: &SimKind) -> f64 {
+        let mut rate: f64 = 1.0;
+        for r in self.task_res(kind).iter() {
+            rate = rate.min(caps[r]);
+        }
+        rate.max(0.0)
+    }
+
+    /// JSON form: `{"hosts": N | [{cores, nic_up, nic_down}...],
+    /// "topology": {...}}` (both keys optional on parse).
+    pub fn to_json(&self) -> Json {
+        let hosts: Vec<Json> = self
+            .hosts
+            .iter()
+            .map(|h| {
+                Json::obj(vec![
+                    ("cores", Json::Num(h.cores)),
+                    ("nic_up", Json::Num(h.nic_up)),
+                    ("nic_down", Json::Num(h.nic_down)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("hosts", Json::Arr(hosts)),
+            ("topology", self.topology.to_json()),
+        ])
+    }
+
+    /// Parse the JSON form of [`Cluster::to_json`]. `"hosts"` may be a
+    /// count (uniform hosts) or an array of host objects; missing host
+    /// fields default to 1.0; missing `"topology"` means big switch.
+    pub fn from_json(j: &Json) -> Result<Cluster, JsonError> {
+        let obj = j.as_obj()?;
+        let hosts = match obj.get("hosts") {
+            None => Vec::new(),
+            Some(Json::Num(n)) => {
+                if !(n.is_finite() && *n >= 0.0 && *n <= 1e6 && n.fract() == 0.0) {
+                    return Err(JsonError::Type("host count (integer 0..=1e6)"));
+                }
+                vec![Host::default(); *n as usize]
+            }
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|h| {
+                    let field = |k: &str| -> Result<f64, JsonError> {
+                        let v = match h.as_obj()?.get(k) {
+                            Some(v) => v.as_f64()?,
+                            None => 1.0,
+                        };
+                        if !(v.is_finite() && v >= 0.0) {
+                            return Err(JsonError::Type("finite non-negative host capacity"));
+                        }
+                        Ok(v)
+                    };
+                    Ok(Host {
+                        cores: field("cores")?,
+                        nic_up: field("nic_up")?,
+                        nic_down: field("nic_down")?,
+                    })
+                })
+                .collect::<Result<Vec<Host>, JsonError>>()?,
+        };
+        let topology = match obj.get("topology") {
+            None => Topology::BigSwitch,
+            Some(t) => Topology::from_json(t)?,
+        };
+        Ok(Cluster { hosts, topology })
     }
 }
 
@@ -73,7 +238,10 @@ pub enum SimKind {
 }
 
 impl SimKind {
-    /// Resources this task draws from (0, 1 or 2 entries).
+    /// Resources this task draws from (0, 1 or 2 entries) **on a big
+    /// switch**. Topology-aware callers should use
+    /// [`Cluster::resources_of`] / [`Cluster::task_res`], which add the
+    /// fabric resources a flow crosses.
     pub fn resources(&self) -> Vec<usize> {
         match *self {
             SimKind::Compute { host } => vec![res_core(host)],
@@ -155,7 +323,7 @@ pub enum CpuPolicy {
     Fifo,
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Policy {
     pub net: NetPolicy,
     pub cpu: CpuPolicy,
@@ -226,5 +394,95 @@ mod tests {
     fn cluster_with_cores() {
         let c = Cluster::with_cores(1, 4.0);
         assert_eq!(c.capacities()[0], 4.0);
+    }
+
+    #[test]
+    fn oversub_capacities_appended() {
+        // 4 uniform hosts, 2 racks, ratio 2: per-host slots unchanged,
+        // then agg_up/agg_down per rack at 2 (hosts) / 2 (ratio) = 1.
+        let c = Cluster::oversubscribed(4, 2, 2.0);
+        let caps = c.capacities();
+        assert_eq!(caps.len(), 16);
+        assert_eq!(&caps[..12], &[1.0; 12]);
+        assert_eq!(&caps[12..], &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(c.n_resources(), 16);
+    }
+
+    #[test]
+    fn fabrics_capacities_appended() {
+        let c = Cluster::parallel_fabrics(2, 3, 0.5);
+        let caps = c.capacities();
+        assert_eq!(caps.len(), 9);
+        assert_eq!(&caps[6..], &[0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn task_res_topology_aware() {
+        let c = Cluster::oversubscribed(4, 2, 4.0);
+        // intra-rack flow: NICs only (identical to the big switch)
+        let intra: Vec<usize> = c.resources_of(&SimKind::Flow { src: 0, dst: 1 });
+        assert_eq!(intra, vec![res_up(0), res_down(1)]);
+        // cross-rack flow: NICs + agg_up(rack 0) + agg_down(rack 1)
+        let cross: Vec<usize> = c.resources_of(&SimKind::Flow { src: 0, dst: 3 });
+        assert_eq!(cross, vec![res_up(0), res_down(3), 12, 15]);
+        // computes never touch the fabric
+        assert_eq!(c.resources_of(&SimKind::Compute { host: 2 }), vec![res_core(2)]);
+    }
+
+    #[test]
+    fn solo_rate_reflects_bottleneck() {
+        let big = Cluster::uniform(4);
+        assert_eq!(big.solo_rate(&SimKind::Flow { src: 0, dst: 3 }), 1.0);
+        // ratio 4 on 2-host racks: agg capacity 2/4 = 0.5 bottlenecks
+        let over = Cluster::oversubscribed(4, 2, 4.0);
+        assert_eq!(over.solo_rate(&SimKind::Flow { src: 0, dst: 3 }), 0.5);
+        assert_eq!(over.solo_rate(&SimKind::Flow { src: 0, dst: 1 }), 1.0);
+        // degraded core caps the compute rate
+        let mut deg = Cluster::uniform(2);
+        deg.hosts[1].cores = 0.25;
+        assert_eq!(deg.solo_rate(&SimKind::Compute { host: 1 }), 0.25);
+        // beefy resources never push the rate above 1
+        let beefy = Cluster::with_cores(1, 8.0);
+        assert_eq!(beefy.solo_rate(&SimKind::Compute { host: 0 }), 1.0);
+    }
+
+    #[test]
+    fn cluster_json_roundtrip() {
+        let mut c = Cluster::oversubscribed(3, 2, 4.0);
+        c.hosts[1].nic_up = 0.5;
+        let j = c.to_json();
+        let back = Cluster::from_json(&j).unwrap();
+        assert_eq!(back.n_hosts(), 3);
+        assert_eq!(back.hosts[1].nic_up, 0.5);
+        assert_eq!(back.topology, c.topology);
+        assert_eq!(back.capacities(), c.capacities());
+    }
+
+    #[test]
+    fn cluster_json_host_count_form() {
+        let j = Json::parse(r#"{"hosts": 4, "topology": {"kind": "bigswitch"}}"#).unwrap();
+        let c = Cluster::from_json(&j).unwrap();
+        assert_eq!(c.n_hosts(), 4);
+        assert_eq!(c.capacities(), vec![1.0; 12]);
+    }
+
+    #[test]
+    fn cluster_json_rejects_bad_host_counts() {
+        for bad in [r#"{"hosts": 1e18}"#, r#"{"hosts": -3}"#, r#"{"hosts": 2.7}"#] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Cluster::from_json(&j).is_err(), "must reject {bad}");
+        }
+    }
+
+    #[test]
+    fn cluster_json_rejects_bad_host_fields() {
+        for bad in [
+            r#"{"hosts": [{"nic_up": -1}]}"#,
+            r#"{"hosts": [{"cores": 1e999}]}"#,
+            r#"{"hosts": [{"nic_down": "fast"}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Cluster::from_json(&j).is_err(), "must reject {bad}");
+        }
     }
 }

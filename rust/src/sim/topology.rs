@@ -1,0 +1,336 @@
+//! The network-topology layer: maps a flow `(src, dst)` to the set of
+//! capacity-bearing resources it draws on.
+//!
+//! The original simulator hard-coded a big switch — every flow touches
+//! exactly `{nic_up(src), nic_down(dst)}`. Real clusters add *shared
+//! fabric* constraints: oversubscribed leaf/spine aggregation links, or
+//! parallel fabrics a path-selection rule spreads flows across. This
+//! module makes that substrate pluggable while keeping the per-host
+//! resource layout (`[core, up, down] × hosts`, see `spec::res_core`)
+//! bit-for-bit identical, so `BigSwitch` reproduces the pre-refactor
+//! engine exactly; fabric resources are appended after the `3 × hosts`
+//! per-host slots.
+
+use crate::util::json::{Json, JsonError};
+
+use super::alloc::TaskRes;
+
+/// Which of `k` parallel fabrics a flow `(src, dst)` is routed through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathSelect {
+    /// Deterministic ECMP-style hash: fabric = `(src + dst) % k`.
+    Hash,
+    /// Per-source striping: fabric = `src % k`.
+    BySrc,
+}
+
+impl PathSelect {
+    pub fn pick(&self, src: usize, dst: usize, k: usize) -> usize {
+        debug_assert!(k > 0);
+        match self {
+            PathSelect::Hash => (src + dst) % k,
+            PathSelect::BySrc => src % k,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PathSelect::Hash => "hash",
+            PathSelect::BySrc => "bysrc",
+        }
+    }
+}
+
+/// The fabric connecting the hosts' NICs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Topology {
+    /// Non-blocking big switch: flows touch only their endpoint NICs
+    /// (the pre-refactor semantics; the default).
+    BigSwitch,
+    /// Two-tier leaf/spine: hosts are block-partitioned into `racks`
+    /// leaves; each leaf's aggregation link has capacity
+    /// `Σ nic / ratio` in each direction. A cross-rack flow additionally
+    /// occupies `agg_up(rack(src))` and `agg_down(rack(dst))`;
+    /// intra-rack flows see only their NICs. `ratio == 1` is a
+    /// non-blocking fabric, `ratio > 1` is oversubscribed.
+    Oversubscribed { racks: usize, ratio: f64 },
+    /// `k` parallel fabrics, each a shared trunk of capacity `trunk`.
+    /// Every flow crosses exactly one trunk, chosen by `select`.
+    ParallelFabrics { k: usize, select: PathSelect, trunk: f64 },
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::BigSwitch
+    }
+}
+
+/// Hosts per rack under block partitioning (`ceil(n / racks)`).
+fn rack_size(n_hosts: usize, racks: usize) -> usize {
+    debug_assert!(racks > 0);
+    (n_hosts + racks - 1) / racks
+}
+
+impl Topology {
+    /// Fabric resources appended after the `3 × n_hosts` per-host slots.
+    pub fn n_extra(&self, _n_hosts: usize) -> usize {
+        match self {
+            Topology::BigSwitch => 0,
+            Topology::Oversubscribed { racks, .. } => 2 * racks,
+            Topology::ParallelFabrics { k, .. } => *k,
+        }
+    }
+
+    /// Rack of host `h` (leaf/spine only).
+    pub fn rack_of(&self, h: usize, n_hosts: usize) -> Option<usize> {
+        match self {
+            Topology::Oversubscribed { racks, .. } => {
+                Some((h / rack_size(n_hosts, *racks)).min(racks - 1))
+            }
+            _ => None,
+        }
+    }
+
+    /// Resource index of rack `r`'s aggregation uplink.
+    pub fn agg_up(r: usize, n_hosts: usize) -> usize {
+        3 * n_hosts + 2 * r
+    }
+    /// Resource index of rack `r`'s aggregation downlink.
+    pub fn agg_down(r: usize, n_hosts: usize) -> usize {
+        3 * n_hosts + 2 * r + 1
+    }
+    /// Resource index of parallel fabric `j`'s trunk.
+    pub fn trunk(j: usize, n_hosts: usize) -> usize {
+        3 * n_hosts + j
+    }
+
+    /// Append the *fabric* resources a flow `(src, dst)` occupies (its
+    /// endpoint NICs are pushed by the caller).
+    pub fn push_flow_extras(&self, src: usize, dst: usize, n_hosts: usize, out: &mut TaskRes) {
+        match self {
+            Topology::BigSwitch => {}
+            Topology::Oversubscribed { .. } => {
+                let rs = self.rack_of(src, n_hosts).unwrap();
+                let rd = self.rack_of(dst, n_hosts).unwrap();
+                if rs != rd {
+                    out.push(Topology::agg_up(rs, n_hosts));
+                    out.push(Topology::agg_down(rd, n_hosts));
+                }
+            }
+            Topology::ParallelFabrics { k, select, .. } => {
+                out.push(Topology::trunk(select.pick(src, dst, *k), n_hosts));
+            }
+        }
+    }
+
+    /// Parse a CLI spec: `bigswitch`, `oversub:RACKS:RATIO`, or
+    /// `fabrics:K:TRUNK[:hash|bysrc]`.
+    pub fn parse(s: &str) -> Result<Topology, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "bigswitch" if parts.len() == 1 => Ok(Topology::BigSwitch),
+            "oversub" if parts.len() == 3 => {
+                let racks: usize =
+                    parts[1].parse().map_err(|_| format!("bad racks `{}`", parts[1]))?;
+                let ratio: f64 =
+                    parts[2].parse().map_err(|_| format!("bad ratio `{}`", parts[2]))?;
+                if racks == 0 || !(ratio.is_finite() && ratio > 0.0) {
+                    return Err("oversub wants racks >= 1 and finite ratio > 0".into());
+                }
+                Ok(Topology::Oversubscribed { racks, ratio })
+            }
+            "fabrics" if parts.len() == 3 || parts.len() == 4 => {
+                let k: usize = parts[1].parse().map_err(|_| format!("bad k `{}`", parts[1]))?;
+                let trunk: f64 =
+                    parts[2].parse().map_err(|_| format!("bad trunk `{}`", parts[2]))?;
+                let select = match parts.get(3).copied() {
+                    None | Some("hash") => PathSelect::Hash,
+                    Some("bysrc") => PathSelect::BySrc,
+                    Some(other) => return Err(format!("bad path select `{other}`")),
+                };
+                if k == 0 || !(trunk.is_finite() && trunk > 0.0) {
+                    return Err("fabrics wants k >= 1 and finite trunk > 0".into());
+                }
+                Ok(Topology::ParallelFabrics { k, select, trunk })
+            }
+            _ => Err(format!(
+                "unknown topology `{s}` (want bigswitch | oversub:RACKS:RATIO | \
+                 fabrics:K:TRUNK[:hash|bysrc])"
+            )),
+        }
+    }
+
+    /// JSON form (inverse of [`Topology::from_json`]).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Topology::BigSwitch => Json::obj(vec![("kind", Json::Str("bigswitch".into()))]),
+            Topology::Oversubscribed { racks, ratio } => Json::obj(vec![
+                ("kind", Json::Str("oversubscribed".into())),
+                ("racks", Json::Num(*racks as f64)),
+                ("ratio", Json::Num(*ratio)),
+            ]),
+            Topology::ParallelFabrics { k, select, trunk } => Json::obj(vec![
+                ("kind", Json::Str("fabrics".into())),
+                ("k", Json::Num(*k as f64)),
+                ("trunk", Json::Num(*trunk)),
+                ("select", Json::Str(select.label().into())),
+            ]),
+        }
+    }
+
+    /// Parse the JSON form produced by [`Topology::to_json`], with the
+    /// same validation as [`Topology::parse`]: counts must be positive
+    /// integers, capacities positive, and `select` a known rule.
+    pub fn from_json(j: &Json) -> Result<Topology, JsonError> {
+        let count = |key: &'static str| -> Result<usize, JsonError> {
+            let v = j.get(key)?.as_f64()?;
+            if !(v.is_finite() && v >= 1.0 && v <= 1e6 && v.fract() == 0.0) {
+                return Err(JsonError::Type("positive integer count"));
+            }
+            Ok(v as usize)
+        };
+        let positive = |key: &'static str| -> Result<f64, JsonError> {
+            let v = j.get(key)?.as_f64()?;
+            if !(v.is_finite() && v > 0.0) {
+                return Err(JsonError::Type("positive capacity/ratio"));
+            }
+            Ok(v)
+        };
+        match j.get("kind")?.as_str()? {
+            "bigswitch" => Ok(Topology::BigSwitch),
+            "oversubscribed" => Ok(Topology::Oversubscribed {
+                racks: count("racks")?,
+                ratio: positive("ratio")?,
+            }),
+            "fabrics" => {
+                let select = match j.as_obj()?.get("select") {
+                    None => PathSelect::Hash,
+                    Some(s) => match s.as_str()? {
+                        "hash" => PathSelect::Hash,
+                        "bysrc" => PathSelect::BySrc,
+                        _ => return Err(JsonError::Type("path select (hash|bysrc)")),
+                    },
+                };
+                Ok(Topology::ParallelFabrics {
+                    k: count("k")?,
+                    select,
+                    trunk: positive("trunk")?,
+                })
+            }
+            _ => Err(JsonError::Type("topology kind")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigswitch_has_no_extras() {
+        let t = Topology::BigSwitch;
+        assert_eq!(t.n_extra(8), 0);
+        let mut tr = TaskRes::default();
+        t.push_flow_extras(0, 5, 8, &mut tr);
+        assert_eq!(tr.n, 0);
+    }
+
+    #[test]
+    fn oversub_rack_partition_and_extras() {
+        let t = Topology::Oversubscribed { racks: 2, ratio: 4.0 };
+        // 4 hosts -> racks {0,1} and {2,3}
+        assert_eq!(t.rack_of(0, 4), Some(0));
+        assert_eq!(t.rack_of(1, 4), Some(0));
+        assert_eq!(t.rack_of(2, 4), Some(1));
+        assert_eq!(t.rack_of(3, 4), Some(1));
+        assert_eq!(t.n_extra(4), 4);
+
+        // intra-rack flow: no fabric resources
+        let mut tr = TaskRes::default();
+        t.push_flow_extras(0, 1, 4, &mut tr);
+        assert_eq!(tr.n, 0);
+        // cross-rack flow: agg_up(0) + agg_down(1) = indices 12, 15
+        let mut tr = TaskRes::default();
+        t.push_flow_extras(0, 3, 4, &mut tr);
+        let rs: Vec<usize> = tr.iter().collect();
+        assert_eq!(rs, vec![12, 15]);
+    }
+
+    #[test]
+    fn oversub_odd_host_count() {
+        let t = Topology::Oversubscribed { racks: 2, ratio: 1.0 };
+        // 5 hosts -> rack size 3: {0,1,2} and {3,4}
+        assert_eq!(t.rack_of(2, 5), Some(0));
+        assert_eq!(t.rack_of(3, 5), Some(1));
+        assert_eq!(t.rack_of(4, 5), Some(1));
+    }
+
+    #[test]
+    fn fabrics_path_selection() {
+        let hash = Topology::ParallelFabrics { k: 2, select: PathSelect::Hash, trunk: 0.5 };
+        let mut tr = TaskRes::default();
+        hash.push_flow_extras(0, 2, 4, &mut tr); // (0+2)%2 = 0 -> index 12
+        assert_eq!(tr.iter().collect::<Vec<_>>(), vec![12]);
+        let mut tr = TaskRes::default();
+        hash.push_flow_extras(1, 3, 4, &mut tr); // (1+3)%2 = 0 -> collides
+        assert_eq!(tr.iter().collect::<Vec<_>>(), vec![12]);
+
+        let bysrc = Topology::ParallelFabrics { k: 2, select: PathSelect::BySrc, trunk: 0.5 };
+        let mut tr = TaskRes::default();
+        bysrc.push_flow_extras(1, 3, 4, &mut tr); // 1%2 = 1 -> index 13
+        assert_eq!(tr.iter().collect::<Vec<_>>(), vec![13]);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Topology::parse("bigswitch").unwrap(), Topology::BigSwitch);
+        assert_eq!(
+            Topology::parse("oversub:2:4").unwrap(),
+            Topology::Oversubscribed { racks: 2, ratio: 4.0 }
+        );
+        assert_eq!(
+            Topology::parse("fabrics:3:0.5").unwrap(),
+            Topology::ParallelFabrics { k: 3, select: PathSelect::Hash, trunk: 0.5 }
+        );
+        assert_eq!(
+            Topology::parse("fabrics:2:1:bysrc").unwrap(),
+            Topology::ParallelFabrics { k: 2, select: PathSelect::BySrc, trunk: 1.0 }
+        );
+        assert!(Topology::parse("oversub:0:4").is_err());
+        assert!(Topology::parse("oversub:2:nan").is_err());
+        assert!(Topology::parse("oversub:2:inf").is_err());
+        assert!(Topology::parse("fabrics:2:nan").is_err());
+        assert!(Topology::parse("mesh").is_err());
+        assert!(Topology::parse("oversub:2").is_err());
+    }
+
+    #[test]
+    fn json_rejects_invalid_values() {
+        for bad in [
+            r#"{"kind": "oversubscribed", "racks": 0, "ratio": 4}"#,
+            r#"{"kind": "oversubscribed", "racks": 2.5, "ratio": 4}"#,
+            r#"{"kind": "oversubscribed", "racks": 2, "ratio": -1}"#,
+            r#"{"kind": "oversubscribed", "racks": 1e18, "ratio": 4}"#,
+            r#"{"kind": "fabrics", "k": 0, "trunk": 1}"#,
+            r#"{"kind": "fabrics", "k": 2, "trunk": 0}"#,
+            r#"{"kind": "fabrics", "k": 2, "trunk": 1, "select": "bysrcc"}"#,
+            r#"{"kind": "mesh"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Topology::from_json(&j).is_err(), "must reject {bad}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for t in [
+            Topology::BigSwitch,
+            Topology::Oversubscribed { racks: 4, ratio: 8.0 },
+            Topology::ParallelFabrics { k: 2, select: PathSelect::BySrc, trunk: 0.25 },
+        ] {
+            let j = t.to_json();
+            let back = Topology::from_json(&j).unwrap();
+            assert_eq!(t, back, "roundtrip of {j}");
+        }
+    }
+}

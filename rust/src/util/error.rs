@@ -1,0 +1,146 @@
+//! Minimal error substrate (`anyhow` is not vendored in this image).
+//!
+//! Provides the `anyhow`-shaped surface the runtime/coordinator layers
+//! use — [`Error`], [`Result`], the [`Context`] extension trait and the
+//! [`anyhow!`](crate::anyhow) macro — with a flattened message chain
+//! instead of a boxed source chain. Like `anyhow::Error`, [`Error`]
+//! deliberately does **not** implement `std::error::Error`, so the
+//! blanket `From<E: std::error::Error>` conversion stays coherent.
+
+use std::fmt;
+
+/// A flattened, context-carrying error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+
+    /// Prepend a context line (`context: original`).
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(&format!(": {s}"));
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` defaulting to [`Error`], mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failing `Result`, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($msg:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($msg, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg(format!("{}", $err))
+    };
+}
+
+// Let call sites write `use crate::util::error::anyhow;`.
+pub use crate::anyhow;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_flattens_chain() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: Result<()> = Err(io_err()).context("loading file");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("loading file: "), "{msg}");
+        assert!(msg.contains("gone"));
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let ok: Result<u32> = Ok::<u32, std::io::Error>(7).with_context(|| -> String {
+            unreachable!("context closure must be lazy")
+        });
+        assert_eq!(ok.unwrap(), 7);
+        let e: Result<u32> = Err(io_err()).with_context(|| format!("attempt {}", 2));
+        assert!(e.unwrap_err().to_string().starts_with("attempt 2: "));
+    }
+
+    #[test]
+    fn context_on_error_result() {
+        // the Context impl must also cover Result<_, Error> itself
+        let base: Result<()> = Err(Error::msg("inner"));
+        let msg = base.context("outer").unwrap_err().to_string();
+        assert_eq!(msg, "outer: inner");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        let n = 3;
+        assert_eq!(anyhow!("got {}", n).to_string(), "got 3");
+        assert_eq!(anyhow!("got {n}").to_string(), "got 3");
+        let e = io_err();
+        assert_eq!(anyhow!(e).to_string(), "gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}

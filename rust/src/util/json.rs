@@ -18,15 +18,24 @@ pub enum Json {
 }
 
 /// Parse / access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("missing key `{0}`")]
     MissingKey(String),
-    #[error("type mismatch: wanted {0}")]
     Type(&'static str),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => write!(f, "parse error at byte {at}: {msg}"),
+            JsonError::MissingKey(k) => write!(f, "missing key `{k}`"),
+            JsonError::Type(want) => write!(f, "type mismatch: wanted {want}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

@@ -1,9 +1,11 @@
-//! Substrates this repo had to build because the offline image only
-//! vendors the `xla` crate's dependency closure (see DESIGN.md §5):
-//! JSON, PRNG, CLI parsing, micro-benchmarking, property testing.
+//! Substrates this repo builds in-tree so the default `cargo build`
+//! needs **zero external crates** (see DESIGN.md §5): JSON, PRNG, CLI
+//! parsing, micro-benchmarking, property testing, and an
+//! `anyhow`-shaped error type.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,115 @@
+//! Oversubscribed-fabric workloads: the scenarios where compute/network
+//! co-scheduling diverges most from DAG-only and coflow-only baselines,
+//! because the scarce resource is a *shared* aggregation link rather
+//! than a private NIC.
+//!
+//! Pair these DAGs with [`Cluster::oversubscribed`] so that rack
+//! boundaries line up: `cross_rack_flows(per_rack, ..)` assumes hosts
+//! `0..per_rack` form rack 0 and `per_rack..2*per_rack` rack 1 (the
+//! block partition `Topology::Oversubscribed` uses with 2 racks).
+
+use crate::mxdag::{MXDag, TaskId};
+use crate::sim::Cluster;
+
+/// `sizes.len()` independent cross-rack flows on distinct host pairs:
+/// flow `i` goes `i → per_rack + i` with size `sizes[i]`. All flows are
+/// ready at t=0 and share only the two rack aggregation links, which
+/// makes fair-share completion provably monotone in the
+/// oversubscription ratio (a single effective bottleneck).
+pub fn cross_rack_flows(per_rack: usize, sizes: &[f64]) -> MXDag {
+    assert!(
+        sizes.len() <= per_rack,
+        "one flow per host pair: need sizes.len() <= per_rack"
+    );
+    let mut b = MXDag::builder();
+    for (i, &s) in sizes.iter().enumerate() {
+        b.flow(&format!("x{i}"), i, per_rack + i, s);
+    }
+    b.finalize().expect("flows only: acyclic")
+}
+
+/// The matching 2-rack cluster for [`cross_rack_flows`].
+pub fn two_rack_cluster(per_rack: usize, ratio: f64) -> Cluster {
+    Cluster::oversubscribed(2 * per_rack, 2, ratio)
+}
+
+/// Incast with a critical chain on a 2-rack / 4-host fabric:
+///
+/// * chain: `A@0 (0.5) → fc: 0→2 (1.0) → C@2 (3.0)` — the job;
+/// * `side_flows` unit background flows `1 → 3`, ready at t=0, which
+///   contend with `fc` only on the rack aggregation links.
+///
+/// On a big switch the chain never waits (disjoint NICs). The more the
+/// fabric is oversubscribed, the more a schedule that fair-shares (or
+/// coflow-groups) the aggregation link delays the critical flow — while
+/// a co-scheduler that prioritizes `fc` keeps the chain's JCT at
+/// `0.5 + 1/min(1, cap) + 3.0`. Returns `(dag, id of C, side flow ids)`.
+pub fn incast_with_chain(side_flows: usize) -> (MXDag, TaskId, Vec<TaskId>) {
+    let mut b = MXDag::builder();
+    let a = b.compute("A", 0, 0.5);
+    let fc = b.flow("fc", 0, 2, 1.0);
+    let c = b.compute("C", 2, 3.0);
+    b.chain(&[a, fc, c]);
+    let sides: Vec<TaskId> = (0..side_flows)
+        .map(|i| b.flow(&format!("s{i}"), 1, 3, 1.0))
+        .collect();
+    (b.finalize().unwrap(), c, sides)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{run, FairScheduler, MxScheduler};
+
+    #[test]
+    fn cross_rack_flows_span_racks() {
+        let g = cross_rack_flows(3, &[1.0, 2.0]);
+        assert_eq!(g.real_tasks().count(), 2);
+        for t in g.tasks() {
+            if let crate::mxdag::TaskKind::Flow { src, dst } = t.kind {
+                assert!(src < 3 && dst >= 3, "flow {} must cross racks", t.name);
+            }
+        }
+    }
+
+    /// Acceptance-criterion check in miniature: as the fabric gets more
+    /// oversubscribed, the co-scheduler's lead over fair sharing on the
+    /// chain's JCT grows, because fair sharing splits the scarce
+    /// aggregation link among all background flows.
+    #[test]
+    fn cosched_advantage_grows_with_ratio() {
+        let (g, c, _) = incast_with_chain(6);
+        let mut prev_gap = f64::NEG_INFINITY;
+        for ratio in [1.0, 4.0, 8.0] {
+            let cluster = two_rack_cluster(2, ratio);
+            let mx = run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+            let fair = run(&FairScheduler, &g, &cluster).unwrap();
+            let gap = fair.finish_of(c) - mx.finish_of(c);
+            assert!(gap >= -1e-9, "ratio {ratio}: mx must not lose, gap {gap}");
+            assert!(
+                gap >= prev_gap - 1e-9,
+                "advantage must widen with ratio: {prev_gap} -> {gap} at {ratio}"
+            );
+            prev_gap = gap;
+        }
+        assert!(prev_gap > 1.0, "at 8:1 the gap should be substantial: {prev_gap}");
+    }
+
+    /// At heavy oversubscription the exact chain JCTs are analyzable:
+    /// agg capacity = 2/ratio; the prioritized critical flow takes
+    /// 1/cap, fair sharing takes (sides+1)/cap.
+    #[test]
+    fn incast_chain_jct_matches_analysis_at_ratio_4() {
+        let (g, c, _) = incast_with_chain(6);
+        let cluster = two_rack_cluster(2, 4.0); // agg cap 0.5
+        let mx = run(&MxScheduler::without_pipelining(), &g, &cluster).unwrap();
+        // A 0→0.5, fc at rate 0.5 → 2.5, C → 5.5
+        assert!((mx.finish_of(c) - 5.5).abs() < 1e-6, "mx {}", mx.finish_of(c));
+        let fair = run(&FairScheduler, &g, &cluster).unwrap();
+        assert!(
+            fair.finish_of(c) > 12.0,
+            "fair share must pay for the whole incast: {}",
+            fair.finish_of(c)
+        );
+    }
+}

@@ -1,13 +1,14 @@
 //! Property-based invariants (util::propcheck) over random MXDAGs:
 //! graph validity, simulator conservation laws, allocation feasibility,
-//! Eq.(1)/(2) ordering, and schedule-independence of completion.
+//! Eq.(1)/(2) ordering, topology compatibility/monotonicity, and
+//! schedule-independence of completion.
 
 use mxdag::mxdag::{cpm, path, MXDag, TaskKind};
 use mxdag::sched::{evaluate, Plan};
-use mxdag::sim::{alloc, Cluster, Policy, SimDag, SimKind, SimTask};
+use mxdag::sim::{alloc, Cluster, Policy, SimDag, SimKind, SimTask, Topology};
 use mxdag::util::propcheck::{check, Config};
 use mxdag::util::rng::Rng;
-use mxdag::workloads::{random_dag, RandomParams};
+use mxdag::workloads::{oversub, random_dag, RandomParams};
 
 fn gen_params(rng: &mut Rng) -> RandomParams {
     RandomParams {
@@ -230,6 +231,119 @@ fn prop_json_roundtrip_random_dags() {
                     (TaskKind::Flow { src: a, dst: b }, TaskKind::Flow { src: c, dst: d })
                         if a == c && b == d => {}
                     _ => return Err(format!("kind changed for {}", t.name)),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Topology invariant (a): the big switch is the `ratio → 0` limit of
+/// the leaf/spine fabric. With a ratio so small the aggregation links
+/// can never bind, every policy must reproduce the big-switch results
+/// *exactly* on random DAGs — the refactor's bit-for-bit compatibility
+/// check, run through the full engine.
+#[test]
+fn prop_bigswitch_equals_never_binding_fabric() {
+    check(
+        "bigswitch-vs-slack-fabric",
+        &Config { cases: 20, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let big = Cluster::uniform(p.hosts);
+            let slack = Cluster::uniform(p.hosts)
+                .with_topology(Topology::Oversubscribed { racks: 2, ratio: 1e-6 });
+            for policy in [Policy::fair(), Policy::fifo(), Policy::priority(), Policy::coflow()]
+            {
+                let plan = Plan { ann: Default::default(), policy };
+                let a = evaluate(&g, &big, &plan).map_err(|e| e.to_string())?;
+                let b = evaluate(&g, &slack, &plan).map_err(|e| e.to_string())?;
+                if (a.makespan - b.makespan).abs() > 1e-9 {
+                    return Err(format!(
+                        "{policy:?}: bigswitch {} vs slack fabric {}",
+                        a.makespan, b.makespan
+                    ));
+                }
+                for t in g.real_tasks() {
+                    if (a.finish_of(t) - b.finish_of(t)).abs() > 1e-9 {
+                        return Err(format!("{policy:?}: task {t} trace diverged"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Topology invariant (b): on a cross-rack shuffle whose flows share
+/// only the two aggregation links (one flow per host pair), the
+/// fair-share makespan is monotone non-decreasing in the
+/// oversubscription ratio — less fabric can never finish sooner.
+#[test]
+fn prop_makespan_monotone_in_oversubscription() {
+    check(
+        "oversub-monotone",
+        &Config { cases: 30, ..Default::default() },
+        |rng| {
+            let per_rack = rng.range(2, 7);
+            let n_flows = rng.range(1, per_rack + 1);
+            let sizes: Vec<f64> =
+                (0..n_flows).map(|_| rng.range_f64(0.5, 3.0)).collect();
+            (per_rack, sizes)
+        },
+        |(per_rack, sizes)| {
+            let g = oversub::cross_rack_flows(*per_rack, sizes);
+            let mut prev = 0.0;
+            for ratio in [1.0, 2.0, 4.0, 8.0, 16.0] {
+                let cluster = oversub::two_rack_cluster(*per_rack, ratio);
+                let r = evaluate(&g, &cluster, &Plan::fair()).map_err(|e| e.to_string())?;
+                if !r.makespan.is_finite() {
+                    return Err(format!("ratio {ratio}: non-finite makespan"));
+                }
+                if r.makespan + 1e-9 < prev {
+                    return Err(format!(
+                        "makespan shrank as the fabric tightened: {prev} -> {} at {ratio}",
+                        r.makespan
+                    ));
+                }
+                prev = r.makespan;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every policy completes (finite makespan, valid traces) on an
+/// oversubscribed fabric and on parallel fabrics — no deadlocks from
+/// the added shared resources.
+#[test]
+fn prop_all_policies_complete_on_fabrics() {
+    check(
+        "fabrics-complete",
+        &Config { cases: 15, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let clusters = [
+                Cluster::uniform(p.hosts)
+                    .with_topology(Topology::Oversubscribed { racks: 2, ratio: 4.0 }),
+                Cluster::parallel_fabrics(p.hosts, 2, 0.5),
+            ];
+            for cluster in &clusters {
+                for policy in
+                    [Policy::fair(), Policy::fifo(), Policy::priority(), Policy::coflow()]
+                {
+                    let r = evaluate(&g, cluster, &Plan { ann: Default::default(), policy })
+                        .map_err(|e| format!("{policy:?}: {e}"))?;
+                    if !(r.makespan.is_finite() && r.makespan >= 0.0) {
+                        return Err(format!("{policy:?}: bad makespan {}", r.makespan));
+                    }
+                    for t in g.real_tasks() {
+                        if r.finish_of(t) + 1e-9 < r.start_of(t) {
+                            return Err(format!("{policy:?}: task {t} finished before start"));
+                        }
+                    }
                 }
             }
             Ok(())
