@@ -1,15 +1,27 @@
-//! Scheduler planning cost vs DAG size, per scheduler — plan time must
-//! stay far below simulated makespan for online use (L3 §Perf).
+//! Scheduler scaling, two stories:
+//!
+//! 1. *Plan cost* vs DAG size, per scheduler — plan time must stay far
+//!    below simulated makespan for online use (L3 §Perf).
+//! 2. *Engine events/s* on wide-fanout DAGs at 1k / 5k / 10k tasks under
+//!    the mxdag co-scheduler's priority plan: the incremental ready
+//!    queue (`QueueKind::Incremental`) vs the pre-refactor full
+//!    re-sort baseline (`QueueKind::FullResort`). Identical results
+//!    (event counts and makespans) are asserted on every run; only the
+//!    per-event scheduling cost differs. This produces the events/s
+//!    table whose format the README's Performance section describes —
+//!    run `cargo bench --bench sched_scaling` to generate it.
+
+use std::time::Instant;
 
 use mxdag::sched::{
     CoflowScheduler, FairScheduler, FifoScheduler, Grouping, MxScheduler, PackingScheduler,
     Scheduler,
 };
-use mxdag::sim::Cluster;
-use mxdag::util::bench::{bench, bench_header};
-use mxdag::workloads::{random_dag, RandomParams};
+use mxdag::sim::{expand, simulate, Cluster, Policy, QueueKind, SimConfig};
+use mxdag::util::bench::{bench, bench_header, Table};
+use mxdag::workloads::{branches_for_tasks, random_dag, wide_fanout, FanoutParams, RandomParams};
 
-fn main() {
+fn plan_cost() {
     for (layers, width) in [(6usize, 6usize), (12, 12), (20, 20)] {
         let p = RandomParams { layers, width, hosts: 16, seed: 3, ..Default::default() };
         let g = random_dag(&p);
@@ -37,4 +49,72 @@ fn main() {
             let _ = s.plan(&g, &cluster);
         });
     }
+}
+
+fn engine_events_per_sec() {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let mut table = Table::new(
+        "engine events/s, mxdag priority plan on wide-fanout DAGs \
+         (incremental ready queue vs full re-sort)",
+        &["events", "full-resort ev/s", "incremental ev/s", "speedup"],
+    );
+    for target in [1_000usize, 5_000, 10_000] {
+        let p = FanoutParams {
+            branches: branches_for_tasks(target),
+            hosts,
+            seed: 42,
+            ..Default::default()
+        };
+        let g = wide_fanout(&p);
+        let plan = MxScheduler::without_pipelining().plan(&g, &cluster);
+        // the point of the A/B is the priority hot path; the co-scheduler
+        // must not have fallen back to its fair plan on this workload
+        assert_eq!(plan.policy, Policy::priority(), "expected the priority plan");
+        let sim = expand(&g, &plan.ann);
+
+        let mut events = [0usize; 2];
+        let mut makespans = [0.0f64; 2];
+        let mut evs = [0.0f64; 2];
+        for (ki, queue) in [QueueKind::FullResort, QueueKind::Incremental]
+            .into_iter()
+            .enumerate()
+        {
+            let cfg = SimConfig { policy: plan.policy, queue, ..Default::default() };
+            // the baseline is slow at 10k tasks: one rep there, best-of-3
+            // for the cheap runs
+            let reps = if queue == QueueKind::FullResort && target >= 5_000 { 1 } else { 3 };
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                let r = simulate(&sim, &cluster, &cfg).expect("simulation completes");
+                best = best.min(t0.elapsed().as_secs_f64());
+                events[ki] = r.events;
+                makespans[ki] = r.makespan;
+            }
+            evs[ki] = events[ki] as f64 / best;
+        }
+        assert_eq!(events[0], events[1], "queue kinds took different event paths");
+        assert!(
+            (makespans[0] - makespans[1]).abs() < 1e-9,
+            "queue kinds disagree: {} vs {}",
+            makespans[0],
+            makespans[1]
+        );
+        table.row(
+            &format!("{} tasks", g.real_tasks().count()),
+            &[
+                format!("{}", events[0]),
+                format!("{:.3e}", evs[0]),
+                format!("{:.3e}", evs[1]),
+                format!("{:.1}x", evs[1] / evs[0]),
+            ],
+        );
+    }
+    table.print();
+}
+
+fn main() {
+    plan_cost();
+    engine_events_per_sec();
 }

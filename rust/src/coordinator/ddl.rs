@@ -132,7 +132,7 @@ impl DataGen {
         DataGen { centers, input_dim, classes, batch }
     }
 
-    /// Batch for (step, worker): (x [batch, input_dim] f32, y [batch] s32).
+    /// Batch for (step, worker): (x `[batch, input_dim]` f32, y `[batch]` s32).
     pub fn batch(&self, step: usize, worker: usize) -> (Tensor, Tensor) {
         let mut rng = Rng::new(((step as u64) << 20) | ((worker as u64) << 8) | 7);
         let mut xs = Vec::with_capacity(self.batch * self.input_dim);

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 
 use super::{Plan, Scheduler};
 use crate::mxdag::{cpm, MXDag, TaskId, TaskKind};
-use crate::sim::{Annotations, Cluster, Policy, SimResult};
+use crate::sim::{Annotations, Cluster, Policy, QueueDiscipline, SimResult};
 
 /// Several MXDAGs merged onto one shared cluster.
 #[derive(Debug, Clone)]
@@ -150,6 +150,15 @@ impl Scheduler for AltruisticScheduler {
         }
         Plan { ann, policy: Policy::priority() }
     }
+    /// Static priorities plus gates; the leftover-bandwidth altruism is
+    /// expressed through gate times, not through drifting keys, so the
+    /// queue keys themselves never go stale.
+    /// [`plan_multi_checked`](AltruisticScheduler::plan_multi_checked)
+    /// may fall back to the selfish fair plan when the Pareto guarantee
+    /// would be violated, hence the second declared discipline.
+    fn disciplines(&self) -> &'static [QueueDiscipline] {
+        &[QueueDiscipline::PRIORITY, QueueDiscipline::FAIR]
+    }
 }
 
 /// Baseline for Fig. 7(c): every job grabs resources as soon as tasks are
@@ -178,6 +187,11 @@ impl Scheduler for SelfishScheduler {
     }
     fn plan(&self, _dag: &MXDag, _cluster: &Cluster) -> Plan {
         Plan::fair()
+    }
+    /// Plain fair sharing (per-job priorities exist only in the
+    /// multi-DAG plan, which also uses the fair policy).
+    fn disciplines(&self) -> &'static [QueueDiscipline] {
+        &[QueueDiscipline::FAIR]
     }
 }
 

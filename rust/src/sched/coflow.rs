@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use super::{Plan, Scheduler};
 use crate::mxdag::{MXDag, TaskId};
-use crate::sim::{Annotations, Cluster, Policy};
+use crate::sim::{Annotations, Cluster, Policy, QueueDiscipline};
 
 /// How flows are grouped into coflows — the definitional choice the
 /// application programmer "must commit to" per §2.2.
@@ -22,8 +22,10 @@ pub enum Grouping {
     ByLevel,
 }
 
+/// The Varys-style coflow baseline scheduler.
 #[derive(Debug, Clone)]
 pub struct CoflowScheduler {
+    /// How flows are grouped into coflows (see [`Grouping`]).
     pub grouping: Grouping,
 }
 
@@ -81,6 +83,12 @@ impl Scheduler for CoflowScheduler {
             ann: Annotations { coflows: self.groups(dag), ..Default::default() },
             policy: Policy::coflow(),
         }
+    }
+    /// SEBF group keys over *remaining* bytes — dynamic: the engine must
+    /// re-derive a group's key (the `update_key` invalidation hook)
+    /// whenever any member makes progress.
+    fn disciplines(&self) -> &'static [QueueDiscipline] {
+        &[QueueDiscipline::COFLOW]
     }
 }
 

@@ -7,8 +7,9 @@
 
 use super::{Plan, Scheduler};
 use crate::mxdag::MXDag;
-use crate::sim::Cluster;
+use crate::sim::{Cluster, QueueDiscipline};
 
+/// The fair-sharing baseline scheduler (empty plan, max-min policy).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FairScheduler;
 
@@ -18,6 +19,11 @@ impl Scheduler for FairScheduler {
     }
     fn plan(&self, _dag: &MXDag, _cluster: &Cluster) -> Plan {
         Plan::fair()
+    }
+    /// Single shared ready-queue level for both classes; keys never go
+    /// stale.
+    fn disciplines(&self) -> &'static [QueueDiscipline] {
+        &[QueueDiscipline::FAIR]
     }
 }
 

@@ -7,8 +7,9 @@
 
 use super::{Plan, Scheduler};
 use crate::mxdag::MXDag;
-use crate::sim::{Annotations, Cluster, Policy};
+use crate::sim::{Annotations, Cluster, Policy, QueueDiscipline};
 
+/// The plain-DAG FIFO baseline scheduler.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FifoScheduler;
 
@@ -18,6 +19,11 @@ impl Scheduler for FifoScheduler {
     }
     fn plan(&self, _dag: &MXDag, _cluster: &Cluster) -> Plan {
         Plan { ann: Annotations::default(), policy: Policy::fifo() }
+    }
+    /// Arrival-order slots, assigned by the engine at first readiness;
+    /// once assigned, keys never go stale.
+    fn disciplines(&self) -> &'static [QueueDiscipline] {
+        &[QueueDiscipline::FIFO]
     }
 }
 

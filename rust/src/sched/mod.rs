@@ -5,6 +5,32 @@
 //! network-aware fair sharing, plain-DAG FIFO, Varys-style coflow with
 //! pluggable grouping (the Fig. 2(b1..b3) ambiguity), and a Tetris-like
 //! packing heuristic.
+//!
+//! ## The scheduler ↔ engine contract
+//!
+//! A scheduler never touches the event loop: it maps `(MXDag, Cluster)`
+//! to a [`Plan`] — per-task annotations (priorities, gates, pipelining,
+//! coflow groups) plus a [`Policy`] naming the sharing semantics. The
+//! engine serves that plan from an incremental ready queue
+//! ([`crate::sim::ReadyQueue`]): every ready task carries a priority
+//! key derived from the plan, and the engine walks key levels high → low
+//! at each event. The contract has two sides:
+//!
+//! * [`Scheduler::plan`] produces the annotations the keys are derived
+//!   from;
+//! * [`Scheduler::disciplines`] declares which
+//!   [`QueueDiscipline`]s (key shapes + invalidation behaviour) the
+//!   scheduler's plans may request. Every emitted plan must satisfy
+//!   `disciplines().contains(&plan.policy.discipline())` — checked by
+//!   the `declared_disciplines_cover_emitted_plans` test below.
+//!
+//! Disciplines with *dynamic* keys (coflow SEBF, whose bounds shrink
+//! with remaining bytes) additionally rely on the engine invoking the
+//! [`update_key`](crate::sim::ReadyQueue::update_key) invalidation hook
+//! after every progress step; a scheduler introducing a new
+//! drifting-priority policy must extend
+//! [`Keying`](crate::sim::Keying) so the engine knows to do the same.
+//! `docs/ARCHITECTURE.md` walks through the whole lifecycle.
 
 pub mod altruistic;
 pub mod coflow;
@@ -15,7 +41,8 @@ pub mod packing;
 
 use crate::mxdag::MXDag;
 use crate::sim::{
-    expand, simulate, Annotations, Cluster, Policy, SimConfig, SimError, SimResult,
+    expand, simulate, Annotations, Cluster, Policy, QueueDiscipline, SimConfig, SimError,
+    SimResult,
 };
 
 pub use altruistic::{AltruisticScheduler, SelfishScheduler};
@@ -28,20 +55,34 @@ pub use packing::PackingScheduler;
 /// A concrete schedule: per-task annotations + a sharing policy.
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// Per-task priorities, gates, pipelining and coflow groups, applied
+    /// during DAG expansion ([`expand`]).
     pub ann: Annotations,
+    /// The sharing semantics the engine enforces (and, via
+    /// [`Policy::discipline`], how ready tasks are keyed).
     pub policy: Policy,
 }
 
 impl Plan {
+    /// The empty fair-sharing plan (no annotations).
     pub fn fair() -> Plan {
         Plan { ann: Annotations::default(), policy: Policy::fair() }
     }
 }
 
-/// A scheduler maps (MXDAG, cluster) to a Plan.
+/// A scheduler maps (MXDAG, cluster) to a [`Plan`].
 pub trait Scheduler {
+    /// Short stable name (bench tables, CLI `--scheduler`).
     fn name(&self) -> &'static str;
+
+    /// Produce the schedule for `dag` on `cluster`.
     fn plan(&self, dag: &MXDag, cluster: &Cluster) -> Plan;
+
+    /// The ready-queue disciplines this scheduler's plans may request
+    /// from the engine (see the module docs). Most schedulers emit a
+    /// single discipline; `MxScheduler` may also fall back to fair
+    /// sharing when its priority plan loses the what-if comparison.
+    fn disciplines(&self) -> &'static [QueueDiscipline];
 }
 
 /// Expand + simulate a plan. The single evaluation entry point used by
@@ -60,6 +101,7 @@ pub fn run(s: &dyn Scheduler, dag: &MXDag, cluster: &Cluster) -> Result<SimResul
 mod tests {
     use super::*;
     use crate::mxdag::MXDag;
+    use crate::workloads::{random_dag, RandomParams};
 
     #[test]
     fn evaluate_fair_plan() {
@@ -80,5 +122,35 @@ mod tests {
         let g = b.finalize().unwrap();
         let r = run(&FairScheduler, &g, &Cluster::uniform(1)).unwrap();
         assert!((r.makespan - 1.0).abs() < 1e-9);
+    }
+
+    /// The contract: every plan a scheduler emits must use one of its
+    /// declared queue disciplines.
+    #[test]
+    fn declared_disciplines_cover_emitted_plans() {
+        let schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(FairScheduler),
+            Box::new(FifoScheduler),
+            Box::new(PackingScheduler),
+            Box::new(CoflowScheduler::new(Grouping::ByDst)),
+            Box::new(MxScheduler::without_pipelining()),
+            Box::new(AltruisticScheduler),
+            Box::new(SelfishScheduler),
+        ];
+        for seed in [1u64, 5, 9] {
+            let p = RandomParams { seed, ..Default::default() };
+            let g = random_dag(&p);
+            let cluster = Cluster::uniform(p.hosts);
+            for s in &schedulers {
+                let plan = s.plan(&g, &cluster);
+                assert!(
+                    s.disciplines().contains(&plan.policy.discipline()),
+                    "{} emitted undeclared discipline {:?} (declares {:?})",
+                    s.name(),
+                    plan.policy.discipline(),
+                    s.disciplines(),
+                );
+            }
+        }
     }
 }

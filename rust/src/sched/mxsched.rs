@@ -16,8 +16,9 @@
 
 use super::{evaluate, Plan, Scheduler};
 use crate::mxdag::{cpm_with, Cpm, MXDag, TaskId, TaskKind};
-use crate::sim::{Annotations, Cluster, Policy, SimKind};
+use crate::sim::{Annotations, Cluster, Policy, QueueDiscipline, SimKind};
 
+/// The MXDAG co-scheduler (Principle 1).
 #[derive(Debug, Clone)]
 pub struct MxScheduler {
     /// Run the greedy pipeline what-if search (candidate tasks ordered by
@@ -160,6 +161,12 @@ impl Scheduler for MxScheduler {
         } else {
             plan
         }
+    }
+
+    /// Critical-path static priorities; may fall back to plain fair
+    /// sharing when the what-if comparison favours it (see `plan`).
+    fn disciplines(&self) -> &'static [QueueDiscipline] {
+        &[QueueDiscipline::PRIORITY, QueueDiscipline::FAIR]
     }
 }
 

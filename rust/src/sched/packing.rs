@@ -9,8 +9,9 @@
 
 use super::{Plan, Scheduler};
 use crate::mxdag::MXDag;
-use crate::sim::{Annotations, Cluster, Policy};
+use crate::sim::{Annotations, Cluster, Policy, QueueDiscipline};
 
+/// The Tetris/Graphene-flavoured packing baseline scheduler.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PackingScheduler;
 
@@ -45,6 +46,10 @@ impl Scheduler for PackingScheduler {
             ann.priorities.insert(t, rank as i64);
         }
         Plan { ann, policy: Policy::priority() }
+    }
+    /// Static priorities (downstream-work rank) fixed at planning time.
+    fn disciplines(&self) -> &'static [QueueDiscipline] {
+        &[QueueDiscipline::PRIORITY]
     }
 }
 

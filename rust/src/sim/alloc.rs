@@ -186,6 +186,13 @@ pub fn priority_fill_res(
 /// *full* capacities: the SEBF bottleneck of a group is its completion
 /// lower bound `max_r load_r / caps0[r]`, so narrow fabric links (e.g.
 /// an oversubscribed aggregation uplink) correctly dominate wide NICs.
+///
+/// This whole-active-set form is the *reference implementation*: the
+/// engine's incremental path keeps the same bounds as ready-queue keys
+/// (`engine::sebf_bound_single` / `engine::sebf_bound_group`) and runs
+/// the identical MADD per queue level — a semantic change here must be
+/// mirrored there (the `prop_queue_equivalence` suite and the engine's
+/// coflow tests guard the pairing).
 pub fn coflow_fill_res(
     tasks: &[TaskRes],
     coflow: &[Option<usize>],

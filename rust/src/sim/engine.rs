@@ -5,18 +5,57 @@
 //! semantics — their whole group is ready (all-or-nothing). At every
 //! event boundary the policy recomputes rates; the engine advances to
 //! the next completion or gate expiry.
+//!
+//! ## Incremental ready queues (§Perf)
+//!
+//! The engine keeps the ready set in two persistent priority-keyed
+//! [`ReadyQueue`]s (compute slots and network flows draw on disjoint
+//! resource classes). Tasks are pushed once when they become ready and
+//! popped once when they finish; per event the engine only
+//!
+//! 1. admits newly ready tasks (dependency completions and gate
+//!    expiries, in *live order* — the order tasks entered the ready
+//!    set, which FIFO slot assignment depends on);
+//! 2. refreshes stale SEBF keys via the
+//!    [`update_key`](ReadyQueue::update_key) invalidation hook (coflow
+//!    bounds shift with remaining bytes; static-priority and FIFO keys
+//!    never go stale);
+//! 3. walks queue levels high → low, allocating rates per level on
+//!    residual capacity, and **stops as soon as every positive-capacity
+//!    resource of the class is saturated** — all lower levels would
+//!    allocate zero, exactly as the old full walk did (a task makes
+//!    progress only if *all* of its resources have headroom, so a level
+//!    whose every task touches a saturated resource is skipped by a
+//!    cheap pre-check without running the filler).
+//!
+//! [`SimConfig::queue`] selects [`QueueKind::Incremental`] (default) or
+//! [`QueueKind::FullResort`], the pre-refactor re-sort-every-event
+//! baseline kept as an equivalence oracle
+//! (`tests/prop_queue_equivalence.rs`) and benchmark baseline
+//! (`benches/sched_scaling.rs`). Both produce identical simulations;
+//! level allocation is order-independent, so the walks are even
+//! bit-for-bit comparable.
 
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
-use super::alloc;
+use super::alloc::{self, TaskRes};
+use super::ready::{f64_ord, BucketQueue, PrioKey, ReadyQueue, ResortQueue};
 use super::spec::{CpuPolicy, Cluster, NetPolicy, Policy, SimDag};
 use crate::mxdag::TaskId;
 
 const EPS: f64 = 1e-9;
+/// Resource-saturation threshold. Must match the allocator's internal
+/// epsilon (`alloc`'s starvation test) so the early-exit pre-check and
+/// the filler agree bit-for-bit on which tasks are starved.
+const ALLOC_EPS: f64 = 1e-12;
 
+/// Simulation failure modes.
 #[derive(Debug)]
 pub enum SimError {
+    /// No task can make progress and no gate is pending.
     Deadlock(f64, usize),
+    /// [`SimConfig::max_events`] exceeded.
     EventLimit(usize),
 }
 
@@ -65,41 +104,191 @@ impl SimResult {
     }
 }
 
+/// Which [`ReadyQueue`] implementation the engine runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Indexed bucket heap + early exit on class saturation (default).
+    Incremental,
+    /// Re-sort the whole ready set every event (pre-refactor baseline;
+    /// identical results, `O(R log R)` per event).
+    FullResort,
+}
+
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub policy: Policy,
     pub max_events: usize,
+    /// Ready-queue implementation (see [`QueueKind`]).
+    pub queue: QueueKind,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { policy: Policy::fair(), max_events: 20_000_000 }
+        SimConfig {
+            policy: Policy::fair(),
+            max_events: 20_000_000,
+            queue: QueueKind::Incremental,
+        }
     }
+}
+
+/// Max-min fill one priority level on residual capacity, with the
+/// starvation pre-check (a task with any exhausted resource would be
+/// frozen with rate 0 in the filler's first round — excluding it up
+/// front leaves every other rate bit-for-bit unchanged). Updates the
+/// class saturation counter for the early-exit test.
+#[allow(clippy::too_many_arguments)]
+fn alloc_level_maxmin(
+    level: &[usize],
+    task_res: &[TaskRes],
+    caps0: &[f64],
+    caps: &mut [f64],
+    users: &mut [f64],
+    sub_res: &mut Vec<TaskRes>,
+    sub_idx: &mut Vec<usize>,
+    sub_rates: &mut Vec<f64>,
+    started: &mut [bool],
+    trace: &mut [TaskTrace],
+    rated: &mut Vec<(usize, f64)>,
+    sat_mark: &mut [bool],
+    sat: &mut usize,
+    now: f64,
+) {
+    sub_res.clear();
+    sub_idx.clear();
+    for &t in level {
+        let starved = task_res[t].iter().any(|r| caps[r] <= ALLOC_EPS);
+        if !starved {
+            sub_idx.push(t);
+            sub_res.push(task_res[t]);
+        }
+    }
+    if sub_idx.is_empty() {
+        return;
+    }
+    sub_rates.clear();
+    sub_rates.resize(sub_idx.len(), 0.0);
+    alloc::maxmin_fill_res(sub_res, caps, sub_rates, users);
+    for (i, &t) in sub_idx.iter().enumerate() {
+        let r = sub_rates[i];
+        if r > EPS {
+            if !started[t] {
+                started[t] = true;
+                trace[t].start = now;
+            }
+            rated.push((t, r));
+        }
+    }
+    for &t in sub_idx.iter() {
+        for r in task_res[t].iter() {
+            if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
+                sat_mark[r] = true;
+                *sat += 1;
+            }
+        }
+    }
+}
+
+/// SEBF bound of a single ungrouped flow: its completion lower bound at
+/// full capacity, `max(rem, max_r rem / caps0[r])`.
+fn sebf_bound_single(t: usize, remaining: &[f64], task_res: &[TaskRes], caps0: &[f64]) -> f64 {
+    let rem = remaining[t];
+    let mut bnd = rem;
+    for r in task_res[t].iter() {
+        if caps0[r] <= ALLOC_EPS {
+            bnd = f64::INFINITY;
+        } else {
+            bnd = bnd.max(rem / caps0[r]);
+        }
+    }
+    bnd
+}
+
+/// SEBF bound of a coflow group over its currently *queued, flow*
+/// members (a coflow tag on a compute task gates readiness but never
+/// contributes network load): `max(max_rem, max_r load_r / caps0[r])` —
+/// narrow fabric links correctly dominate wide NICs.
+/// `load`/`load_touched` are caller scratch (left reset on return).
+#[allow(clippy::too_many_arguments)]
+fn sebf_bound_group(
+    mem: &[usize],
+    queued: &[bool],
+    is_flow: &[bool],
+    remaining: &[f64],
+    task_res: &[TaskRes],
+    caps0: &[f64],
+    load: &mut [f64],
+    load_touched: &mut [bool],
+    touched: &mut Vec<usize>,
+) -> f64 {
+    let mut max_rem = 0.0f64;
+    touched.clear();
+    for &t in mem {
+        if !queued[t] || !is_flow[t] {
+            continue;
+        }
+        max_rem = max_rem.max(remaining[t]);
+        for r in task_res[t].iter() {
+            if !load_touched[r] {
+                load_touched[r] = true;
+                load[r] = 0.0;
+                touched.push(r);
+            }
+            load[r] += remaining[t];
+        }
+    }
+    let mut bnd = max_rem;
+    for &r in touched.iter() {
+        if caps0[r] <= ALLOC_EPS {
+            bnd = f64::INFINITY;
+        } else {
+            bnd = bnd.max(load[r] / caps0[r]);
+        }
+    }
+    for &r in touched.iter() {
+        load_touched[r] = false;
+    }
+    bnd
 }
 
 /// Run the fluid simulation to completion.
 pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimResult, SimError> {
     let n = dag.len();
     let caps0 = cluster.capacities();
+    let n_hosts = cluster.n_hosts();
+    let n_res = caps0.len();
     // §Perf: precompute per-task resource footprints once (topology-aware:
     // a flow's footprint includes the fabric links it crosses); reuse
-    // scratch buffers across events (no allocation in the re-fill loop).
-    let task_res: Vec<alloc::TaskRes> =
+    // scratch buffers across events (no allocation in the hot loop).
+    let task_res: Vec<TaskRes> =
         dag.tasks.iter().map(|t| cluster.task_res(&t.kind)).collect();
-    let mut users_scratch = vec![0.0; caps0.len()];
-    let mut sub_res: Vec<alloc::TaskRes> = Vec::with_capacity(n);
-    let mut sub_aux: Vec<f64> = Vec::with_capacity(n);
-    let mut sub_prios: Vec<i64> = Vec::with_capacity(n);
-    let mut sub_coflow: Vec<Option<usize>> = Vec::with_capacity(n);
-    let mut sub_rates: Vec<f64> = Vec::with_capacity(n);
+    let is_flow_v: Vec<bool> = dag.tasks.iter().map(|t| t.kind.is_flow()).collect();
+
+    // Resource classes are disjoint: computes draw only on cores
+    // (`res_core`), flows only on NICs + fabric links. Count the
+    // positive-capacity resources of each class once — when a level walk
+    // has saturated all of them, every remaining level allocates zero.
+    let mut n_cores_pos = 0usize;
+    let mut n_net_pos = 0usize;
+    for (r, &c) in caps0.iter().enumerate() {
+        if c > ALLOC_EPS {
+            if super::spec::is_core_slot(r, n_hosts) {
+                n_cores_pos += 1;
+            } else {
+                n_net_pos += 1;
+            }
+        }
+    }
+
     let mut remaining: Vec<f64> = dag.tasks.iter().map(|t| t.size).collect();
     let mut indeg: Vec<usize> = dag.preds.iter().map(|p| p.len()).collect();
     let mut done = vec![false; n];
     let mut started = vec![false; n];
     let mut trace = vec![TaskTrace { start: f64::NAN, finish: f64::NAN }; n];
-    let mut n_done = 0;
-    let mut now = 0.0;
-    let mut events = 0;
+    let mut n_done = 0usize;
+    let mut now = 0.0f64;
+    let mut events = 0usize;
+
     // FIFO queue positions, assigned per *logical* task at its first
     // chunk's readiness. Semantics of a blocking send queue + concurrent
     // pipelined streams: single-chunk tasks get strictly increasing
@@ -110,30 +299,119 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     // baseline serialize f1 before f3 but lets case-3's pipelined f1/f3
     // contend.
     //
-    // Encoding: a global slot counter. Assignments happen in
-    // chronological scan order, so time ordering falls out of the
-    // counter; `fifo_base` jumps past every slot of earlier instants so
-    // tasks from different instants can never share a priority level.
-    // (The previous packed `time*1024 + tie.min(1023)` encoding silently
-    // collapsed ≥1023 same-instant tasks into one level.)
+    // Encoding: a global slot counter. Assignments happen in live order
+    // (see `seq` below), so time ordering falls out of the counter;
+    // `fifo_base` jumps past every slot of earlier instants so tasks
+    // from different instants can never share a priority level.
+    let use_fifo = cfg.policy.cpu == CpuPolicy::Fifo || cfg.policy.net == NetPolicy::Fifo;
     let mut fifo_prio_orig: BTreeMap<TaskId, i64> = BTreeMap::new();
     let mut fifo_tie_time: i64 = i64::MIN;
     let mut fifo_tie_count: i64 = 0;
     let mut fifo_base: i64 = 0;
     let mut fifo_max: i64 = 0;
-    let mut was_ready = vec![false; n];
 
-    // coflow membership: group -> all member task ids (static)
-    let mut coflow_members: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-    for (i, t) in dag.tasks.iter().enumerate() {
-        if let Some(g) = t.coflow {
-            coflow_members.entry(g).or_default().push(i);
+    // Coflow state (NetPolicy::Coflow only): group membership with dense
+    // ids in ascending raw-id order — the SEBF tie order is (groups by
+    // raw id, then singleton flows in live order), matching the old
+    // stable-sort path. `group_pending[g]` counts members whose
+    // dependencies are still unmet; the all-or-nothing barrier opens
+    // when it reaches zero, releasing any parked members.
+    let coflow_on = cfg.policy.net == NetPolicy::Coflow;
+    let mut group_of: Vec<Option<usize>> = vec![None; n];
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    if coflow_on {
+        let mut dense: BTreeMap<usize, usize> = BTreeMap::new();
+        for t in dag.tasks.iter() {
+            if let Some(g) = t.coflow {
+                dense.entry(g).or_insert(0);
+            }
+        }
+        for (i, (_, v)) in dense.iter_mut().enumerate() {
+            *v = i;
+        }
+        members = vec![Vec::new(); dense.len()];
+        for (i, t) in dag.tasks.iter().enumerate() {
+            if let Some(g) = t.coflow {
+                let gi = dense[&g];
+                members[gi].push(i);
+                group_of[i] = Some(gi);
+            }
+        }
+    }
+    let n_groups = members.len();
+    let mut group_pending: Vec<usize> = members.iter().map(|m| m.len()).collect();
+    let mut group_open: Vec<bool> = vec![false; n_groups];
+    let mut parked: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+
+    // Live-entry sequence numbers: the order tasks entered the ready
+    // ("live") set. Arrival processing, FIFO slot assignment and
+    // same-instant completion handling all follow this order, which is
+    // exactly the old engine's linear live-vector scan order.
+    let mut seq: Vec<u64> = vec![0; n];
+    let mut next_seq: u64 = 0;
+    // Worklist of tasks whose dependencies are met, awaiting
+    // classification (gate check → gate heap; barrier check → parked;
+    // otherwise enqueue or instant-complete), drained in seq order.
+    let mut arrivals: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    // Gate min-heap: (gate time bits, live seq, task).
+    let mut gates: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+
+    let mut rq_cpu: Box<dyn ReadyQueue> = match cfg.queue {
+        QueueKind::Incremental => Box::new(BucketQueue::with_capacity(n)),
+        QueueKind::FullResort => Box::new(ResortQueue::with_capacity(n)),
+    };
+    let mut rq_net: Box<dyn ReadyQueue> = match cfg.queue {
+        QueueKind::Incremental => Box::new(BucketQueue::with_capacity(n)),
+        QueueKind::FullResort => Box::new(ResortQueue::with_capacity(n)),
+    };
+    let mut queued = vec![false; n];
+
+    // A task's dependencies are met: record its live order, hand it to
+    // the arrival worklist, and update its coflow barrier.
+    macro_rules! on_ready {
+        ($t:expr) => {{
+            let t_ = $t;
+            seq[t_] = next_seq;
+            next_seq += 1;
+            arrivals.push(Reverse((seq[t_], t_)));
+            if coflow_on {
+                if let Some(gi) = group_of[t_] {
+                    group_pending[gi] -= 1;
+                    if group_pending[gi] == 0 {
+                        group_open[gi] = true;
+                        for &m in parked[gi].iter() {
+                            arrivals.push(Reverse((seq[m], m)));
+                        }
+                        parked[gi].clear();
+                    }
+                }
+            }
+        }};
+    }
+
+    for t in 0..n {
+        if indeg[t] == 0 {
+            on_ready!(t);
         }
     }
 
-    // §Perf: incremental live set — tasks whose indeg reached 0 and are
-    // not yet done. Avoids O(n) full scans per event.
-    let mut live: Vec<usize> = (0..n).filter(|&t| indeg[t] == 0).collect();
+    // allocation scratch
+    let mut users_scratch = vec![0.0; n_res];
+    let mut caps = vec![0.0; n_res];
+    let mut sub_res: Vec<TaskRes> = Vec::with_capacity(64);
+    let mut sub_idx: Vec<usize> = Vec::with_capacity(64);
+    let mut sub_rates: Vec<f64> = Vec::with_capacity(64);
+    let mut rated: Vec<(usize, f64)> = Vec::new();
+    let mut completed: Vec<usize> = Vec::new();
+    let mut sat_mark = vec![false; n_res];
+    let mut load = vec![0.0; n_res];
+    let mut load_touched = vec![false; n_res];
+    let mut touched: Vec<usize> = Vec::new();
+    let mut grp_scratch: Vec<usize> = Vec::new();
+    // SEBF key invalidation worklists
+    let mut dirty_groups: Vec<usize> = Vec::new();
+    let mut group_dirty = vec![false; n_groups];
+    let mut dirty_singles: Vec<usize> = Vec::new();
 
     while n_done < n {
         events += 1;
@@ -141,221 +419,336 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             return Err(SimError::EventLimit(events));
         }
 
-        // 1. instantly complete zero-size ready tasks (dummies) — cascades.
-        //    NB: removal must preserve `live` order — FIFO queue positions
-        //    are assigned in readiness-scan order.
-        let mut progressed = true;
-        while progressed {
-            progressed = false;
-            let mut i = 0;
-            while i < live.len() {
-                let t = live[i];
-                if !done[t] && remaining[t] <= EPS && now + EPS >= dag.tasks[t].gate {
-                    done[t] = true;
-                    n_done += 1;
-                    if !started[t] {
-                        started[t] = true;
-                        trace[t].start = now;
-                    }
-                    trace[t].finish = now;
-                    for &s in &dag.succs[t] {
-                        indeg[s] -= 1;
-                        if indeg[s] == 0 {
-                            live.push(s);
-                        }
-                    }
-                    progressed = true;
-                }
-                i += 1;
+        // 1. admit gate-expired tasks back into the arrival stream (their
+        //    original live order is preserved through `seq`)
+        while let Some(&Reverse((_, s, t))) = gates.peek() {
+            if now + EPS >= dag.tasks[t].gate {
+                gates.pop();
+                arrivals.push(Reverse((s, t)));
+            } else {
+                break;
             }
         }
-        live.retain(|&t| !done[t]);
-        if n_done == n {
-            break;
-        }
 
-        // 2. collect ready tasks (live = indeg 0, not done)
-        let mut next_gate = f64::INFINITY;
-        let mut ready: Vec<usize> = Vec::with_capacity(live.len());
-        for idx in 0..live.len() {
-            let t = live[idx];
-            debug_assert!(!done[t] && indeg[t] == 0);
+        // 2. classify arrivals in live order; zero-size tasks complete
+        //    instantly and cascade
+        while let Some(Reverse((_, t))) = arrivals.pop() {
+            if done[t] {
+                continue;
+            }
+            debug_assert_eq!(indeg[t], 0);
             if now + EPS < dag.tasks[t].gate {
-                next_gate = next_gate.min(dag.tasks[t].gate);
+                gates.push(Reverse((f64_ord(dag.tasks[t].gate), seq[t], t)));
                 continue;
             }
-            // coflow all-or-nothing: every member must have indeg 0
-            if cfg.policy.net == NetPolicy::Coflow {
-                if let Some(g) = dag.tasks[t].coflow {
-                    let all_ready = coflow_members[&g]
-                        .iter()
-                        .all(|&m| done[m] || indeg[m] == 0);
-                    if !all_ready {
-                        continue;
-                    }
-                }
-            }
-            if !was_ready[t] {
-                was_ready[t] = true;
-                let orig = dag.tasks[t].orig;
-                fifo_prio_orig.entry(orig).or_insert_with(|| {
-                    let tq = (now * 1e6).round() as i64;
-                    if tq != fifo_tie_time {
-                        fifo_tie_time = tq;
-                        fifo_tie_count = 0;
-                        fifo_base = fifo_max + 1;
-                    }
-                    let tie = if dag.tasks[t].chunk.1 > 1 {
-                        // pipelined stream: concurrent connection — shares
-                        // the slot after the singles issued so far, so
-                        // same-instant streams fair-share each other
-                        fifo_tie_count + 1
-                    } else {
-                        // blocking send: takes the next exclusive slot
-                        fifo_tie_count += 1;
-                        fifo_tie_count
-                    };
-                    let slot = fifo_base + tie;
-                    fifo_max = fifo_max.max(slot);
-                    -slot
-                });
-            }
-            ready.push(t);
-        }
-
-        if ready.is_empty() {
-            if next_gate.is_finite() {
-                now = next_gate;
-                continue;
-            }
-            let stuck = n - n_done;
-            return Err(SimError::Deadlock(now, stuck));
-        }
-
-        // 3. allocate rates
-        let flows: Vec<usize> = ready.iter().copied().filter(|&t| dag.tasks[t].kind.is_flow()).collect();
-        let computes: Vec<usize> =
-            ready.iter().copied().filter(|&t| !dag.tasks[t].kind.is_flow()).collect();
-        let mut caps = caps0.clone();
-        let mut rate = vec![0.0; n];
-
-        // FIFO priority override
-        let effective_prio = |t: usize| -> i64 {
-            let fifo = || fifo_prio_orig.get(&dag.tasks[t].orig).copied().unwrap_or(0);
-            match dag.tasks[t].kind.is_flow() {
-                true if cfg.policy.net == NetPolicy::Fifo => fifo(),
-                false if cfg.policy.cpu == CpuPolicy::Fifo => fifo(),
-                _ => dag.tasks[t].priority,
-            }
-        };
-
-        // compute slots first (independent resources from NICs)
-        {
-            sub_res.clear();
-            sub_res.extend(computes.iter().map(|&t| task_res[t]));
-            sub_rates.clear();
-            sub_rates.resize(computes.len(), 0.0);
-            match cfg.policy.cpu {
-                CpuPolicy::Fair => alloc::maxmin_fill_res(
-                    &sub_res,
-                    &mut caps,
-                    &mut sub_rates,
-                    &mut users_scratch,
-                ),
-                CpuPolicy::Priority | CpuPolicy::Fifo => {
-                    sub_prios.clear();
-                    sub_prios.extend(computes.iter().map(|&t| effective_prio(t)));
-                    alloc::priority_fill_res(
-                        &sub_res,
-                        &sub_prios,
-                        &mut caps,
-                        &mut sub_rates,
-                        &mut users_scratch,
-                    )
-                }
-            }
-            for (i, &t) in computes.iter().enumerate() {
-                rate[t] = sub_rates[i];
-            }
-        }
-        {
-            sub_res.clear();
-            sub_res.extend(flows.iter().map(|&t| task_res[t]));
-            sub_rates.clear();
-            sub_rates.resize(flows.len(), 0.0);
-            match cfg.policy.net {
-                NetPolicy::Fair => alloc::maxmin_fill_res(
-                    &sub_res,
-                    &mut caps,
-                    &mut sub_rates,
-                    &mut users_scratch,
-                ),
-                NetPolicy::Priority | NetPolicy::Fifo => {
-                    sub_prios.clear();
-                    sub_prios.extend(flows.iter().map(|&t| effective_prio(t)));
-                    alloc::priority_fill_res(
-                        &sub_res,
-                        &sub_prios,
-                        &mut caps,
-                        &mut sub_rates,
-                        &mut users_scratch,
-                    )
-                }
-                NetPolicy::Coflow => {
-                    sub_coflow.clear();
-                    sub_coflow.extend(flows.iter().map(|&t| dag.tasks[t].coflow));
-                    sub_aux.clear();
-                    sub_aux.extend(flows.iter().map(|&t| remaining[t]));
-                    alloc::coflow_fill_res(
-                        &sub_res,
-                        &sub_coflow,
-                        &sub_aux,
-                        &caps0,
-                        &mut caps,
-                        &mut sub_rates,
-                    )
-                }
-            }
-            for (i, &t) in flows.iter().enumerate() {
-                rate[t] = sub_rates[i];
-            }
-        }
-
-        // 4. find next event horizon
-        let mut dt = f64::INFINITY;
-        for &t in &ready {
-            if rate[t] > EPS {
+            if remaining[t] <= EPS {
+                // dummy / zero-size: completes at readiness, bypassing the
+                // coflow barrier
+                done[t] = true;
+                n_done += 1;
                 if !started[t] {
                     started[t] = true;
                     trace[t].start = now;
                 }
-                dt = dt.min(remaining[t] / rate[t]);
+                trace[t].finish = now;
+                for &s in &dag.succs[t] {
+                    indeg[s] -= 1;
+                    if indeg[s] == 0 {
+                        on_ready!(s);
+                    }
+                }
+                continue;
+            }
+            if coflow_on {
+                if let Some(gi) = group_of[t] {
+                    if !group_open[gi] {
+                        // all-or-nothing: wait for the whole group
+                        parked[gi].push(t);
+                        continue;
+                    }
+                }
+            }
+            let orig = dag.tasks[t].orig;
+            if use_fifo && !fifo_prio_orig.contains_key(&orig) {
+                let tq = (now * 1e6).round() as i64;
+                if tq != fifo_tie_time {
+                    fifo_tie_time = tq;
+                    fifo_tie_count = 0;
+                    fifo_base = fifo_max + 1;
+                }
+                let tie = if dag.tasks[t].chunk.1 > 1 {
+                    // pipelined stream: concurrent connection — shares
+                    // the slot after the singles issued so far, so
+                    // same-instant streams fair-share each other
+                    fifo_tie_count + 1
+                } else {
+                    // blocking send: takes the next exclusive slot
+                    fifo_tie_count += 1;
+                    fifo_tie_count
+                };
+                let slot = fifo_base + tie;
+                fifo_max = fifo_max.max(slot);
+                fifo_prio_orig.insert(orig, -slot);
+            }
+            // enqueue under the policy's priority key
+            if dag.tasks[t].kind.is_flow() {
+                let key = match cfg.policy.net {
+                    NetPolicy::Fair => PrioKey::LEVEL,
+                    NetPolicy::Priority => PrioKey::from_prio(dag.tasks[t].priority),
+                    NetPolicy::Fifo => PrioKey::from_prio(
+                        fifo_prio_orig.get(&orig).copied().unwrap_or(0),
+                    ),
+                    NetPolicy::Coflow => match group_of[t] {
+                        Some(gi) => {
+                            // placeholder: the group key is refreshed for
+                            // all members right after this drain
+                            if !group_dirty[gi] {
+                                group_dirty[gi] = true;
+                                dirty_groups.push(gi);
+                            }
+                            PrioKey::from_bound_asc(f64::INFINITY, gi as u64)
+                        }
+                        // tie-break singletons by live order (`seq`):
+                        // exactly the per-event active-list order the old
+                        // stable sort fell back to on equal bounds
+                        None => PrioKey::from_bound_asc(
+                            sebf_bound_single(t, &remaining, &task_res, &caps0),
+                            n_groups as u64 + seq[t],
+                        ),
+                    },
+                };
+                queued[t] = true;
+                rq_net.push(t, key);
+            } else {
+                let key = match cfg.policy.cpu {
+                    CpuPolicy::Fair => PrioKey::LEVEL,
+                    CpuPolicy::Priority => PrioKey::from_prio(dag.tasks[t].priority),
+                    CpuPolicy::Fifo => PrioKey::from_prio(
+                        fifo_prio_orig.get(&orig).copied().unwrap_or(0),
+                    ),
+                };
+                queued[t] = true;
+                rq_cpu.push(t, key);
             }
         }
-        if next_gate.is_finite() {
-            dt = dt.min(next_gate - now);
-        }
-        if !dt.is_finite() || dt <= 0.0 {
-            let stuck = n - n_done;
-            return Err(SimError::Deadlock(now, stuck));
+
+        // 2b. key invalidation: refresh SEBF bounds that went stale
+        //     through progress (last event) or new arrivals (this event)
+        if coflow_on && (!dirty_groups.is_empty() || !dirty_singles.is_empty()) {
+            for &gi in dirty_groups.iter() {
+                group_dirty[gi] = false;
+                let bnd = sebf_bound_group(
+                    &members[gi],
+                    &queued,
+                    &is_flow_v,
+                    &remaining,
+                    &task_res,
+                    &caps0,
+                    &mut load,
+                    &mut load_touched,
+                    &mut touched,
+                );
+                let key = PrioKey::from_bound_asc(bnd, gi as u64);
+                for &m in members[gi].iter() {
+                    if queued[m] && is_flow_v[m] {
+                        rq_net.update_key(m, key);
+                    }
+                }
+            }
+            dirty_groups.clear();
+            for &t in dirty_singles.iter() {
+                if queued[t] {
+                    let bnd = sebf_bound_single(t, &remaining, &task_res, &caps0);
+                    rq_net.update_key(
+                        t,
+                        PrioKey::from_bound_asc(bnd, n_groups as u64 + seq[t]),
+                    );
+                }
+            }
+            dirty_singles.clear();
         }
 
-        // 5. advance
-        now += dt;
-        for &t in &ready {
-            if rate[t] > EPS {
-                remaining[t] -= rate[t] * dt;
-                if remaining[t] <= EPS {
-                    remaining[t] = 0.0;
-                    done[t] = true;
-                    n_done += 1;
-                    trace[t].finish = now;
-                    for &s in &dag.succs[t] {
-                        indeg[s] -= 1;
-                        if indeg[s] == 0 {
-                            live.push(s);
+        if n_done == n {
+            break;
+        }
+
+        if rq_cpu.is_empty() && rq_net.is_empty() {
+            // nothing runnable: jump to the next gate expiry or give up
+            if let Some(&Reverse((_, _, tg))) = gates.peek() {
+                now = dag.tasks[tg].gate;
+                continue;
+            }
+            return Err(SimError::Deadlock(now, n - n_done));
+        }
+
+        // 3. allocate rates, walking priority levels high → low on
+        //    residual capacity
+        caps.copy_from_slice(&caps0);
+        rated.clear();
+        for m in sat_mark.iter_mut() {
+            *m = false;
+        }
+        let allow_exit = cfg.queue == QueueKind::Incremental;
+
+        // compute slots first (independent resources from NICs)
+        {
+            let mut sat = 0usize;
+            rq_cpu.for_each_level(&mut |_key, level| {
+                alloc_level_maxmin(
+                    level,
+                    &task_res,
+                    &caps0,
+                    &mut caps,
+                    &mut users_scratch,
+                    &mut sub_res,
+                    &mut sub_idx,
+                    &mut sub_rates,
+                    &mut started,
+                    &mut trace,
+                    &mut rated,
+                    &mut sat_mark,
+                    &mut sat,
+                    now,
+                );
+                !(allow_exit && sat >= n_cores_pos)
+            });
+        }
+        {
+            let mut sat = 0usize;
+            if coflow_on {
+                // each level is one SEBF unit (a coflow group or a
+                // singleton flow); MADD makes all members finish at the
+                // same τ, feasible on residual capacity
+                rq_net.for_each_level(&mut |_key, level| {
+                    grp_scratch.clear();
+                    grp_scratch.extend_from_slice(level);
+                    // canonical member order: keeps both queue kinds (and
+                    // their intra-level orders) bit-for-bit comparable
+                    grp_scratch.sort_unstable();
+                    let mut tau = 0.0f64;
+                    touched.clear();
+                    for &t in grp_scratch.iter() {
+                        tau = tau.max(remaining[t]); // rate ≤ 1 per flow
+                        for r in task_res[t].iter() {
+                            if !load_touched[r] {
+                                load_touched[r] = true;
+                                load[r] = 0.0;
+                                touched.push(r);
+                            }
+                            load[r] += remaining[t];
                         }
                     }
+                    for &r in touched.iter() {
+                        if caps[r] <= ALLOC_EPS {
+                            tau = f64::INFINITY;
+                        } else {
+                            tau = tau.max(load[r] / caps[r]);
+                        }
+                    }
+                    if tau.is_finite() && tau > ALLOC_EPS {
+                        for &t in grp_scratch.iter() {
+                            let rate = remaining[t] / tau;
+                            if rate > EPS {
+                                if !started[t] {
+                                    started[t] = true;
+                                    trace[t].start = now;
+                                }
+                                rated.push((t, rate));
+                            }
+                            for r in task_res[t].iter() {
+                                caps[r] = (caps[r] - rate).max(0.0);
+                            }
+                        }
+                    }
+                    for &r in touched.iter() {
+                        load_touched[r] = false;
+                    }
+                    for &r in touched.iter() {
+                        if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
+                            sat_mark[r] = true;
+                            sat += 1;
+                        }
+                    }
+                    !(allow_exit && sat >= n_net_pos)
+                });
+            } else {
+                rq_net.for_each_level(&mut |_key, level| {
+                    alloc_level_maxmin(
+                        level,
+                        &task_res,
+                        &caps0,
+                        &mut caps,
+                        &mut users_scratch,
+                        &mut sub_res,
+                        &mut sub_idx,
+                        &mut sub_rates,
+                        &mut started,
+                        &mut trace,
+                        &mut rated,
+                        &mut sat_mark,
+                        &mut sat,
+                        now,
+                    );
+                    !(allow_exit && sat >= n_net_pos)
+                });
+            }
+        }
+
+        // 4. next event horizon
+        let mut dt = f64::INFINITY;
+        for &(t, r) in rated.iter() {
+            dt = dt.min(remaining[t] / r);
+        }
+        if let Some(&Reverse((_, _, tg))) = gates.peek() {
+            dt = dt.min(dag.tasks[tg].gate - now);
+        }
+        if !dt.is_finite() || dt <= 0.0 {
+            return Err(SimError::Deadlock(now, n - n_done));
+        }
+
+        // 5. advance; completions are processed in live order so that
+        //    downstream readiness (and FIFO slots) follow the same order
+        //    under either queue kind
+        now += dt;
+        completed.clear();
+        for &(t, r) in rated.iter() {
+            remaining[t] -= r * dt;
+            let finished = remaining[t] <= EPS;
+            if finished {
+                remaining[t] = 0.0;
+                completed.push(t);
+            }
+            if coflow_on && dag.tasks[t].kind.is_flow() {
+                match group_of[t] {
+                    Some(gi) => {
+                        if !group_dirty[gi] {
+                            group_dirty[gi] = true;
+                            dirty_groups.push(gi);
+                        }
+                    }
+                    None => {
+                        if !finished {
+                            dirty_singles.push(t);
+                        }
+                    }
+                }
+            }
+        }
+        completed.sort_unstable_by_key(|&t| seq[t]);
+        for &t in completed.iter() {
+            done[t] = true;
+            n_done += 1;
+            trace[t].finish = now;
+            queued[t] = false;
+            if dag.tasks[t].kind.is_flow() {
+                rq_net.remove(t);
+            } else {
+                rq_cpu.remove(t);
+            }
+            for &s in &dag.succs[t] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    on_ready!(s);
                 }
             }
         }
@@ -435,6 +828,26 @@ mod tests {
         let r = simulate(&d, &Cluster::uniform(3), &cfg).unwrap();
         assert!((r.finish_of(1) - 1.0).abs() < 1e-9);
         assert!((r.finish_of(2) - 2.0).abs() < 1e-9);
+    }
+
+    /// The early exit must be per resource class and per resource: a
+    /// low-priority flow on disjoint NICs keeps running after the top
+    /// level saturates its own links.
+    #[test]
+    fn priority_disjoint_low_level_still_served() {
+        let mut d = SimDag::default();
+        let mut hi = task(SimKind::Flow { src: 0, dst: 1 }, 1.0);
+        hi.orig = 1;
+        hi.priority = 10;
+        let mut lo = task(SimKind::Flow { src: 2, dst: 3 }, 1.0);
+        lo.orig = 2;
+        lo.priority = 1;
+        d.push(hi);
+        d.push(lo);
+        let cfg = SimConfig { policy: Policy::priority(), ..Default::default() };
+        let r = simulate(&d, &Cluster::uniform(4), &cfg).unwrap();
+        assert!((r.finish_of(1) - 1.0).abs() < 1e-9);
+        assert!((r.finish_of(2) - 1.0).abs() < 1e-9, "disjoint flow must run concurrently");
     }
 
     #[test]
@@ -539,7 +952,7 @@ mod tests {
         assert!((r.makespan - n as f64).abs() < 1e-6);
         // strict serialization: the k-th flow to finish does so at k
         let mut finishes: Vec<f64> = (0..n).map(|i| r.finish_of(i)).collect();
-        finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        finishes.sort_by(f64::total_cmp);
         for (k, f) in finishes.iter().enumerate() {
             assert!(
                 (f - (k + 1) as f64).abs() < 1e-6,
@@ -619,5 +1032,82 @@ mod tests {
         let r1 = simulate(&build(1.0), &Cluster::uniform(2), &SimConfig::default()).unwrap();
         let r2 = simulate(&build(2.0), &Cluster::uniform(2), &SimConfig::default()).unwrap();
         assert!(r2.makespan > r1.makespan);
+    }
+
+    /// A mixed DAG (priorities, gates, a shared NIC) must produce the
+    /// same events and traces under both queue kinds — the unit-level
+    /// slice of the `prop_queue_equivalence` oracle.
+    #[test]
+    fn queue_kinds_agree_on_mixed_dag() {
+        let mut d = SimDag::default();
+        let a = d.push({ let mut t = task(SimKind::Compute { host: 0 }, 1.5); t.orig = 1; t });
+        let f1 = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 2.0);
+            t.orig = 2;
+            t.priority = 5;
+            t
+        });
+        let f2 = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.priority = 1;
+            t.gate = 0.5;
+            t
+        });
+        let b = d.push({ let mut t = task(SimKind::Compute { host: 1 }, 1.0); t.orig = 4; t });
+        d.dep(a, f1);
+        d.dep(f1, b);
+        let _ = f2;
+        let cluster = Cluster::uniform(3);
+        for policy in [Policy::fair(), Policy::priority(), Policy::fifo()] {
+            let full = simulate(
+                &d,
+                &cluster,
+                &SimConfig { policy, queue: QueueKind::FullResort, ..Default::default() },
+            )
+            .unwrap();
+            let inc = simulate(
+                &d,
+                &cluster,
+                &SimConfig { policy, queue: QueueKind::Incremental, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(full.events, inc.events, "{policy:?}");
+            assert!((full.makespan - inc.makespan).abs() < 1e-12, "{policy:?}");
+            for i in 0..d.len() {
+                assert!((full.trace[i].finish - inc.trace[i].finish).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// SEBF keys must be refreshed as remaining bytes drain: a big
+    /// coflow that becomes the smallest-bound group mid-run preempts.
+    #[test]
+    fn coflow_key_invalidation_reorders_groups() {
+        // Group A (size 3) runs alone from t=0; at t=2.5 group B
+        // (size 1) arrives behind a compute. A has 0.5 remaining — its
+        // bound (0.5) now beats B's (1.0), so A keeps the NIC and
+        // finishes at 3; B follows at 4. Without invalidation A's stale
+        // bound (3.0) would let B preempt.
+        let mut d = SimDag::default();
+        let c = d.push({ let mut t = task(SimKind::Compute { host: 3 }, 2.5); t.orig = 1; t });
+        let fa = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 3.0);
+            t.orig = 2;
+            t.coflow = Some(7);
+            t
+        });
+        let fb = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.coflow = Some(9);
+            t
+        });
+        d.dep(c, fb);
+        let _ = fa;
+        let cfg = SimConfig { policy: Policy::coflow(), ..Default::default() };
+        let r = simulate(&d, &Cluster::uniform(4), &cfg).unwrap();
+        assert!((r.finish_of(2) - 3.0).abs() < 1e-9, "A finishes first: {}", r.finish_of(2));
+        assert!((r.finish_of(3) - 4.0).abs() < 1e-9, "B follows: {}", r.finish_of(3));
     }
 }

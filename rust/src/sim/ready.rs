@@ -1,0 +1,470 @@
+//! The incremental ready-queue subsystem: the data structure side of the
+//! engine ↔ scheduler contract (see `docs/ARCHITECTURE.md`).
+//!
+//! The engine keeps every *ready* task (all predecessors finished, gate
+//! passed, coflow barrier open) in a priority-keyed [`ReadyQueue`] and,
+//! at each event, walks the queue's levels from highest key downwards,
+//! handing each level to the rate allocator. Two implementations back
+//! the same trait:
+//!
+//! * [`BucketQueue`] — the production structure: an indexed bucket heap
+//!   (one bucket per distinct key, ordered in a B-tree, with a per-task
+//!   slot index for O(1) membership updates). Push / remove /
+//!   [`update_key`](ReadyQueue::update_key) cost `O(log L)` in the
+//!   number of *distinct levels* `L`, and an event that only needs the
+//!   top levels never touches the rest — this is what makes strict
+//!   priority scheduling `O(touched)` per event instead of a full
+//!   re-sort of the ready set.
+//! * [`ResortQueue`] — the pre-refactor baseline, kept as the oracle:
+//!   an unordered vector that is fully re-sorted on every
+//!   [`for_each_level`](ReadyQueue::for_each_level) walk, i.e. the old
+//!   `O(R log R)`-per-event behaviour. Property tests assert the two
+//!   produce identical level sequences (`tests` below) and identical
+//!   simulations (`tests/prop_queue_equivalence.rs`).
+//!
+//! ## Keys
+//!
+//! A [`PrioKey`] is a 128-bit totally ordered key; **larger keys pop
+//! first**. Each sharing policy maps its notion of urgency into one:
+//!
+//! | policy            | key                                              | invalidation |
+//! |-------------------|--------------------------------------------------|--------------|
+//! | fair              | [`PrioKey::LEVEL`] (one shared level)            | never        |
+//! | static priority   | [`PrioKey::from_prio`] of the task priority      | never        |
+//! | FIFO              | [`PrioKey::from_prio`] of `-queue_slot`          | never        |
+//! | coflow (SEBF)     | [`PrioKey::from_bound_asc`] of the group bound   | every time a member's remaining bytes change |
+//!
+//! Policies whose keys drift as the simulation progresses (SEBF
+//! remaining-bytes; altruistic leftover-bandwidth follow-ons) must call
+//! [`ReadyQueue::update_key`] — the explicit *key invalidation hook* —
+//! whenever the state a key was derived from changes. The engine does
+//! this for SEBF after every progress step.
+
+use std::cmp::Reverse;
+use std::collections::BTreeMap;
+
+const SIGN: u64 = 1 << 63;
+
+/// Order-preserving map from the `f64` total order onto `u64`
+/// (`a.total_cmp(&b) == f64_ord(a).cmp(&f64_ord(b))`).
+pub(crate) fn f64_ord(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | SIGN
+    }
+}
+
+/// A totally ordered ready-queue key. Larger keys pop first; tasks with
+/// equal keys form one *level* and are rate-shared by the allocator as a
+/// unit. `tie` refines `primary` where a policy needs a deterministic
+/// strict order (e.g. one level per coflow group).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PrioKey {
+    /// Primary ordering component (policy urgency).
+    pub primary: u64,
+    /// Deterministic tie-break (0 where levels may merge).
+    pub tie: u64,
+}
+
+impl PrioKey {
+    /// The single shared level used by fair (no-priority) policies.
+    pub const LEVEL: PrioKey = PrioKey { primary: 0, tie: 0 };
+
+    /// Key for a static integer priority: higher priority pops first.
+    pub fn from_prio(p: i64) -> PrioKey {
+        PrioKey { primary: (p as u64) ^ SIGN, tie: 0 }
+    }
+
+    /// Key for an ascending `f64` bound (SEBF): *smaller* bounds pop
+    /// first; equal bounds order by ascending `ord` (each distinct
+    /// `(bound, ord)` pair is its own level).
+    pub fn from_bound_asc(bound: f64, ord: u64) -> PrioKey {
+        PrioKey { primary: !f64_ord(bound), tie: !ord }
+    }
+}
+
+/// How a policy keys the ready queue — the declarative half of the
+/// scheduler ↔ engine contract (`Scheduler::disciplines` declares which
+/// of these a scheduler's plans may request; `Policy::discipline` maps a
+/// concrete plan to one).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Keying {
+    /// No ordering: every ready task shares one level (max-min fair).
+    SingleLevel,
+    /// Static per-task integer priorities fixed at planning time
+    /// (critical-path rank, packing score). Keys never go stale.
+    StaticPriority,
+    /// Arrival-order slots assigned at first readiness (blocking send
+    /// queue semantics). Keys are assigned once, then never go stale.
+    FifoArrival,
+    /// Coflow SEBF: one level per group, keyed by the group's
+    /// bottleneck-completion bound over *remaining* bytes. Keys go stale
+    /// on every progress step and must be re-derived via the
+    /// [`ReadyQueue::update_key`] invalidation hook.
+    SebfGroups,
+}
+
+impl Keying {
+    /// Whether keys under this discipline can go stale while a task sits
+    /// in the queue (and thus require `update_key` calls).
+    pub fn dynamic(&self) -> bool {
+        matches!(self, Keying::SebfGroups)
+    }
+}
+
+/// The (cpu, net) keying pair a concrete [`Policy`](super::spec::Policy)
+/// requests from the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueDiscipline {
+    /// Keying of the compute-slot queue.
+    pub cpu: Keying,
+    /// Keying of the network-flow queue.
+    pub net: Keying,
+}
+
+impl QueueDiscipline {
+    /// Discipline of [`Policy::fair`](super::spec::Policy::fair).
+    pub const FAIR: QueueDiscipline =
+        QueueDiscipline { cpu: Keying::SingleLevel, net: Keying::SingleLevel };
+    /// Discipline of [`Policy::priority`](super::spec::Policy::priority).
+    pub const PRIORITY: QueueDiscipline =
+        QueueDiscipline { cpu: Keying::StaticPriority, net: Keying::StaticPriority };
+    /// Discipline of [`Policy::fifo`](super::spec::Policy::fifo).
+    pub const FIFO: QueueDiscipline =
+        QueueDiscipline { cpu: Keying::FifoArrival, net: Keying::FifoArrival };
+    /// Discipline of [`Policy::coflow`](super::spec::Policy::coflow)
+    /// (fair compute slots, SEBF network).
+    pub const COFLOW: QueueDiscipline =
+        QueueDiscipline { cpu: Keying::SingleLevel, net: Keying::SebfGroups };
+
+    /// Whether any component requires key invalidation support.
+    pub fn dynamic(&self) -> bool {
+        self.cpu.dynamic() || self.net.dynamic()
+    }
+}
+
+/// A priority-keyed multiset of ready tasks, iterated level by level in
+/// descending key order.
+///
+/// Contract (shared by every implementation):
+/// * a task is in the queue at most once; `push` requires absence,
+///   `remove`/`update_key` require presence (checked with debug
+///   assertions, tolerated in release);
+/// * `for_each_level` visits each distinct key once, highest first,
+///   passing all member tasks of that level; the visitor returns
+///   `false` to signal that every remaining (lower-keyed) task would
+///   receive a zero allocation — implementations *may* stop early then,
+///   but are free to keep visiting (the baseline [`ResortQueue`] does,
+///   faithfully reproducing the old full-walk cost);
+/// * the *membership* of each level is identical across implementations;
+///   the order of tasks *within* a level is unspecified (rate allocation
+///   within a level is order-independent).
+pub trait ReadyQueue {
+    /// Insert `task` with `key`. The task must not already be queued.
+    fn push(&mut self, task: usize, key: PrioKey);
+    /// Remove `task` (no-op if absent).
+    fn remove(&mut self, task: usize);
+    /// Key invalidation hook: re-key an already-queued task after the
+    /// state its key derives from changed (no-op if absent or unchanged).
+    fn update_key(&mut self, task: usize, key: PrioKey);
+    /// Number of queued tasks.
+    fn len(&self) -> usize;
+    /// Whether the queue is empty.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Visit levels in descending key order (see trait docs).
+    fn for_each_level(&mut self, visit: &mut dyn FnMut(PrioKey, &[usize]) -> bool);
+}
+
+/// Indexed bucket heap: the incremental [`ReadyQueue`].
+///
+/// One `Vec` bucket per distinct key, ordered descending in a B-tree;
+/// `pos[task]` holds the task's slot inside its bucket so removal is a
+/// swap-remove plus an index fix-up. All operations are `O(log L)` with
+/// `L` = number of distinct keys currently present.
+#[derive(Debug, Default)]
+pub struct BucketQueue {
+    buckets: BTreeMap<Reverse<PrioKey>, Vec<usize>>,
+    key_of: Vec<PrioKey>,
+    pos: Vec<usize>,
+    present: Vec<bool>,
+    len: usize,
+}
+
+const ABSENT: usize = usize::MAX;
+
+impl BucketQueue {
+    /// Queue over task ids `0..n`.
+    pub fn with_capacity(n: usize) -> BucketQueue {
+        BucketQueue {
+            buckets: BTreeMap::new(),
+            key_of: vec![PrioKey::LEVEL; n],
+            pos: vec![ABSENT; n],
+            present: vec![false; n],
+            len: 0,
+        }
+    }
+}
+
+impl ReadyQueue for BucketQueue {
+    fn push(&mut self, task: usize, key: PrioKey) {
+        debug_assert!(!self.present[task], "task {task} already queued");
+        let bucket = self.buckets.entry(Reverse(key)).or_default();
+        self.pos[task] = bucket.len();
+        bucket.push(task);
+        self.key_of[task] = key;
+        self.present[task] = true;
+        self.len += 1;
+    }
+
+    fn remove(&mut self, task: usize) {
+        if !self.present[task] {
+            return;
+        }
+        let key = self.key_of[task];
+        let i = self.pos[task];
+        let bucket = self.buckets.get_mut(&Reverse(key)).expect("bucket of queued task");
+        bucket.swap_remove(i);
+        if i < bucket.len() {
+            let moved = bucket[i];
+            self.pos[moved] = i;
+        }
+        if bucket.is_empty() {
+            self.buckets.remove(&Reverse(key));
+        }
+        self.pos[task] = ABSENT;
+        self.present[task] = false;
+        self.len -= 1;
+    }
+
+    fn update_key(&mut self, task: usize, key: PrioKey) {
+        if !self.present[task] || self.key_of[task] == key {
+            return;
+        }
+        self.remove(task);
+        self.push(task, key);
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn for_each_level(&mut self, visit: &mut dyn FnMut(PrioKey, &[usize]) -> bool) {
+        for (&Reverse(key), bucket) in self.buckets.iter() {
+            if !visit(key, bucket) {
+                break;
+            }
+        }
+    }
+}
+
+/// Full re-sort baseline: an unordered vector, sorted from scratch on
+/// every [`for_each_level`](ReadyQueue::for_each_level) walk — the
+/// pre-refactor `O(R log R)`-per-event behaviour, kept as the
+/// equivalence oracle and the benchmark baseline. It deliberately
+/// ignores the visitor's early-exit hint (the old path always allocated
+/// every level).
+#[derive(Debug, Default)]
+pub struct ResortQueue {
+    items: Vec<usize>,
+    key_of: Vec<PrioKey>,
+    pos: Vec<usize>,
+    scratch: Vec<usize>,
+}
+
+impl ResortQueue {
+    /// Queue over task ids `0..n`.
+    pub fn with_capacity(n: usize) -> ResortQueue {
+        ResortQueue {
+            items: Vec::new(),
+            key_of: vec![PrioKey::LEVEL; n],
+            pos: vec![ABSENT; n],
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl ReadyQueue for ResortQueue {
+    fn push(&mut self, task: usize, key: PrioKey) {
+        debug_assert!(self.pos[task] == ABSENT, "task {task} already queued");
+        self.pos[task] = self.items.len();
+        self.items.push(task);
+        self.key_of[task] = key;
+    }
+
+    fn remove(&mut self, task: usize) {
+        let i = self.pos[task];
+        if i == ABSENT {
+            return;
+        }
+        self.items.swap_remove(i);
+        if i < self.items.len() {
+            let moved = self.items[i];
+            self.pos[moved] = i;
+        }
+        self.pos[task] = ABSENT;
+    }
+
+    fn update_key(&mut self, task: usize, key: PrioKey) {
+        if self.pos[task] != ABSENT {
+            self.key_of[task] = key;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn for_each_level(&mut self, visit: &mut dyn FnMut(PrioKey, &[usize]) -> bool) {
+        // the old path: re-sort the whole ready set, then walk every level
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        scratch.extend_from_slice(&self.items);
+        let key_of = &self.key_of;
+        scratch.sort_unstable_by(|&a, &b| {
+            key_of[b].cmp(&key_of[a]).then_with(|| a.cmp(&b))
+        });
+        let mut i = 0;
+        while i < scratch.len() {
+            let key = key_of[scratch[i]];
+            let mut j = i + 1;
+            while j < scratch.len() && key_of[scratch[j]] == key {
+                j += 1;
+            }
+            // early-exit hint deliberately ignored (see type docs)
+            let _ = visit(key, &scratch[i..j]);
+            i = j;
+        }
+        self.scratch = scratch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn levels_of(q: &mut dyn ReadyQueue) -> Vec<(PrioKey, Vec<usize>)> {
+        let mut out = Vec::new();
+        q.for_each_level(&mut |key, level| {
+            let mut tasks = level.to_vec();
+            tasks.sort_unstable();
+            out.push((key, tasks));
+            true
+        });
+        out
+    }
+
+    #[test]
+    fn prio_key_orderings() {
+        // higher integer priority pops first
+        assert!(PrioKey::from_prio(10) > PrioKey::from_prio(1));
+        assert!(PrioKey::from_prio(0) > PrioKey::from_prio(-5));
+        assert!(PrioKey::from_prio(i64::MAX) > PrioKey::from_prio(i64::MIN));
+        // smaller SEBF bound pops first
+        assert!(PrioKey::from_bound_asc(1.0, 0) > PrioKey::from_bound_asc(2.0, 0));
+        assert!(PrioKey::from_bound_asc(0.0, 0) > PrioKey::from_bound_asc(1e-12, 0));
+        // infinity pops last
+        assert!(PrioKey::from_bound_asc(1e300, 0) > PrioKey::from_bound_asc(f64::INFINITY, 0));
+        // equal bounds: smaller ordinal pops first
+        assert!(PrioKey::from_bound_asc(1.0, 0) > PrioKey::from_bound_asc(1.0, 1));
+    }
+
+    #[test]
+    fn bucket_levels_descend_and_group() {
+        let mut q = BucketQueue::with_capacity(8);
+        q.push(0, PrioKey::from_prio(1));
+        q.push(1, PrioKey::from_prio(5));
+        q.push(2, PrioKey::from_prio(5));
+        q.push(3, PrioKey::from_prio(-2));
+        assert_eq!(q.len(), 4);
+        let lv = levels_of(&mut q);
+        assert_eq!(lv.len(), 3);
+        assert_eq!(lv[0].1, vec![1, 2]);
+        assert_eq!(lv[1].1, vec![0]);
+        assert_eq!(lv[2].1, vec![3]);
+    }
+
+    #[test]
+    fn bucket_remove_and_update() {
+        let mut q = BucketQueue::with_capacity(8);
+        for t in 0..5 {
+            q.push(t, PrioKey::from_prio(t as i64));
+        }
+        q.remove(2);
+        q.remove(2); // idempotent
+        q.update_key(0, PrioKey::from_prio(100));
+        assert_eq!(q.len(), 4);
+        let lv = levels_of(&mut q);
+        assert_eq!(lv[0].1, vec![0]); // re-keyed to the top
+        assert!(lv.iter().all(|(_, ts)| !ts.contains(&2)));
+    }
+
+    #[test]
+    fn bucket_early_exit_stops() {
+        let mut q = BucketQueue::with_capacity(8);
+        for t in 0..5 {
+            q.push(t, PrioKey::from_prio(t as i64));
+        }
+        let mut seen = 0;
+        q.for_each_level(&mut |_, _| {
+            seen += 1;
+            seen < 2
+        });
+        assert_eq!(seen, 2);
+    }
+
+    /// The equivalence oracle at the data-structure level: under a long
+    /// random operation sequence both queues expose exactly the same
+    /// level sequence (same keys, same membership, same order).
+    #[test]
+    fn bucket_matches_resort_under_random_ops() {
+        let mut rng = Rng::new(0xDA6);
+        let n = 64;
+        let mut a = BucketQueue::with_capacity(n);
+        let mut b = ResortQueue::with_capacity(n);
+        let mut queued = vec![false; n];
+        for _ in 0..2000 {
+            let t = rng.below(n);
+            let key = PrioKey {
+                primary: rng.below(8) as u64, // few levels: heavy collisions
+                tie: rng.below(3) as u64,
+            };
+            match rng.below(4) {
+                0 | 1 => {
+                    if !queued[t] {
+                        a.push(t, key);
+                        b.push(t, key);
+                        queued[t] = true;
+                    }
+                }
+                2 => {
+                    a.remove(t);
+                    b.remove(t);
+                    queued[t] = false;
+                }
+                _ => {
+                    if queued[t] {
+                        a.update_key(t, key);
+                        b.update_key(t, key);
+                    }
+                }
+            }
+            assert_eq!(a.len(), b.len());
+        }
+        assert_eq!(levels_of(&mut a), levels_of(&mut b));
+    }
+
+    #[test]
+    fn discipline_constants_flag_dynamics() {
+        assert!(!QueueDiscipline::FAIR.dynamic());
+        assert!(!QueueDiscipline::PRIORITY.dynamic());
+        assert!(!QueueDiscipline::FIFO.dynamic());
+        assert!(QueueDiscipline::COFLOW.dynamic());
+        assert!(Keying::SebfGroups.dynamic());
+        assert!(!Keying::FifoArrival.dynamic());
+    }
+}

@@ -5,6 +5,7 @@ use crate::mxdag::TaskId;
 use crate::util::json::{Json, JsonError};
 
 use super::alloc::TaskRes;
+use super::ready::{Keying, QueueDiscipline};
 use super::topology::Topology;
 
 /// One host: compute slots plus a full-duplex NIC.
@@ -227,6 +228,12 @@ pub fn res_up(h: usize) -> usize {
 pub fn res_down(h: usize) -> usize {
     3 * h + 2
 }
+/// Whether arena slot `r` is a compute core (vs NIC/fabric). The
+/// classifier lives here, next to the layout it encodes, so engine-side
+/// resource-class logic cannot drift from [`Cluster::capacities`].
+pub fn is_core_slot(r: usize, n_hosts: usize) -> bool {
+    r < 3 * n_hosts && r % 3 == 0
+}
 
 /// Physical task kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -342,6 +349,25 @@ impl Policy {
     pub fn coflow() -> Policy {
         Policy { net: NetPolicy::Coflow, cpu: CpuPolicy::Fair }
     }
+
+    /// How this policy keys the engine's ready queues — the concrete
+    /// half of the scheduler ↔ engine contract (see
+    /// [`QueueDiscipline`] and `Scheduler::disciplines`).
+    pub fn discipline(&self) -> QueueDiscipline {
+        QueueDiscipline {
+            cpu: match self.cpu {
+                CpuPolicy::Fair => Keying::SingleLevel,
+                CpuPolicy::Priority => Keying::StaticPriority,
+                CpuPolicy::Fifo => Keying::FifoArrival,
+            },
+            net: match self.net {
+                NetPolicy::Fair => Keying::SingleLevel,
+                NetPolicy::Priority => Keying::StaticPriority,
+                NetPolicy::Fifo => Keying::FifoArrival,
+                NetPolicy::Coflow => Keying::SebfGroups,
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -388,6 +414,14 @@ mod tests {
         d.dep(a, b);
         assert_eq!(d.succs[a], vec![b]);
         assert_eq!(d.preds[b], vec![a]);
+    }
+
+    #[test]
+    fn policy_disciplines_match_constants() {
+        assert_eq!(Policy::fair().discipline(), QueueDiscipline::FAIR);
+        assert_eq!(Policy::priority().discipline(), QueueDiscipline::PRIORITY);
+        assert_eq!(Policy::fifo().discipline(), QueueDiscipline::FIFO);
+        assert_eq!(Policy::coflow().discipline(), QueueDiscipline::COFLOW);
     }
 
     #[test]

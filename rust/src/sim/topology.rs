@@ -10,6 +10,46 @@
 //! bit-for-bit identical, so `BigSwitch` reproduces the pre-refactor
 //! engine exactly; fabric resources are appended after the `3 × hosts`
 //! per-host slots.
+//!
+//! ## The `Topology` JSON schema
+//!
+//! A topology is a JSON object tagged by `"kind"`; it appears either
+//! standalone (the value accepted by `Topology::from_json`) or as the
+//! `"topology"` key of a cluster object in a `mxdag simulate --dag`
+//! scenario file. The three kinds and their fields:
+//!
+//! ```json
+//! {"kind": "bigswitch"}
+//! {"kind": "oversubscribed", "racks": 2, "ratio": 4}
+//! {"kind": "fabrics", "k": 2, "trunk": 0.5, "select": "bysrc"}
+//! ```
+//!
+//! * `racks` — positive integer ≤ 1e6; hosts are block-partitioned into
+//!   this many leaves.
+//! * `ratio` — positive finite float; each leaf's aggregation link
+//!   carries `Σ NIC / ratio` per direction (`1` = non-blocking).
+//! * `k` — positive integer ≤ 1e6 parallel trunks.
+//! * `trunk` — positive finite float capacity per trunk.
+//! * `select` — `"hash"` (default when omitted) or `"bysrc"`.
+//!
+//! A worked cluster file fragment, equivalent to the CLI spec
+//! `--topology oversub:2:4` on eight default hosts:
+//!
+//! ```json
+//! {
+//!   "tasks": [],
+//!   "edges": [],
+//!   "cluster": {
+//!     "hosts": 8,
+//!     "topology": {"kind": "oversubscribed", "racks": 2, "ratio": 4}
+//!   }
+//! }
+//! ```
+//!
+//! With eight unit-NIC hosts in two racks at ratio 4, each rack's
+//! aggregation link gets capacity `4 / 4 = 1` per direction — resources
+//! `24..=27` in the flat arena (after the `3 × 8` per-host slots), which
+//! a cross-rack flow occupies in addition to its endpoint NICs.
 
 use crate::util::json::{Json, JsonError};
 
@@ -25,6 +65,7 @@ pub enum PathSelect {
 }
 
 impl PathSelect {
+    /// The trunk (of `k`) carrying a `(src, dst)` flow under this rule.
     pub fn pick(&self, src: usize, dst: usize, k: usize) -> usize {
         debug_assert!(k > 0);
         match self {
@@ -33,6 +74,7 @@ impl PathSelect {
         }
     }
 
+    /// Stable CLI/JSON spelling of this rule (`hash` / `bysrc`).
     pub fn label(&self) -> &'static str {
         match self {
             PathSelect::Hash => "hash",

@@ -88,7 +88,7 @@ impl Json {
             .get(key)
             .ok_or_else(|| JsonError::MissingKey(key.to_string()))
     }
-    /// Convenience: object → Vec<usize> under key.
+    /// Convenience: object → `Vec<usize>` under key.
     pub fn usize_vec(&self) -> Result<Vec<usize>, JsonError> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }

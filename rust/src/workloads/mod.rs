@@ -1,13 +1,14 @@
 //! Workload generators: the paper's figure scenarios (Figs. 1–3, 6, 7),
 //! the Wukong DAG of Fig. 2(b), oversubscribed-fabric scenarios, plus
-//! general map-reduce / DDL / random DAG generators used by benches and
-//! property tests.
+//! general map-reduce / DDL / random / wide-fanout DAG generators used
+//! by benches and property tests.
 
 pub mod ddl;
 pub mod figs;
 pub mod mapreduce;
 pub mod oversub;
 pub mod random;
+pub mod scale;
 pub mod wukong;
 
 pub use ddl::{ddl_dag, DdlParams};
@@ -15,4 +16,5 @@ pub use figs::{fig1_dag, fig2a_dag, fig3_dag, fig3_pipeline_sets, fig7_jobs};
 pub use mapreduce::{mapreduce_dag, MapReduceParams};
 pub use oversub::{cross_rack_flows, incast_with_chain, two_rack_cluster};
 pub use random::{random_dag, RandomParams};
+pub use scale::{branches_for_tasks, wide_fanout, FanoutParams};
 pub use wukong::{wukong_dag, WukongCoflows};

@@ -1,0 +1,108 @@
+//! Wide-fanout scale workload: the ready-queue hot path.
+//!
+//! `branches` independent `compute → flow → compute` chains fan out
+//! from the implicit `v_S`, so thousands of tasks are ready
+//! simultaneously and the engine's per-event scheduling cost — not the
+//! DAG structure — dominates. Sources are spread uniformly over the
+//! hosts and every flow goes to the next host on a ring (the
+//! neighbour-exchange / ring-allreduce pattern), so each uplink
+//! saturates together with its paired downlink and every core and NIC
+//! stays contended for most of the run — which is what lets the
+//! incremental ready queue's saturation early exit stop after
+//! `O(resources)` levels instead of walking all `O(tasks)` of them.
+//! Used by `benches/sched_scaling.rs` at 1k / 5k / 10k tasks.
+
+use crate::mxdag::MXDag;
+use crate::util::rng::Rng;
+
+/// Parameters for [`wide_fanout`].
+#[derive(Debug, Clone)]
+pub struct FanoutParams {
+    /// Number of `compute → flow → compute` chains (3 real tasks each).
+    pub branches: usize,
+    /// Hosts the endpoints are spread over (≥ 2).
+    pub hosts: usize,
+    /// Minimum task size.
+    pub min_size: f64,
+    /// Maximum task size (sizes are uniform in `[min_size, max_size)`;
+    /// distinct sizes keep critical-path priorities mostly distinct,
+    /// which is the worst case for a sort-based scheduler).
+    pub max_size: f64,
+    /// PRNG seed (generation is fully deterministic per seed).
+    pub seed: u64,
+}
+
+impl Default for FanoutParams {
+    fn default() -> Self {
+        FanoutParams { branches: 64, hosts: 16, min_size: 0.5, max_size: 2.0, seed: 11 }
+    }
+}
+
+/// Number of branches that yields roughly `tasks` real tasks.
+pub fn branches_for_tasks(tasks: usize) -> usize {
+    (tasks / 3).max(1)
+}
+
+/// Generate the wide-fanout DAG (3 × `branches` real tasks).
+pub fn wide_fanout(p: &FanoutParams) -> MXDag {
+    assert!(p.hosts >= 2 && p.branches >= 1, "need hosts >= 2 and branches >= 1");
+    let mut rng = Rng::new(p.seed);
+    let mut b = MXDag::builder();
+    for i in 0..p.branches {
+        let src = rng.below(p.hosts);
+        let dst = (src + 1) % p.hosts; // ring neighbour: up/down saturate in pairs
+        let a = b.compute(&format!("a{i}"), src, rng.range_f64(p.min_size, p.max_size));
+        let f = b.flow(&format!("f{i}"), src, dst, rng.range_f64(p.min_size, p.max_size));
+        let c = b.compute(&format!("c{i}"), dst, rng.range_f64(p.min_size, p.max_size));
+        b.dep(a, f);
+        b.dep(f, c);
+    }
+    b.finalize().expect("independent chains cannot form a cycle")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mxdag::TaskKind;
+    use crate::sched::{run, FairScheduler, FifoScheduler, MxScheduler};
+    use crate::sim::Cluster;
+
+    #[test]
+    fn task_count_and_determinism() {
+        let p = FanoutParams { branches: 40, ..Default::default() };
+        let g1 = wide_fanout(&p);
+        let g2 = wide_fanout(&p);
+        assert_eq!(g1.real_tasks().count(), 120);
+        assert_eq!(g1.len(), g2.len());
+        assert_eq!(g1.n_edges(), g2.n_edges());
+        assert_eq!(branches_for_tasks(10_000), 3333);
+        assert_eq!(branches_for_tasks(1), 1);
+    }
+
+    #[test]
+    fn flows_connect_distinct_hosts_in_range() {
+        let p = FanoutParams { branches: 200, hosts: 7, ..Default::default() };
+        let g = wide_fanout(&p);
+        for t in g.tasks() {
+            if let TaskKind::Flow { src, dst } = t.kind {
+                assert_ne!(src, dst);
+                assert!(src < 7 && dst < 7);
+            }
+        }
+    }
+
+    #[test]
+    fn schedulers_complete_fanout() {
+        let p = FanoutParams { branches: 50, hosts: 4, seed: 3, ..Default::default() };
+        let g = wide_fanout(&p);
+        let cluster = Cluster::uniform(p.hosts);
+        for r in [
+            run(&FairScheduler, &g, &cluster),
+            run(&FifoScheduler, &g, &cluster),
+            run(&MxScheduler::without_pipelining(), &g, &cluster),
+        ] {
+            let r = r.unwrap();
+            assert!(r.makespan.is_finite() && r.makespan > 0.0);
+        }
+    }
+}
