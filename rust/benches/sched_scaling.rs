@@ -1,15 +1,25 @@
-//! Scheduler scaling, two stories:
+//! Scheduler scaling, three stories:
 //!
 //! 1. *Plan cost* vs DAG size, per scheduler — plan time must stay far
 //!    below simulated makespan for online use (L3 §Perf).
 //! 2. *Engine events/s* on wide-fanout DAGs at 1k / 5k / 10k tasks under
-//!    the mxdag co-scheduler's priority plan: the incremental ready
-//!    queue (`QueueKind::Incremental`) vs the pre-refactor full
-//!    re-sort baseline (`QueueKind::FullResort`). Identical results
-//!    (event counts and makespans) are asserted on every run; only the
-//!    per-event scheduling cost differs. This produces the events/s
-//!    table whose format the README's Performance section describes —
-//!    run `cargo bench --bench sched_scaling` to generate it.
+//!    the mxdag co-scheduler's priority plan: the pre-refactor full
+//!    re-sort baseline vs the incremental ready queue (PR 2) vs
+//!    component-wise allocation with memoized rates on top of it.
+//! 3. The same A/B under the **fair** policy, where every ready task
+//!    shares one level and whole-set allocation is costliest — the
+//!    headline for `AllocKind::Components`.
+//!
+//! Every A/B asserts *bit-identical* results (event counts, makespans)
+//! across configurations — the equivalence-oracle contract — and a
+//! five-policy identity check runs all scheduler families through
+//! `AllocKind::WholeSet` vs `AllocKind::Components`, comparing traces
+//! bit for bit. Results are printed as tables (README §Performance) and
+//! persisted to `BENCH_sim.json` for cross-PR tracking.
+//!
+//! `BENCH_SMOKE=1` shrinks everything to one small size and skips the
+//! plan-cost story — the CI bench-smoke job uses it to catch oracle
+//! drift and bench bitrot without paying full-scale runtimes.
 
 use std::time::Instant;
 
@@ -17,9 +27,24 @@ use mxdag::sched::{
     CoflowScheduler, FairScheduler, FifoScheduler, Grouping, MxScheduler, PackingScheduler,
     Scheduler,
 };
-use mxdag::sim::{expand, simulate, Cluster, Policy, QueueKind, SimConfig};
-use mxdag::util::bench::{bench, bench_header, Table};
+use mxdag::sim::{
+    expand, simulate, AllocKind, Cluster, Policy, QueueKind, SimConfig, SimDag, SimResult,
+};
+use mxdag::util::bench::{bench, bench_header, write_bench_json, Table};
+use mxdag::util::json::Json;
 use mxdag::workloads::{branches_for_tasks, random_dag, wide_fanout, FanoutParams, RandomParams};
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn sizes() -> Vec<usize> {
+    if smoke() {
+        vec![300]
+    } else {
+        vec![1_000, 5_000, 10_000]
+    }
+}
 
 fn plan_cost() {
     for (layers, width) in [(6usize, 6usize), (12, 12), (20, 20)] {
@@ -51,15 +76,42 @@ fn plan_cost() {
     }
 }
 
-fn engine_events_per_sec() {
+/// Best-of-`reps` timed simulation; returns (result, events/s).
+fn timed(sim: &SimDag, cluster: &Cluster, cfg: &SimConfig, reps: usize) -> (SimResult, f64) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = simulate(sim, cluster, cfg).expect("simulation completes");
+        best = best.min(t0.elapsed().as_secs_f64());
+        out = Some(r);
+    }
+    let r = out.unwrap();
+    let evps = r.events as f64 / best;
+    (r, evps)
+}
+
+fn assert_bit_identical(tag: &str, a: &SimResult, b: &SimResult) {
+    assert_eq!(a.events, b.events, "{tag}: configurations took different event paths");
+    assert_eq!(
+        a.makespan.to_bits(),
+        b.makespan.to_bits(),
+        "{tag}: makespans diverge ({} vs {})",
+        a.makespan,
+        b.makespan
+    );
+}
+
+fn engine_events_per_sec() -> Json {
     let hosts = 16;
     let cluster = Cluster::uniform(hosts);
     let mut table = Table::new(
         "engine events/s, mxdag priority plan on wide-fanout DAGs \
-         (incremental ready queue vs full re-sort)",
-        &["events", "full-resort ev/s", "incremental ev/s", "speedup"],
+         (full re-sort vs incremental queue vs component-wise alloc)",
+        &["events", "full-resort ev/s", "incremental ev/s", "components ev/s", "speedup"],
     );
-    for target in [1_000usize, 5_000, 10_000] {
+    let mut rows = Vec::new();
+    for target in sizes() {
         let p = FanoutParams {
             branches: branches_for_tasks(target),
             hosts,
@@ -70,51 +122,177 @@ fn engine_events_per_sec() {
         let plan = MxScheduler::without_pipelining().plan(&g, &cluster);
         // the point of the A/B is the priority hot path; the co-scheduler
         // must not have fallen back to its fair plan on this workload
-        assert_eq!(plan.policy, Policy::priority(), "expected the priority plan");
+        // (at smoke scale the what-if comparison may legitimately differ)
+        if !smoke() {
+            assert_eq!(plan.policy, Policy::priority(), "expected the priority plan");
+        }
         let sim = expand(&g, &plan.ann);
 
-        let mut events = [0usize; 2];
-        let mut makespans = [0.0f64; 2];
-        let mut evs = [0.0f64; 2];
-        for (ki, queue) in [QueueKind::FullResort, QueueKind::Incremental]
-            .into_iter()
-            .enumerate()
-        {
-            let cfg = SimConfig { policy: plan.policy, queue, ..Default::default() };
-            // the baseline is slow at 10k tasks: one rep there, best-of-3
-            // for the cheap runs
-            let reps = if queue == QueueKind::FullResort && target >= 5_000 { 1 } else { 3 };
-            let mut best = f64::INFINITY;
-            for _ in 0..reps {
-                let t0 = Instant::now();
-                let r = simulate(&sim, &cluster, &cfg).expect("simulation completes");
-                best = best.min(t0.elapsed().as_secs_f64());
-                events[ki] = r.events;
-                makespans[ki] = r.makespan;
-            }
-            evs[ki] = events[ki] as f64 / best;
+        let configs = [
+            (QueueKind::FullResort, AllocKind::WholeSet),
+            (QueueKind::Incremental, AllocKind::WholeSet),
+            (QueueKind::Incremental, AllocKind::Components),
+        ];
+        let mut results: Vec<(SimResult, f64)> = Vec::new();
+        for (queue, alloc) in configs {
+            let cfg = SimConfig { policy: plan.policy, queue, alloc, ..Default::default() };
+            // the whole-set paths are slow at scale: one rep there,
+            // best-of-3 for the cheap runs
+            let reps = if alloc == AllocKind::WholeSet && target >= 5_000 { 1 } else { 3 };
+            results.push(timed(&sim, &cluster, &cfg, reps));
         }
-        assert_eq!(events[0], events[1], "queue kinds took different event paths");
-        assert!(
-            (makespans[0] - makespans[1]).abs() < 1e-9,
-            "queue kinds disagree: {} vs {}",
-            makespans[0],
-            makespans[1]
-        );
+        for (tag, r) in [("incremental", &results[1].0), ("components", &results[2].0)] {
+            assert_bit_identical(tag, &results[0].0, r);
+        }
+        let tasks = g.real_tasks().count();
         table.row(
-            &format!("{} tasks", g.real_tasks().count()),
+            &format!("{tasks} tasks"),
             &[
-                format!("{}", events[0]),
-                format!("{:.3e}", evs[0]),
-                format!("{:.3e}", evs[1]),
-                format!("{:.1}x", evs[1] / evs[0]),
+                format!("{}", results[0].0.events),
+                format!("{:.3e}", results[0].1),
+                format!("{:.3e}", results[1].1),
+                format!("{:.3e}", results[2].1),
+                format!("{:.1}x", results[2].1 / results[1].1),
             ],
         );
+        rows.push(Json::obj(vec![
+            ("tasks", Json::Num(tasks as f64)),
+            ("events", Json::Num(results[0].0.events as f64)),
+            ("evps_fullresort_wholeset", Json::Num(results[0].1)),
+            ("evps_incremental_wholeset", Json::Num(results[1].1)),
+            ("evps_incremental_components", Json::Num(results[2].1)),
+        ]));
     }
     table.print();
+    Json::Arr(rows)
+}
+
+fn fair_events_per_sec() -> Json {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let mut table = Table::new(
+        "engine events/s, fair policy on wide-fanout DAGs \
+         (whole-set alloc = PR 2 incremental-queue baseline vs component-wise)",
+        &["events", "whole-set ev/s", "components ev/s", "speedup"],
+    );
+    let mut rows = Vec::new();
+    for target in sizes() {
+        let p = FanoutParams {
+            branches: branches_for_tasks(target),
+            hosts,
+            seed: 7,
+            ..Default::default()
+        };
+        let g = wide_fanout(&p);
+        let plan = FairScheduler.plan(&g, &cluster);
+        assert_eq!(plan.policy, Policy::fair());
+        let sim = expand(&g, &plan.ann);
+
+        let mk = |alloc| SimConfig {
+            policy: plan.policy,
+            queue: QueueKind::Incremental,
+            alloc,
+            ..Default::default()
+        };
+        let reps_whole = if target >= 5_000 { 1 } else { 3 };
+        let (whole, evps_whole) = timed(&sim, &cluster, &mk(AllocKind::WholeSet), reps_whole);
+        let (comp, evps_comp) = timed(&sim, &cluster, &mk(AllocKind::Components), 3);
+        assert_bit_identical("fair", &whole, &comp);
+
+        let tasks = g.real_tasks().count();
+        let speedup = evps_comp / evps_whole;
+        table.row(
+            &format!("{tasks} tasks"),
+            &[
+                format!("{}", whole.events),
+                format!("{evps_whole:.3e}"),
+                format!("{evps_comp:.3e}"),
+                format!("{speedup:.1}x"),
+            ],
+        );
+        rows.push(Json::obj(vec![
+            ("tasks", Json::Num(tasks as f64)),
+            ("events", Json::Num(whole.events as f64)),
+            ("evps_wholeset", Json::Num(evps_whole)),
+            ("evps_components", Json::Num(evps_comp)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    table.print();
+    Json::Arr(rows)
+}
+
+/// All five policy families must produce bit-identical simulations under
+/// `AllocKind::WholeSet` and `AllocKind::Components` — event counts,
+/// makespans *and* per-chunk traces. This is the oracle pairing the
+/// component layer is allowed to exist under.
+fn policy_identity() {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let target = if smoke() { 300 } else { 1_200 };
+    let p = FanoutParams {
+        branches: branches_for_tasks(target),
+        hosts,
+        seed: 11,
+        ..Default::default()
+    };
+    let g = wide_fanout(&p);
+    let schedulers: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(FairScheduler),
+        Box::new(FifoScheduler),
+        Box::new(PackingScheduler),
+        Box::new(CoflowScheduler::new(Grouping::ByDst)),
+        Box::new(MxScheduler::without_pipelining()),
+    ];
+    for s in &schedulers {
+        let plan = s.plan(&g, &cluster);
+        let sim = expand(&g, &plan.ann);
+        let mk = |alloc| SimConfig { policy: plan.policy, alloc, ..Default::default() };
+        let whole = simulate(&sim, &cluster, &mk(AllocKind::WholeSet)).unwrap();
+        let comp = simulate(&sim, &cluster, &mk(AllocKind::Components)).unwrap();
+        assert_bit_identical(s.name(), &whole, &comp);
+        for (i, (a, b)) in whole.trace.iter().zip(comp.trace.iter()).enumerate() {
+            assert_eq!(
+                a.start.to_bits(),
+                b.start.to_bits(),
+                "{}: chunk {i} start {} vs {}",
+                s.name(),
+                a.start,
+                b.start
+            );
+            assert_eq!(
+                a.finish.to_bits(),
+                b.finish.to_bits(),
+                "{}: chunk {i} finish {} vs {}",
+                s.name(),
+                a.finish,
+                b.finish
+            );
+        }
+        println!(
+            "identity ok: {:<12} {} events, makespan {:.4}",
+            s.name(),
+            whole.events,
+            whole.makespan
+        );
+    }
 }
 
 fn main() {
-    plan_cost();
-    engine_events_per_sec();
+    if !smoke() {
+        plan_cost();
+    }
+    println!("\n== alloc-kind identity, all five policies ==");
+    policy_identity();
+    let mxsched = engine_events_per_sec();
+    let fair = fair_events_per_sec();
+    write_bench_json(
+        "sched_scaling",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke())),
+            ("mxsched_priority", mxsched),
+            ("fair", fair),
+        ]),
+    );
+    println!("\nwrote BENCH_sim.json (section `sched_scaling`)");
 }

@@ -1,11 +1,14 @@
 //! Simulator capability bench: events/second and wall time vs DAG size
-//! — the L3 §Perf target (≥1e6 events/s on figure-scale DAGs).
+//! — the L3 §Perf target (≥1e6 events/s on figure-scale DAGs). Results
+//! are persisted to `BENCH_sim.json` (section `sim_throughput`) so the
+//! perf trajectory is tracked across PRs, not only printed.
 
 use std::time::Instant;
 
 use mxdag::sched::{evaluate, Plan};
 use mxdag::sim::Cluster;
-use mxdag::util::bench::{bench, bench_header, Table};
+use mxdag::util::bench::{bench, bench_header, write_bench_json, Table};
+use mxdag::util::json::Json;
 use mxdag::workloads::{random_dag, RandomParams};
 
 fn main() {
@@ -13,6 +16,7 @@ fn main() {
         "fluid simulator scaling",
         &["tasks", "events", "wall µs", "events/s"],
     );
+    let mut rows = Vec::new();
     for (layers, width) in [(4usize, 4usize), (8, 8), (12, 12), (16, 16), (20, 20)] {
         let p = RandomParams {
             layers,
@@ -34,17 +38,28 @@ fn main() {
         }
         let wall_us = t0.elapsed().as_micros() as f64 / iters as f64;
         let ev = events as f64 / iters as f64;
+        let tasks = g.real_tasks().count();
+        let evps = ev / (wall_us / 1e6);
         t.row(
             &format!("{layers}x{width}"),
             &[
-                format!("{}", g.real_tasks().count()),
+                format!("{tasks}"),
                 format!("{ev:.0}"),
                 format!("{wall_us:.0}"),
-                format!("{:.2e}", ev / (wall_us / 1e6)),
+                format!("{evps:.2e}"),
             ],
         );
+        rows.push(Json::obj(vec![
+            ("config", Json::Str(format!("{layers}x{width}"))),
+            ("tasks", Json::Num(tasks as f64)),
+            ("events", Json::Num(ev)),
+            ("wall_us", Json::Num(wall_us)),
+            ("events_per_sec", Json::Num(evps)),
+        ]));
     }
     t.print();
+    write_bench_json("sim_throughput", Json::Arr(rows));
+    println!("\nwrote BENCH_sim.json (section `sim_throughput`)");
 
     bench_header("per-policy simulation cost (12x12 DAG)");
     let g = random_dag(&RandomParams { layers: 12, width: 12, hosts: 16, seed: 7, ..Default::default() });

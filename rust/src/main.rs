@@ -13,10 +13,10 @@ use std::path::Path;
 use mxdag::coordinator::{self, DdlConfig, SyncSchedule};
 use mxdag::mxdag::MXDag;
 use mxdag::sched::{
-    self, evaluate, AltruisticScheduler, CoflowScheduler, FairScheduler, FifoScheduler,
-    Grouping, MxScheduler, PackingScheduler, Plan, Scheduler, SelfishScheduler,
+    self, evaluate, evaluate_with, AltruisticScheduler, CoflowScheduler, FairScheduler,
+    FifoScheduler, Grouping, MxScheduler, PackingScheduler, Plan, Scheduler, SelfishScheduler,
 };
-use mxdag::sim::{Annotations, Cluster, Policy};
+use mxdag::sim::{AllocKind, Annotations, Cluster, Policy, QueueKind, SimConfig};
 use mxdag::util::bench::Table;
 use mxdag::util::cli::Args;
 use mxdag::workloads::{self, WukongCoflows};
@@ -50,8 +50,10 @@ fn print_usage() {
            monitor                       straggler classification demo\n\
            simulate --dag FILE.json [--scheduler mxdag|fair|fifo|coflow|packing]\n\
                     [--topology bigswitch|oversub:RACKS:RATIO|fabrics:K:TRUNK[:hash|bysrc]]\n\
+                    [--queue incremental|fullresort] [--alloc components|wholeset]\n\
                     (the DAG file may also declare a \"cluster\" object;\n\
-                     --topology overrides it)\n\
+                     --topology overrides it; --queue/--alloc select the\n\
+                     engine's ready-queue and rate-allocation paths)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -317,13 +319,34 @@ fn cmd_simulate(args: &Args) -> i32 {
         "coflow" => Box::new(CoflowScheduler::new(Grouping::ByDst)),
         _ => Box::new(MxScheduler::default()),
     };
-    match sched::run(sched.as_ref(), &g, &cluster) {
+    let mut cfg = SimConfig::default();
+    match args.get_or("queue", "incremental").as_str() {
+        "incremental" => cfg.queue = QueueKind::Incremental,
+        "fullresort" => cfg.queue = QueueKind::FullResort,
+        other => {
+            eprintln!("--queue: unknown kind `{other}` (incremental|fullresort)");
+            return 1;
+        }
+    }
+    match args.get_or("alloc", "components").as_str() {
+        "components" => cfg.alloc = AllocKind::Components,
+        "wholeset" => cfg.alloc = AllocKind::WholeSet,
+        other => {
+            eprintln!("--alloc: unknown kind `{other}` (components|wholeset)");
+            return 1;
+        }
+    }
+    let plan = sched.plan(&g, &cluster);
+    match evaluate_with(&g, &cluster, &plan, &cfg) {
         Ok(r) => {
             println!(
-                "scheduler={} hosts={} topology={:?} tasks={} makespan={:.4} events={}",
+                "scheduler={} hosts={} topology={:?} queue={:?} alloc={:?} tasks={} \
+                 makespan={:.4} events={}",
                 sched.name(),
                 cluster.n_hosts(),
                 cluster.topology,
+                cfg.queue,
+                cfg.alloc,
                 g.real_tasks().count(),
                 r.makespan,
                 r.events

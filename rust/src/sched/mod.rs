@@ -88,8 +88,21 @@ pub trait Scheduler {
 /// Expand + simulate a plan. The single evaluation entry point used by
 /// benches, what-if analysis and the pipeline search.
 pub fn evaluate(dag: &MXDag, cluster: &Cluster, plan: &Plan) -> Result<SimResult, SimError> {
+    evaluate_with(dag, cluster, plan, &SimConfig::default())
+}
+
+/// As [`evaluate`], but with explicit engine configuration (queue kind,
+/// allocation kind, event budget). `cfg.policy` is overridden by the
+/// plan's policy — a plan's annotations and its sharing semantics are
+/// inseparable.
+pub fn evaluate_with(
+    dag: &MXDag,
+    cluster: &Cluster,
+    plan: &Plan,
+    cfg: &SimConfig,
+) -> Result<SimResult, SimError> {
     let sim = expand(dag, &plan.ann);
-    simulate(&sim, cluster, &SimConfig { policy: plan.policy, ..Default::default() })
+    simulate(&sim, cluster, &SimConfig { policy: plan.policy, ..cfg.clone() })
 }
 
 /// Convenience: schedule with `s` and return the simulated result.

@@ -14,11 +14,27 @@
 //!   of a coflow finish together (the abstraction Fig. 2 critiques).
 //!
 //! Hot path note (§Perf): these run on every simulator event, so they
-//! work on flat precomputed resource arrays ([`TaskRes`]) — no maps, no
-//! per-iteration allocation, no task cloning. A task's footprint is
-//! variable-arity but bounded by [`MAX_TASK_RES`] so it stays `Copy`.
-
-use std::collections::BTreeMap;
+//! work on flat precomputed resource arrays ([`TaskRes`]) and reusable
+//! caller-owned scratch ([`AllocScratch`]) — no maps, no per-call
+//! allocation, no task cloning. A task's footprint is variable-arity but
+//! bounded by [`MAX_TASK_RES`] so it stays `Copy`.
+//!
+//! ## Contention components
+//!
+//! Tasks only interact through shared resources, so progressive filling
+//! decomposes exactly over the connected components of the
+//! resource-sharing graph. [`maxmin_fill_res_in`] exploits this: it
+//! partitions its input with a scratch union-find and fills each
+//! component independently. This matters twice over. It is faster (the
+//! per-round uniform increment converges per component instead of being
+//! throttled by the globally tightest bottleneck), and it is what makes
+//! the engine's component-wise allocation
+//! ([`AllocKind::Components`](super::components::AllocKind)) **bit-for-bit
+//! identical** to the whole-active-set oracle: whichever superset of
+//! tasks a caller passes, each component's rates are computed by the
+//! same arithmetic on the same operands. The engine-level partition
+//! lives in [`CompSet`](super::components::CompSet); this module only
+//! guarantees the fill itself is component-local.
 
 use super::spec::{SimDag, SimKind};
 
@@ -65,31 +81,105 @@ impl TaskRes {
     }
 }
 
-/// Max-min progressive filling. `tasks[i]` are the active tasks'
-/// resource footprints; `caps` is mutated to residuals; `rates[i]` is
-/// written per active index. `users` is caller-provided scratch of
-/// `caps.len()` (reset internally).
-pub fn maxmin_fill_res(
+/// Reusable scratch for the allocation hot path. One instance lives in
+/// the engine and is threaded through every fill of a simulation, so
+/// per-event allocation cost is amortised to zero (the buffers grow to
+/// high-water marks once). The compatibility wrappers construct a fresh
+/// one per call; hot callers must not.
+#[derive(Debug, Default)]
+pub struct AllocScratch {
+    // progressive filling
+    frozen: Vec<bool>,
+    touched: Vec<usize>,
+    // connected-component decomposition (per fill call)
+    parent: Vec<usize>,
+    res_seen: Vec<usize>,
+    res_epoch: Vec<u64>,
+    epoch: u64,
+    comp_of: Vec<usize>,
+    roots: Vec<usize>,
+    comp_start: Vec<usize>,
+    comp_cursor: Vec<usize>,
+    comp_tasks: Vec<usize>,
+    // strict-priority levels
+    order: Vec<usize>,
+    level_tasks: Vec<TaskRes>,
+    level_idx: Vec<usize>,
+    level_rates: Vec<f64>,
+    // coflow grouping
+    keys: Vec<(usize, usize, usize)>,
+    group_span: Vec<(usize, usize)>,
+    group_bounds: Vec<(f64, u32)>,
+    load: Vec<f64>,
+    load_seen: Vec<u64>,
+    load_epoch: u64,
+    load_touched: Vec<usize>,
+}
+
+impl AllocScratch {
+    fn ensure(&mut self, n_tasks: usize, n_res: usize) {
+        if self.frozen.len() < n_tasks {
+            self.frozen.resize(n_tasks, false);
+            self.parent.resize(n_tasks, 0);
+            self.comp_of.resize(n_tasks, 0);
+            self.roots.resize(n_tasks, usize::MAX);
+        }
+        if self.res_seen.len() < n_res {
+            self.res_seen.resize(n_res, 0);
+            self.res_epoch.resize(n_res, 0);
+            self.load.resize(n_res, 0.0);
+            self.load_seen.resize(n_res, 0);
+        }
+    }
+}
+
+/// Path-halving union-find lookup, shared by the fill-internal
+/// decomposition here and [`CompSet`](super::components::CompSet)'s
+/// rebuild — both partitions must agree on connectivity.
+pub(crate) fn find(parent: &mut [usize], mut x: usize) -> usize {
+    while parent[x] != x {
+        parent[x] = parent[parent[x]];
+        x = parent[x];
+    }
+    x
+}
+
+/// Progressive filling restricted to the task indices in `sub`, which
+/// must be *resource-closed* against the rest of the call (no task
+/// outside `sub` shares a resource with one inside). The arithmetic is
+/// identical to the classic whole-set loop run on `sub` alone; the
+/// round order over tasks does not affect the result bit-wise (counts
+/// are exact integers in `f64`, the increment is a min-reduction, and
+/// per-resource subtraction repeats the same operand).
+fn fill_subset(
     tasks: &[TaskRes],
+    sub: &[usize],
     caps: &mut [f64],
     rates: &mut [f64],
     users: &mut [f64],
+    frozen: &mut [bool],
+    touched: &mut Vec<usize>,
 ) {
-    debug_assert_eq!(users.len(), caps.len());
-    let n = tasks.len();
-    let mut frozen: Vec<bool> = tasks.iter().map(|t| t.n == 0).collect();
+    // distinct-enough resource list for cheap per-round resets
+    // (duplicates are harmless: zeroing twice is zeroing)
+    touched.clear();
+    for &i in sub {
+        for r in tasks[i].iter() {
+            touched.push(r);
+        }
+    }
     loop {
         // count unfrozen users per resource
-        for u in users.iter_mut() {
-            *u = 0.0;
+        for &r in touched.iter() {
+            users[r] = 0.0;
         }
         let mut n_unfrozen = 0usize;
-        for (i, t) in tasks.iter().enumerate() {
+        for &i in sub {
             if frozen[i] {
                 continue;
             }
             n_unfrozen += 1;
-            for r in t.iter() {
+            for r in tasks[i].iter() {
                 users[r] += 1.0;
             }
         }
@@ -99,22 +189,22 @@ pub fn maxmin_fill_res(
         // largest uniform increment bounded by residual/users and
         // per-task headroom to rate 1
         let mut delta = f64::INFINITY;
-        for (i, t) in tasks.iter().enumerate() {
+        for &i in sub {
             if frozen[i] {
                 continue;
             }
             delta = delta.min(1.0 - rates[i]);
-            for r in t.iter() {
+            for r in tasks[i].iter() {
                 delta = delta.min(caps[r].max(0.0) / users[r]);
             }
         }
         if delta > EPS {
-            for (i, t) in tasks.iter().enumerate() {
+            for &i in sub {
                 if frozen[i] {
                     continue;
                 }
                 rates[i] += delta;
-                for r in t.iter() {
+                for r in tasks[i].iter() {
                     caps[r] -= delta;
                 }
             }
@@ -122,12 +212,12 @@ pub fn maxmin_fill_res(
         // freeze saturated / capped tasks; stop when nothing moves
         let mut any_unfrozen = false;
         let mut any_frozen_now = false;
-        for (i, t) in tasks.iter().enumerate() {
+        for &i in sub {
             if frozen[i] {
                 continue;
             }
             let at_cap = rates[i] >= 1.0 - EPS;
-            let starved = t.iter().any(|r| caps[r] <= EPS);
+            let starved = tasks[i].iter().any(|r| caps[r] <= EPS);
             if at_cap || starved {
                 frozen[i] = true;
                 any_frozen_now = true;
@@ -141,26 +231,136 @@ pub fn maxmin_fill_res(
         if delta <= EPS && !any_frozen_now {
             break; // numerically stuck
         }
-        let _ = n;
     }
 }
 
-/// Strict priority: levels high→low, max-min within a level on residuals.
-pub fn priority_fill_res(
+/// Max-min progressive filling, decomposed over contention components
+/// (see the module docs). `tasks[i]` are the active tasks' resource
+/// footprints; `caps` is mutated to residuals; `rates[i]` is written per
+/// active index. `users` is caller-provided scratch of `caps.len()`
+/// (reset internally); `scratch` is the reusable allocation scratch.
+pub fn maxmin_fill_res_in(
+    tasks: &[TaskRes],
+    caps: &mut [f64],
+    rates: &mut [f64],
+    users: &mut [f64],
+    s: &mut AllocScratch,
+) {
+    debug_assert_eq!(users.len(), caps.len());
+    let n = tasks.len();
+    if n == 0 {
+        return;
+    }
+    s.ensure(n, caps.len());
+    for i in 0..n {
+        s.frozen[i] = tasks[i].n == 0;
+        s.parent[i] = i;
+        s.roots[i] = usize::MAX;
+    }
+    // union tasks sharing a resource (epoch-tagged, no clearing)
+    s.epoch += 1;
+    for (i, t) in tasks.iter().enumerate() {
+        for r in t.iter() {
+            if s.res_epoch[r] == s.epoch {
+                let j = s.res_seen[r];
+                let (ri, rj) = (find(&mut s.parent, i), find(&mut s.parent, j));
+                if ri != rj {
+                    s.parent[ri] = rj;
+                }
+            } else {
+                s.res_epoch[r] = s.epoch;
+                s.res_seen[r] = i;
+            }
+        }
+    }
+    // dense component ids in order of first appearance (zero-footprint
+    // tasks stay frozen and componentless, as before)
+    let mut n_comps = 0usize;
+    for i in 0..n {
+        if tasks[i].n == 0 {
+            s.comp_of[i] = usize::MAX;
+            continue;
+        }
+        let r = find(&mut s.parent, i);
+        if s.roots[r] == usize::MAX {
+            s.roots[r] = n_comps;
+            n_comps += 1;
+        }
+        s.comp_of[i] = s.roots[r];
+    }
+    if n_comps == 0 {
+        return;
+    }
+    // counting-sort members per component (ascending task order)
+    s.comp_start.clear();
+    s.comp_start.resize(n_comps + 1, 0);
+    for i in 0..n {
+        if s.comp_of[i] != usize::MAX {
+            s.comp_start[s.comp_of[i] + 1] += 1;
+        }
+    }
+    for c in 0..n_comps {
+        s.comp_start[c + 1] += s.comp_start[c];
+    }
+    s.comp_tasks.clear();
+    s.comp_tasks.resize(s.comp_start[n_comps], 0);
+    s.comp_cursor.clear();
+    s.comp_cursor.extend_from_slice(&s.comp_start[..n_comps]);
+    for i in 0..n {
+        let c = s.comp_of[i];
+        if c == usize::MAX {
+            continue;
+        }
+        s.comp_tasks[s.comp_cursor[c]] = i;
+        s.comp_cursor[c] += 1;
+    }
+    for c in 0..n_comps {
+        let (a, b) = (s.comp_start[c], s.comp_start[c + 1]);
+        fill_subset(
+            tasks,
+            &s.comp_tasks[a..b],
+            caps,
+            rates,
+            users,
+            &mut s.frozen,
+            &mut s.touched,
+        );
+    }
+}
+
+/// Max-min progressive filling (compatibility form of
+/// [`maxmin_fill_res_in`]; constructs throwaway scratch — hot callers
+/// thread an [`AllocScratch`] instead).
+pub fn maxmin_fill_res(
+    tasks: &[TaskRes],
+    caps: &mut [f64],
+    rates: &mut [f64],
+    users: &mut [f64],
+) {
+    maxmin_fill_res_in(tasks, caps, rates, users, &mut AllocScratch::default());
+}
+
+/// Strict priority: levels high→low, max-min within a level on
+/// residuals. Scratch-threading form.
+pub fn priority_fill_res_in(
     tasks: &[TaskRes],
     prios: &[i64],
     caps: &mut [f64],
     rates: &mut [f64],
     users: &mut [f64],
+    s: &mut AllocScratch,
 ) {
     let n = tasks.len();
     debug_assert_eq!(prios.len(), n);
-    // sort indices by priority descending (small n: simple sort)
-    let mut order: Vec<usize> = (0..n).collect();
+    // the level vectors are taken out of the scratch so the recursive
+    // maxmin call can borrow the rest of it
+    let mut order = std::mem::take(&mut s.order);
+    let mut level_tasks = std::mem::take(&mut s.level_tasks);
+    let mut level_idx = std::mem::take(&mut s.level_idx);
+    let mut level_rates = std::mem::take(&mut s.level_rates);
+    order.clear();
+    order.extend(0..n);
     order.sort_by_key(|&i| std::cmp::Reverse(prios[i]));
-    let mut level_tasks: Vec<TaskRes> = Vec::with_capacity(n);
-    let mut level_idx: Vec<usize> = Vec::with_capacity(n);
-    let mut level_rates: Vec<f64> = Vec::with_capacity(n);
     let mut k = 0;
     while k < n {
         let p = prios[order[k]];
@@ -173,11 +373,26 @@ pub fn priority_fill_res(
         }
         level_rates.clear();
         level_rates.resize(level_tasks.len(), 0.0);
-        maxmin_fill_res(&level_tasks, caps, &mut level_rates, users);
+        maxmin_fill_res_in(&level_tasks, caps, &mut level_rates, users, s);
         for (j, &i) in level_idx.iter().enumerate() {
             rates[i] = level_rates[j];
         }
     }
+    s.order = order;
+    s.level_tasks = level_tasks;
+    s.level_idx = level_idx;
+    s.level_rates = level_rates;
+}
+
+/// Strict priority (compatibility form of [`priority_fill_res_in`]).
+pub fn priority_fill_res(
+    tasks: &[TaskRes],
+    prios: &[i64],
+    caps: &mut [f64],
+    rates: &mut [f64],
+    users: &mut [f64],
+) {
+    priority_fill_res_in(tasks, prios, caps, rates, users, &mut AllocScratch::default());
 }
 
 /// Varys-style coflow allocation over the active *flows*: SEBF group
@@ -192,7 +407,122 @@ pub fn priority_fill_res(
 /// (`engine::sebf_bound_single` / `engine::sebf_bound_group`) and runs
 /// the identical MADD per queue level — a semantic change here must be
 /// mirrored there (the `prop_queue_equivalence` suite and the engine's
-/// coflow tests guard the pairing).
+/// coflow tests guard the pairing). Group arithmetic is local to the
+/// group's resources, so disjoint contention components never perturb
+/// each other's rates even though SEBF orders all groups globally.
+pub fn coflow_fill_res_in(
+    tasks: &[TaskRes],
+    coflow: &[Option<usize>],
+    remaining: &[f64],
+    caps0: &[f64],
+    caps: &mut [f64],
+    rates: &mut [f64],
+    s: &mut AllocScratch,
+) {
+    let n = tasks.len();
+    if n == 0 {
+        return;
+    }
+    s.ensure(n, caps.len());
+    // group members contiguously: grouped flows first (by group id,
+    // members ascending), then singletons in index order — the same
+    // order the old BTreeMap keyed by (0, g) / (1, i) produced
+    let mut keys = std::mem::take(&mut s.keys);
+    keys.clear();
+    for i in 0..n {
+        match coflow[i] {
+            Some(g) => keys.push((0, g, i)),
+            None => keys.push((1, i, i)),
+        }
+    }
+    keys.sort_unstable();
+    let mut spans = std::mem::take(&mut s.group_span);
+    spans.clear();
+    let mut a = 0;
+    while a < keys.len() {
+        let (tag, id, _) = keys[a];
+        let mut b = a + 1;
+        while b < keys.len() && keys[b].0 == tag && keys[b].1 == id {
+            b += 1;
+        }
+        spans.push((a, b));
+        a = b;
+    }
+
+    // SEBF: smallest bottleneck-completion-bound first (on full capacity)
+    let mut bounds = std::mem::take(&mut s.group_bounds);
+    bounds.clear();
+    for (gi, &(a, b)) in spans.iter().enumerate() {
+        s.load_epoch += 1;
+        s.load_touched.clear();
+        let mut max_rem: f64 = 0.0;
+        for &(_, _, i) in &keys[a..b] {
+            max_rem = max_rem.max(remaining[i]);
+            for r in tasks[i].iter() {
+                if s.load_seen[r] != s.load_epoch {
+                    s.load_seen[r] = s.load_epoch;
+                    s.load[r] = 0.0;
+                    s.load_touched.push(r);
+                }
+                s.load[r] += remaining[i];
+            }
+        }
+        let mut bnd = max_rem;
+        for &r in s.load_touched.iter() {
+            if caps0[r] <= EPS {
+                bnd = f64::INFINITY;
+            } else {
+                bnd = bnd.max(s.load[r] / caps0[r]);
+            }
+        }
+        bounds.push((bnd, gi as u32));
+    }
+    // NaN-safe total order; ties keep the group-key order above, exactly
+    // like the old stable sort over the BTreeMap's values
+    bounds.sort_unstable_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+
+    for &(_, gi) in bounds.iter() {
+        let (a, b) = spans[gi as usize];
+        // MADD: all members finish at the same τ, feasible on residuals
+        s.load_epoch += 1;
+        s.load_touched.clear();
+        let mut tau: f64 = 0.0;
+        for &(_, _, i) in &keys[a..b] {
+            tau = tau.max(remaining[i]); // rate ≤ 1 per flow
+            for r in tasks[i].iter() {
+                if s.load_seen[r] != s.load_epoch {
+                    s.load_seen[r] = s.load_epoch;
+                    s.load[r] = 0.0;
+                    s.load_touched.push(r);
+                }
+                s.load[r] += remaining[i];
+            }
+        }
+        for &r in s.load_touched.iter() {
+            if caps[r] <= EPS {
+                tau = f64::INFINITY;
+            } else {
+                tau = tau.max(s.load[r] / caps[r]);
+            }
+        }
+        if !tau.is_finite() || tau <= EPS {
+            continue;
+        }
+        for &(_, _, i) in &keys[a..b] {
+            let rate = remaining[i] / tau;
+            rates[i] = rate;
+            for r in tasks[i].iter() {
+                caps[r] = (caps[r] - rate).max(0.0);
+            }
+        }
+    }
+
+    s.keys = keys;
+    s.group_span = spans;
+    s.group_bounds = bounds;
+}
+
+/// Coflow allocation (compatibility form of [`coflow_fill_res_in`]).
 pub fn coflow_fill_res(
     tasks: &[TaskRes],
     coflow: &[Option<usize>],
@@ -201,70 +531,15 @@ pub fn coflow_fill_res(
     caps: &mut [f64],
     rates: &mut [f64],
 ) {
-    let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
-    for i in 0..tasks.len() {
-        let key = match coflow[i] {
-            Some(g) => (0usize, g),
-            None => (1usize, i),
-        };
-        groups.entry(key).or_default().push(i);
-    }
-
-    // SEBF: smallest bottleneck-completion-bound first (on full capacity)
-    let mut ordered: Vec<(f64, Vec<usize>)> = groups
-        .into_values()
-        .map(|members| {
-            let mut per_res: BTreeMap<usize, f64> = BTreeMap::new();
-            let mut max_rem: f64 = 0.0;
-            for &i in &members {
-                max_rem = max_rem.max(remaining[i]);
-                for r in tasks[i].iter() {
-                    *per_res.entry(r).or_insert(0.0) += remaining[i];
-                }
-            }
-            let bottleneck = per_res
-                .iter()
-                .map(|(&r, &load)| {
-                    if caps0[r] <= EPS {
-                        f64::INFINITY
-                    } else {
-                        load / caps0[r]
-                    }
-                })
-                .fold(max_rem, f64::max);
-            (bottleneck, members)
-        })
-        .collect();
-    ordered.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-
-    for (_, members) in ordered {
-        // MADD: all members finish at the same τ, feasible on residuals
-        let mut tau: f64 = 0.0;
-        let mut per_res: BTreeMap<usize, f64> = BTreeMap::new();
-        for &i in &members {
-            tau = tau.max(remaining[i]); // rate ≤ 1 per flow
-            for r in tasks[i].iter() {
-                *per_res.entry(r).or_insert(0.0) += remaining[i];
-            }
-        }
-        for (&r, &load) in &per_res {
-            if caps[r] <= EPS {
-                tau = f64::INFINITY;
-            } else {
-                tau = tau.max(load / caps[r]);
-            }
-        }
-        if !tau.is_finite() || tau <= EPS {
-            continue;
-        }
-        for &i in &members {
-            let rate = remaining[i] / tau;
-            rates[i] = rate;
-            for r in tasks[i].iter() {
-                caps[r] = (caps[r] - rate).max(0.0);
-            }
-        }
-    }
+    coflow_fill_res_in(
+        tasks,
+        coflow,
+        remaining,
+        caps0,
+        caps,
+        rates,
+        &mut AllocScratch::default(),
+    );
 }
 
 // ------------------------------------------------------------------
@@ -358,6 +633,52 @@ mod tests {
         maxmin_fill(&d, &ids, &mut caps, &mut rates);
         for r in rates {
             assert!((r - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    /// Disjoint contention components fill independently: the solo task
+    /// reaches its bottleneck in one exact step instead of accumulating
+    /// the other component's increments (0.5 + 0.2 ≠ 0.7 in floats).
+    #[test]
+    fn maxmin_disjoint_components_fill_exactly() {
+        let mut d = SimDag::default();
+        let a = flow(&mut d, 0, 1, 0, None); // share up0
+        let b = flow(&mut d, 0, 2, 0, None);
+        let c = flow(&mut d, 3, 4, 0, None); // disjoint
+        let mut caps = vec![1.0; 15];
+        caps[10] = 0.7; // up3 bottlenecks the solo flow
+        let mut rates = vec![0.0; 3];
+        maxmin_fill(&d, &[a, b, c], &mut caps, &mut rates);
+        assert!((rates[0] - 0.5).abs() < 1e-9);
+        assert!((rates[1] - 0.5).abs() < 1e-9);
+        assert_eq!(rates[2].to_bits(), 0.7f64.to_bits(), "exact one-step fill");
+    }
+
+    /// One scratch reused across different fills must give the same
+    /// rates as fresh scratch per call.
+    #[test]
+    fn scratch_reuse_is_clean() {
+        let mut d = SimDag::default();
+        let a = flow(&mut d, 0, 1, 0, None);
+        let b = flow(&mut d, 0, 2, 0, None);
+        let c = flow(&mut d, 2, 1, 0, None);
+        let tasks = subset_res(&d, &[a, b, c]);
+        let mut s = AllocScratch::default();
+        for subset in [vec![0usize, 1], vec![0, 1, 2], vec![2], vec![1, 0, 2]] {
+            let sub: Vec<TaskRes> = subset.iter().map(|&i| tasks[i]).collect();
+            let mut caps1 = vec![1.0; 9];
+            let mut caps2 = vec![1.0; 9];
+            let mut r1 = vec![0.0; sub.len()];
+            let mut r2 = vec![0.0; sub.len()];
+            let mut users = vec![0.0; 9];
+            maxmin_fill_res_in(&sub, &mut caps1, &mut r1, &mut users, &mut s);
+            maxmin_fill_res(&sub, &mut caps2, &mut r2, &mut users);
+            for (x, y) in r1.iter().zip(r2.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in caps1.iter().zip(caps2.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

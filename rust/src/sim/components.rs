@@ -1,0 +1,678 @@
+//! Contention components: an incremental partition of the *queued*
+//! tasks into connected components of the resource-sharing graph.
+//!
+//! Tasks only interact through shared resources (the structure MXDAG
+//! itself exposes: a task's footprint is a handful of arena slots), so
+//! the rates of tasks in disjoint components cannot change when an
+//! event touches another component. The engine exploits this via
+//! [`AllocKind::Components`]: it re-runs the fluid fill only for
+//! components an event *touched* — task arrival, completion, gate
+//! expiry, or an SEBF key going stale — while clean components keep
+//! their memoized rates. An event in one rack no longer reprices flows
+//! in another.
+//!
+//! ## How the partition is maintained
+//!
+//! * **Insert** (a task enters the ready queue): the task's resources
+//!   are looked up in the resource→component map; every distinct owning
+//!   component is merged into the most populous one (union by size),
+//!   the task joins it, and the result is marked dirty.
+//! * **Remove** (completion): the task leaves its component's member
+//!   list and the component is marked dirty. The component is *not*
+//!   split eagerly — decremental connectivity is expensive — it is
+//!   rebuilt lazily.
+//! * **Rebuild** (at refill time, engine-driven): a dirty component
+//!   re-derives exact connectivity among its remaining members with a
+//!   scratch union-find, retires its slot, and emerges as one fresh
+//!   component per connectivity class. Splits therefore cost
+//!   `O(component)` exactly when the component is being refilled anyway.
+//!
+//! Between a merge/removal and the next rebuild the partition may be
+//! *coarser* than true connectivity (stale resource claims can glue
+//! unrelated tasks together for one event). That is deliberately safe:
+//! the fills themselves re-decompose their inputs exactly
+//! ([`alloc::maxmin_fill_res_in`](super::alloc::maxmin_fill_res_in)),
+//! so a coarse component only means slightly more refill work — never a
+//! different allocation. Coflow groups are kept atomic by linking all
+//! members of group `g` through a *virtual* resource (arena id
+//! `n_res + g`), because MADD couples their rates even when their flows
+//! share no physical link.
+//!
+//! Component slots are a slab with generation counters: the
+//! resource→component map stores `(slot, gen)` claims, so retiring a
+//! slot invalidates every claim to it in O(1) and slots can be reused
+//! without scanning the arena.
+
+use super::alloc::{find, TaskRes, MAX_TASK_RES};
+
+/// Which allocation strategy the engine runs per event
+/// (`SimConfig::alloc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocKind {
+    /// Re-run the fluid fill only for contention components touched
+    /// since the last event; clean components keep their memoized rates
+    /// (default).
+    Components,
+    /// Re-price the whole active set every event — the pre-refactor
+    /// *cost profile*, kept as the equivalence oracle
+    /// (`tests/prop_queue_equivalence.rs`) and benchmark baseline.
+    /// Results are bit-for-bit identical to [`AllocKind::Components`].
+    /// Note it runs the *same* component-decomposed fill arithmetic as
+    /// everything else in this revision (that sharing is exactly what
+    /// makes the oracle bitwise); it is not a frozen bitstream of the
+    /// previous revision's global progressive filling, whose increments
+    /// mixed across disjoint components.
+    WholeSet,
+}
+
+const NONE: usize = usize::MAX;
+
+/// The incremental component partition (see the module docs).
+///
+/// Task ids index `0..n_tasks`; resource ids index the flat arena
+/// `0..n_res` *including* any virtual coflow-group slots appended by the
+/// caller. A task is a member of at most one component while queued.
+#[derive(Debug)]
+pub struct CompSet {
+    // per task
+    task_comp: Vec<usize>,
+    pos: Vec<usize>,
+    // per resource: claiming slot, valid while the generation matches
+    owner: Vec<usize>,
+    owner_gen: Vec<u32>,
+    // component slab
+    members: Vec<Vec<usize>>,
+    res: Vec<Vec<usize>>,
+    gen_of: Vec<u32>,
+    alive: Vec<bool>,
+    dirty_flag: Vec<bool>,
+    free: Vec<usize>,
+    live: Vec<usize>,
+    live_pos: Vec<usize>,
+    dirty: Vec<usize>,
+    // rebuild scratch
+    parent: Vec<usize>,
+    seen_res: Vec<usize>,
+    seen_epoch: Vec<u64>,
+    epoch: u64,
+    root_comp: Vec<usize>,
+    /// Retired member buffers, recycled by [`CompSet::alloc_slot`] so
+    /// rebuilds stay allocation-free once capacities are warm.
+    spare: Vec<Vec<usize>>,
+}
+
+impl CompSet {
+    /// Partition over task ids `0..n_tasks` and resource ids `0..n_res`
+    /// (physical arena plus virtual coflow-group slots).
+    pub fn new(n_tasks: usize, n_res: usize) -> CompSet {
+        CompSet {
+            task_comp: vec![NONE; n_tasks],
+            pos: vec![NONE; n_tasks],
+            owner: vec![NONE; n_res],
+            owner_gen: vec![0; n_res],
+            members: Vec::new(),
+            res: Vec::new(),
+            gen_of: Vec::new(),
+            alive: Vec::new(),
+            dirty_flag: Vec::new(),
+            free: Vec::new(),
+            live: Vec::new(),
+            live_pos: Vec::new(),
+            dirty: Vec::new(),
+            parent: Vec::new(),
+            seen_res: vec![0; n_res],
+            seen_epoch: vec![0; n_res],
+            epoch: 0,
+            root_comp: Vec::new(),
+            spare: Vec::new(),
+        }
+    }
+
+    /// The component currently owning resource `r`, if any. Claims by
+    /// retired slots are invalid (generation mismatch).
+    fn owner_of(&self, r: usize) -> Option<usize> {
+        let c = self.owner[r];
+        if c != NONE && self.owner_gen[r] == self.gen_of[c] && self.alive[c] {
+            Some(c)
+        } else {
+            None
+        }
+    }
+
+    fn claim(&mut self, r: usize, c: usize) {
+        self.owner[r] = c;
+        self.owner_gen[r] = self.gen_of[c];
+    }
+
+    fn alloc_slot(&mut self) -> usize {
+        let c = match self.free.pop() {
+            Some(c) => c,
+            None => {
+                self.members.push(self.spare.pop().unwrap_or_default());
+                self.res.push(Vec::new());
+                self.gen_of.push(0);
+                self.alive.push(false);
+                self.dirty_flag.push(false);
+                self.live_pos.push(NONE);
+                self.members.len() - 1
+            }
+        };
+        if self.members[c].capacity() == 0 {
+            // the slot whose member buffer a rebuild took: re-arm it from
+            // the spare pool so refills stay allocation-free
+            if let Some(v) = self.spare.pop() {
+                self.members[c] = v;
+            }
+        }
+        debug_assert!(self.members[c].is_empty() && self.res[c].is_empty());
+        self.alive[c] = true;
+        self.dirty_flag[c] = false;
+        self.live_pos[c] = self.live.len();
+        self.live.push(c);
+        c
+    }
+
+    fn retire(&mut self, c: usize) {
+        self.alive[c] = false;
+        self.gen_of[c] = self.gen_of[c].wrapping_add(1); // invalidate claims
+        self.members[c].clear();
+        self.res[c].clear();
+        let i = self.live_pos[c];
+        self.live.swap_remove(i);
+        if i < self.live.len() {
+            let moved = self.live[i];
+            self.live_pos[moved] = i;
+        }
+        self.live_pos[c] = NONE;
+        self.free.push(c);
+    }
+
+    /// Mark component `c` dirty (idempotent).
+    pub fn mark_dirty(&mut self, c: usize) {
+        if !self.dirty_flag[c] {
+            self.dirty_flag[c] = true;
+            self.dirty.push(c);
+        }
+    }
+
+    /// Mark the component containing queued task `t` dirty (no-op if
+    /// `t` is not queued).
+    pub fn mark_task_dirty(&mut self, t: usize) {
+        let c = self.task_comp[t];
+        if c != NONE {
+            self.mark_dirty(c);
+        }
+    }
+
+    /// Pop one dirty live component id, or `None` when the worklist is
+    /// drained. Entries for components that were merged away or already
+    /// processed are skipped.
+    pub fn pop_dirty(&mut self) -> Option<usize> {
+        while let Some(c) = self.dirty.pop() {
+            if self.alive[c] && self.dirty_flag[c] {
+                self.dirty_flag[c] = false;
+                return Some(c);
+            }
+        }
+        None
+    }
+
+    /// Add queued task `t` with physical footprint `tr` (plus an
+    /// optional virtual coflow-group resource), merging every component
+    /// it bridges. The resulting component is marked dirty.
+    pub fn insert(&mut self, t: usize, tr: &TaskRes, virt: Option<usize>) {
+        debug_assert_eq!(self.task_comp[t], NONE, "task {t} already tracked");
+        // distinct live components already owning any of t's resources
+        let mut found = [NONE; MAX_TASK_RES + 1];
+        let mut nf = 0usize;
+        for r in tr.iter().chain(virt) {
+            if let Some(c) = self.owner_of(r) {
+                if !found[..nf].contains(&c) {
+                    found[nf] = c;
+                    nf += 1;
+                }
+            }
+        }
+        let target = if nf == 0 {
+            self.alloc_slot()
+        } else {
+            let mut tgt = found[0];
+            for &c in &found[1..nf] {
+                if self.members[c].len() > self.members[tgt].len() {
+                    tgt = c;
+                }
+            }
+            for &c in &found[..nf] {
+                if c != tgt {
+                    self.merge_into(c, tgt);
+                }
+            }
+            tgt
+        };
+        self.task_comp[t] = target;
+        self.pos[t] = self.members[target].len();
+        self.members[target].push(t);
+        for r in tr.iter().chain(virt) {
+            self.claim(r, target);
+            self.res[target].push(r);
+        }
+        self.mark_dirty(target);
+    }
+
+    fn merge_into(&mut self, src: usize, tgt: usize) {
+        debug_assert!(self.alive[src] && self.alive[tgt] && src != tgt);
+        let moved = std::mem::take(&mut self.members[src]);
+        for &m in &moved {
+            self.task_comp[m] = tgt;
+            self.pos[m] = self.members[tgt].len();
+            self.members[tgt].push(m);
+        }
+        let res = std::mem::take(&mut self.res[src]);
+        for &r in &res {
+            // re-claim only what src still owns; stale entries may
+            // legitimately belong to another live component by now
+            if self.owner[r] == src && self.owner_gen[r] == self.gen_of[src] {
+                self.claim(r, tgt);
+            }
+        }
+        self.res[tgt].extend_from_slice(&res);
+        // hand the buffers back so the slab slot reuses the allocations
+        self.members[src] = moved;
+        self.members[src].clear();
+        self.res[src] = res;
+        self.res[src].clear();
+        self.retire(src);
+    }
+
+    /// Remove task `t` (completion). Its component is marked dirty; the
+    /// possible split is deferred to [`CompSet::rebuild`].
+    pub fn remove(&mut self, t: usize) {
+        let c = self.task_comp[t];
+        if c == NONE {
+            return;
+        }
+        self.task_comp[t] = NONE;
+        let i = self.pos[t];
+        self.members[c].swap_remove(i);
+        if i < self.members[c].len() {
+            let m = self.members[c][i];
+            self.pos[m] = i;
+        }
+        self.pos[t] = NONE;
+        self.mark_dirty(c);
+    }
+
+    /// Re-derive exact connectivity among `c`'s members, retire `c`,
+    /// and create one fresh component per connectivity class (ids
+    /// appended to `out`, none of them dirty — the caller refills them
+    /// immediately). `virt[t]` is the task's virtual coflow-group
+    /// resource, if any. The caller must release `c`'s capacity
+    /// ([`CompSet::res_of`]) *before* calling this.
+    pub fn rebuild(
+        &mut self,
+        c: usize,
+        task_res: &[TaskRes],
+        virt: &[Option<usize>],
+        out: &mut Vec<usize>,
+    ) {
+        debug_assert!(self.alive[c]);
+        let mut mem = std::mem::take(&mut self.members[c]);
+        let m = mem.len();
+        // union-find over member positions via shared resources
+        self.epoch += 1;
+        self.parent.clear();
+        self.parent.extend(0..m);
+        for (i, &t) in mem.iter().enumerate() {
+            for r in task_res[t].iter().chain(virt[t]) {
+                if self.seen_epoch[r] == self.epoch {
+                    let j = self.seen_res[r];
+                    let (ri, rj) = (find(&mut self.parent, i), find(&mut self.parent, j));
+                    if ri != rj {
+                        self.parent[ri] = rj;
+                    }
+                } else {
+                    self.seen_epoch[r] = self.epoch;
+                    self.seen_res[r] = i;
+                }
+            }
+        }
+        self.retire(c);
+        // one fresh component per root, in order of first appearance
+        self.root_comp.clear();
+        self.root_comp.resize(m, NONE);
+        for (i, &t) in mem.iter().enumerate() {
+            let root = find(&mut self.parent, i);
+            let slot = if self.root_comp[root] == NONE {
+                let s = self.alloc_slot();
+                self.root_comp[root] = s;
+                out.push(s);
+                s
+            } else {
+                self.root_comp[root]
+            };
+            self.task_comp[t] = slot;
+            self.pos[t] = self.members[slot].len();
+            self.members[slot].push(t);
+            for r in task_res[t].iter().chain(virt[t]) {
+                self.claim(r, slot);
+                self.res[slot].push(r);
+            }
+        }
+        // recycle the taken member buffer (slot `c` may already be
+        // reused by one of the new components, so it goes to the pool,
+        // not back to `c`)
+        mem.clear();
+        self.spare.push(mem);
+    }
+
+    /// Component of queued task `t`.
+    pub fn comp_of(&self, t: usize) -> Option<usize> {
+        if self.task_comp[t] == NONE {
+            None
+        } else {
+            Some(self.task_comp[t])
+        }
+    }
+
+    /// Member tasks of live component `c`.
+    pub fn members(&self, c: usize) -> &[usize] {
+        &self.members[c]
+    }
+
+    /// Resources component `c` may have drawn on since its last rebuild
+    /// (a superset: duplicates and resources of since-removed members
+    /// are possible — exactly what a capacity release must cover).
+    pub fn res_of(&self, c: usize) -> &[usize] {
+        &self.res[c]
+    }
+
+    /// Live component ids (arbitrary but deterministic order).
+    pub fn live_slots(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Whether slot `c` currently holds a live component.
+    pub fn is_alive(&self, c: usize) -> bool {
+        self.alive[c]
+    }
+
+    /// Upper bound on slot ids (for parallel engine-side arrays).
+    pub fn slot_bound(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Number of live components.
+    pub fn n_live(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::alloc::{
+        coflow_fill_res, coflow_fill_res_in, maxmin_fill_res, maxmin_fill_res_in,
+        priority_fill_res, priority_fill_res_in, AllocScratch, MAX_TASK_RES,
+    };
+    use crate::util::propcheck::{check, Config};
+    use crate::util::rng::Rng;
+
+    fn tr(res: &[usize]) -> TaskRes {
+        let mut t = TaskRes::default();
+        for &r in res {
+            t.push(r);
+        }
+        t
+    }
+
+    #[test]
+    fn insert_merges_on_shared_resource() {
+        let mut cs = CompSet::new(8, 8);
+        cs.insert(0, &tr(&[0, 1]), None);
+        cs.insert(1, &tr(&[2, 3]), None);
+        assert_eq!(cs.n_live(), 2);
+        assert_ne!(cs.comp_of(0), cs.comp_of(1));
+        // task 2 bridges both components
+        cs.insert(2, &tr(&[1, 2]), None);
+        assert_eq!(cs.n_live(), 1);
+        assert_eq!(cs.comp_of(0), cs.comp_of(1));
+        assert_eq!(cs.comp_of(0), cs.comp_of(2));
+        let c = cs.comp_of(0).unwrap();
+        let mut m = cs.members(c).to_vec();
+        m.sort_unstable();
+        assert_eq!(m, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn remove_then_rebuild_splits() {
+        // chain 0 -[r1]- 1 -[r2]- 2; removing the middle task splits
+        let mut cs = CompSet::new(8, 8);
+        cs.insert(0, &tr(&[0, 1]), None);
+        cs.insert(1, &tr(&[1, 2]), None);
+        cs.insert(2, &tr(&[2, 3]), None);
+        assert_eq!(cs.n_live(), 1);
+        cs.remove(1);
+        let task_res: Vec<TaskRes> = vec![tr(&[0, 1]), tr(&[1, 2]), tr(&[2, 3])];
+        let virt = vec![None; 3];
+        let mut out = Vec::new();
+        while let Some(c) = cs.pop_dirty() {
+            cs.rebuild(c, &task_res, &virt, &mut out);
+        }
+        assert_eq!(cs.n_live(), 2);
+        assert_eq!(out.len(), 2);
+        assert_ne!(cs.comp_of(0), cs.comp_of(2));
+        assert_eq!(cs.comp_of(1), None);
+    }
+
+    #[test]
+    fn virtual_group_resource_keeps_coflow_atomic() {
+        // two flows on disjoint NICs, same coflow group => one component
+        let mut cs = CompSet::new(4, 10);
+        cs.insert(0, &tr(&[0, 1]), Some(8));
+        cs.insert(1, &tr(&[2, 3]), Some(8));
+        assert_eq!(cs.n_live(), 1);
+        assert_eq!(cs.comp_of(0), cs.comp_of(1));
+        // a third, ungrouped flow stays apart
+        cs.insert(2, &tr(&[4, 5]), None);
+        assert_eq!(cs.n_live(), 2);
+    }
+
+    #[test]
+    fn rebuild_releases_orphaned_resources() {
+        let mut cs = CompSet::new(4, 8);
+        cs.insert(0, &tr(&[0, 1]), None);
+        cs.insert(1, &tr(&[1, 2]), None);
+        cs.remove(0);
+        let task_res: Vec<TaskRes> = vec![tr(&[0, 1]), tr(&[1, 2])];
+        let virt = vec![None; 2];
+        let mut out = Vec::new();
+        while let Some(c) = cs.pop_dirty() {
+            cs.rebuild(c, &task_res, &virt, &mut out);
+        }
+        // resource 0 belonged only to the removed task: a new task on it
+        // must get a fresh singleton component, not join task 1's
+        cs.insert(2, &tr(&[0]), None);
+        assert_eq!(cs.n_live(), 2);
+        assert_ne!(cs.comp_of(1), cs.comp_of(2));
+    }
+
+    #[test]
+    fn dirty_worklist_dedups_and_skips_retired() {
+        let mut cs = CompSet::new(8, 8);
+        cs.insert(0, &tr(&[0]), None);
+        cs.insert(1, &tr(&[1]), None);
+        cs.mark_task_dirty(0);
+        cs.mark_task_dirty(0); // duplicate mark
+        // merging retires one of the two slots while both are dirty
+        cs.insert(2, &tr(&[0, 1]), None);
+        let mut seen = Vec::new();
+        while let Some(c) = cs.pop_dirty() {
+            assert!(cs.is_alive(c));
+            seen.push(c);
+        }
+        // exactly the surviving merged component is yielded, once
+        assert_eq!(seen.len(), 1);
+        assert_eq!(Some(seen[0]), cs.comp_of(2));
+    }
+
+    // ---------------- property: component-wise == whole-set ----------
+
+    #[derive(Debug, Clone)]
+    struct Case {
+        n_res: usize,
+        tasks: Vec<TaskRes>,
+        prios: Vec<i64>,
+        coflow: Vec<Option<usize>>,
+        remaining: Vec<f64>,
+        caps: Vec<f64>,
+    }
+
+    fn gen_case(rng: &mut Rng) -> Case {
+        let n_res = rng.range(4, 12);
+        let n = rng.range(1, 20);
+        let mut tasks = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = rng.range(1, (MAX_TASK_RES).min(n_res) + 1);
+            let mut t = TaskRes::default();
+            while (t.n as usize) < k {
+                let r = rng.below(n_res);
+                if !t.iter().any(|x| x == r) {
+                    t.push(r);
+                }
+            }
+            tasks.push(t);
+        }
+        let prios: Vec<i64> = (0..n).map(|_| rng.range(0, 4) as i64).collect();
+        let n_groups = rng.range(1, 4);
+        let coflow: Vec<Option<usize>> = (0..n)
+            .map(|_| if rng.bool(0.6) { Some(rng.below(n_groups)) } else { None })
+            .collect();
+        let remaining: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 3.0)).collect();
+        let caps: Vec<f64> = (0..n_res)
+            .map(|_| if rng.bool(0.1) { 0.0 } else { rng.range_f64(0.3, 2.0) })
+            .collect();
+        Case { n_res, tasks, prios, coflow, remaining, caps }
+    }
+
+    /// Partition the case's tasks with a `CompSet` (virtual group
+    /// resources included), exercising rebuild, and return the
+    /// components as sorted member lists.
+    fn partition(case: &Case, with_groups: bool) -> Vec<Vec<usize>> {
+        let n = case.tasks.len();
+        let virt: Vec<Option<usize>> = (0..n)
+            .map(|i| if with_groups { case.coflow[i].map(|g| case.n_res + g) } else { None })
+            .collect();
+        let mut cs = CompSet::new(n, case.n_res + 4);
+        for i in 0..n {
+            cs.insert(i, &case.tasks[i], virt[i]);
+        }
+        let mut out = Vec::new();
+        while let Some(c) = cs.pop_dirty() {
+            cs.rebuild(c, &case.tasks, &virt, &mut out);
+        }
+        let mut comps: Vec<Vec<usize>> = cs
+            .live_slots()
+            .iter()
+            .map(|&c| {
+                let mut m = cs.members(c).to_vec();
+                m.sort_unstable();
+                m
+            })
+            .collect();
+        comps.sort();
+        comps
+    }
+
+    fn assert_rates_eq(tag: &str, whole: &[f64], comp: &[f64]) -> Result<(), String> {
+        for (i, (a, b)) in whole.iter().zip(comp.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("{tag}: task {i} rate {a} vs {b}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Component-wise fills must equal whole-set fills *bit for bit*
+    /// under all three allocators — the invariant the engine's
+    /// `AllocKind` oracle pairing rests on.
+    #[test]
+    fn prop_component_fills_match_whole_set() {
+        check(
+            "component-fill-equivalence",
+            &Config { cases: 60, ..Default::default() },
+            gen_case,
+            |case| {
+                let n = case.tasks.len();
+                // --- max-min fair ---
+                let mut caps_w = case.caps.clone();
+                let mut rates_w = vec![0.0; n];
+                let mut users = vec![0.0; case.n_res];
+                maxmin_fill_res(&case.tasks, &mut caps_w, &mut rates_w, &mut users);
+                let mut caps_c = case.caps.clone();
+                let mut rates_c = vec![0.0; n];
+                let mut s = AllocScratch::default();
+                for comp in partition(case, false) {
+                    let sub: Vec<TaskRes> = comp.iter().map(|&i| case.tasks[i]).collect();
+                    let mut sub_rates = vec![0.0; sub.len()];
+                    maxmin_fill_res_in(&sub, &mut caps_c, &mut sub_rates, &mut users, &mut s);
+                    for (j, &i) in comp.iter().enumerate() {
+                        rates_c[i] = sub_rates[j];
+                    }
+                }
+                assert_rates_eq("maxmin", &rates_w, &rates_c)?;
+
+                // --- strict priority ---
+                let mut caps_w = case.caps.clone();
+                let mut rates_w = vec![0.0; n];
+                priority_fill_res(&case.tasks, &case.prios, &mut caps_w, &mut rates_w, &mut users);
+                let mut caps_c = case.caps.clone();
+                let mut rates_c = vec![0.0; n];
+                for comp in partition(case, false) {
+                    let sub: Vec<TaskRes> = comp.iter().map(|&i| case.tasks[i]).collect();
+                    let prios: Vec<i64> = comp.iter().map(|&i| case.prios[i]).collect();
+                    let mut sub_rates = vec![0.0; sub.len()];
+                    priority_fill_res_in(&sub, &prios, &mut caps_c, &mut sub_rates, &mut users, &mut s);
+                    for (j, &i) in comp.iter().enumerate() {
+                        rates_c[i] = sub_rates[j];
+                    }
+                }
+                assert_rates_eq("priority", &rates_w, &rates_c)?;
+
+                // --- coflow (groups atomic via virtual resources) ---
+                let mut caps_w = case.caps.clone();
+                let mut rates_w = vec![0.0; n];
+                coflow_fill_res(
+                    &case.tasks,
+                    &case.coflow,
+                    &case.remaining,
+                    &case.caps,
+                    &mut caps_w,
+                    &mut rates_w,
+                );
+                let mut caps_c = case.caps.clone();
+                let mut rates_c = vec![0.0; n];
+                for comp in partition(case, true) {
+                    let sub: Vec<TaskRes> = comp.iter().map(|&i| case.tasks[i]).collect();
+                    let coflow: Vec<Option<usize>> =
+                        comp.iter().map(|&i| case.coflow[i]).collect();
+                    let rem: Vec<f64> = comp.iter().map(|&i| case.remaining[i]).collect();
+                    let mut sub_rates = vec![0.0; sub.len()];
+                    coflow_fill_res_in(
+                        &sub,
+                        &coflow,
+                        &rem,
+                        &case.caps,
+                        &mut caps_c,
+                        &mut sub_rates,
+                        &mut s,
+                    );
+                    for (j, &i) in comp.iter().enumerate() {
+                        rates_c[i] = sub_rates[j];
+                    }
+                }
+                assert_rates_eq("coflow", &rates_w, &rates_c)?;
+                Ok(())
+            },
+        );
+    }
+}

@@ -35,11 +35,32 @@
 //! (`benches/sched_scaling.rs`). Both produce identical simulations;
 //! level allocation is order-independent, so the walks are even
 //! bit-for-bit comparable.
+//!
+//! ## Component-wise allocation (§Perf)
+//!
+//! Orthogonally to the queue kind, [`SimConfig::alloc`] selects how much
+//! of the active set each event reprices. Under
+//! [`AllocKind::Components`] (default) the engine maintains an
+//! incremental partition of the queued tasks into contention components
+//! ([`CompSet`], `sim/components.rs`) and re-runs the fluid fill only
+//! for components the event touched — arrival, completion, gate expiry,
+//! coflow progress — while clean components keep their **memoized
+//! rates**. [`AllocKind::WholeSet`] is the reprice-everything path
+//! (the pre-refactor cost profile), kept as the second equivalence
+//! oracle.
+//! Because the fills themselves decompose by exact resource
+//! connectivity (`alloc::maxmin_fill_res_in`) and coflow groups are
+//! held atomic through virtual component resources, the two produce
+//! bit-for-bit identical rates, event counts, makespans and traces —
+//! asserted across all five policies by `benches/sched_scaling.rs` and
+//! `tests/prop_queue_equivalence.rs`. See `docs/ARCHITECTURE.md` ("The
+//! allocation layer") for the dirty-marking rules per event type.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
-use super::alloc::{self, TaskRes};
+use super::alloc::{self, AllocScratch, TaskRes};
+use super::components::{AllocKind, CompSet};
 use super::ready::{f64_ord, BucketQueue, PrioKey, ReadyQueue, ResortQueue};
 use super::spec::{CpuPolicy, Cluster, NetPolicy, Policy, SimDag};
 use crate::mxdag::TaskId;
@@ -120,6 +141,9 @@ pub struct SimConfig {
     pub max_events: usize,
     /// Ready-queue implementation (see [`QueueKind`]).
     pub queue: QueueKind,
+    /// Allocation strategy per event (see [`AllocKind`]): component-wise
+    /// repricing with memoized rates, or the whole-active-set oracle.
+    pub alloc: AllocKind,
 }
 
 impl Default for SimConfig {
@@ -128,6 +152,7 @@ impl Default for SimConfig {
             policy: Policy::fair(),
             max_events: 20_000_000,
             queue: QueueKind::Incremental,
+            alloc: AllocKind::Components,
         }
     }
 }
@@ -135,23 +160,24 @@ impl Default for SimConfig {
 /// Max-min fill one priority level on residual capacity, with the
 /// starvation pre-check (a task with any exhausted resource would be
 /// frozen with rate 0 in the filler's first round — excluding it up
-/// front leaves every other rate bit-for-bit unchanged). Updates the
-/// class saturation counter for the early-exit test.
+/// front leaves every other rate bit-for-bit unchanged). Leaves
+/// `sub_idx` populated with the filled tasks — the whole-set walk reads
+/// it to update its class-saturation counter for the early-exit test
+/// (the component path walks all of a component's levels and needs no
+/// saturation bookkeeping).
 #[allow(clippy::too_many_arguments)]
 fn alloc_level_maxmin(
     level: &[usize],
     task_res: &[TaskRes],
-    caps0: &[f64],
     caps: &mut [f64],
     users: &mut [f64],
+    ascr: &mut AllocScratch,
     sub_res: &mut Vec<TaskRes>,
     sub_idx: &mut Vec<usize>,
     sub_rates: &mut Vec<f64>,
     started: &mut [bool],
     trace: &mut [TaskTrace],
     rated: &mut Vec<(usize, f64)>,
-    sat_mark: &mut [bool],
-    sat: &mut usize,
     now: f64,
 ) {
     sub_res.clear();
@@ -168,7 +194,7 @@ fn alloc_level_maxmin(
     }
     sub_rates.clear();
     sub_rates.resize(sub_idx.len(), 0.0);
-    alloc::maxmin_fill_res(sub_res, caps, sub_rates, users);
+    alloc::maxmin_fill_res_in(sub_res, caps, sub_rates, users, ascr);
     for (i, &t) in sub_idx.iter().enumerate() {
         let r = sub_rates[i];
         if r > EPS {
@@ -179,13 +205,142 @@ fn alloc_level_maxmin(
             rated.push((t, r));
         }
     }
-    for &t in sub_idx.iter() {
+}
+
+/// MADD-rate one SEBF unit (a coflow group or a singleton flow) on
+/// residual capacity: all members finish at the same τ. `level` must be
+/// in ascending task-id order — the canonical member order that keeps
+/// every (queue, alloc) configuration bit-for-bit comparable. Leaves
+/// `touched` populated with the unit's resources (the whole-set walk
+/// reads it for saturation marking); `load_touched` is reset on return.
+#[allow(clippy::too_many_arguments)]
+fn madd_level(
+    level: &[usize],
+    remaining: &[f64],
+    task_res: &[TaskRes],
+    caps: &mut [f64],
+    load: &mut [f64],
+    load_touched: &mut [bool],
+    touched: &mut Vec<usize>,
+    started: &mut [bool],
+    trace: &mut [TaskTrace],
+    rated: &mut Vec<(usize, f64)>,
+    now: f64,
+) {
+    let mut tau = 0.0f64;
+    touched.clear();
+    for &t in level {
+        tau = tau.max(remaining[t]); // rate ≤ 1 per flow
         for r in task_res[t].iter() {
-            if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
-                sat_mark[r] = true;
-                *sat += 1;
+            if !load_touched[r] {
+                load_touched[r] = true;
+                load[r] = 0.0;
+                touched.push(r);
+            }
+            load[r] += remaining[t];
+        }
+    }
+    for &r in touched.iter() {
+        if caps[r] <= ALLOC_EPS {
+            tau = f64::INFINITY;
+        } else {
+            tau = tau.max(load[r] / caps[r]);
+        }
+    }
+    if tau.is_finite() && tau > ALLOC_EPS {
+        for &t in level {
+            let rate = remaining[t] / tau;
+            if rate > EPS {
+                if !started[t] {
+                    started[t] = true;
+                    trace[t].start = now;
+                }
+                rated.push((t, rate));
+            }
+            for r in task_res[t].iter() {
+                caps[r] = (caps[r] - rate).max(0.0);
             }
         }
+    }
+    for &r in touched.iter() {
+        load_touched[r] = false;
+    }
+}
+
+/// Refill one (freshly rebuilt) contention component: sort its members
+/// into the same key levels the ready queues would expose, then walk
+/// them high → low allocating on residual capacity. The rates land in
+/// `out_rated`, the component's memoized allocation. The caller must
+/// have reset the component's resources to full capacity first — only
+/// this component's tasks draw on them, so the per-resource arithmetic
+/// replays exactly what the whole-set walk would do.
+#[allow(clippy::too_many_arguments)]
+fn fill_component(
+    sorted: &mut Vec<usize>,
+    members: &[usize],
+    key_of: &[PrioKey],
+    coflow_on: bool,
+    is_flow: &[bool],
+    task_res: &[TaskRes],
+    remaining: &[f64],
+    caps: &mut [f64],
+    users: &mut [f64],
+    ascr: &mut AllocScratch,
+    sub_res: &mut Vec<TaskRes>,
+    sub_idx: &mut Vec<usize>,
+    sub_rates: &mut Vec<f64>,
+    started: &mut [bool],
+    trace: &mut [TaskTrace],
+    out_rated: &mut Vec<(usize, f64)>,
+    load: &mut [f64],
+    load_touched: &mut [bool],
+    touched: &mut Vec<usize>,
+    now: f64,
+) {
+    out_rated.clear();
+    sorted.clear();
+    sorted.extend_from_slice(members);
+    // the queue's level partition: descending key, ascending id within a
+    // level (the canonical member order MADD requires)
+    sorted.sort_unstable_by(|&a, &b| key_of[b].cmp(&key_of[a]).then_with(|| a.cmp(&b)));
+    let mut i = 0;
+    while i < sorted.len() {
+        let key = key_of[sorted[i]];
+        let mut j = i + 1;
+        while j < sorted.len() && key_of[sorted[j]] == key {
+            j += 1;
+        }
+        if coflow_on && is_flow[sorted[i]] {
+            madd_level(
+                &sorted[i..j],
+                remaining,
+                task_res,
+                caps,
+                load,
+                load_touched,
+                touched,
+                started,
+                trace,
+                out_rated,
+                now,
+            );
+        } else {
+            alloc_level_maxmin(
+                &sorted[i..j],
+                task_res,
+                caps,
+                users,
+                ascr,
+                sub_res,
+                sub_idx,
+                sub_rates,
+                started,
+                trace,
+                out_rated,
+                now,
+            );
+        }
+        i = j;
     }
 }
 
@@ -366,6 +521,23 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     };
     let mut queued = vec![false; n];
 
+    // Contention components (AllocKind::Components): incremental
+    // partition of the queued tasks over the flat arena. Coflow groups
+    // are linked through one virtual resource per group (id n_res + gi)
+    // so MADD-coupled flows are never split across components. The
+    // engine tracks each task's current queue key so a dirty component
+    // can replay the queues' level partition locally.
+    let comps_on = cfg.alloc == AllocKind::Components;
+    let mut comps = CompSet::new(n, n_res + n_groups);
+    let virt: Vec<Option<usize>> = (0..n).map(|t| group_of[t].map(|gi| n_res + gi)).collect();
+    let mut key_of: Vec<PrioKey> = vec![PrioKey::LEVEL; n];
+    // per-component memoized allocation, indexed by component slot
+    let mut comp_rated: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut comp_sorted: Vec<usize> = Vec::new();
+    let mut new_comps: Vec<usize> = Vec::new();
+    let mut live_scratch: Vec<usize> = Vec::new();
+    let mut ascr = AllocScratch::default();
+
     // A task's dependencies are met: record its live order, hand it to
     // the arrival worklist, and update its coflow barrier.
     macro_rules! on_ready {
@@ -395,9 +567,11 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
         }
     }
 
-    // allocation scratch
+    // allocation scratch; under component-wise allocation `caps` is
+    // *persistent* residual state (a component's slice is reset to full
+    // capacity exactly when that component refills)
     let mut users_scratch = vec![0.0; n_res];
-    let mut caps = vec![0.0; n_res];
+    let mut caps = caps0.clone();
     let mut sub_res: Vec<TaskRes> = Vec::with_capacity(64);
     let mut sub_idx: Vec<usize> = Vec::with_capacity(64);
     let mut sub_rates: Vec<f64> = Vec::with_capacity(64);
@@ -518,7 +692,11 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                     },
                 };
                 queued[t] = true;
+                key_of[t] = key;
                 rq_net.push(t, key);
+                if comps_on {
+                    comps.insert(t, &task_res[t], virt[t]);
+                }
             } else {
                 let key = match cfg.policy.cpu {
                     CpuPolicy::Fair => PrioKey::LEVEL,
@@ -528,7 +706,11 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                     ),
                 };
                 queued[t] = true;
+                key_of[t] = key;
                 rq_cpu.push(t, key);
+                if comps_on {
+                    comps.insert(t, &task_res[t], virt[t]);
+                }
             }
         }
 
@@ -551,7 +733,11 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                 let key = PrioKey::from_bound_asc(bnd, gi as u64);
                 for &m in members[gi].iter() {
                     if queued[m] && is_flow_v[m] {
+                        key_of[m] = key;
                         rq_net.update_key(m, key);
+                        if comps_on {
+                            comps.mark_task_dirty(m);
+                        }
                     }
                 }
             }
@@ -559,10 +745,12 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             for &t in dirty_singles.iter() {
                 if queued[t] {
                     let bnd = sebf_bound_single(t, &remaining, &task_res, &caps0);
-                    rq_net.update_key(
-                        t,
-                        PrioKey::from_bound_asc(bnd, n_groups as u64 + seq[t]),
-                    );
+                    let key = PrioKey::from_bound_asc(bnd, n_groups as u64 + seq[t]);
+                    key_of[t] = key;
+                    rq_net.update_key(t, key);
+                    if comps_on {
+                        comps.mark_task_dirty(t);
+                    }
                 }
             }
             dirty_singles.clear();
@@ -581,123 +769,166 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             return Err(SimError::Deadlock(now, n - n_done));
         }
 
-        // 3. allocate rates, walking priority levels high → low on
-        //    residual capacity
-        caps.copy_from_slice(&caps0);
-        rated.clear();
-        for m in sat_mark.iter_mut() {
-            *m = false;
-        }
+        // 3. allocate rates
         let allow_exit = cfg.queue == QueueKind::Incremental;
+        if comps_on {
+            // Component-wise: release and refill only the components an
+            // event has touched; every clean component keeps its
+            // memoized rates (immutable between the events that touch
+            // it — the invariant `docs/ARCHITECTURE.md` documents).
+            while let Some(c) = comps.pop_dirty() {
+                // release the old allocation: only this component's
+                // tasks ever drew on these resources
+                for &r in comps.res_of(c) {
+                    if r < n_res {
+                        caps[r] = caps0[r];
+                    }
+                }
+                new_comps.clear();
+                comps.rebuild(c, &task_res, &virt, &mut new_comps);
+                if comp_rated.len() < comps.slot_bound() {
+                    comp_rated.resize_with(comps.slot_bound(), Vec::new);
+                }
+                for &nc in &new_comps {
+                    fill_component(
+                        &mut comp_sorted,
+                        comps.members(nc),
+                        &key_of,
+                        coflow_on,
+                        &is_flow_v,
+                        &task_res,
+                        &remaining,
+                        &mut caps,
+                        &mut users_scratch,
+                        &mut ascr,
+                        &mut sub_res,
+                        &mut sub_idx,
+                        &mut sub_rates,
+                        &mut started,
+                        &mut trace,
+                        &mut comp_rated[nc],
+                        &mut load,
+                        &mut load_touched,
+                        &mut touched,
+                        now,
+                    );
+                }
+            }
+        } else {
+            // Whole-set oracle: reprice everything, walking priority
+            // levels high → low on residual capacity.
+            caps.copy_from_slice(&caps0);
+            rated.clear();
+            for m in sat_mark.iter_mut() {
+                *m = false;
+            }
 
-        // compute slots first (independent resources from NICs)
-        {
-            let mut sat = 0usize;
-            rq_cpu.for_each_level(&mut |_key, level| {
-                alloc_level_maxmin(
-                    level,
-                    &task_res,
-                    &caps0,
-                    &mut caps,
-                    &mut users_scratch,
-                    &mut sub_res,
-                    &mut sub_idx,
-                    &mut sub_rates,
-                    &mut started,
-                    &mut trace,
-                    &mut rated,
-                    &mut sat_mark,
-                    &mut sat,
-                    now,
-                );
-                !(allow_exit && sat >= n_cores_pos)
-            });
-        }
-        {
-            let mut sat = 0usize;
-            if coflow_on {
-                // each level is one SEBF unit (a coflow group or a
-                // singleton flow); MADD makes all members finish at the
-                // same τ, feasible on residual capacity
-                rq_net.for_each_level(&mut |_key, level| {
-                    grp_scratch.clear();
-                    grp_scratch.extend_from_slice(level);
-                    // canonical member order: keeps both queue kinds (and
-                    // their intra-level orders) bit-for-bit comparable
-                    grp_scratch.sort_unstable();
-                    let mut tau = 0.0f64;
-                    touched.clear();
-                    for &t in grp_scratch.iter() {
-                        tau = tau.max(remaining[t]); // rate ≤ 1 per flow
-                        for r in task_res[t].iter() {
-                            if !load_touched[r] {
-                                load_touched[r] = true;
-                                load[r] = 0.0;
-                                touched.push(r);
-                            }
-                            load[r] += remaining[t];
-                        }
-                    }
-                    for &r in touched.iter() {
-                        if caps[r] <= ALLOC_EPS {
-                            tau = f64::INFINITY;
-                        } else {
-                            tau = tau.max(load[r] / caps[r]);
-                        }
-                    }
-                    if tau.is_finite() && tau > ALLOC_EPS {
-                        for &t in grp_scratch.iter() {
-                            let rate = remaining[t] / tau;
-                            if rate > EPS {
-                                if !started[t] {
-                                    started[t] = true;
-                                    trace[t].start = now;
-                                }
-                                rated.push((t, rate));
-                            }
-                            for r in task_res[t].iter() {
-                                caps[r] = (caps[r] - rate).max(0.0);
-                            }
-                        }
-                    }
-                    for &r in touched.iter() {
-                        load_touched[r] = false;
-                    }
-                    for &r in touched.iter() {
-                        if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
-                            sat_mark[r] = true;
-                            sat += 1;
-                        }
-                    }
-                    !(allow_exit && sat >= n_net_pos)
-                });
-            } else {
-                rq_net.for_each_level(&mut |_key, level| {
+            // compute slots first (independent resources from NICs)
+            {
+                let mut sat = 0usize;
+                rq_cpu.for_each_level(&mut |_key, level| {
                     alloc_level_maxmin(
                         level,
                         &task_res,
-                        &caps0,
                         &mut caps,
                         &mut users_scratch,
+                        &mut ascr,
                         &mut sub_res,
                         &mut sub_idx,
                         &mut sub_rates,
                         &mut started,
                         &mut trace,
                         &mut rated,
-                        &mut sat_mark,
-                        &mut sat,
                         now,
                     );
-                    !(allow_exit && sat >= n_net_pos)
+                    for &t in sub_idx.iter() {
+                        for r in task_res[t].iter() {
+                            if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
+                                sat_mark[r] = true;
+                                sat += 1;
+                            }
+                        }
+                    }
+                    !(allow_exit && sat >= n_cores_pos)
                 });
+            }
+            {
+                let mut sat = 0usize;
+                if coflow_on {
+                    // each level is one SEBF unit (a coflow group or a
+                    // singleton flow); MADD makes all members finish at
+                    // the same τ, feasible on residual capacity
+                    rq_net.for_each_level(&mut |_key, level| {
+                        grp_scratch.clear();
+                        grp_scratch.extend_from_slice(level);
+                        // canonical member order: keeps every (queue,
+                        // alloc) configuration bit-for-bit comparable
+                        grp_scratch.sort_unstable();
+                        madd_level(
+                            &grp_scratch,
+                            &remaining,
+                            &task_res,
+                            &mut caps,
+                            &mut load,
+                            &mut load_touched,
+                            &mut touched,
+                            &mut started,
+                            &mut trace,
+                            &mut rated,
+                            now,
+                        );
+                        for &r in touched.iter() {
+                            if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
+                                sat_mark[r] = true;
+                                sat += 1;
+                            }
+                        }
+                        !(allow_exit && sat >= n_net_pos)
+                    });
+                } else {
+                    rq_net.for_each_level(&mut |_key, level| {
+                        alloc_level_maxmin(
+                            level,
+                            &task_res,
+                            &mut caps,
+                            &mut users_scratch,
+                            &mut ascr,
+                            &mut sub_res,
+                            &mut sub_idx,
+                            &mut sub_rates,
+                            &mut started,
+                            &mut trace,
+                            &mut rated,
+                            now,
+                        );
+                        for &t in sub_idx.iter() {
+                            for r in task_res[t].iter() {
+                                if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
+                                    sat_mark[r] = true;
+                                    sat += 1;
+                                }
+                            }
+                        }
+                        !(allow_exit && sat >= n_net_pos)
+                    });
+                }
             }
         }
 
-        // 4. next event horizon
+        // 4. next event horizon: the min over every running task's
+        //    projected completion (memoized per component) and the next
+        //    gate expiry — a min-reduction, so iteration order is free
         let mut dt = f64::INFINITY;
-        for &(t, r) in rated.iter() {
-            dt = dt.min(remaining[t] / r);
+        if comps_on {
+            for &c in comps.live_slots() {
+                for &(t, r) in comp_rated[c].iter() {
+                    dt = dt.min(remaining[t] / r);
+                }
+            }
+        } else {
+            for &(t, r) in rated.iter() {
+                dt = dt.min(remaining[t] / r);
+            }
         }
         if let Some(&Reverse((_, _, tg))) = gates.peek() {
             dt = dt.min(dag.tasks[tg].gate - now);
@@ -708,27 +939,63 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
 
         // 5. advance; completions are processed in live order so that
         //    downstream readiness (and FIFO slots) follow the same order
-        //    under either queue kind
+        //    under every (queue, alloc) configuration. Progress under
+        //    coflow dirties the progressing component: SEBF bounds and
+        //    MADD rates drift with remaining bytes (static-key policies
+        //    leave clean components untouched — their rates depend only
+        //    on membership).
         now += dt;
         completed.clear();
-        for &(t, r) in rated.iter() {
-            remaining[t] -= r * dt;
-            let finished = remaining[t] <= EPS;
-            if finished {
-                remaining[t] = 0.0;
-                completed.push(t);
-            }
-            if coflow_on && dag.tasks[t].kind.is_flow() {
-                match group_of[t] {
-                    Some(gi) => {
-                        if !group_dirty[gi] {
-                            group_dirty[gi] = true;
-                            dirty_groups.push(gi);
+        if comps_on {
+            live_scratch.clear();
+            live_scratch.extend_from_slice(comps.live_slots());
+            for &c in &live_scratch {
+                for k in 0..comp_rated[c].len() {
+                    let (t, r) = comp_rated[c][k];
+                    remaining[t] -= r * dt;
+                    let finished = remaining[t] <= EPS;
+                    if finished {
+                        remaining[t] = 0.0;
+                        completed.push(t);
+                    }
+                    if coflow_on && is_flow_v[t] {
+                        comps.mark_task_dirty(t);
+                        match group_of[t] {
+                            Some(gi) => {
+                                if !group_dirty[gi] {
+                                    group_dirty[gi] = true;
+                                    dirty_groups.push(gi);
+                                }
+                            }
+                            None => {
+                                if !finished {
+                                    dirty_singles.push(t);
+                                }
+                            }
                         }
                     }
-                    None => {
-                        if !finished {
-                            dirty_singles.push(t);
+                }
+            }
+        } else {
+            for &(t, r) in rated.iter() {
+                remaining[t] -= r * dt;
+                let finished = remaining[t] <= EPS;
+                if finished {
+                    remaining[t] = 0.0;
+                    completed.push(t);
+                }
+                if coflow_on && dag.tasks[t].kind.is_flow() {
+                    match group_of[t] {
+                        Some(gi) => {
+                            if !group_dirty[gi] {
+                                group_dirty[gi] = true;
+                                dirty_groups.push(gi);
+                            }
+                        }
+                        None => {
+                            if !finished {
+                                dirty_singles.push(t);
+                            }
                         }
                     }
                 }
@@ -740,6 +1007,9 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             n_done += 1;
             trace[t].finish = now;
             queued[t] = false;
+            if comps_on {
+                comps.remove(t);
+            }
             if dag.tasks[t].kind.is_flow() {
                 rq_net.remove(t);
             } else {
@@ -1078,6 +1348,107 @@ mod tests {
                 assert!((full.trace[i].finish - inc.trace[i].finish).abs() < 1e-12);
             }
         }
+    }
+
+    /// Component-wise allocation must replay the whole-set oracle
+    /// bit-for-bit: same events, same makespan, same traces — on a DAG
+    /// that exercises merges (a flow bridging NICs), splits (completions
+    /// severing a chain), gates and priorities.
+    #[test]
+    fn alloc_kinds_agree_on_mixed_dag() {
+        let mut d = SimDag::default();
+        let a = d.push({ let mut t = task(SimKind::Compute { host: 0 }, 1.5); t.orig = 1; t });
+        let f1 = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 2.0);
+            t.orig = 2;
+            t.priority = 5;
+            t
+        });
+        let f2 = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.priority = 1;
+            t.gate = 0.5;
+            t
+        });
+        let f3 = d.push({
+            let mut t = task(SimKind::Flow { src: 2, dst: 1 }, 0.7);
+            t.orig = 5;
+            t
+        });
+        let b = d.push({ let mut t = task(SimKind::Compute { host: 1 }, 1.0); t.orig = 4; t });
+        d.dep(a, f1);
+        d.dep(f1, b);
+        let _ = (f2, f3);
+        let cluster = Cluster::uniform(3);
+        for policy in [Policy::fair(), Policy::priority(), Policy::fifo(), Policy::coflow()] {
+            let whole = simulate(
+                &d,
+                &cluster,
+                &SimConfig { policy, alloc: AllocKind::WholeSet, ..Default::default() },
+            )
+            .unwrap();
+            let comp = simulate(
+                &d,
+                &cluster,
+                &SimConfig { policy, alloc: AllocKind::Components, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(whole.events, comp.events, "{policy:?}");
+            assert_eq!(
+                whole.makespan.to_bits(),
+                comp.makespan.to_bits(),
+                "{policy:?}: {} vs {}",
+                whole.makespan,
+                comp.makespan
+            );
+            for i in 0..d.len() {
+                assert_eq!(whole.trace[i].finish.to_bits(), comp.trace[i].finish.to_bits());
+                assert_eq!(whole.trace[i].start.to_bits(), comp.trace[i].start.to_bits());
+            }
+        }
+    }
+
+    /// A quiescent disjoint component must not be repriced: two flows on
+    /// separate NIC pairs finish at their solo times under both alloc
+    /// kinds, and the coflow barrier + SEBF preemption path stays
+    /// bit-identical when groups arrive mid-run.
+    #[test]
+    fn coflow_alloc_kinds_agree_with_preemption() {
+        let mut d = SimDag::default();
+        let c = d.push({ let mut t = task(SimKind::Compute { host: 3 }, 2.5); t.orig = 1; t });
+        let fa = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 3.0);
+            t.orig = 2;
+            t.coflow = Some(7);
+            t
+        });
+        let fb = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.coflow = Some(9);
+            t
+        });
+        // a disjoint singleton flow in its own component
+        let fc = d.push({
+            let mut t = task(SimKind::Flow { src: 2, dst: 3 }, 1.2);
+            t.orig = 4;
+            t
+        });
+        d.dep(c, fb);
+        let _ = (fa, fc);
+        let cfg = |alloc| SimConfig { policy: Policy::coflow(), alloc, ..Default::default() };
+        let whole = simulate(&d, &Cluster::uniform(4), &cfg(AllocKind::WholeSet)).unwrap();
+        let comp = simulate(&d, &Cluster::uniform(4), &cfg(AllocKind::Components)).unwrap();
+        assert_eq!(whole.events, comp.events);
+        assert_eq!(whole.makespan.to_bits(), comp.makespan.to_bits());
+        for i in 0..d.len() {
+            assert_eq!(whole.trace[i].finish.to_bits(), comp.trace[i].finish.to_bits());
+        }
+        // semantics unchanged from the invalidation test: A keeps the NIC
+        assert!((comp.finish_of(2) - 3.0).abs() < 1e-9);
+        assert!((comp.finish_of(3) - 4.0).abs() < 1e-9);
+        assert!((comp.finish_of(4) - 1.2).abs() < 1e-9, "disjoint flow runs solo");
     }
 
     /// SEBF keys must be refreshed as remaining bytes drain: a big

@@ -39,6 +39,14 @@
 //! [`ReadyQueue::update_key`] — the explicit *key invalidation hook* —
 //! whenever the state a key was derived from changes. The engine does
 //! this for SEBF after every progress step.
+//!
+//! The same keys drive the engine's component-wise allocation
+//! ([`AllocKind::Components`](super::components::AllocKind)): a dirty
+//! contention component re-sorts its own members by key and walks the
+//! resulting levels locally, reproducing exactly the level partition
+//! these queues would expose globally. A key update therefore also
+//! dirties the task's component — a re-keyed task can change its
+//! component's level structure even when nothing else moved.
 
 use std::cmp::Reverse;
 use std::collections::BTreeMap;

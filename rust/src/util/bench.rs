@@ -2,9 +2,14 @@
 //!
 //! `cargo bench` targets use `harness = false` and drive this directly.
 //! Auto-calibrates iteration counts, reports min/median/mean, and renders
-//! aligned tables for the paper-figure benches.
+//! aligned tables for the paper-figure benches. Perf-tracking benches
+//! additionally persist machine-readable results through
+//! [`write_bench_json`] so the trajectory survives across PRs instead of
+//! only scrolling by as printed tables.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -70,6 +75,33 @@ pub fn bench<F: FnMut()>(name: &str, f: F) -> Sample {
         s.iters
     );
     s
+}
+
+/// Default path of the machine-readable bench results file (relative to
+/// the invocation directory — the workspace root under `cargo bench`).
+pub const BENCH_JSON_PATH: &str = "BENCH_sim.json";
+
+/// Merge `value` under `section` into `BENCH_sim.json`.
+///
+/// Each bench owns one top-level section and overwrites only that, so
+/// `sim_throughput` and `sched_scaling` can both contribute to the same
+/// file and CI / analysis scripts can diff events-per-second across
+/// PRs. A malformed or missing file is replaced wholesale; write errors
+/// are reported but non-fatal (benches must not fail on a read-only
+/// checkout).
+pub fn write_bench_json(section: &str, value: Json) {
+    let mut root = std::fs::read_to_string(BENCH_JSON_PATH)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| match j {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        })
+        .unwrap_or_default();
+    root.insert(section.to_string(), value);
+    if let Err(e) = std::fs::write(BENCH_JSON_PATH, Json::Obj(root).to_string()) {
+        eprintln!("warning: could not write {BENCH_JSON_PATH}: {e}");
+    }
 }
 
 pub fn bench_header(title: &str) {

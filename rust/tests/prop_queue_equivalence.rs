@@ -1,18 +1,23 @@
-//! Equivalence oracle for the incremental ready-queue engine: on
-//! randomized DAGs, under every policy a scheduler can emit, the
-//! incremental bucket queue must reproduce the full re-sort baseline
+//! Equivalence oracle for the engine's incremental machinery: on
+//! randomized DAGs, under every policy a scheduler can emit, all four
+//! corners of the {Incremental, FullResort} queue ×
+//! {Components, WholeSet} allocation matrix must reproduce each other
 //! *exactly* — same event count (the engines take identical event
 //! boundaries), same makespan and same per-chunk traces. Level
-//! membership is identical by construction and level allocation is
-//! order-independent, so any divergence here means the incremental
-//! path dropped, reordered or stale-keyed a ready task.
+//! membership is identical by construction, level allocation decomposes
+//! bit-exactly over contention components, and clean components'
+//! memoized rates equal what a whole-set reprice would recompute — so
+//! any divergence here means a dropped, reordered, stale-keyed or
+//! stale-rated ready task.
 
 use mxdag::sched::{
     CoflowScheduler, FairScheduler, FifoScheduler, Grouping, MxScheduler, PackingScheduler,
     Plan, Scheduler,
 };
 use mxdag::sched::{evaluate, AltruisticScheduler, SelfishScheduler};
-use mxdag::sim::{expand, simulate, Cluster, Policy, QueueKind, SimConfig, SimResult};
+use mxdag::sim::{
+    expand, simulate, AllocKind, Cluster, Policy, QueueKind, SimConfig, SimResult,
+};
 use mxdag::util::propcheck::{check, Config};
 use mxdag::util::rng::Rng;
 use mxdag::workloads::{self, random_dag, RandomParams};
@@ -30,50 +35,69 @@ fn gen_params(rng: &mut Rng) -> RandomParams {
     }
 }
 
-fn run_both(
+/// The full configuration matrix; the first entry is the pre-refactor
+/// baseline every other corner is compared against.
+const MATRIX: [(QueueKind, AllocKind); 4] = [
+    (QueueKind::FullResort, AllocKind::WholeSet),
+    (QueueKind::Incremental, AllocKind::WholeSet),
+    (QueueKind::FullResort, AllocKind::Components),
+    (QueueKind::Incremental, AllocKind::Components),
+];
+
+fn run_matrix(
     plan: &Plan,
     dag: &mxdag::mxdag::MXDag,
     cluster: &Cluster,
-) -> Result<(SimResult, SimResult), String> {
+) -> Result<Vec<SimResult>, String> {
     let sim = expand(dag, &plan.ann);
-    let mk = |queue: QueueKind| SimConfig { policy: plan.policy, queue, ..Default::default() };
-    let full = simulate(&sim, cluster, &mk(QueueKind::FullResort))
-        .map_err(|e| format!("full-resort: {e}"))?;
-    let inc = simulate(&sim, cluster, &mk(QueueKind::Incremental))
-        .map_err(|e| format!("incremental: {e}"))?;
-    Ok((full, inc))
+    MATRIX
+        .iter()
+        .map(|&(queue, alloc)| {
+            simulate(
+                &sim,
+                cluster,
+                &SimConfig { policy: plan.policy, queue, alloc, ..Default::default() },
+            )
+            .map_err(|e| format!("{queue:?}/{alloc:?}: {e}"))
+        })
+        .collect()
 }
 
-fn assert_equivalent(tag: &str, full: &SimResult, inc: &SimResult) -> Result<(), String> {
-    if full.events != inc.events {
-        return Err(format!("{tag}: events {} vs {}", full.events, inc.events));
-    }
-    if (full.makespan - inc.makespan).abs() > 1e-9 {
-        return Err(format!("{tag}: makespan {} vs {}", full.makespan, inc.makespan));
-    }
-    if full.trace.len() != inc.trace.len() {
-        return Err(format!("{tag}: trace length differs"));
-    }
-    for (i, (a, b)) in full.trace.iter().zip(inc.trace.iter()).enumerate() {
-        let same = |x: f64, y: f64| (x - y).abs() <= 1e-9 || (x.is_nan() && y.is_nan());
-        if !same(a.start, b.start) || !same(a.finish, b.finish) {
-            return Err(format!(
-                "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
-                a.start, a.finish, b.start, b.finish
-            ));
+fn assert_equivalent(tag: &str, results: &[SimResult]) -> Result<(), String> {
+    let base = &results[0];
+    for (k, r) in results.iter().enumerate().skip(1) {
+        let (queue, alloc) = MATRIX[k];
+        let tag = format!("{tag} [{queue:?}/{alloc:?}]");
+        if base.events != r.events {
+            return Err(format!("{tag}: events {} vs {}", base.events, r.events));
+        }
+        if (base.makespan - r.makespan).abs() > 1e-9 {
+            return Err(format!("{tag}: makespan {} vs {}", base.makespan, r.makespan));
+        }
+        if base.trace.len() != r.trace.len() {
+            return Err(format!("{tag}: trace length differs"));
+        }
+        for (i, (a, b)) in base.trace.iter().zip(r.trace.iter()).enumerate() {
+            let same = |x: f64, y: f64| (x - y).abs() <= 1e-9 || (x.is_nan() && y.is_nan());
+            if !same(a.start, b.start) || !same(a.finish, b.finish) {
+                return Err(format!(
+                    "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                    a.start, a.finish, b.start, b.finish
+                ));
+            }
         }
     }
     Ok(())
 }
 
 /// The headline oracle: all five policy families (fair, fifo, packing
-/// priorities, SEBF coflow, mxdag critical-path priorities) pop ready
-/// tasks in exactly the same order on both queue implementations.
+/// priorities, SEBF coflow, mxdag critical-path priorities) take the
+/// same event path through every (queue, alloc) configuration.
 #[test]
-fn prop_incremental_matches_full_resort_all_policies() {
+fn prop_matrix_agrees_all_policies() {
     check(
-        "queue-equivalence",
-        &Config { cases: 20, ..Default::default() },
+        "queue-alloc-equivalence",
+        &Config { cases: 15, ..Default::default() },
         gen_params,
         |p| {
             let g = random_dag(p);
@@ -87,21 +111,23 @@ fn prop_incremental_matches_full_resort_all_policies() {
             ];
             for s in &schedulers {
                 let plan = s.plan(&g, &cluster);
-                let (full, inc) = run_both(&plan, &g, &cluster)?;
-                assert_equivalent(s.name(), &full, &inc)?;
+                let results = run_matrix(&plan, &g, &cluster)?;
+                assert_equivalent(s.name(), &results)?;
             }
             Ok(())
         },
     );
 }
 
-/// Same oracle on a non-trivial topology (fabric links widen task
-/// resource footprints, which the saturation early-exit must respect).
+/// Same oracle on a non-trivial topology: fabric links widen task
+/// resource footprints, which both the saturation early-exit and the
+/// component partition (cross-rack flows bridge racks into one
+/// component) must respect.
 #[test]
-fn prop_equivalence_holds_on_oversubscribed_fabric() {
+fn prop_matrix_agrees_on_oversubscribed_fabric() {
     check(
-        "queue-equivalence-oversub",
-        &Config { cases: 10, ..Default::default() },
+        "queue-alloc-equivalence-oversub",
+        &Config { cases: 8, ..Default::default() },
         gen_params,
         |p| {
             let g = random_dag(p);
@@ -109,8 +135,30 @@ fn prop_equivalence_holds_on_oversubscribed_fabric() {
             for policy in [Policy::fair(), Policy::fifo(), Policy::priority(), Policy::coflow()]
             {
                 let plan = Plan { ann: Default::default(), policy };
-                let (full, inc) = run_both(&plan, &g, &cluster)?;
-                assert_equivalent(&format!("{policy:?}"), &full, &inc)?;
+                let results = run_matrix(&plan, &g, &cluster)?;
+                assert_equivalent(&format!("{policy:?}"), &results)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// And on parallel fabrics, where hash-selected trunks glue otherwise
+/// unrelated flows into shared components.
+#[test]
+fn prop_matrix_agrees_on_parallel_fabrics() {
+    check(
+        "queue-alloc-equivalence-fabrics",
+        &Config { cases: 8, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let cluster = Cluster::parallel_fabrics(p.hosts.max(2), 2, 0.5);
+            for policy in [Policy::fair(), Policy::fifo(), Policy::priority(), Policy::coflow()]
+            {
+                let plan = Plan { ann: Default::default(), policy };
+                let results = run_matrix(&plan, &g, &cluster)?;
+                assert_equivalent(&format!("{policy:?}"), &results)?;
             }
             Ok(())
         },
@@ -118,7 +166,8 @@ fn prop_equivalence_holds_on_oversubscribed_fabric() {
 }
 
 /// Gated plans (Principle-2 altruism) exercise the gate heap: delayed
-/// tasks must re-enter the ready stream in their original live order.
+/// tasks must re-enter the ready stream in their original live order,
+/// and a gate expiry must dirty exactly the components it feeds.
 #[test]
 fn gated_altruistic_plan_is_equivalent() {
     let (j1, j2) = workloads::fig7_jobs();
@@ -126,10 +175,10 @@ fn gated_altruistic_plan_is_equivalent() {
     let cluster = Cluster::uniform(4);
     let plan = AltruisticScheduler.plan_multi(&multi);
     assert!(!plan.ann.gates.is_empty(), "altruistic multi-plan must gate tasks");
-    let (full, inc) = run_both(&plan, &multi.dag, &cluster).unwrap();
-    assert_equivalent("altruistic-multi", &full, &inc).unwrap();
+    let results = run_matrix(&plan, &multi.dag, &cluster).unwrap();
+    assert_equivalent("altruistic-multi", &results).unwrap();
     // and the checked variant still honours the Pareto guarantee when
-    // served from the incremental queue
+    // served from the incremental queue + component-wise allocation
     let checked = AltruisticScheduler.plan_multi_checked(&multi, &cluster);
     let r = evaluate(&multi.dag, &cluster, &checked).unwrap();
     assert!(r.makespan.is_finite());
