@@ -5,21 +5,27 @@
 //! 2. *Engine events/s* on wide-fanout DAGs at 1k / 5k / 10k tasks under
 //!    the mxdag co-scheduler's priority plan: the pre-refactor full
 //!    re-sort baseline vs the incremental ready queue (PR 2) vs
-//!    component-wise allocation with memoized rates on top of it.
+//!    component-wise allocation with memoized rates (PR 3) vs anchored
+//!    time advance over the finish-time heap (PR 4) on top of it.
 //! 3. The same A/B under the **fair** policy, where every ready task
-//!    shares one level and whole-set allocation is costliest — the
-//!    headline for `AllocKind::Components`.
+//!    shares one level, whole-set allocation is costliest and the eager
+//!    integration sweep touches every rated task — the headline for
+//!    `AllocKind::Components` + `HorizonKind::Anchored`.
 //!
-//! Every A/B asserts *bit-identical* results (event counts, makespans)
-//! across configurations — the equivalence-oracle contract — and a
-//! five-policy identity check runs all scheduler families through
-//! `AllocKind::WholeSet` vs `AllocKind::Components`, comparing traces
-//! bit for bit. Results are printed as tables (README §Performance) and
+//! Every eager-horizon A/B asserts *bit-identical* results (event
+//! counts, makespans) across configurations — the equivalence-oracle
+//! contract — while the anchored rows are held to the documented
+//! **tolerance oracle** (makespan and per-chunk traces within 1e-6
+//! relative of eager; anchored arithmetic is deliberately not
+//! bit-identical). A five-policy identity check runs all scheduler
+//! families through every corner of the {queue} × {alloc} × {horizon}
+//! matrix. Results are printed as tables (README §Performance) and
 //! persisted to `BENCH_sim.json` for cross-PR tracking.
 //!
 //! `BENCH_SMOKE=1` shrinks everything to one small size and skips the
 //! plan-cost story — the CI bench-smoke job uses it to catch oracle
-//! drift and bench bitrot without paying full-scale runtimes.
+//! drift and bench bitrot (in both horizon modes) without paying
+//! full-scale runtimes.
 
 use std::time::Instant;
 
@@ -28,7 +34,8 @@ use mxdag::sched::{
     Scheduler,
 };
 use mxdag::sim::{
-    expand, simulate, AllocKind, Cluster, Policy, QueueKind, SimConfig, SimDag, SimResult,
+    expand, simulate, within_tolerance, AllocKind, Cluster, HorizonKind, Policy, QueueKind,
+    SimConfig, SimDag, SimResult,
 };
 use mxdag::util::bench::{bench, bench_header, write_bench_json, Table};
 use mxdag::util::json::Json;
@@ -102,13 +109,46 @@ fn assert_bit_identical(tag: &str, a: &SimResult, b: &SimResult) {
     );
 }
 
+/// The cross-horizon tolerance oracle (`mxdag::sim::within_tolerance`,
+/// one definition for every oracle site): anchored results must match
+/// the eager baseline on the makespan and every per-chunk trace time
+/// (event counts may differ — anchored groups same-instant completions
+/// by predicted finish, not by byte epsilon).
+fn assert_within_tolerance(tag: &str, eager: &SimResult, anchored: &SimResult) {
+    let close = within_tolerance;
+    assert!(
+        close(eager.makespan, anchored.makespan),
+        "{tag}: makespans diverge beyond tolerance ({} vs {})",
+        eager.makespan,
+        anchored.makespan
+    );
+    assert_eq!(eager.trace.len(), anchored.trace.len(), "{tag}: trace length");
+    for (i, (a, b)) in eager.trace.iter().zip(anchored.trace.iter()).enumerate() {
+        assert!(
+            close(a.start, b.start) && close(a.finish, b.finish),
+            "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+            a.start,
+            a.finish,
+            b.start,
+            b.finish
+        );
+    }
+}
+
 fn engine_events_per_sec() -> Json {
     let hosts = 16;
     let cluster = Cluster::uniform(hosts);
     let mut table = Table::new(
         "engine events/s, mxdag priority plan on wide-fanout DAGs \
-         (full re-sort vs incremental queue vs component-wise alloc)",
-        &["events", "full-resort ev/s", "incremental ev/s", "components ev/s", "speedup"],
+         (full re-sort vs incremental queue vs component-wise alloc vs anchored horizon)",
+        &[
+            "events",
+            "full-resort ev/s",
+            "incremental ev/s",
+            "components ev/s",
+            "anchored ev/s",
+            "anch/eager",
+        ],
     );
     let mut rows = Vec::new();
     for target in sizes() {
@@ -129,22 +169,33 @@ fn engine_events_per_sec() -> Json {
         let sim = expand(&g, &plan.ann);
 
         let configs = [
-            (QueueKind::FullResort, AllocKind::WholeSet),
-            (QueueKind::Incremental, AllocKind::WholeSet),
-            (QueueKind::Incremental, AllocKind::Components),
+            (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+            (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
+            (QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
+            (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
         ];
         let mut results: Vec<(SimResult, f64)> = Vec::new();
-        for (queue, alloc) in configs {
-            let cfg = SimConfig { policy: plan.policy, queue, alloc, ..Default::default() };
+        for (queue, alloc, horizon) in configs {
+            let cfg = SimConfig {
+                policy: plan.policy,
+                queue,
+                alloc,
+                horizon,
+                ..Default::default()
+            };
             // the whole-set paths are slow at scale: one rep there,
             // best-of-3 for the cheap runs
             let reps = if alloc == AllocKind::WholeSet && target >= 5_000 { 1 } else { 3 };
             results.push(timed(&sim, &cluster, &cfg, reps));
         }
+        // eager corners are bit-identical; the anchored corner is held
+        // to the tolerance oracle against its eager twin
         for (tag, r) in [("incremental", &results[1].0), ("components", &results[2].0)] {
             assert_bit_identical(tag, &results[0].0, r);
         }
+        assert_within_tolerance("anchored", &results[2].0, &results[3].0);
         let tasks = g.real_tasks().count();
+        let anch_speedup = results[3].1 / results[2].1;
         table.row(
             &format!("{tasks} tasks"),
             &[
@@ -152,7 +203,8 @@ fn engine_events_per_sec() -> Json {
                 format!("{:.3e}", results[0].1),
                 format!("{:.3e}", results[1].1),
                 format!("{:.3e}", results[2].1),
-                format!("{:.1}x", results[2].1 / results[1].1),
+                format!("{:.3e}", results[3].1),
+                format!("{anch_speedup:.1}x"),
             ],
         );
         rows.push(Json::obj(vec![
@@ -161,6 +213,8 @@ fn engine_events_per_sec() -> Json {
             ("evps_fullresort_wholeset", Json::Num(results[0].1)),
             ("evps_incremental_wholeset", Json::Num(results[1].1)),
             ("evps_incremental_components", Json::Num(results[2].1)),
+            ("evps_incremental_components_anchored", Json::Num(results[3].1)),
+            ("speedup_anchored_vs_eager", Json::Num(anch_speedup)),
         ]));
     }
     table.print();
@@ -172,8 +226,8 @@ fn fair_events_per_sec() -> Json {
     let cluster = Cluster::uniform(hosts);
     let mut table = Table::new(
         "engine events/s, fair policy on wide-fanout DAGs \
-         (whole-set alloc = PR 2 incremental-queue baseline vs component-wise)",
-        &["events", "whole-set ev/s", "components ev/s", "speedup"],
+         (whole-set alloc = PR 2 baseline vs component-wise vs anchored horizon)",
+        &["events", "whole-set ev/s", "components ev/s", "anchored ev/s", "anch/eager"],
     );
     let mut rows = Vec::new();
     for target in sizes() {
@@ -188,26 +242,33 @@ fn fair_events_per_sec() -> Json {
         assert_eq!(plan.policy, Policy::fair());
         let sim = expand(&g, &plan.ann);
 
-        let mk = |alloc| SimConfig {
+        let mk = |alloc, horizon| SimConfig {
             policy: plan.policy,
             queue: QueueKind::Incremental,
             alloc,
+            horizon,
             ..Default::default()
         };
         let reps_whole = if target >= 5_000 { 1 } else { 3 };
-        let (whole, evps_whole) = timed(&sim, &cluster, &mk(AllocKind::WholeSet), reps_whole);
-        let (comp, evps_comp) = timed(&sim, &cluster, &mk(AllocKind::Components), 3);
+        let (whole, evps_whole) =
+            timed(&sim, &cluster, &mk(AllocKind::WholeSet, HorizonKind::Eager), reps_whole);
+        let (comp, evps_comp) =
+            timed(&sim, &cluster, &mk(AllocKind::Components, HorizonKind::Eager), 3);
+        let (anch, evps_anch) =
+            timed(&sim, &cluster, &mk(AllocKind::Components, HorizonKind::Anchored), 3);
         assert_bit_identical("fair", &whole, &comp);
+        assert_within_tolerance("fair-anchored", &comp, &anch);
 
         let tasks = g.real_tasks().count();
-        let speedup = evps_comp / evps_whole;
+        let anch_speedup = evps_anch / evps_comp;
         table.row(
             &format!("{tasks} tasks"),
             &[
                 format!("{}", whole.events),
                 format!("{evps_whole:.3e}"),
                 format!("{evps_comp:.3e}"),
-                format!("{speedup:.1}x"),
+                format!("{evps_anch:.3e}"),
+                format!("{anch_speedup:.1}x"),
             ],
         );
         rows.push(Json::obj(vec![
@@ -215,17 +276,22 @@ fn fair_events_per_sec() -> Json {
             ("events", Json::Num(whole.events as f64)),
             ("evps_wholeset", Json::Num(evps_whole)),
             ("evps_components", Json::Num(evps_comp)),
-            ("speedup", Json::Num(speedup)),
+            ("evps_components_anchored", Json::Num(evps_anch)),
+            ("speedup_components_vs_wholeset", Json::Num(evps_comp / evps_whole)),
+            ("speedup_anchored_vs_eager", Json::Num(anch_speedup)),
         ]));
     }
     table.print();
     Json::Arr(rows)
 }
 
-/// All five policy families must produce bit-identical simulations under
-/// `AllocKind::WholeSet` and `AllocKind::Components` — event counts,
-/// makespans *and* per-chunk traces. This is the oracle pairing the
-/// component layer is allowed to exist under.
+/// All five policy families through every corner of the
+/// {queue} × {alloc} × {horizon} matrix. The four eager corners must be
+/// bit-identical — event counts, makespans *and* per-chunk traces (the
+/// oracle pairing the component layer is allowed to exist under); the
+/// four anchored corners must match the eager baseline within the 1e-6
+/// relative tolerance oracle (the pairing the anchored horizon is
+/// allowed to exist under).
 fn policy_identity() {
     let hosts = 16;
     let cluster = Cluster::uniform(hosts);
@@ -244,36 +310,56 @@ fn policy_identity() {
         Box::new(CoflowScheduler::new(Grouping::ByDst)),
         Box::new(MxScheduler::without_pipelining()),
     ];
+    let queues = [QueueKind::FullResort, QueueKind::Incremental];
+    let allocs = [AllocKind::WholeSet, AllocKind::Components];
     for s in &schedulers {
         let plan = s.plan(&g, &cluster);
         let sim = expand(&g, &plan.ann);
-        let mk = |alloc| SimConfig { policy: plan.policy, alloc, ..Default::default() };
-        let whole = simulate(&sim, &cluster, &mk(AllocKind::WholeSet)).unwrap();
-        let comp = simulate(&sim, &cluster, &mk(AllocKind::Components)).unwrap();
-        assert_bit_identical(s.name(), &whole, &comp);
-        for (i, (a, b)) in whole.trace.iter().zip(comp.trace.iter()).enumerate() {
-            assert_eq!(
-                a.start.to_bits(),
-                b.start.to_bits(),
-                "{}: chunk {i} start {} vs {}",
-                s.name(),
-                a.start,
-                b.start
-            );
-            assert_eq!(
-                a.finish.to_bits(),
-                b.finish.to_bits(),
-                "{}: chunk {i} finish {} vs {}",
-                s.name(),
-                a.finish,
-                b.finish
-            );
+        let mk = |queue, alloc, horizon| SimConfig {
+            policy: plan.policy,
+            queue,
+            alloc,
+            horizon,
+            ..Default::default()
+        };
+        let base = simulate(
+            &sim,
+            &cluster,
+            &mk(QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+        )
+        .unwrap();
+        for queue in queues {
+            for alloc in allocs {
+                let tag = format!("{} [{queue:?}/{alloc:?}]", s.name());
+                let eager =
+                    simulate(&sim, &cluster, &mk(queue, alloc, HorizonKind::Eager)).unwrap();
+                assert_bit_identical(&tag, &base, &eager);
+                for (i, (a, b)) in base.trace.iter().zip(eager.trace.iter()).enumerate() {
+                    assert_eq!(
+                        a.start.to_bits(),
+                        b.start.to_bits(),
+                        "{tag}: chunk {i} start {} vs {}",
+                        a.start,
+                        b.start
+                    );
+                    assert_eq!(
+                        a.finish.to_bits(),
+                        b.finish.to_bits(),
+                        "{tag}: chunk {i} finish {} vs {}",
+                        a.finish,
+                        b.finish
+                    );
+                }
+                let anch =
+                    simulate(&sim, &cluster, &mk(queue, alloc, HorizonKind::Anchored)).unwrap();
+                assert_within_tolerance(&format!("{tag} anchored"), &base, &anch);
+            }
         }
         println!(
-            "identity ok: {:<12} {} events, makespan {:.4}",
+            "identity ok: {:<12} {} events, makespan {:.4} (8 configurations)",
             s.name(),
-            whole.events,
-            whole.makespan
+            base.events,
+            base.makespan
         );
     }
 }
@@ -282,7 +368,7 @@ fn main() {
     if !smoke() {
         plan_cost();
     }
-    println!("\n== alloc-kind identity, all five policies ==");
+    println!("\n== {{queue}} x {{alloc}} x {{horizon}} identity, all five policies ==");
     policy_identity();
     let mxsched = engine_events_per_sec();
     let fair = fair_events_per_sec();

@@ -5,16 +5,32 @@
 
 use std::time::Instant;
 
-use mxdag::sched::{evaluate, Plan};
-use mxdag::sim::Cluster;
+use mxdag::sched::{evaluate, evaluate_with, Plan};
+use mxdag::sim::{Cluster, HorizonKind, SimConfig};
 use mxdag::util::bench::{bench, bench_header, write_bench_json, Table};
 use mxdag::util::json::Json;
 use mxdag::workloads::{random_dag, RandomParams};
 
+/// Time `evaluate_with` under `horizon` for ~200 ms; returns
+/// (mean events per run, mean wall µs per run).
+fn timed(g: &mxdag::mxdag::MXDag, cluster: &Cluster, horizon: HorizonKind) -> (f64, f64) {
+    let plan = Plan::fair();
+    let cfg = SimConfig { horizon, ..Default::default() };
+    let t0 = Instant::now();
+    let mut events = 0usize;
+    let mut iters = 0u32;
+    while t0.elapsed().as_millis() < 200 {
+        events += evaluate_with(g, cluster, &plan, &cfg).unwrap().events;
+        iters += 1;
+    }
+    let wall_us = t0.elapsed().as_micros() as f64 / iters as f64;
+    (events as f64 / iters as f64, wall_us)
+}
+
 fn main() {
     let mut t = Table::new(
-        "fluid simulator scaling",
-        &["tasks", "events", "wall µs", "events/s"],
+        "fluid simulator scaling (eager integration vs anchored horizon)",
+        &["tasks", "events", "eager ev/s", "anchored ev/s", "anch/eager"],
     );
     let mut rows = Vec::new();
     for (layers, width) in [(4usize, 4usize), (8, 8), (12, 12), (16, 16), (20, 20)] {
@@ -27,34 +43,30 @@ fn main() {
         };
         let g = random_dag(&p);
         let cluster = Cluster::uniform(16);
-        let plan = Plan::fair();
-        // measure
-        let t0 = Instant::now();
-        let mut events = 0usize;
-        let mut iters = 0u32;
-        while t0.elapsed().as_millis() < 200 {
-            events += evaluate(&g, &cluster, &plan).unwrap().events;
-            iters += 1;
-        }
-        let wall_us = t0.elapsed().as_micros() as f64 / iters as f64;
-        let ev = events as f64 / iters as f64;
+        let (ev_eager, wall_eager) = timed(&g, &cluster, HorizonKind::Eager);
+        let (ev_anch, wall_anch) = timed(&g, &cluster, HorizonKind::Anchored);
         let tasks = g.real_tasks().count();
-        let evps = ev / (wall_us / 1e6);
+        let evps_eager = ev_eager / (wall_eager / 1e6);
+        let evps_anch = ev_anch / (wall_anch / 1e6);
         t.row(
             &format!("{layers}x{width}"),
             &[
                 format!("{tasks}"),
-                format!("{ev:.0}"),
-                format!("{wall_us:.0}"),
-                format!("{evps:.2e}"),
+                format!("{ev_eager:.0}"),
+                format!("{evps_eager:.2e}"),
+                format!("{evps_anch:.2e}"),
+                format!("{:.1}x", evps_anch / evps_eager),
             ],
         );
         rows.push(Json::obj(vec![
             ("config", Json::Str(format!("{layers}x{width}"))),
             ("tasks", Json::Num(tasks as f64)),
-            ("events", Json::Num(ev)),
-            ("wall_us", Json::Num(wall_us)),
-            ("events_per_sec", Json::Num(evps)),
+            ("events", Json::Num(ev_eager)),
+            ("events_anchored", Json::Num(ev_anch)),
+            ("wall_us", Json::Num(wall_eager)),
+            ("wall_us_anchored", Json::Num(wall_anch)),
+            ("events_per_sec", Json::Num(evps_eager)),
+            ("events_per_sec_anchored", Json::Num(evps_anch)),
         ]));
     }
     t.print();

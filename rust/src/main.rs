@@ -16,7 +16,7 @@ use mxdag::sched::{
     self, evaluate, evaluate_with, AltruisticScheduler, CoflowScheduler, FairScheduler,
     FifoScheduler, Grouping, MxScheduler, PackingScheduler, Plan, Scheduler, SelfishScheduler,
 };
-use mxdag::sim::{AllocKind, Annotations, Cluster, Policy, QueueKind, SimConfig};
+use mxdag::sim::{AllocKind, Annotations, Cluster, HorizonKind, Policy, QueueKind, SimConfig};
 use mxdag::util::bench::Table;
 use mxdag::util::cli::Args;
 use mxdag::workloads::{self, WukongCoflows};
@@ -51,9 +51,12 @@ fn print_usage() {
            simulate --dag FILE.json [--scheduler mxdag|fair|fifo|coflow|packing]\n\
                     [--topology bigswitch|oversub:RACKS:RATIO|fabrics:K:TRUNK[:hash|bysrc]]\n\
                     [--queue incremental|fullresort] [--alloc components|wholeset]\n\
-                    (the DAG file may also declare a \"cluster\" object;\n\
-                     --topology overrides it; --queue/--alloc select the\n\
-                     engine's ready-queue and rate-allocation paths)\n\
+                    [--horizon eager|anchored]\n\
+                    (the DAG file may also declare a \"cluster\" object and an\n\
+                     \"engine\" object {{\"queue\", \"alloc\", \"horizon\"}}; the\n\
+                     --topology/--queue/--alloc/--horizon flags override them\n\
+                     and select the engine's ready-queue, rate-allocation and\n\
+                     time-advance paths)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -319,34 +322,54 @@ fn cmd_simulate(args: &Args) -> i32 {
         "coflow" => Box::new(CoflowScheduler::new(Grouping::ByDst)),
         _ => Box::new(MxScheduler::default()),
     };
+    // engine configuration: a scenario "engine" object first, then the
+    // CLI flags override it — the same layering as cluster vs --topology
     let mut cfg = SimConfig::default();
-    match args.get_or("queue", "incremental").as_str() {
-        "incremental" => cfg.queue = QueueKind::Incremental,
-        "fullresort" => cfg.queue = QueueKind::FullResort,
-        other => {
-            eprintln!("--queue: unknown kind `{other}` (incremental|fullresort)");
+    if let Ok(ej) = json.get("engine") {
+        if let Err(e) = cfg.apply_json(ej) {
+            eprintln!("invalid engine config: {e}");
             return 1;
         }
     }
-    match args.get_or("alloc", "components").as_str() {
-        "components" => cfg.alloc = AllocKind::Components,
-        "wholeset" => cfg.alloc = AllocKind::WholeSet,
-        other => {
-            eprintln!("--alloc: unknown kind `{other}` (components|wholeset)");
-            return 1;
+    if let Some(v) = args.get("queue") {
+        match QueueKind::parse(v) {
+            Ok(q) => cfg.queue = q,
+            Err(e) => {
+                eprintln!("--queue: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(v) = args.get("alloc") {
+        match AllocKind::parse(v) {
+            Ok(a) => cfg.alloc = a,
+            Err(e) => {
+                eprintln!("--alloc: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(v) = args.get("horizon") {
+        match HorizonKind::parse(v) {
+            Ok(h) => cfg.horizon = h,
+            Err(e) => {
+                eprintln!("--horizon: {e}");
+                return 1;
+            }
         }
     }
     let plan = sched.plan(&g, &cluster);
     match evaluate_with(&g, &cluster, &plan, &cfg) {
         Ok(r) => {
             println!(
-                "scheduler={} hosts={} topology={:?} queue={:?} alloc={:?} tasks={} \
-                 makespan={:.4} events={}",
+                "scheduler={} hosts={} topology={:?} queue={:?} alloc={:?} horizon={:?} \
+                 tasks={} makespan={:.4} events={}",
                 sched.name(),
                 cluster.n_hosts(),
                 cluster.topology,
                 cfg.queue,
                 cfg.alloc,
+                cfg.horizon,
                 g.real_tasks().count(),
                 r.makespan,
                 r.events

@@ -92,7 +92,9 @@ pub fn evaluate(dag: &MXDag, cluster: &Cluster, plan: &Plan) -> Result<SimResult
 }
 
 /// As [`evaluate`], but with explicit engine configuration (queue kind,
-/// allocation kind, event budget). `cfg.policy` is overridden by the
+/// allocation kind, horizon kind, event budget) — the hook the CLI's
+/// `--queue` / `--alloc` / `--horizon` flags and the scenario-JSON
+/// `"engine"` object plug into. `cfg.policy` is overridden by the
 /// plan's policy — a plan's annotations and its sharing semantics are
 /// inseparable.
 pub fn evaluate_with(

@@ -42,6 +42,23 @@
 //! resource→component map stores `(slot, gen)` claims, so retiring a
 //! slot invalidates every claim to it in O(1) and slots can be reused
 //! without scanning the arena.
+//!
+//! ## Dirty ⇒ re-anchor (anchored time advance)
+//!
+//! Under [`HorizonKind::Anchored`](super::horizon::HorizonKind) the
+//! dirty worklist carries a second duty: it is the *only* trigger for
+//! materializing remaining bytes. When the engine pops a dirty
+//! component it first re-anchors every member at `now`
+//! (`rem = rem_anchor − rate · (now − anchor)`), removes their stale
+//! finish-time heap entries, refreshes SEBF keys from the re-anchored
+//! bytes, and only then rebuilds and refills. A clean component is
+//! never iterated per event — its memoized rates are immutable between
+//! the events that touch it (the invariant above), so its members'
+//! anchors and heap entries stay valid by construction. The dirty
+//! rules therefore double as the anchor-consistency rules: anything
+//! that can change a member's rate (arrival, completion, gate expiry,
+//! SEBF drift at refill) marks the component dirty *before* the next
+//! refill reads its bytes.
 
 use super::alloc::{find, TaskRes, MAX_TASK_RES};
 
@@ -63,6 +80,18 @@ pub enum AllocKind {
     /// previous revision's global progressive filling, whose increments
     /// mixed across disjoint components.
     WholeSet,
+}
+
+impl AllocKind {
+    /// Parse the CLI / scenario-JSON spelling (`components` |
+    /// `wholeset`).
+    pub fn parse(s: &str) -> Result<AllocKind, String> {
+        match s {
+            "components" => Ok(AllocKind::Components),
+            "wholeset" => Ok(AllocKind::WholeSet),
+            other => Err(format!("unknown alloc kind `{other}` (components|wholeset)")),
+        }
+    }
 }
 
 const NONE: usize = usize::MAX;

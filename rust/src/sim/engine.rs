@@ -55,15 +55,37 @@
 //! asserted across all five policies by `benches/sched_scaling.rs` and
 //! `tests/prop_queue_equivalence.rs`. See `docs/ARCHITECTURE.md` ("The
 //! allocation layer") for the dirty-marking rules per event type.
+//!
+//! ## Anchored time advance (§Perf)
+//!
+//! The third orthogonal axis, [`SimConfig::horizon`], selects how time
+//! advances between events. Under [`HorizonKind::Anchored`] (default)
+//! every rated task stores `(anchor, remaining-at-anchor, rate)` and
+//! its predicted absolute finish time lives in a global indexed
+//! min-heap ([`FinHeap`], `sim/horizon.rs`): the event horizon is a
+//! heap peek instead of a scan over every rated task, and remaining
+//! bytes are materialized lazily — only when a component goes dirty
+//! does the engine re-anchor its members at `now` via
+//! `rem = rem_anchor − rate · (now − anchor)`. Quiescent components
+//! are never iterated per event; their heap entries stay valid because
+//! their memoized rates are immutable between the events that touch
+//! them. [`HorizonKind::Eager`] keeps the pre-refactor per-event
+//! integration sweep as the bit-exact baseline. Anchored arithmetic
+//! reorders floating-point operations, so the cross-horizon oracle is
+//! tolerance-based (per-task trace times and makespan within `1e-6`
+//! relative) rather than bitwise — see `sim/horizon.rs` and
+//! `docs/ARCHITECTURE.md` ("Time advance").
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
 
 use super::alloc::{self, AllocScratch, TaskRes};
 use super::components::{AllocKind, CompSet};
+use super::horizon::{FinHeap, HorizonKind};
 use super::ready::{f64_ord, BucketQueue, PrioKey, ReadyQueue, ResortQueue};
 use super::spec::{CpuPolicy, Cluster, NetPolicy, Policy, SimDag};
 use crate::mxdag::TaskId;
+use crate::util::json::Json;
 
 const EPS: f64 = 1e-9;
 /// Resource-saturation threshold. Must match the allocator's internal
@@ -71,11 +93,37 @@ const EPS: f64 = 1e-9;
 /// the filler agree bit-for-bit on which tasks are starved.
 const ALLOC_EPS: f64 = 1e-12;
 
+/// Why a sampled task could make no progress at deadlock time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StuckReason {
+    /// Queued but rated zero; carries a zero-capacity resource from the
+    /// task's footprint when one exists (the usual cause).
+    Starved { resource: Option<usize> },
+    /// Parked behind a coflow all-or-nothing barrier that never opened
+    /// (the blocking group's *raw* coflow id, as the plan spelled it).
+    Parked { group: usize },
+    /// Dependencies unmet — stuck upstream of the reported deadlock.
+    Blocked,
+}
+
 /// Simulation failure modes.
 #[derive(Debug)]
 pub enum SimError {
-    /// No task can make progress and no gate is pending.
-    Deadlock(f64, usize),
+    /// No task can make progress and no gate is pending. Carries enough
+    /// context to debug the plan from the error alone.
+    Deadlock {
+        /// Simulation time progress stopped at.
+        now: f64,
+        /// Unfinished tasks.
+        n_remaining: usize,
+        /// A sample stuck task (physical chunk id) and why it is stuck;
+        /// starved / parked tasks are preferred over merely-blocked
+        /// ones, which only restate the deadlock.
+        stuck: Option<(usize, StuckReason)>,
+        /// The nearest future gate among unfinished tasks — it never
+        /// fired because readiness is blocked upstream of it.
+        nearest_gate: Option<(usize, f64)>,
+    },
     /// [`SimConfig::max_events`] exceeded.
     EventLimit(usize),
 }
@@ -83,8 +131,27 @@ pub enum SimError {
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SimError::Deadlock(t, n) => {
-                write!(f, "deadlock at t={t}: {n} tasks can make no progress")
+            SimError::Deadlock { now, n_remaining, stuck, nearest_gate } => {
+                write!(f, "deadlock at t={now}: {n_remaining} tasks can make no progress")?;
+                match stuck {
+                    Some((t, StuckReason::Starved { resource: Some(r) })) => {
+                        write!(f, " (task {t} starved: resource {r} has zero capacity")?
+                    }
+                    Some((t, StuckReason::Starved { resource: None })) => {
+                        write!(f, " (task {t} starved on saturated resources")?
+                    }
+                    Some((t, StuckReason::Parked { group })) => {
+                        write!(f, " (task {t} parked on coflow group {group}")?
+                    }
+                    Some((t, StuckReason::Blocked)) => {
+                        write!(f, " (task {t} blocked on unmet dependencies")?
+                    }
+                    None => return Ok(()),
+                }
+                if let Some((t, g)) = nearest_gate {
+                    write!(f, "; nearest blocked gate t={g} on task {t}")?;
+                }
+                write!(f, ")")
             }
             SimError::EventLimit(n) => write!(f, "event limit exceeded ({n} events)"),
         }
@@ -92,6 +159,59 @@ impl std::fmt::Display for SimError {
 }
 
 impl std::error::Error for SimError {}
+
+/// Build the enriched [`SimError::Deadlock`] report: scan once for a
+/// representative stuck task (preferring a starved or parked one over a
+/// merely-blocked successor) and the nearest never-fired gate. Deadlock
+/// is terminal, so the `O(n)` scan is free.
+#[allow(clippy::too_many_arguments)]
+fn deadlock_report(
+    dag: &SimDag,
+    caps0: &[f64],
+    task_res: &[TaskRes],
+    done: &[bool],
+    queued: &[bool],
+    indeg: &[usize],
+    group_of: &[Option<usize>],
+    group_open: &[bool],
+    now: f64,
+    n_remaining: usize,
+) -> SimError {
+    let mut stuck: Option<(usize, StuckReason)> = None;
+    let mut nearest_gate: Option<(usize, f64)> = None;
+    for t in 0..dag.len() {
+        if done[t] {
+            continue;
+        }
+        let reason = if queued[t] {
+            StuckReason::Starved {
+                resource: task_res[t].iter().find(|&r| caps0[r] <= ALLOC_EPS),
+            }
+        } else if indeg[t] == 0 {
+            match group_of[t] {
+                Some(gi) if !group_open[gi] => StuckReason::Parked {
+                    group: dag.tasks[t].coflow.unwrap_or(gi),
+                },
+                _ => StuckReason::Blocked,
+            }
+        } else {
+            StuckReason::Blocked
+        };
+        let better = match (&stuck, &reason) {
+            (None, _) => true,
+            (Some((_, StuckReason::Blocked)), r) => *r != StuckReason::Blocked,
+            _ => false,
+        };
+        if better {
+            stuck = Some((t, reason));
+        }
+        let gate = dag.tasks[t].gate;
+        if gate > now + EPS && !nearest_gate.map_or(false, |(_, g)| g <= gate) {
+            nearest_gate = Some((t, gate));
+        }
+    }
+    SimError::Deadlock { now, n_remaining, stuck, nearest_gate }
+}
 
 /// Per-task execution record.
 #[derive(Debug, Clone, Copy)]
@@ -135,6 +255,18 @@ pub enum QueueKind {
     FullResort,
 }
 
+impl QueueKind {
+    /// Parse the CLI / scenario-JSON spelling
+    /// (`incremental` | `fullresort`).
+    pub fn parse(s: &str) -> Result<QueueKind, String> {
+        match s {
+            "incremental" => Ok(QueueKind::Incremental),
+            "fullresort" => Ok(QueueKind::FullResort),
+            other => Err(format!("unknown queue kind `{other}` (incremental|fullresort)")),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     pub policy: Policy,
@@ -144,6 +276,11 @@ pub struct SimConfig {
     /// Allocation strategy per event (see [`AllocKind`]): component-wise
     /// repricing with memoized rates, or the whole-active-set oracle.
     pub alloc: AllocKind,
+    /// Time-advance strategy (see [`HorizonKind`]): anchored progress
+    /// with a finish-time heap, or the eager per-event integration
+    /// sweep. Anchored is the default; eager is the bit-exact baseline
+    /// the tolerance oracle pairs it with.
+    pub horizon: HorizonKind,
 }
 
 impl Default for SimConfig {
@@ -153,7 +290,34 @@ impl Default for SimConfig {
             max_events: 20_000_000,
             queue: QueueKind::Incremental,
             alloc: AllocKind::Components,
+            horizon: HorizonKind::Anchored,
         }
+    }
+}
+
+impl SimConfig {
+    /// Apply a scenario-JSON `"engine"` object, the file-side mirror of
+    /// the CLI's `--queue` / `--alloc` / `--horizon` flags (which
+    /// override it): `{"queue": "incremental|fullresort", "alloc":
+    /// "components|wholeset", "horizon": "eager|anchored"}`, every key
+    /// optional.
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        let obj = j.as_obj().map_err(|e| e.to_string())?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "queue" | "alloc" | "horizon") {
+                return Err(format!("unknown engine key `{key}` (queue|alloc|horizon)"));
+            }
+        }
+        if let Some(v) = obj.get("queue") {
+            self.queue = QueueKind::parse(v.as_str().map_err(|e| e.to_string())?)?;
+        }
+        if let Some(v) = obj.get("alloc") {
+            self.alloc = AllocKind::parse(v.as_str().map_err(|e| e.to_string())?)?;
+        }
+        if let Some(v) = obj.get("horizon") {
+            self.horizon = HorizonKind::parse(v.as_str().map_err(|e| e.to_string())?)?;
+        }
+        Ok(())
     }
 }
 
@@ -538,6 +702,27 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     let mut live_scratch: Vec<usize> = Vec::new();
     let mut ascr = AllocScratch::default();
 
+    // Anchored time advance (HorizonKind::Anchored): a rated task's
+    // `remaining` holds its bytes *as of* `anchor_t`, its current rate
+    // lives in `rate_of`, and its predicted absolute finish time sits in
+    // the `fins` min-heap. Materialization (`rem -= rate · (now −
+    // anchor)`) happens lazily: for a dirty component's members at
+    // refill, for every previously-rated task under whole-set
+    // allocation, and at completion (remaining := 0). Unrated tasks
+    // carry exact bytes (rate 0 ⇒ nothing to integrate), so
+    // `remaining[t]` is always exact for tasks outside the heap.
+    let anchored = cfg.horizon == HorizonKind::Anchored;
+    let mut rate_of: Vec<f64> = vec![0.0; n];
+    let mut anchor_t: Vec<f64> = vec![0.0; n];
+    let mut fins = FinHeap::with_capacity(n);
+    // tasks whose materialized bytes crossed the completion epsilon
+    // while unrated — re-armed with an immediate finish after refill so
+    // they cannot strand in a quiescent component (see step 3)
+    let mut near_done: Vec<usize> = Vec::new();
+    // scratch for the per-component SEBF key refresh
+    let mut grp_seen = vec![false; n_groups];
+    let mut grp_list: Vec<usize> = Vec::new();
+
     // A task's dependencies are met: record its live order, hand it to
     // the arrival worklist, and update its coflow barrier.
     macro_rules! on_ready {
@@ -714,8 +899,51 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             }
         }
 
+        // 2a. anchored + whole-set: every event reprices the whole
+        //     active set anyway, so the eager integration sweep is
+        //     replayed here, deferred to the event that needs the bytes:
+        //     drain the finish heap, materialize every running task at
+        //     `now`, and mark coflow drift exactly as the eager advance
+        //     would. (Component-wise allocation instead re-anchors per
+        //     dirty component in step 3 — clean components stay
+        //     untouched, which is the whole point.)
+        if anchored && !comps_on {
+            while let Some((_, t)) = fins.pop() {
+                let r = rate_of[t];
+                rate_of[t] = 0.0;
+                remaining[t] = (remaining[t] - r * (now - anchor_t[t])).max(0.0);
+                anchor_t[t] = now;
+                if remaining[t] <= EPS {
+                    near_done.push(t);
+                }
+                if coflow_on && is_flow_v[t] {
+                    match group_of[t] {
+                        Some(gi) => {
+                            if !group_dirty[gi] {
+                                group_dirty[gi] = true;
+                                dirty_groups.push(gi);
+                            }
+                        }
+                        None => dirty_singles.push(t),
+                    }
+                }
+            }
+        }
+
         // 2b. key invalidation: refresh SEBF bounds that went stale
-        //     through progress (last event) or new arrivals (this event)
+        //     through progress (last event) or new arrivals (this event).
+        //     Under anchored + component-wise allocation this sweep never
+        //     runs: drift is detected at refill time from re-anchored
+        //     bytes (step 3), and arrival-placeholder keys are replaced
+        //     there too — the marks are dropped, the component dirtied by
+        //     the arrival itself carries the work.
+        if coflow_on && anchored && comps_on {
+            for &gi in dirty_groups.iter() {
+                group_dirty[gi] = false;
+            }
+            dirty_groups.clear();
+            dirty_singles.clear();
+        }
         if coflow_on && (!dirty_groups.is_empty() || !dirty_singles.is_empty()) {
             for &gi in dirty_groups.iter() {
                 group_dirty[gi] = false;
@@ -766,7 +994,10 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                 now = dag.tasks[tg].gate;
                 continue;
             }
-            return Err(SimError::Deadlock(now, n - n_done));
+            return Err(deadlock_report(
+                dag, &caps0, &task_res, &done, &queued, &indeg, &group_of, &group_open, now,
+                n - n_done,
+            ));
         }
 
         // 3. allocate rates
@@ -777,6 +1008,26 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             // memoized rates (immutable between the events that touch
             // it — the invariant `docs/ARCHITECTURE.md` documents).
             while let Some(c) = comps.pop_dirty() {
+                // anchored: a dirty component's members re-anchor at
+                // `now` — bytes are materialized exactly when the refill
+                // is about to read them, and the stale finish predictions
+                // leave the heap (fresh ones are pushed after the fill)
+                if anchored {
+                    for &t in comps.members(c) {
+                        let r = rate_of[t];
+                        if r > 0.0 {
+                            rate_of[t] = 0.0;
+                            remaining[t] = (remaining[t] - r * (now - anchor_t[t])).max(0.0);
+                        }
+                        // unconditional: a zero-rate member may still
+                        // hold a near-done re-arm entry (below)
+                        fins.remove(t);
+                        anchor_t[t] = now;
+                        if remaining[t] <= EPS {
+                            near_done.push(t);
+                        }
+                    }
+                }
                 // release the old allocation: only this component's
                 // tasks ever drew on these resources
                 for &r in comps.res_of(c) {
@@ -790,6 +1041,61 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                     comp_rated.resize_with(comps.slot_bound(), Vec::new);
                 }
                 for &nc in &new_comps {
+                    if anchored && coflow_on {
+                        // SEBF drift detection, anchored flavour:
+                        // recompute every unit key in this component from
+                        // the just-re-anchored bytes (the sweep-mode
+                        // invalidation in step 2b never runs here). A
+                        // group's queued flows all share its virtual
+                        // resource, so the whole unit is in this
+                        // component by construction.
+                        grp_list.clear();
+                        for &t in comps.members(nc) {
+                            if !is_flow_v[t] {
+                                continue;
+                            }
+                            match group_of[t] {
+                                Some(gi) => {
+                                    if !grp_seen[gi] {
+                                        grp_seen[gi] = true;
+                                        grp_list.push(gi);
+                                    }
+                                }
+                                None => {
+                                    let bnd =
+                                        sebf_bound_single(t, &remaining, &task_res, &caps0);
+                                    let key = PrioKey::from_bound_asc(
+                                        bnd,
+                                        n_groups as u64 + seq[t],
+                                    );
+                                    key_of[t] = key;
+                                    rq_net.update_key(t, key);
+                                }
+                            }
+                        }
+                        for gi_at in 0..grp_list.len() {
+                            let gi = grp_list[gi_at];
+                            grp_seen[gi] = false;
+                            let bnd = sebf_bound_group(
+                                &members[gi],
+                                &queued,
+                                &is_flow_v,
+                                &remaining,
+                                &task_res,
+                                &caps0,
+                                &mut load,
+                                &mut load_touched,
+                                &mut touched,
+                            );
+                            let key = PrioKey::from_bound_asc(bnd, gi as u64);
+                            for &m in members[gi].iter() {
+                                if queued[m] && is_flow_v[m] {
+                                    key_of[m] = key;
+                                    rq_net.update_key(m, key);
+                                }
+                            }
+                        }
+                    }
                     fill_component(
                         &mut comp_sorted,
                         comps.members(nc),
@@ -812,6 +1118,22 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                         &mut touched,
                         now,
                     );
+                    if anchored {
+                        // fresh finish predictions anchor the refilled
+                        // rates; they stay valid until the next event
+                        // that dirties this component. A member whose
+                        // bytes already sit at ≤ EPS finishes *now* —
+                        // under MADD its rate is rem/τ, so rem/rate
+                        // would predict the whole unit's τ instead of
+                        // the immediate completion eager grants it.
+                        for &(t, r) in comp_rated[nc].iter() {
+                            rate_of[t] = r;
+                            anchor_t[t] = now;
+                            let fin =
+                                if remaining[t] <= EPS { now } else { now + remaining[t] / r };
+                            fins.push(t, fin);
+                        }
+                    }
                 }
             }
         } else {
@@ -915,51 +1237,152 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             }
         }
 
-        // 4. next event horizon: the min over every running task's
-        //    projected completion (memoized per component) and the next
-        //    gate expiry — a min-reduction, so iteration order is free
-        let mut dt = f64::INFINITY;
-        if comps_on {
-            for &c in comps.live_slots() {
-                for &(t, r) in comp_rated[c].iter() {
-                    dt = dt.min(remaining[t] / r);
+        if anchored {
+            if !comps_on {
+                // re-arm the heap from the fresh whole-set allocation
+                // (step 2a drained it, so every rated task is absent);
+                // ≤ EPS bytes finish now, as in the component path
+                for &(t, r) in rated.iter() {
+                    rate_of[t] = r;
+                    anchor_t[t] = now;
+                    let fin = if remaining[t] <= EPS { now } else { now + remaining[t] / r };
+                    fins.push(t, fin);
+                }
+            }
+            // A task whose materialized bytes crossed the completion
+            // epsilon while ending up unrated (MADD rates scale with
+            // remaining, so a near-empty unit can rate below EPS) must
+            // still finish: arm an immediate completion so it cannot
+            // strand inside a component that then goes quiescent. Eager
+            // never creates this state — its sweep completes any task
+            // at ≤ EPS bytes on the spot.
+            for &t in near_done.iter() {
+                if queued[t] && !fins.contains(t) {
+                    fins.push(t, now);
+                }
+            }
+            near_done.clear();
+
+            // 4'. anchored horizon: the earliest predicted finish (heap
+            //     peek) vs the next gate expiry — no per-task scan
+            let mut t_next = match fins.peek() {
+                Some((fin, _)) => fin,
+                None => f64::INFINITY,
+            };
+            if let Some(&Reverse((_, _, tg))) = gates.peek() {
+                t_next = t_next.min(dag.tasks[tg].gate);
+            }
+            if !t_next.is_finite() {
+                return Err(deadlock_report(
+                    dag, &caps0, &task_res, &done, &queued, &indeg, &group_of, &group_open,
+                    now, n - n_done,
+                ));
+            }
+
+            // 5'. advance to the horizon and pop every finish that has
+            //     arrived. Nothing else is touched: clean components'
+            //     bytes stay un-materialized, their heap entries stay
+            //     valid — a quiescent component costs zero this event.
+            now = now.max(t_next);
+            completed.clear();
+            while let Some((fin, t)) = fins.peek() {
+                if fin > now + EPS {
+                    break;
+                }
+                fins.pop();
+                rate_of[t] = 0.0;
+                remaining[t] = 0.0;
+                completed.push(t);
+                if coflow_on && is_flow_v[t] {
+                    // a finishing member shifts its group's SEBF bound.
+                    // Under components the completion dirties the
+                    // component (step 5 tail) and the refill re-keys;
+                    // under whole-set the 2b sweep needs the mark — the
+                    // same mark the eager sweep makes.
+                    if let Some(gi) = group_of[t] {
+                        if !group_dirty[gi] {
+                            group_dirty[gi] = true;
+                            dirty_groups.push(gi);
+                        }
+                    }
                 }
             }
         } else {
-            for &(t, r) in rated.iter() {
-                dt = dt.min(remaining[t] / r);
+            // 4. eager horizon: the min over every running task's
+            //    projected completion (memoized per component) and the
+            //    next gate expiry — a min-reduction, so iteration order
+            //    is free
+            let mut dt = f64::INFINITY;
+            if comps_on {
+                for &c in comps.live_slots() {
+                    for &(t, r) in comp_rated[c].iter() {
+                        dt = dt.min(remaining[t] / r);
+                    }
+                }
+            } else {
+                for &(t, r) in rated.iter() {
+                    dt = dt.min(remaining[t] / r);
+                }
             }
-        }
-        if let Some(&Reverse((_, _, tg))) = gates.peek() {
-            dt = dt.min(dag.tasks[tg].gate - now);
-        }
-        if !dt.is_finite() || dt <= 0.0 {
-            return Err(SimError::Deadlock(now, n - n_done));
-        }
+            if let Some(&Reverse((_, _, tg))) = gates.peek() {
+                dt = dt.min(dag.tasks[tg].gate - now);
+            }
+            if !dt.is_finite() || dt <= 0.0 {
+                return Err(deadlock_report(
+                    dag, &caps0, &task_res, &done, &queued, &indeg, &group_of, &group_open,
+                    now, n - n_done,
+                ));
+            }
 
-        // 5. advance; completions are processed in live order so that
-        //    downstream readiness (and FIFO slots) follow the same order
-        //    under every (queue, alloc) configuration. Progress under
-        //    coflow dirties the progressing component: SEBF bounds and
-        //    MADD rates drift with remaining bytes (static-key policies
-        //    leave clean components untouched — their rates depend only
-        //    on membership).
-        now += dt;
-        completed.clear();
-        if comps_on {
-            live_scratch.clear();
-            live_scratch.extend_from_slice(comps.live_slots());
-            for &c in &live_scratch {
-                for k in 0..comp_rated[c].len() {
-                    let (t, r) = comp_rated[c][k];
+            // 5. advance; completions are processed in live order so
+            //    that downstream readiness (and FIFO slots) follow the
+            //    same order under every (queue, alloc) configuration.
+            //    Progress under coflow dirties the progressing
+            //    component: SEBF bounds and MADD rates drift with
+            //    remaining bytes (static-key policies leave clean
+            //    components untouched — their rates depend only on
+            //    membership).
+            now += dt;
+            completed.clear();
+            if comps_on {
+                live_scratch.clear();
+                live_scratch.extend_from_slice(comps.live_slots());
+                for &c in &live_scratch {
+                    for k in 0..comp_rated[c].len() {
+                        let (t, r) = comp_rated[c][k];
+                        remaining[t] -= r * dt;
+                        let finished = remaining[t] <= EPS;
+                        if finished {
+                            remaining[t] = 0.0;
+                            completed.push(t);
+                        }
+                        if coflow_on && is_flow_v[t] {
+                            comps.mark_task_dirty(t);
+                            match group_of[t] {
+                                Some(gi) => {
+                                    if !group_dirty[gi] {
+                                        group_dirty[gi] = true;
+                                        dirty_groups.push(gi);
+                                    }
+                                }
+                                None => {
+                                    if !finished {
+                                        dirty_singles.push(t);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            } else {
+                for &(t, r) in rated.iter() {
                     remaining[t] -= r * dt;
                     let finished = remaining[t] <= EPS;
                     if finished {
                         remaining[t] = 0.0;
                         completed.push(t);
                     }
-                    if coflow_on && is_flow_v[t] {
-                        comps.mark_task_dirty(t);
+                    if coflow_on && dag.tasks[t].kind.is_flow() {
                         match group_of[t] {
                             Some(gi) => {
                                 if !group_dirty[gi] {
@@ -976,35 +1399,17 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                     }
                 }
             }
-        } else {
-            for &(t, r) in rated.iter() {
-                remaining[t] -= r * dt;
-                let finished = remaining[t] <= EPS;
-                if finished {
-                    remaining[t] = 0.0;
-                    completed.push(t);
-                }
-                if coflow_on && dag.tasks[t].kind.is_flow() {
-                    match group_of[t] {
-                        Some(gi) => {
-                            if !group_dirty[gi] {
-                                group_dirty[gi] = true;
-                                dirty_groups.push(gi);
-                            }
-                        }
-                        None => {
-                            if !finished {
-                                dirty_singles.push(t);
-                            }
-                        }
-                    }
-                }
-            }
         }
         completed.sort_unstable_by_key(|&t| seq[t]);
         for &t in completed.iter() {
             done[t] = true;
             n_done += 1;
+            if !started[t] {
+                // only reachable through the near-done re-arm above: the
+                // task finished without ever holding a positive rate
+                started[t] = true;
+                trace[t].start = now;
+            }
             trace[t].finish = now;
             queued[t] = false;
             if comps_on {
@@ -1178,13 +1583,68 @@ mod tests {
 
     #[test]
     fn deadlock_reported_not_hung() {
-        // flow into a zero-capacity NIC can never progress
+        // flow into a zero-capacity NIC can never progress; the report
+        // names the starved task and the dead resource (up(0) = slot 1)
         let mut d = SimDag::default();
         d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 1.0); t.orig = 1; t });
         let mut cluster = Cluster::uniform(2);
         cluster.hosts[0].nic_up = 0.0;
-        let err = simulate(&d, &cluster, &SimConfig::default()).unwrap_err();
-        assert!(matches!(err, SimError::Deadlock(_, _)));
+        for horizon in [HorizonKind::Eager, HorizonKind::Anchored] {
+            let cfg = SimConfig { horizon, ..Default::default() };
+            let err = simulate(&d, &cluster, &cfg).unwrap_err();
+            match err {
+                SimError::Deadlock { n_remaining, stuck, nearest_gate, .. } => {
+                    assert_eq!(n_remaining, 1);
+                    assert_eq!(stuck, Some((0, StuckReason::Starved { resource: Some(1) })));
+                    assert_eq!(nearest_gate, None);
+                }
+                other => panic!("expected deadlock, got {other:?}"),
+            }
+        }
+    }
+
+    /// A coflow barrier that can never open is reported as such: the
+    /// parked member, its raw group id, and the gate that will never
+    /// fire all appear in the error.
+    #[test]
+    fn deadlock_reports_parked_coflow_and_blocked_gate() {
+        let mut d = SimDag::default();
+        // f1 is ready but parked: its group peer f2 depends on fz,
+        // which feeds a zero-capacity NIC
+        let f1 = d.push({
+            let mut t = task(SimKind::Flow { src: 2, dst: 3 }, 1.0);
+            t.orig = 1;
+            t.coflow = Some(9);
+            t
+        });
+        let fz = d.push({ let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 1.0); t.orig = 2; t });
+        let f2 = d.push({
+            let mut t = task(SimKind::Flow { src: 2, dst: 1 }, 1.0);
+            t.orig = 3;
+            t.coflow = Some(9);
+            t.gate = 7.5;
+            t
+        });
+        d.dep(fz, f2);
+        let _ = f1;
+        let mut cluster = Cluster::uniform(4);
+        cluster.hosts[0].nic_up = 0.0;
+        let cfg = SimConfig { policy: Policy::coflow(), ..Default::default() };
+        let err = simulate(&d, &cluster, &cfg).unwrap_err();
+        match err {
+            SimError::Deadlock { now, n_remaining, stuck, nearest_gate } => {
+                assert_eq!(now, 0.0);
+                assert_eq!(n_remaining, 3);
+                // task 0 (f1) is parked on raw coflow group 9
+                assert_eq!(stuck, Some((0, StuckReason::Parked { group: 9 })));
+                // f2's gate never fires: its dependency is starved
+                assert_eq!(nearest_gate, Some((2, 7.5)));
+                let msg = format!("{err}");
+                assert!(msg.contains("parked on coflow group 9"), "{msg}");
+                assert!(msg.contains("gate t=7.5"), "{msg}");
+            }
+            other => panic!("expected deadlock, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1330,16 +1790,28 @@ mod tests {
         let _ = f2;
         let cluster = Cluster::uniform(3);
         for policy in [Policy::fair(), Policy::priority(), Policy::fifo()] {
+            // the bitwise queue oracle lives inside the eager horizon;
+            // cross-horizon agreement is tolerance-based (see below)
             let full = simulate(
                 &d,
                 &cluster,
-                &SimConfig { policy, queue: QueueKind::FullResort, ..Default::default() },
+                &SimConfig {
+                    policy,
+                    queue: QueueKind::FullResort,
+                    horizon: HorizonKind::Eager,
+                    ..Default::default()
+                },
             )
             .unwrap();
             let inc = simulate(
                 &d,
                 &cluster,
-                &SimConfig { policy, queue: QueueKind::Incremental, ..Default::default() },
+                &SimConfig {
+                    policy,
+                    queue: QueueKind::Incremental,
+                    horizon: HorizonKind::Eager,
+                    ..Default::default()
+                },
             )
             .unwrap();
             assert_eq!(full.events, inc.events, "{policy:?}");
@@ -1382,16 +1854,28 @@ mod tests {
         let _ = (f2, f3);
         let cluster = Cluster::uniform(3);
         for policy in [Policy::fair(), Policy::priority(), Policy::fifo(), Policy::coflow()] {
+            // bitwise only within the eager horizon: anchored re-anchors
+            // whole-set and component paths at different cadences
             let whole = simulate(
                 &d,
                 &cluster,
-                &SimConfig { policy, alloc: AllocKind::WholeSet, ..Default::default() },
+                &SimConfig {
+                    policy,
+                    alloc: AllocKind::WholeSet,
+                    horizon: HorizonKind::Eager,
+                    ..Default::default()
+                },
             )
             .unwrap();
             let comp = simulate(
                 &d,
                 &cluster,
-                &SimConfig { policy, alloc: AllocKind::Components, ..Default::default() },
+                &SimConfig {
+                    policy,
+                    alloc: AllocKind::Components,
+                    horizon: HorizonKind::Eager,
+                    ..Default::default()
+                },
             )
             .unwrap();
             assert_eq!(whole.events, comp.events, "{policy:?}");
@@ -1437,7 +1921,12 @@ mod tests {
         });
         d.dep(c, fb);
         let _ = (fa, fc);
-        let cfg = |alloc| SimConfig { policy: Policy::coflow(), alloc, ..Default::default() };
+        let cfg = |alloc| SimConfig {
+            policy: Policy::coflow(),
+            alloc,
+            horizon: HorizonKind::Eager,
+            ..Default::default()
+        };
         let whole = simulate(&d, &Cluster::uniform(4), &cfg(AllocKind::WholeSet)).unwrap();
         let comp = simulate(&d, &Cluster::uniform(4), &cfg(AllocKind::Components)).unwrap();
         assert_eq!(whole.events, comp.events);
@@ -1480,5 +1969,144 @@ mod tests {
         let r = simulate(&d, &Cluster::uniform(4), &cfg).unwrap();
         assert!((r.finish_of(2) - 3.0).abs() < 1e-9, "A finishes first: {}", r.finish_of(2));
         assert!((r.finish_of(3) - 4.0).abs() < 1e-9, "B follows: {}", r.finish_of(3));
+    }
+
+    /// The cross-horizon tolerance oracle at unit scale: anchored and
+    /// eager time advance must agree on makespan and every per-chunk
+    /// trace within 1e-6 relative, for every policy and both alloc
+    /// kinds, on DAGs that exercise gates, priorities, coflow barriers
+    /// and SEBF preemption. (Bit-identity is deliberately *not*
+    /// claimed: anchored subtraction reorders the float arithmetic.)
+    #[test]
+    fn horizon_kinds_agree_within_tolerance() {
+        // the shared contract every oracle site uses
+        let close = crate::sim::horizon::within_tolerance;
+        // DAG 1: the mixed priorities/gates DAG; DAG 2: the coflow
+        // preemption DAG from coflow_key_invalidation_reorders_groups
+        let mut d1 = SimDag::default();
+        let a = d1.push({ let mut t = task(SimKind::Compute { host: 0 }, 1.5); t.orig = 1; t });
+        let f1 = d1.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 2.0);
+            t.orig = 2;
+            t.priority = 5;
+            t
+        });
+        let f2 = d1.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.priority = 1;
+            t.gate = 0.5;
+            t
+        });
+        let b = d1.push({ let mut t = task(SimKind::Compute { host: 1 }, 1.0); t.orig = 4; t });
+        d1.dep(a, f1);
+        d1.dep(f1, b);
+        let _ = f2;
+        let mut d2 = SimDag::default();
+        let c = d2.push({ let mut t = task(SimKind::Compute { host: 3 }, 2.5); t.orig = 1; t });
+        let fa = d2.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 3.0);
+            t.orig = 2;
+            t.coflow = Some(7);
+            t
+        });
+        let fb = d2.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.coflow = Some(9);
+            t
+        });
+        let fc = d2.push({
+            let mut t = task(SimKind::Flow { src: 2, dst: 3 }, 1.2);
+            t.orig = 4;
+            t
+        });
+        d2.dep(c, fb);
+        let _ = (fa, fc);
+        let cluster = Cluster::uniform(4);
+        for d in [&d1, &d2] {
+            for policy in
+                [Policy::fair(), Policy::priority(), Policy::fifo(), Policy::coflow()]
+            {
+                for alloc in [AllocKind::Components, AllocKind::WholeSet] {
+                    let mk = |horizon| SimConfig { policy, alloc, horizon, ..Default::default() };
+                    let eager = simulate(d, &cluster, &mk(HorizonKind::Eager)).unwrap();
+                    let anch = simulate(d, &cluster, &mk(HorizonKind::Anchored)).unwrap();
+                    assert!(
+                        close(eager.makespan, anch.makespan),
+                        "{policy:?}/{alloc:?}: makespan {} vs {}",
+                        eager.makespan,
+                        anch.makespan
+                    );
+                    for i in 0..d.len() {
+                        assert!(
+                            close(eager.trace[i].start, anch.trace[i].start)
+                                && close(eager.trace[i].finish, anch.trace[i].finish),
+                            "{policy:?}/{alloc:?}: chunk {i} {:?}..{:?} vs {:?}..{:?}",
+                            eager.trace[i].start,
+                            eager.trace[i].finish,
+                            anch.trace[i].start,
+                            anch.trace[i].finish
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The scenario-JSON `"engine"` object mirrors the CLI flags.
+    #[test]
+    fn engine_config_from_json() {
+        use crate::util::json::Json;
+        let j = Json::parse(r#"{"queue":"fullresort","alloc":"wholeset","horizon":"eager"}"#)
+            .unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.queue, QueueKind::FullResort);
+        assert_eq!(cfg.alloc, AllocKind::WholeSet);
+        assert_eq!(cfg.horizon, HorizonKind::Eager);
+        // keys are optional; unknown keys and values are rejected
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"horizon":"anchored"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.queue, QueueKind::Incremental);
+        assert_eq!(cfg.horizon, HorizonKind::Anchored);
+        assert!(cfg.apply_json(&Json::parse(r#"{"horizon":"lazy"}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"quue":"incremental"}"#).unwrap()).is_err());
+    }
+
+    /// Anchored + components: a disjoint quiescent flow is never
+    /// re-anchored by events elsewhere, and still finishes exactly at
+    /// its solo time while the coflow preemption plays out around it.
+    #[test]
+    fn anchored_quiescent_component_finishes_at_solo_time() {
+        let mut d = SimDag::default();
+        let c = d.push({ let mut t = task(SimKind::Compute { host: 3 }, 2.5); t.orig = 1; t });
+        let fa = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 3.0);
+            t.orig = 2;
+            t.coflow = Some(7);
+            t
+        });
+        let fb = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.coflow = Some(9);
+            t
+        });
+        // disjoint singleton on its own NIC pair: its component sees no
+        // event until its own completion
+        let fc = d.push({
+            let mut t = task(SimKind::Flow { src: 4, dst: 5 }, 1.2);
+            t.orig = 4;
+            t
+        });
+        d.dep(c, fb);
+        let _ = (fa, fc);
+        let cfg = SimConfig { policy: Policy::coflow(), ..Default::default() };
+        assert_eq!(cfg.horizon, HorizonKind::Anchored, "anchored is the default");
+        let r = simulate(&d, &Cluster::uniform(6), &cfg).unwrap();
+        assert!((r.finish_of(2) - 3.0).abs() < 1e-9, "A keeps the NIC: {}", r.finish_of(2));
+        assert!((r.finish_of(3) - 4.0).abs() < 1e-9, "B follows: {}", r.finish_of(3));
+        assert!((r.finish_of(4) - 1.2).abs() < 1e-9, "solo flow: {}", r.finish_of(4));
     }
 }

@@ -1,0 +1,350 @@
+//! Anchored time advance: the finish-time heap behind
+//! [`HorizonKind::Anchored`].
+//!
+//! Under eager integration the engine pays `O(running)` per event in
+//! steps 4–5 of the event loop: the next-event horizon is a min over
+//! every rated task's projected completion and remaining bytes are
+//! decremented for every running task — even in components whose rates
+//! have not changed for thousands of events. Anchored progress turns
+//! both into heap operations:
+//!
+//! * every rated task stores `(anchor_time, remaining_at_anchor, rate)`
+//!   in engine-side arrays, and its absolute predicted finish time
+//!   `anchor + remaining / rate` lives in a [`FinHeap`] — a global
+//!   indexed min-heap;
+//! * the event horizon is a heap peek (min of the finish-heap top and
+//!   the gate-heap top) instead of a full scan;
+//! * remaining bytes are materialized **lazily**: only when a component
+//!   goes dirty (arrival / completion / gate expiry / SEBF
+//!   invalidation touches it) does the engine re-anchor its members at
+//!   `now` via `rem = rem_anchor − rate · (now − anchor)`.
+//!
+//! Clean components are never iterated per event. Their heap entries
+//! stay valid because their memoized rates are immutable between the
+//! events that touch them — the invariant `docs/ARCHITECTURE.md` ("The
+//! allocation layer") established for component-wise allocation.
+//!
+//! This is a deliberate, documented semantics change: anchored
+//! subtraction reorders the floating-point arithmetic (one fused
+//! `rate · (now − anchor)` span instead of per-event decrements, and
+//! completion fires when the *predicted finish time* arrives rather
+//! than when remaining bytes cross the byte epsilon), so results are no
+//! longer bit-identical to the eager path. The pairing contract is
+//! therefore a **tolerance oracle** — per-task trace times and makespan
+//! within `1e-6` relative — crossed over the full
+//! `{Incremental, FullResort} × {Components, WholeSet} × {Eager,
+//! Anchored}` matrix by `tests/prop_queue_equivalence.rs` and
+//! `benches/sched_scaling.rs`, while the eager corners keep their
+//! bit-exact oracle among themselves. See `docs/ARCHITECTURE.md`
+//! ("Time advance") for the anchor lifecycle.
+
+const ABSENT: usize = usize::MAX;
+
+/// The cross-horizon tolerance contract, in relative terms: anchored
+/// and eager results must agree on the makespan and every per-task
+/// trace time within this bound. Every oracle site — the engine unit
+/// tests, `tests/prop_queue_equivalence.rs` (including the long-run
+/// drift regression) and `benches/sched_scaling.rs` — goes through
+/// [`within_tolerance`], so the contract has exactly one definition.
+pub const TOLERANCE_REL: f64 = 1e-6;
+
+/// Whether two trace times satisfy the cross-horizon tolerance oracle:
+/// `|a − b| ≤ TOLERANCE_REL · max(|a|, |b|, 1)`. Two NaNs (a chunk that
+/// never started in either run) also agree.
+pub fn within_tolerance(a: f64, b: f64) -> bool {
+    (a - b).abs() <= TOLERANCE_REL * a.abs().max(b.abs()).max(1.0) || (a.is_nan() && b.is_nan())
+}
+
+/// How the engine advances time between events (`SimConfig::horizon`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HorizonKind {
+    /// Integrate remaining bytes for every rated task each event and
+    /// scan them all for the next completion — the pre-refactor
+    /// semantics, kept as the bit-exact baseline the `{queue, alloc}`
+    /// oracles compare within.
+    Eager,
+    /// Anchored progress (default): predicted finish times in a
+    /// [`FinHeap`], remaining bytes materialized only when a component
+    /// goes dirty. Quiescent components cost zero per event; results
+    /// agree with [`HorizonKind::Eager`] within the tolerance oracle,
+    /// not bit-for-bit. Note the win requires component-wise
+    /// allocation: combined with `AllocKind::WholeSet` everything is
+    /// dirty every event, so the heap is drained and rebuilt per event
+    /// — strictly more work than the eager sweep. That corner exists
+    /// for the equivalence matrix, not as a configuration to run at
+    /// scale.
+    Anchored,
+}
+
+impl HorizonKind {
+    /// Parse the CLI / scenario-JSON spelling (`eager` | `anchored`).
+    pub fn parse(s: &str) -> Result<HorizonKind, String> {
+        match s {
+            "eager" => Ok(HorizonKind::Eager),
+            "anchored" => Ok(HorizonKind::Anchored),
+            other => Err(format!("unknown horizon kind `{other}` (eager|anchored)")),
+        }
+    }
+}
+
+/// Indexed min-heap of predicted absolute finish times.
+///
+/// One entry per rated task, keyed by `(finish_time, task)` under the
+/// `f64` total order — the task id tie-break makes every operation
+/// deterministic, so anchored simulations are reproducible run to run.
+/// `pos[task]` holds the task's slot in the heap array, making
+/// [`remove`](FinHeap::remove) and [`set`](FinHeap::set) `O(log n)`
+/// (the decrease/remove operations the engine's re-anchor step needs)
+/// instead of a rebuild.
+#[derive(Debug, Default)]
+pub struct FinHeap {
+    heap: Vec<(f64, usize)>,
+    pos: Vec<usize>,
+}
+
+impl FinHeap {
+    /// Heap over task ids `0..n`.
+    pub fn with_capacity(n: usize) -> FinHeap {
+        FinHeap { heap: Vec::new(), pos: vec![ABSENT; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Whether `task` currently has an entry.
+    pub fn contains(&self, task: usize) -> bool {
+        self.pos[task] != ABSENT
+    }
+
+    /// The earliest `(finish, task)` entry, if any — the event horizon.
+    pub fn peek(&self) -> Option<(f64, usize)> {
+        self.heap.first().copied()
+    }
+
+    /// Insert `task` with predicted finish `fin`. The task must be
+    /// absent (checked with a debug assertion; use [`set`](FinHeap::set)
+    /// for push-or-rekey semantics).
+    pub fn push(&mut self, task: usize, fin: f64) {
+        debug_assert!(!self.contains(task), "task {task} already in the finish heap");
+        self.pos[task] = self.heap.len();
+        self.heap.push((fin, task));
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    /// Re-key `task` to `fin`, inserting it if absent. Handles both
+    /// decrease and increase (sifts in whichever direction the new key
+    /// demands).
+    pub fn set(&mut self, task: usize, fin: f64) {
+        let i = self.pos[task];
+        if i == ABSENT {
+            self.push(task, fin);
+        } else {
+            self.heap[i].0 = fin;
+            self.resift(i);
+        }
+    }
+
+    /// Remove `task`'s entry (no-op if absent).
+    pub fn remove(&mut self, task: usize) {
+        let i = self.pos[task];
+        if i == ABSENT {
+            return;
+        }
+        self.pos[task] = ABSENT;
+        let last = self.heap.len() - 1;
+        if i != last {
+            self.heap.swap(i, last);
+            self.heap.pop();
+            self.pos[self.heap[i].1] = i;
+            self.resift(i);
+        } else {
+            self.heap.pop();
+        }
+    }
+
+    /// Pop the earliest `(finish, task)` entry.
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        let top = *self.heap.first()?;
+        self.remove(top.1);
+        Some(top)
+    }
+
+    #[inline]
+    fn less(&self, a: usize, b: usize) -> bool {
+        let (fa, ta) = self.heap[a];
+        let (fb, tb) = self.heap[b];
+        match fa.total_cmp(&fb) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => ta < tb,
+        }
+    }
+
+    fn resift(&mut self, i: usize) {
+        if i > 0 && self.less(i, (i - 1) / 2) {
+            self.sift_up(i);
+        } else {
+            self.sift_down(i);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if !self.less(i, p) {
+                break;
+            }
+            self.swap_nodes(i, p);
+            i = p;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            if l >= self.heap.len() {
+                break;
+            }
+            let r = l + 1;
+            let mut best = l;
+            if r < self.heap.len() && self.less(r, l) {
+                best = r;
+            }
+            if !self.less(best, i) {
+                break;
+            }
+            self.swap_nodes(i, best);
+            i = best;
+        }
+    }
+
+    #[inline]
+    fn swap_nodes(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a].1] = a;
+        self.pos[self.heap[b].1] = b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn horizon_kind_parses() {
+        assert_eq!(HorizonKind::parse("eager"), Ok(HorizonKind::Eager));
+        assert_eq!(HorizonKind::parse("anchored"), Ok(HorizonKind::Anchored));
+        assert!(HorizonKind::parse("lazy").is_err());
+    }
+
+    #[test]
+    fn push_peek_pop_orders_by_finish_then_task() {
+        let mut h = FinHeap::with_capacity(8);
+        h.push(3, 2.0);
+        h.push(1, 1.0);
+        h.push(5, 2.0);
+        h.push(0, 3.0);
+        assert_eq!(h.peek(), Some((1.0, 1)));
+        assert_eq!(h.pop(), Some((1.0, 1)));
+        // equal finishes break ties by ascending task id
+        assert_eq!(h.pop(), Some((2.0, 3)));
+        assert_eq!(h.pop(), Some((2.0, 5)));
+        assert_eq!(h.pop(), Some((3.0, 0)));
+        assert_eq!(h.pop(), None);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn set_rekeys_both_directions_and_remove_is_idempotent() {
+        let mut h = FinHeap::with_capacity(8);
+        for t in 0..5 {
+            h.push(t, t as f64);
+        }
+        h.set(4, -1.0); // decrease to the top
+        assert_eq!(h.peek(), Some((-1.0, 4)));
+        h.set(4, 10.0); // increase to the bottom
+        assert_eq!(h.peek(), Some((0.0, 0)));
+        h.remove(2);
+        h.remove(2); // idempotent
+        assert_eq!(h.len(), 4);
+        let order: Vec<usize> = std::iter::from_fn(|| h.pop()).map(|(_, t)| t).collect();
+        assert_eq!(order, vec![0, 1, 3, 4]);
+    }
+
+    /// The standalone property oracle: under a long random
+    /// push/re-key/remove/pop sequence the heap agrees with a naive
+    /// scan over a plain vector — same membership, same minimum at
+    /// every step, same final drain order.
+    #[test]
+    fn prop_heap_matches_naive_scan_under_random_ops() {
+        let mut rng = Rng::new(0xF1A7);
+        let n = 48;
+        let mut h = FinHeap::with_capacity(n);
+        // naive oracle: fin-by-task, NAN = absent
+        let mut naive = vec![f64::NAN; n];
+        let naive_min = |naive: &[f64]| -> Option<(f64, usize)> {
+            let mut best: Option<(f64, usize)> = None;
+            for (t, &f) in naive.iter().enumerate() {
+                if f.is_nan() {
+                    continue;
+                }
+                best = match best {
+                    Some((bf, bt)) if (bf, bt) <= (f, t) => Some((bf, bt)),
+                    _ => Some((f, t)),
+                };
+            }
+            best
+        };
+        for step in 0..4000 {
+            let t = rng.below(n);
+            // coarse keys force heavy finish-time collisions
+            let fin = (rng.below(16) as f64) * 0.25;
+            match rng.below(5) {
+                0 | 1 => {
+                    if naive[t].is_nan() {
+                        h.push(t, fin);
+                        naive[t] = fin;
+                    }
+                }
+                2 => {
+                    h.set(t, fin);
+                    naive[t] = fin;
+                }
+                3 => {
+                    h.remove(t);
+                    naive[t] = f64::NAN;
+                }
+                _ => {
+                    let got = h.pop();
+                    let want = naive_min(&naive);
+                    assert_eq!(got, want, "pop mismatch at step {step}");
+                    if let Some((_, t)) = want {
+                        naive[t] = f64::NAN;
+                    }
+                }
+            }
+            let live = naive.iter().filter(|f| !f.is_nan()).count();
+            assert_eq!(h.len(), live, "len mismatch at step {step}");
+            assert_eq!(h.peek(), naive_min(&naive), "peek mismatch at step {step}");
+            for t in 0..n {
+                assert_eq!(h.contains(t), !naive[t].is_nan());
+            }
+        }
+        // final drain reproduces the oracle's sorted order exactly
+        let mut want: Vec<(f64, usize)> = naive
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.is_nan())
+            .map(|(t, &f)| (f, t))
+            .collect();
+        want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let got: Vec<(f64, usize)> = std::iter::from_fn(|| h.pop()).collect();
+        assert_eq!(got, want);
+    }
+}

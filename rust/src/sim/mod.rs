@@ -1,9 +1,10 @@
 //! Cluster substrate: a fluid (rate-based) discrete-event simulator of
 //! hosts, full-duplex NICs and a pluggable network topology (big switch,
 //! oversubscribed leaf/spine, parallel fabrics), with pluggable sharing
-//! policies served from an incremental ready-queue (`ready`) and a
+//! policies served from an incremental ready-queue (`ready`), a
 //! component-wise rate allocator with memoized rates (`components`,
-//! `alloc`). This is
+//! `alloc`), and anchored time advance over a finish-time heap
+//! (`horizon`). This is
 //! the testbed every scheduler in `sched/` is evaluated on (DESIGN.md §5
 //! records why a fluid model preserves the paper's comparisons;
 //! `docs/ARCHITECTURE.md` documents the engine ↔ scheduler contract).
@@ -12,13 +13,15 @@ pub mod alloc;
 pub mod components;
 pub mod engine;
 pub mod expand;
+pub mod horizon;
 pub mod ready;
 pub mod spec;
 pub mod topology;
 
 pub use alloc::AllocScratch;
 pub use components::{AllocKind, CompSet};
-pub use engine::{simulate, QueueKind, SimConfig, SimError, SimResult};
+pub use engine::{simulate, QueueKind, SimConfig, SimError, SimResult, StuckReason};
+pub use horizon::{within_tolerance, FinHeap, HorizonKind, TOLERANCE_REL};
 pub use expand::{expand, Annotations};
 pub use ready::{BucketQueue, Keying, PrioKey, QueueDiscipline, ReadyQueue, ResortQueue};
 pub use spec::{Cluster, CpuPolicy, Host, NetPolicy, Policy, SimDag, SimKind, SimTask};

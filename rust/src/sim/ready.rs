@@ -37,8 +37,17 @@
 //! Policies whose keys drift as the simulation progresses (SEBF
 //! remaining-bytes; altruistic leftover-bandwidth follow-ons) must call
 //! [`ReadyQueue::update_key`] — the explicit *key invalidation hook* —
-//! whenever the state a key was derived from changes. The engine does
-//! this for SEBF after every progress step.
+//! whenever the state a key was derived from changes. *When* the hook
+//! fires depends on the engine's time-advance mode
+//! ([`HorizonKind`](super::horizon::HorizonKind)): under **eager**
+//! integration the engine re-keys after every progress step (every
+//! event sweeps remaining bytes, so every event can invalidate);
+//! under **anchored** time advance with component-wise allocation,
+//! drift is detected at component *refill* time from the re-anchored
+//! bytes — a clean component's keys may be stale in the queue, which
+//! is sound because the component path never walks the global level
+//! structure, and any event that could act on those keys dirties the
+//! component (and thus re-keys) first.
 //!
 //! The same keys drive the engine's component-wise allocation
 //! ([`AllocKind::Components`](super::components::AllocKind)): a dirty
@@ -109,8 +118,11 @@ pub enum Keying {
     FifoArrival,
     /// Coflow SEBF: one level per group, keyed by the group's
     /// bottleneck-completion bound over *remaining* bytes. Keys go stale
-    /// on every progress step and must be re-derived via the
-    /// [`ReadyQueue::update_key`] invalidation hook.
+    /// as bytes drain and must be re-derived via the
+    /// [`ReadyQueue::update_key`] invalidation hook — after every
+    /// progress step under eager integration, or from re-anchored bytes
+    /// at component refill under anchored time advance (see the module
+    /// docs).
     SebfGroups,
 }
 
