@@ -21,7 +21,10 @@ fn main() -> anyhow::Result<()> {
         &["JCT", "delta"],
     );
     for w in &toggles {
-        t.row_f64(&w.label, &[w.jct, w.delta]);
+        match &w.outcome {
+            Ok((jct, delta)) => t.row_f64(&w.label, &[*jct, *delta]),
+            Err(e) => t.row(&w.label, &[format!("failed: {e}"), String::new()]),
+        }
     }
     t.print();
 

@@ -1,0 +1,278 @@
+//! Plan-space evaluation throughput — the outer loop the batched
+//! plan-space engine accelerates. Two stories:
+//!
+//! 1. *Plans/s* for a what-if pipeline sweep under three regimes:
+//!    **cold** (one fresh `sched::evaluate` per hypothetical — the
+//!    pre-refactor cost profile), **context** (`whatif::explore` at one
+//!    thread: cached expansions + cluster footprints + reusable engine
+//!    scratch), and **context + parallel** (`explore` at 2 and 4
+//!    workers, each with its own context).
+//! 2. *CPM repair rate*: full `cpm_with` passes/s vs incremental
+//!    `CpmCache::update` patches/s over the same random duration-toggle
+//!    stream (the move-loop re-ranking cost).
+//!
+//! Oracles run on every invocation, before timing: the parallel sweeps
+//! at threads ∈ {1, 4} (plus 2) must be bit-identical — baseline,
+//! labels, JCT/delta bits, captured errors, order — and every cold JCT
+//! must equal its context-reuse twin bitwise; the CPM cache must match
+//! the full pass bitwise after every patch. `BENCH_SMOKE=1` (the CI
+//! bench-smoke job) shrinks sizes and still runs every oracle.
+//!
+//! Results are printed as tables (README §Performance) and persisted to
+//! `BENCH_sim.json` (section `whatif_scaling`) for cross-PR tracking.
+
+use std::time::Instant;
+
+use mxdag::mxdag::CpmCache;
+use mxdag::sched::mxsched::cpm_durations;
+use mxdag::sched::{evaluate, Plan};
+use mxdag::sim::{Cluster, Policy};
+use mxdag::util::bench::{write_bench_json, Table};
+use mxdag::util::json::Json;
+use mxdag::util::rng::Rng;
+use mxdag::whatif::{explore, single_pipeline_toggles, Exploration, Hypothetical};
+use mxdag::workloads::{random_dag, RandomParams};
+use mxdag::mxdag::cpm_with;
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn shapes() -> Vec<(usize, usize)> {
+    if smoke() {
+        vec![(4, 4)]
+    } else {
+        vec![(8, 8), (14, 14), (20, 20)]
+    }
+}
+
+fn assert_explorations_identical(tag: &str, a: &Exploration, b: &Exploration) {
+    assert_eq!(a.baseline.to_bits(), b.baseline.to_bits(), "{tag}: baseline");
+    assert_eq!(a.results.len(), b.results.len(), "{tag}: result count");
+    for (x, y) in a.results.iter().zip(b.results.iter()) {
+        assert_eq!(x.label, y.label, "{tag}");
+        match (&x.outcome, &y.outcome) {
+            (Ok((ja, da)), Ok((jb, db))) => {
+                assert_eq!(ja.to_bits(), jb.to_bits(), "{tag}: {} jct", x.label);
+                assert_eq!(da.to_bits(), db.to_bits(), "{tag}: {} delta", x.label);
+            }
+            (Err(ea), Err(eb)) => assert_eq!(ea, eb, "{tag}: {}", x.label),
+            (p, q) => panic!("{tag}: {} outcome kind diverged: {p:?} vs {q:?}", x.label),
+        }
+    }
+}
+
+/// Best-of-`reps` wall time for `f` (which must be pure).
+fn timed<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn plans_per_sec() -> Json {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let mut table = Table::new(
+        "what-if sweep plans/s (cold evaluate vs reusable context vs parallel explore)",
+        &["hypos", "cold", "context", "par x2", "par x4", "ctx/cold", "x4/ctx"],
+    );
+    let mut rows = Vec::new();
+    for (layers, width) in shapes() {
+        let p = RandomParams {
+            layers,
+            width,
+            hosts,
+            seed: 23,
+            pipe_frac: 0.5,
+            ..Default::default()
+        };
+        let g = random_dag(&p);
+        let base = Plan { ann: Default::default(), policy: Policy::fifo() };
+        let mut hypos = single_pipeline_toggles(&g, &base);
+        // pair toggles widen the sweep beyond the single-toggle set
+        let piped: Vec<_> = g.real_tasks().filter(|&t| g.task(t).pipelineable()).collect();
+        for w in piped.windows(2) {
+            hypos.push(Hypothetical::Pipeline(vec![w[0], w[1]]));
+        }
+        // bound the sweep so full-size runs stay in seconds; announce
+        // the cut rather than silently truncating coverage
+        let total = hypos.len();
+        hypos.truncate(256);
+        if hypos.len() < total {
+            println!("(sweep capped at {} of {total} hypotheticals)", hypos.len());
+        }
+        let n_hypos = hypos.len();
+        assert!(n_hypos >= 2, "generator must yield pipelineable tasks");
+
+        // -- oracles first (untimed): threads {1, 2, 4} bit-identical,
+        //    cold JCTs == context JCTs bitwise
+        let serial = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+        for threads in [2usize, 4] {
+            let par = explore(&g, &cluster, &base, &hypos, threads).unwrap();
+            assert_explorations_identical(&format!("threads {threads}"), &serial, &par);
+        }
+        for (h, w) in hypos.iter().zip(serial.results.iter()) {
+            let Hypothetical::Pipeline(ts) = h else { unreachable!() };
+            let mut trial = base.clone();
+            for &t in ts {
+                if !trial.ann.pipelined.contains(&t) {
+                    trial.ann.pipelined.push(t);
+                }
+            }
+            let cold = evaluate(&g, &cluster, &trial).unwrap();
+            assert_eq!(
+                cold.makespan.to_bits(),
+                w.jct().unwrap().to_bits(),
+                "context reuse must be bit-identical to cold evaluation"
+            );
+        }
+
+        // -- timings (the +1 counts the baseline evaluation each
+        //    explore pays; the cold loop pays it too)
+        let reps = if smoke() { 1 } else { 3 };
+        let t_cold = timed(reps, || {
+            let _ = evaluate(&g, &cluster, &base).unwrap();
+            for h in &hypos {
+                let Hypothetical::Pipeline(ts) = h else { unreachable!() };
+                let mut trial = base.clone();
+                for &t in ts {
+                    if !trial.ann.pipelined.contains(&t) {
+                        trial.ann.pipelined.push(t);
+                    }
+                }
+                let _ = evaluate(&g, &cluster, &trial).unwrap();
+            }
+        });
+        let t_ctx = timed(reps, || {
+            let _ = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+        });
+        let t_par2 = timed(reps, || {
+            let _ = explore(&g, &cluster, &base, &hypos, 2).unwrap();
+        });
+        let t_par4 = timed(reps, || {
+            let _ = explore(&g, &cluster, &base, &hypos, 4).unwrap();
+        });
+        let pps = |t: f64| (n_hypos + 1) as f64 / t;
+        let tasks = g.real_tasks().count();
+        table.row(
+            &format!("{tasks} tasks"),
+            &[
+                format!("{n_hypos}"),
+                format!("{:.1}", pps(t_cold)),
+                format!("{:.1}", pps(t_ctx)),
+                format!("{:.1}", pps(t_par2)),
+                format!("{:.1}", pps(t_par4)),
+                format!("{:.2}x", t_cold / t_ctx),
+                format!("{:.2}x", t_ctx / t_par4),
+            ],
+        );
+        rows.push(Json::obj(vec![
+            ("tasks", Json::Num(tasks as f64)),
+            ("hypos", Json::Num(n_hypos as f64)),
+            ("plans_per_sec_cold", Json::Num(pps(t_cold))),
+            ("plans_per_sec_context", Json::Num(pps(t_ctx))),
+            ("plans_per_sec_par2", Json::Num(pps(t_par2))),
+            ("plans_per_sec_par4", Json::Num(pps(t_par4))),
+            ("speedup_context_vs_cold", Json::Num(t_cold / t_ctx)),
+            ("speedup_par4_vs_context", Json::Num(t_ctx / t_par4)),
+        ]));
+    }
+    table.print();
+    Json::Arr(rows)
+}
+
+fn cpm_repair_rate() -> Json {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let mut table = Table::new(
+        "CPM repair rate (full cpm_with passes/s vs CpmCache incremental patches/s)",
+        &["tasks", "full/s", "incremental/s", "speedup"],
+    );
+    let mut rows = Vec::new();
+    let shapes = if smoke() { vec![(6, 6)] } else { vec![(12, 12), (20, 20), (30, 30)] };
+    for (layers, width) in shapes {
+        let p = RandomParams { layers, width, hosts, seed: 31, ..Default::default() };
+        let g = random_dag(&p);
+        let n = g.len();
+        let dur0 = cpm_durations(&g, &cluster);
+
+        // the shared toggle stream (deterministic)
+        let rounds = if smoke() { 20 } else { 200 };
+        let mut rng = Rng::new(0xBEEF ^ n as u64);
+        let stream: Vec<Vec<(usize, f64)>> = (0..rounds)
+            .map(|_| {
+                (0..2)
+                    .map(|_| (rng.below(n), rng.range_f64(0.0, 3.0)))
+                    .collect()
+            })
+            .collect();
+
+        // oracle first: the cache matches the full pass after every patch
+        let mut cache = CpmCache::new(&g, dur0.clone());
+        for changes in &stream {
+            cache.update(&g, changes);
+            let full = cpm_with(&g, cache.durations());
+            assert_eq!(full.makespan.to_bits(), cache.cpm().makespan.to_bits());
+            for i in 0..n {
+                assert_eq!(full.slack[i].to_bits(), cache.cpm().slack[i].to_bits());
+            }
+            assert_eq!(full.critical, cache.cpm().critical);
+        }
+
+        let reps = if smoke() { 1 } else { 3 };
+        let t_full = timed(reps, || {
+            let mut dur = dur0.clone();
+            for changes in &stream {
+                for &(t, d) in changes {
+                    dur[t] = d;
+                }
+                let _ = std::hint::black_box(cpm_with(&g, &dur));
+            }
+        });
+        let t_inc = timed(reps, || {
+            let mut cache = CpmCache::new(&g, dur0.clone());
+            for changes in &stream {
+                cache.update(&g, changes);
+                std::hint::black_box(cache.cpm().makespan);
+            }
+        });
+        let per_sec = |t: f64| rounds as f64 / t;
+        table.row(
+            &format!("{n}"),
+            &[
+                format!("{n}"),
+                format!("{:.0}", per_sec(t_full)),
+                format!("{:.0}", per_sec(t_inc)),
+                format!("{:.2}x", t_full / t_inc),
+            ],
+        );
+        rows.push(Json::obj(vec![
+            ("tasks", Json::Num(n as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("full_passes_per_sec", Json::Num(per_sec(t_full))),
+            ("incremental_patches_per_sec", Json::Num(per_sec(t_inc))),
+            ("speedup_incremental_vs_full", Json::Num(t_full / t_inc)),
+        ]));
+    }
+    table.print();
+    Json::Arr(rows)
+}
+
+fn main() {
+    println!("== what-if parallel + CPM-cache oracles run before every timing ==");
+    let plans = plans_per_sec();
+    let cpm = cpm_repair_rate();
+    write_bench_json(
+        "whatif_scaling",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke())),
+            ("plans", plans),
+            ("cpm", cpm),
+        ]),
+    );
+    println!("\nwrote BENCH_sim.json (section `whatif_scaling`)");
+}

@@ -26,7 +26,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("figures") => cmd_figures(),
         Some("train") => cmd_train(&args),
-        Some("whatif") => cmd_whatif(),
+        Some("whatif") => cmd_whatif(&args),
         Some("monitor") => cmd_monitor(),
         Some("simulate") => cmd_simulate(&args),
         Some("info") => cmd_info(&args),
@@ -46,7 +46,9 @@ fn print_usage() {
            figures                       reproduce Figs. 1, 2, 3, 6, 7\n\
            train [--workers N] [--steps N] [--schedule mxdag|fifo]\n\
                  [--bandwidth BYTES_PER_S] [--time-scale X] [--artifacts DIR]\n\
-           whatif                        pipeline what-if on the Fig. 3 DAG\n\
+           whatif [--threads N]          pipeline what-if on the Fig. 3 DAG\n\
+                 (N worker threads score the hypotheticals in parallel;\n\
+                  results are bit-identical for every N — default 1)\n\
            monitor                       straggler classification demo\n\
            simulate --dag FILE.json [--scheduler mxdag|fair|fifo|coflow|packing]\n\
                     [--topology bigswitch|oversub:RACKS:RATIO|fabrics:K:TRUNK[:hash|bysrc]]\n\
@@ -216,15 +218,28 @@ fn cmd_train(args: &Args) -> i32 {
     0
 }
 
-fn cmd_whatif() -> i32 {
+fn cmd_whatif(args: &Args) -> i32 {
+    use mxdag::whatif::{explore, single_pipeline_toggles};
+    let threads = args.usize_or("threads", 1).max(1);
     let (g, _) = workloads::fig3_dag();
     let cluster = workloads::figs::fig3_cluster();
     let base = Plan { ann: Annotations::default(), policy: Policy::fifo() };
-    let (baseline, results) = mxdag::whatif::pipeline_whatif(&g, &cluster, &base).unwrap();
-    println!("baseline JCT: {baseline:.3}");
+    let hypos = single_pipeline_toggles(&g, &base);
+    let ex = match explore(&g, &cluster, &base, &hypos, threads) {
+        Ok(ex) => ex,
+        Err(e) => {
+            eprintln!("baseline failed: {e}");
+            return 1;
+        }
+    };
+    println!("baseline JCT: {:.3}  ({} hypotheticals, {threads} thread(s))", ex.baseline, ex.results.len());
     let mut t = Table::new("what-if: single pipeline toggles", &["JCT", "delta"]);
-    for w in results {
-        t.row_f64(&w.label, &[w.jct, w.delta]);
+    for w in &ex.results {
+        match &w.outcome {
+            Ok((jct, delta)) => t.row_f64(&w.label, &[*jct, *delta]),
+            // a failing hypothetical is reported in place, not fatal
+            Err(e) => t.row(&w.label, &[format!("failed: {e}"), String::new()]),
+        }
     }
     t.print();
     0

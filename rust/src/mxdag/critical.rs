@@ -4,6 +4,15 @@
 //! Produces earliest/latest start/finish, slack, the makespan lower
 //! bound, and one zero-slack critical path — the quantities Principles 1
 //! and 2 (§4) schedule by.
+//!
+//! [`CpmCache`] adds *incremental* CPM: when a plan-search move changes
+//! a handful of durations, the cached pass is patched cone-restricted
+//! (forward est/eft from the changed tasks, backward lst/lft, with a
+//! bitwise early exit as soon as values stabilise) instead of re-run
+//! over the whole graph — with [`cpm_with`] kept as the bitwise oracle.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use super::graph::MXDag;
 use super::task::TaskId;
@@ -53,7 +62,15 @@ pub fn cpm_with(dag: &MXDag, dur: &[f64]) -> Cpm {
 
     let slack: Vec<f64> = (0..n).map(|i| (lst[i] - est[i]).max(0.0)).collect();
 
-    // follow a zero-slack chain from start to end
+    let critical = critical_of(dag, &est, &eft, &slack);
+
+    Cpm { est, eft, lst, lft, slack, makespan, critical }
+}
+
+/// Follow one zero-slack chain from `v_S` to `v_E` — shared by the full
+/// pass ([`cpm_with`]) and the incremental patch ([`CpmCache::update`]),
+/// so both produce the identical path for identical inputs.
+fn critical_of(dag: &MXDag, est: &[f64], eft: &[f64], slack: &[f64]) -> Vec<TaskId> {
     let mut critical = vec![dag.start()];
     let mut cur = dag.start();
     while cur != dag.end() {
@@ -72,14 +89,214 @@ pub fn cpm_with(dag: &MXDag, dur: &[f64]) -> Cpm {
         critical.push(next);
         cur = next;
     }
-
-    Cpm { est, eft, lst, lft, slack, makespan, critical }
+    critical
 }
 
 /// CPM with durations = `Size(v)` (full resource assigned).
 pub fn cpm(dag: &MXDag) -> Cpm {
     let dur: Vec<f64> = dag.tasks().iter().map(|t| t.size).collect();
     cpm_with(dag, &dur)
+}
+
+/// Incremental CPM: a cached [`Cpm`] over explicit durations that is
+/// *patched* — not recomputed — when a few durations change, the
+/// primitive behind MxScheduler's move-loop re-ranking.
+///
+/// [`update`](CpmCache::update) runs a forward est/eft sweep restricted
+/// to the cone reachable from the changed tasks and a matching backward
+/// lst/lft sweep, each with a **bitwise early exit**: a node whose
+/// recomputed value has identical bits stops the propagation through
+/// it, so an off-critical patch touches `O(cone)` nodes, not `O(V+E)`.
+/// Because every recomputation replays the exact fold `cpm_with`
+/// performs (same iteration order over preds/succs, same `f64`
+/// arithmetic), the patched state is **bit-for-bit equal** to a fresh
+/// `cpm_with(dag, durations)` pass — the oracle the
+/// `prop_cpm_cache_matches_full_recompute_bitwise` test holds it to.
+///
+/// One deliberate degenerate case: when a patch moves the makespan
+/// (`eft[v_E]`), the backward fold's initial value changes for *every*
+/// node, so the backward sweep falls back to the full reverse-topo pass
+/// — still allocation-free, and exactly as expensive as the thing it
+/// replaces, never more.
+///
+/// The cache borrows nothing: the caller passes the same `dag` to every
+/// call (checked by length assertions only).
+#[derive(Debug, Clone)]
+pub struct CpmCache {
+    dur: Vec<f64>,
+    cpm: Cpm,
+    /// topo position per task — worklists pop in topo order (forward)
+    /// or reverse topo order (backward)
+    tpos: Vec<usize>,
+    fwd: BinaryHeap<Reverse<(usize, TaskId)>>,
+    bwd: BinaryHeap<(usize, TaskId)>,
+    in_fwd: Vec<bool>,
+    in_bwd: Vec<bool>,
+    /// nodes whose est or lst changed this update → slack recompute
+    touched: Vec<TaskId>,
+    touched_mark: Vec<bool>,
+}
+
+impl CpmCache {
+    /// Full pass over `dur`, cached for patching.
+    pub fn new(dag: &MXDag, dur: Vec<f64>) -> CpmCache {
+        let cpm = cpm_with(dag, &dur);
+        CpmCache::from_parts(dag, dur, cpm)
+    }
+
+    /// Wrap a full pass the caller already paid for. `cpm` **must** be
+    /// the result of `cpm_with(dag, &dur)` for exactly these inputs —
+    /// the cache trusts it as its starting state (length-checked only).
+    pub fn from_parts(dag: &MXDag, dur: Vec<f64>, cpm: Cpm) -> CpmCache {
+        let n = dag.len();
+        assert_eq!(dur.len(), n, "durations must cover every task");
+        assert_eq!(cpm.est.len(), n, "pass must cover every task");
+        let mut tpos = vec![0usize; n];
+        for (i, &t) in dag.topo().iter().enumerate() {
+            tpos[t] = i;
+        }
+        CpmCache {
+            dur,
+            cpm,
+            tpos,
+            fwd: BinaryHeap::new(),
+            bwd: BinaryHeap::new(),
+            in_fwd: vec![false; n],
+            in_bwd: vec![false; n],
+            touched: Vec::new(),
+            touched_mark: vec![false; n],
+        }
+    }
+
+    /// The cached pass (always consistent with [`durations`](CpmCache::durations)).
+    pub fn cpm(&self) -> &Cpm {
+        &self.cpm
+    }
+
+    /// The durations the cached pass is over.
+    pub fn durations(&self) -> &[f64] {
+        &self.dur
+    }
+
+    fn mark_touched(&mut self, t: TaskId) {
+        if !self.touched_mark[t] {
+            self.touched_mark[t] = true;
+            self.touched.push(t);
+        }
+    }
+
+    /// Apply duration patches `(task, new_duration)` (later entries win
+    /// on duplicates) and repair est/eft/lst/lft/slack/makespan and the
+    /// critical path, bitwise-equal to a fresh full pass.
+    pub fn update(&mut self, dag: &MXDag, changes: &[(TaskId, f64)]) {
+        debug_assert_eq!(self.dur.len(), dag.len(), "cache built for a different DAG");
+        for &(t, d) in changes {
+            if self.dur[t].to_bits() != d.to_bits() {
+                self.dur[t] = d;
+                if !self.in_fwd[t] {
+                    self.in_fwd[t] = true;
+                    self.fwd.push(Reverse((self.tpos[t], t)));
+                }
+                if !self.in_bwd[t] {
+                    self.in_bwd[t] = true;
+                    self.bwd.push((self.tpos[t], t));
+                }
+            }
+        }
+
+        // forward cone, in topo order: est from preds' eft, early exit
+        // where eft bits stabilise
+        while let Some(Reverse((_, u))) = self.fwd.pop() {
+            self.in_fwd[u] = false;
+            let est_new = dag
+                .preds(u)
+                .iter()
+                .map(|&p| self.cpm.eft[p])
+                .fold(0.0, f64::max);
+            let eft_new = est_new + self.dur[u];
+            if est_new.to_bits() != self.cpm.est[u].to_bits() {
+                self.cpm.est[u] = est_new;
+                self.mark_touched(u);
+            }
+            if eft_new.to_bits() != self.cpm.eft[u].to_bits() {
+                self.cpm.eft[u] = eft_new;
+                for &s in dag.succs(u) {
+                    if !self.in_fwd[s] {
+                        self.in_fwd[s] = true;
+                        self.fwd.push(Reverse((self.tpos[s], s)));
+                    }
+                }
+            }
+        }
+
+        let makespan_new = self.cpm.eft[dag.end()];
+        let makespan_changed = makespan_new.to_bits() != self.cpm.makespan.to_bits();
+        self.cpm.makespan = makespan_new;
+
+        if makespan_changed {
+            // the backward fold's initial value changed for every node:
+            // full reverse-topo sweep (the seeded worklist is subsumed)
+            while let Some((_, u)) = self.bwd.pop() {
+                self.in_bwd[u] = false;
+            }
+            for &u in dag.topo().iter().rev() {
+                let lft_new = dag
+                    .succs(u)
+                    .iter()
+                    .map(|&s| self.cpm.lst[s])
+                    .fold(makespan_new, f64::min);
+                let lst_new = lft_new - self.dur[u];
+                if lft_new.to_bits() != self.cpm.lft[u].to_bits()
+                    || lst_new.to_bits() != self.cpm.lst[u].to_bits()
+                {
+                    self.cpm.lft[u] = lft_new;
+                    self.cpm.lst[u] = lst_new;
+                    self.mark_touched(u);
+                }
+            }
+        } else {
+            // backward cone, in reverse topo order: lft from succs'
+            // lst, early exit where lst bits stabilise (lft alone
+            // changing cannot propagate — preds read only lst)
+            while let Some((_, u)) = self.bwd.pop() {
+                self.in_bwd[u] = false;
+                let lft_new = dag
+                    .succs(u)
+                    .iter()
+                    .map(|&s| self.cpm.lst[s])
+                    .fold(self.cpm.makespan, f64::min);
+                let lst_new = lft_new - self.dur[u];
+                if lft_new.to_bits() != self.cpm.lft[u].to_bits() {
+                    self.cpm.lft[u] = lft_new;
+                }
+                if lst_new.to_bits() != self.cpm.lst[u].to_bits() {
+                    self.cpm.lst[u] = lst_new;
+                    self.mark_touched(u);
+                    for &p in dag.preds(u) {
+                        if !self.in_bwd[p] {
+                            self.in_bwd[p] = true;
+                            self.bwd.push((self.tpos[p], p));
+                        }
+                    }
+                }
+            }
+        }
+
+        // slack only where est or lst moved; untouched nodes keep
+        // bitwise-identical slack by construction
+        for i in 0..self.touched.len() {
+            let t = self.touched[i];
+            self.cpm.slack[t] = (self.cpm.lst[t] - self.cpm.est[t]).max(0.0);
+        }
+        for i in 0..self.touched.len() {
+            let t = self.touched[i];
+            self.touched_mark[t] = false;
+        }
+        self.touched.clear();
+
+        // the zero-slack chase is O(path); re-run it unconditionally
+        self.cpm.critical = critical_of(dag, &self.cpm.est, &self.cpm.eft, &self.cpm.slack);
+    }
 }
 
 impl Cpm {
@@ -180,6 +397,82 @@ mod tests {
         assert_eq!(r.makespan, 13.0);
         assert!(r.is_critical(g.by_name("f2").unwrap()));
         assert!(!r.is_critical(g.by_name("f1").unwrap()));
+    }
+
+    fn assert_cache_matches(g: &MXDag, cache: &CpmCache) {
+        let full = cpm_with(g, cache.durations());
+        let got = cache.cpm();
+        assert_eq!(full.makespan.to_bits(), got.makespan.to_bits(), "makespan");
+        for i in 0..g.len() {
+            assert_eq!(full.est[i].to_bits(), got.est[i].to_bits(), "est[{i}]");
+            assert_eq!(full.eft[i].to_bits(), got.eft[i].to_bits(), "eft[{i}]");
+            assert_eq!(full.lst[i].to_bits(), got.lst[i].to_bits(), "lst[{i}]");
+            assert_eq!(full.lft[i].to_bits(), got.lft[i].to_bits(), "lft[{i}]");
+            assert_eq!(full.slack[i].to_bits(), got.slack[i].to_bits(), "slack[{i}]");
+        }
+        assert_eq!(full.critical, got.critical, "critical path");
+    }
+
+    /// The incremental-CPM oracle: random duration patch batches on
+    /// random layered DAGs — including no-op patches, zeroed durations
+    /// and makespan-moving changes — must leave the cache bitwise equal
+    /// to a fresh full pass, every field, every round.
+    #[test]
+    fn prop_cpm_cache_matches_full_recompute_bitwise() {
+        use crate::util::rng::Rng;
+        use crate::workloads::{random_dag, RandomParams};
+        for seed in 0..6u64 {
+            let p = RandomParams {
+                layers: 5,
+                width: 4,
+                hosts: 6,
+                seed,
+                ..Default::default()
+            };
+            let g = random_dag(&p);
+            let n = g.len();
+            let mut rng = Rng::new(seed ^ 0xC91A);
+            let dur0: Vec<f64> = g.tasks().iter().map(|t| t.size).collect();
+            let mut cache = CpmCache::new(&g, dur0);
+            assert_cache_matches(&g, &cache);
+            for round in 0..30 {
+                let mut changes = Vec::new();
+                if round % 7 == 3 {
+                    // identity patch: must be a bitwise no-op
+                    let t = rng.below(n);
+                    changes.push((t, cache.durations()[t]));
+                } else {
+                    for _ in 0..rng.below(4) + 1 {
+                        let t = rng.below(n);
+                        let d = if rng.bool(0.25) { 0.0 } else { rng.range_f64(0.0, 3.0) };
+                        changes.push((t, d));
+                    }
+                }
+                cache.update(&g, &changes);
+                assert_cache_matches(&g, &cache);
+            }
+        }
+    }
+
+    /// An off-critical patch that leaves the makespan alone must still
+    /// repair slacks in its cone (the diamond's short arm).
+    #[test]
+    fn cache_patch_off_critical_cone() {
+        let g = diamond();
+        let dur: Vec<f64> = g.tasks().iter().map(|t| t.size).collect();
+        let mut cache = CpmCache::new(&g, dur);
+        let f2 = g.by_name("f2").unwrap();
+        // grow the slack arm from 1 to 2: still off-critical
+        cache.update(&g, &[(f2, 2.0)]);
+        assert_eq!(cache.cpm().makespan, 6.0);
+        assert_eq!(cache.cpm().slack[f2], 1.0);
+        assert_cache_matches(&g, &cache);
+        // now dominate: the critical path must flip to the f2 arm
+        cache.update(&g, &[(f2, 10.0)]);
+        assert_eq!(cache.cpm().makespan, 13.0);
+        assert!(cache.cpm().is_critical(f2));
+        assert!(!cache.cpm().is_critical(g.by_name("f1").unwrap()));
+        assert_cache_matches(&g, &cache);
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod graph;
 pub mod path;
 pub mod task;
 
-pub use critical::{cpm, cpm_with, Cpm};
+pub use critical::{cpm, cpm_with, Cpm, CpmCache};
 pub use graph::{GraphError, MXDag, MXDagBuilder};
 pub use task::{HostId, MXTask, TaskId, TaskKind};

@@ -1,0 +1,267 @@
+//! Reusable evaluation contexts — the sched/sim boundary of the
+//! batched plan-space engine.
+//!
+//! What-if analysis (§4.3) and MxScheduler's pipeline search score
+//! *many* plans against one `(dag, cluster)` pair. A cold
+//! [`evaluate`](crate::sched::evaluate) pays, per plan: the DAG
+//! expansion (chunking + dependency rewiring), the cluster arena setup
+//! (capacities and per-chunk resource footprints), and the allocation
+//! of every engine buffer. An [`EvalContext`] amortises all three:
+//!
+//! * **Expansion cache** — the chunk *structure* of an expansion
+//!   depends only on the plan's (canonicalised) pipelined set, so it is
+//!   cached per distinct set (LRU, [`MAX_CACHED_EXPANSIONS`] entries)
+//!   together with the cluster-derived per-chunk footprints. Per-task
+//!   annotation fields (priority, gate, coflow tag) are cheap value
+//!   rewrites, re-applied to the cached chunks on every evaluation —
+//!   exactly the assignments [`expand`] performs.
+//! * **Arena cache** — [`Cluster::capacities`] is computed once per
+//!   context.
+//! * **Engine scratch** — one [`SimScratch`] is reset (not reallocated)
+//!   between runs, so plan `k+1` costs only the simulation itself.
+//!
+//! Results are bit-for-bit identical to the cold path (asserted by
+//! `context_matches_cold_evaluate_bitwise` below and by the parallel
+//! what-if oracle in `tests/prop_whatif_explore.rs`): the context is a
+//! cost optimisation, never a semantics change. A context borrows its
+//! `(dag, cluster)` — plans for a *different* DAG need a different
+//! context (what-if repartitions build one per revised DAG).
+
+use super::Plan;
+use crate::mxdag::{MXDag, TaskId};
+use crate::sim::{
+    apply_annotations, expand, simulate_with_footprints, Annotations, Cluster, SimConfig,
+    SimDag, SimError, SimResult, SimScratch, TaskRes,
+};
+
+/// Expansion-cache capacity per context. Greedy pipeline search tries
+/// at most `max_moves` (64) distinct sets; sweeps past the cap evict
+/// least-recently-used entries (each hypothetical touches its set once,
+/// so eviction costs nothing there).
+pub const MAX_CACHED_EXPANSIONS: usize = 64;
+
+/// One cached expansion: the chunk structure for a canonical pipelined
+/// set, plus the cluster-derived per-chunk arrays the engine core
+/// takes as inputs.
+struct CachedExpansion {
+    key: Vec<TaskId>,
+    sim: SimDag,
+    task_res: Vec<TaskRes>,
+    is_flow: Vec<bool>,
+    stamp: u64,
+}
+
+/// Reusable evaluation context for one `(dag, cluster)` pair. See the
+/// module docs; construct with [`EvalContext::new`] (default engine
+/// configuration) or [`EvalContext::with_config`].
+pub struct EvalContext<'a> {
+    dag: &'a MXDag,
+    cluster: &'a Cluster,
+    cfg: SimConfig,
+    caps0: Vec<f64>,
+    scratch: SimScratch,
+    cache: Vec<CachedExpansion>,
+    clock: u64,
+    key_buf: Vec<TaskId>,
+}
+
+impl<'a> EvalContext<'a> {
+    /// Context with the default engine configuration.
+    pub fn new(dag: &'a MXDag, cluster: &'a Cluster) -> EvalContext<'a> {
+        EvalContext::with_config(dag, cluster, SimConfig::default())
+    }
+
+    /// Context with explicit engine knobs (queue / alloc / horizon /
+    /// event budget). `cfg.policy` is overridden per evaluation by each
+    /// plan's policy, as in [`crate::sched::evaluate_with`].
+    pub fn with_config(dag: &'a MXDag, cluster: &'a Cluster, cfg: SimConfig) -> EvalContext<'a> {
+        EvalContext {
+            dag,
+            cluster,
+            cfg,
+            caps0: cluster.capacities(),
+            scratch: SimScratch::default(),
+            cache: Vec::new(),
+            clock: 0,
+            key_buf: Vec::new(),
+        }
+    }
+
+    pub fn dag(&self) -> &'a MXDag {
+        self.dag
+    }
+
+    pub fn cluster(&self) -> &'a Cluster {
+        self.cluster
+    }
+
+    /// Number of expansions currently cached (diagnostics / tests).
+    pub fn cached_expansions(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Expand + simulate `plan`, reusing cached structure and engine
+    /// scratch. Bit-identical to
+    /// `evaluate_with(dag, cluster, plan, cfg)`.
+    pub fn evaluate(&mut self, plan: &Plan) -> Result<SimResult, SimError> {
+        // canonical pipelined set: order, duplicates and
+        // non-pipelineable entries don't affect the expansion
+        let dag = self.dag;
+        self.key_buf.clear();
+        self.key_buf.extend(
+            plan.ann.pipelined.iter().copied().filter(|&t| dag.task(t).pipelineable()),
+        );
+        self.key_buf.sort_unstable();
+        self.key_buf.dedup();
+        let idx = match self.cache.iter().position(|e| e.key == self.key_buf) {
+            Some(i) => i,
+            None => {
+                // expand the structure once per distinct pipelined set;
+                // per-task fields are (re)applied below
+                let structure = Annotations {
+                    pipelined: self.key_buf.clone(),
+                    ..Default::default()
+                };
+                let sim = expand(dag, &structure);
+                let task_res: Vec<TaskRes> =
+                    sim.tasks.iter().map(|t| self.cluster.task_res(&t.kind)).collect();
+                let is_flow: Vec<bool> = sim.tasks.iter().map(|t| t.kind.is_flow()).collect();
+                if self.cache.len() >= MAX_CACHED_EXPANSIONS {
+                    let lru = self
+                        .cache
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, e)| e.stamp)
+                        .map(|(i, _)| i)
+                        .expect("cache is non-empty");
+                    self.cache.swap_remove(lru);
+                }
+                self.cache.push(CachedExpansion {
+                    key: self.key_buf.clone(),
+                    sim,
+                    task_res,
+                    is_flow,
+                    stamp: 0,
+                });
+                self.cache.len() - 1
+            }
+        };
+        self.clock += 1;
+        let entry = &mut self.cache[idx];
+        entry.stamp = self.clock;
+
+        // (re)apply the plan's per-task annotations to the cached
+        // chunks — the exact field semantics `expand` uses, shared
+        // through `sim::apply_annotations`
+        #[cfg(debug_assertions)]
+        for mem in plan.ann.coflows.iter() {
+            for m in mem {
+                debug_assert!(
+                    !entry.key.contains(m),
+                    "coflow semantics are defined on unpipelined flows"
+                );
+            }
+        }
+        apply_annotations(&mut entry.sim, &plan.ann);
+
+        let cfg = SimConfig { policy: plan.policy, ..self.cfg.clone() };
+        simulate_with_footprints(
+            &entry.sim,
+            self.cluster,
+            &cfg,
+            &entry.task_res,
+            &entry.is_flow,
+            &self.caps0,
+            &mut self.scratch,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{evaluate_with, CoflowScheduler, Grouping, MxScheduler, Plan, Scheduler};
+    use crate::sim::Policy;
+    use crate::workloads::{random_dag, RandomParams};
+
+    fn assert_bits(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.trace.len(), b.trace.len());
+        for i in 0..a.trace.len() {
+            assert_eq!(a.trace[i].start.to_bits(), b.trace[i].start.to_bits());
+            assert_eq!(a.trace[i].finish.to_bits(), b.trace[i].finish.to_bits());
+        }
+    }
+
+    /// The context contract: whatever ran before on the context, every
+    /// evaluation is bit-identical to the cold path — across plan
+    /// families (fair, priority, coflow groups, pipelined sets) on a
+    /// random DAG, interleaved to force cache hits, misses and
+    /// annotation rewrites on shared structure.
+    #[test]
+    fn context_matches_cold_evaluate_bitwise() {
+        let p = RandomParams { layers: 5, width: 4, hosts: 6, seed: 13, ..Default::default() };
+        let g = random_dag(&p);
+        let cluster = crate::sim::Cluster::uniform(p.hosts);
+        let piped: Vec<TaskId> =
+            g.real_tasks().filter(|&t| g.task(t).pipelineable()).collect();
+
+        let mut plans: Vec<Plan> = vec![
+            Plan::fair(),
+            MxScheduler::without_pipelining().plan(&g, &cluster),
+            CoflowScheduler::new(Grouping::ByDst).plan(&g, &cluster),
+        ];
+        // pipelined variants: same structure key evaluated under two
+        // different policies, plus a growing set
+        if let Some(&t0) = piped.first() {
+            let mut fifo = Plan { ann: Default::default(), policy: Policy::fifo() };
+            fifo.ann.pipelined.push(t0);
+            plans.push(fifo.clone());
+            let mut fair = fifo.clone();
+            fair.policy = Policy::fair();
+            plans.push(fair);
+            let mut grown = fifo;
+            grown.ann.pipelined.extend(piped.iter().copied());
+            plans.push(grown);
+        }
+
+        let mut ctx = EvalContext::new(&g, &cluster);
+        // two passes: the second hits a fully warm cache + scratch
+        for _ in 0..2 {
+            for plan in &plans {
+                let cold = evaluate_with(&g, &cluster, plan, &SimConfig::default()).unwrap();
+                let warm = ctx.evaluate(plan).unwrap();
+                assert_bits(&cold, &warm);
+            }
+        }
+    }
+
+    /// Distinct pipelined sets get distinct cache entries; permutations
+    /// and duplicates of one set share a single entry.
+    #[test]
+    fn expansion_cache_keys_are_canonical() {
+        let p = RandomParams { seed: 21, ..Default::default() };
+        let g = random_dag(&p);
+        let cluster = crate::sim::Cluster::uniform(p.hosts);
+        let piped: Vec<TaskId> =
+            g.real_tasks().filter(|&t| g.task(t).pipelineable()).collect();
+        if piped.len() < 2 {
+            return; // seed guarantees ≥ 2 in practice; stay robust
+        }
+        let mut ctx = EvalContext::new(&g, &cluster);
+        let mk = |set: Vec<TaskId>| Plan {
+            ann: Annotations { pipelined: set, ..Default::default() },
+            policy: Policy::fair(),
+        };
+        ctx.evaluate(&mk(vec![])).unwrap();
+        assert_eq!(ctx.cached_expansions(), 1);
+        ctx.evaluate(&mk(vec![piped[0], piped[1]])).unwrap();
+        assert_eq!(ctx.cached_expansions(), 2);
+        // permuted + duplicated spelling of the same set: cache hit
+        ctx.evaluate(&mk(vec![piped[1], piped[0], piped[1]])).unwrap();
+        assert_eq!(ctx.cached_expansions(), 2);
+        ctx.evaluate(&mk(vec![piped[0]])).unwrap();
+        assert_eq!(ctx.cached_expansions(), 3);
+    }
+}

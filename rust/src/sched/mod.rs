@@ -34,6 +34,7 @@
 
 pub mod altruistic;
 pub mod coflow;
+pub mod context;
 pub mod fair;
 pub mod fifo;
 pub mod mxsched;
@@ -47,6 +48,7 @@ use crate::sim::{
 
 pub use altruistic::{AltruisticScheduler, SelfishScheduler};
 pub use coflow::{CoflowScheduler, Grouping};
+pub use context::EvalContext;
 pub use fair::FairScheduler;
 pub use fifo::FifoScheduler;
 pub use mxsched::MxScheduler;

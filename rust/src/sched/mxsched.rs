@@ -14,9 +14,10 @@
 //!    will only be applied when they can shrink the overall execution
 //!    time") — this is what rejects Fig. 3 case 3.
 
-use super::{evaluate, Plan, Scheduler};
-use crate::mxdag::{cpm_with, Cpm, MXDag, TaskId, TaskKind};
+use super::{EvalContext, Plan, Scheduler};
+use crate::mxdag::{cpm_with, Cpm, CpmCache, MXDag, TaskId, TaskKind};
 use crate::sim::{Annotations, Cluster, Policy, QueueDiscipline, SimKind};
+use crate::util::par::par_map_with;
 
 /// The MXDAG co-scheduler (Principle 1).
 #[derive(Debug, Clone)]
@@ -30,24 +31,34 @@ pub struct MxScheduler {
     /// most-critical moves are tried first, so a small budget keeps
     /// planning online-fast on large DAGs.
     pub max_moves: usize,
+    /// Worker threads for the move-budget what-if evaluations. `1`
+    /// (default) is the fully sequential greedy search; `> 1` scores
+    /// candidate moves in parallel *rounds* of this size and accepts
+    /// the best improving move of each round. Scores are exact
+    /// simulations either way and the search is deterministic per
+    /// thread count, but the greedy *trajectory* (which improving moves
+    /// compose) legitimately depends on the round size — unlike
+    /// [`crate::whatif::explore`], whose results are bit-identical
+    /// across thread counts.
+    pub threads: usize,
 }
 
 impl Default for MxScheduler {
     fn default() -> Self {
-        MxScheduler { pipeline_search: true, min_gain: 1e-9, max_moves: 64 }
+        MxScheduler { pipeline_search: true, min_gain: 1e-9, max_moves: 64, threads: 1 }
     }
 }
 
-/// CPM over durations costed against the cluster: a task's duration is
+/// The per-task durations [`cpm_on`] costs against `cluster`:
 /// `size / solo-bottleneck-rate`, so a flow squeezed through an
-/// oversubscribed aggregation link (or a degraded NIC/core) is costed by
-/// its real per-path bandwidth, not the unit-NIC assumption. On a
+/// oversubscribed aggregation link (or a degraded NIC/core) is costed
+/// by its real per-path bandwidth, not the unit-NIC assumption. On a
 /// uniform big-switch cluster every solo rate is 1 and this reduces
-/// exactly to the size-based CPM.
-pub fn cpm_on(dag: &MXDag, cluster: &Cluster) -> Cpm {
+/// exactly to `Size(v)`. Dummies keep their (zero) size; a dead
+/// resource falls back to the optimistic cost.
+pub fn cpm_durations(dag: &MXDag, cluster: &Cluster) -> Vec<f64> {
     let caps = cluster.capacities();
-    let dur: Vec<f64> = dag
-        .tasks()
+    dag.tasks()
         .iter()
         .map(|t| {
             let kind = match t.kind {
@@ -62,8 +73,38 @@ pub fn cpm_on(dag: &MXDag, cluster: &Cluster) -> Cpm {
                 t.size // dead resource: fall back to the optimistic cost
             }
         })
-        .collect();
-    cpm_with(dag, &dur)
+        .collect()
+}
+
+/// CPM over [`cpm_durations`] — the full-pass spelling, kept as the
+/// bitwise oracle the incremental [`CpmCache`] patching is tested
+/// against.
+pub fn cpm_on(dag: &MXDag, cluster: &Cluster) -> Cpm {
+    cpm_with(dag, &cpm_durations(dag, cluster))
+}
+
+/// Duration-domain pipeline unit of `t`: the first-chunk latency Eq. 2
+/// charges, i.e. `Unit/Size` of the task's costed duration.
+fn unit_dur(dag: &MXDag, dur0: &[f64], t: TaskId) -> f64 {
+    let task = dag.task(t);
+    if task.size > 0.0 {
+        dur0[t] * (task.unit / task.size)
+    } else {
+        dur0[t]
+    }
+}
+
+/// Eq. 2 ranking model for an accepted pipelined pair `u → v`: the
+/// pair's combined contention-free length is
+/// `max(d_u, d_v) + min(U_u, U_v)` (everything in duration domain), so
+/// `v`'s effective ranked duration becomes that total minus `u`'s
+/// unchanged `d_u`. This is the duration patch the move loop feeds
+/// [`CpmCache::update`] so candidate ranking tracks the evolving plan —
+/// a *ranking* heuristic only; move acceptance is always decided by the
+/// simulation.
+fn pipelined_pair_duration(dag: &MXDag, dur0: &[f64], u: TaskId, v: TaskId) -> f64 {
+    let unit = unit_dur(dag, dur0, u).min(unit_dur(dag, dur0, v));
+    (dur0[u].max(dur0[v]) + unit - dur0[u]).max(unit)
 }
 
 impl MxScheduler {
@@ -71,9 +112,16 @@ impl MxScheduler {
         MxScheduler { pipeline_search: false, ..Default::default() }
     }
 
-    /// The priority-only plan (no pipeline search).
-    fn base_plan(&self, dag: &MXDag, cluster: &Cluster) -> Plan {
-        let c = cpm_on(dag, cluster);
+    /// Default scheduler with `threads` what-if workers (see the
+    /// `threads` field for the round semantics).
+    pub fn with_threads(threads: usize) -> Self {
+        MxScheduler { threads: threads.max(1), ..Default::default() }
+    }
+
+    /// The priority-only plan from an already-computed costed CPM pass
+    /// (no pipeline search). `plan` computes that pass once and shares
+    /// it with the move search.
+    fn priority_plan(dag: &MXDag, c: &Cpm) -> Plan {
         let prios = c.priorities();
         let mut ann = Annotations::default();
         for t in dag.real_tasks() {
@@ -88,46 +136,117 @@ impl MxScheduler {
     /// pipeline only overlaps anything when both producer and consumer
     /// chunk, so single toggles cannot discover the useful moves — and
     /// (b) single tasks (useful once a chain partner is already in).
-    fn search_pipelines(&self, dag: &MXDag, cluster: &Cluster, mut plan: Plan) -> Plan {
-        let c = cpm_on(dag, cluster);
-        let mut moves: Vec<Vec<TaskId>> = Vec::new();
+    ///
+    /// Each round the pending moves are *re-ranked* by min member slack
+    /// under a [`CpmCache`] whose durations track the plan: an accepted
+    /// pair patches the consumer's effective duration (Eq. 2, see
+    /// [`pipelined_pair_duration`]) and the cache repairs the cone
+    /// incrementally — the full `cpm_on` recompute this replaces is
+    /// `O(V+E)` per accepted move. Scoring goes through the shared
+    /// [`EvalContext`] (serial) or a batch of per-worker contexts
+    /// (`threads > 1`), consuming one unit of `max_moves` budget per
+    /// evaluation either way.
+    fn search_pipelines(
+        &self,
+        dag: &MXDag,
+        cluster: &Cluster,
+        ctx: &mut EvalContext<'_>,
+        dur0: Vec<f64>,
+        c0: Cpm,
+        mut plan: Plan,
+    ) -> Plan {
+        // `c0` is the pass `plan` already paid for over `dur0`; the
+        // cache starts from it instead of re-running the full fold
+        let mut cache = CpmCache::from_parts(dag, dur0.clone(), c0);
+        let mut pending: Vec<Vec<TaskId>> = Vec::new();
         for u in dag.real_tasks() {
             if !dag.task(u).pipelineable() {
                 continue;
             }
             for &v in dag.succs(u) {
                 if !dag.task(v).kind.is_dummy() && dag.task(v).pipelineable() {
-                    moves.push(vec![u, v]);
+                    pending.push(vec![u, v]);
                 }
             }
-            moves.push(vec![u]);
+            pending.push(vec![u]);
         }
-        // most critical move first (by min slack of its members)
-        let key = |m: &Vec<TaskId>| {
-            m.iter()
-                .map(|&t| c.slack[t])
-                .fold(f64::INFINITY, f64::min)
-        };
-        moves.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
-        moves.truncate(self.max_moves);
 
-        let Ok(mut best) = evaluate(dag, cluster, &plan) else {
+        let Ok(base) = ctx.evaluate(&plan) else {
             return plan;
         };
-        for mv in moves {
-            if mv.iter().all(|t| plan.ann.pipelined.contains(t)) {
-                continue;
+        let mut best_ms = base.makespan;
+        let mut budget = self.max_moves;
+        let threads = self.threads.max(1);
+        // worker contexts are built once and stay warm across rounds —
+        // every round reuses their cached expansions and engine scratch
+        let mut worker_ctxs: Vec<EvalContext<'_>> = if threads > 1 {
+            (0..threads).map(|_| EvalContext::new(dag, cluster)).collect()
+        } else {
+            Vec::new()
+        };
+        // the ranking only shifts when an accepted move patches the
+        // cache, so sort lazily: retain/drain preserve relative order,
+        // and a round with no accepted move reuses the standing order
+        let mut ranking_stale = true;
+        while budget > 0 {
+            pending.retain(|m| !m.iter().all(|t| plan.ann.pipelined.contains(t)));
+            if pending.is_empty() {
+                break;
             }
-            let mut trial = plan.clone();
-            for &t in &mv {
-                if !trial.ann.pipelined.contains(&t) {
-                    trial.ann.pipelined.push(t);
+            // most critical move first (min member slack) under the
+            // *current* effective durations; the sort is stable, so
+            // equally-critical moves keep generation order
+            if ranking_stale {
+                let slack = &cache.cpm().slack;
+                let key = |m: &Vec<TaskId>| {
+                    m.iter().map(|&t| slack[t]).fold(f64::INFINITY, f64::min)
+                };
+                pending.sort_by(|a, b| key(a).partial_cmp(&key(b)).unwrap());
+                ranking_stale = false;
+            }
+            let round = threads.min(budget).min(pending.len());
+            let moves: Vec<Vec<TaskId>> = pending.drain(..round).collect();
+            budget -= round;
+            let trials: Vec<Plan> = moves
+                .iter()
+                .map(|mv| {
+                    let mut trial = plan.clone();
+                    for &t in mv {
+                        if !trial.ann.pipelined.contains(&t) {
+                            trial.ann.pipelined.push(t);
+                        }
+                    }
+                    trial
+                })
+                .collect();
+            let scores: Vec<Option<f64>> = if threads > 1 && trials.len() > 1 {
+                par_map_with(&trials, &mut worker_ctxs, |wctx, _, trial| {
+                    wctx.evaluate(trial).ok().map(|r| r.makespan)
+                })
+            } else {
+                trials
+                    .iter()
+                    .map(|trial| ctx.evaluate(trial).ok().map(|r| r.makespan))
+                    .collect()
+            };
+            let mut winner: Option<usize> = None;
+            for (i, s) in scores.iter().enumerate() {
+                if let Some(ms) = *s {
+                    let beats_round = match winner {
+                        Some(w) => ms < scores[w].expect("winner has a score"),
+                        None => true,
+                    };
+                    if ms < best_ms - self.min_gain && beats_round {
+                        winner = Some(i);
+                    }
                 }
             }
-            if let Ok(r) = evaluate(dag, cluster, &trial) {
-                if r.makespan < best.makespan - self.min_gain {
-                    best = r;
-                    plan = trial;
+            if let Some(i) = winner {
+                best_ms = scores[i].expect("winner has a score");
+                plan = trials[i].clone();
+                if let [u, v] = moves[i][..] {
+                    cache.update(dag, &[(v, pipelined_pair_duration(dag, &dur0, u, v))]);
+                    ranking_stale = true;
                 }
             }
         }
@@ -146,18 +265,23 @@ impl Scheduler for MxScheduler {
         // violated by over-serialization on symmetric DAGs, where strict
         // priority idles downstream NICs. The co-scheduler has the global
         // view, so it checks its priority plan against plain fair sharing
-        // and keeps the better one before searching pipelines.
-        let prio_plan = self.base_plan(dag, cluster);
+        // and keeps the better one before searching pipelines. Every
+        // evaluation in this method shares one context: the guard's two
+        // plans share the unpipelined expansion, and the search reuses
+        // the engine scratch throughout. The costed CPM pass is also
+        // computed exactly once — the priority plan ranks by it and the
+        // search's incremental cache starts from it.
+        let mut ctx = EvalContext::new(dag, cluster);
+        let dur0 = cpm_durations(dag, cluster);
+        let c0 = cpm_with(dag, &dur0);
+        let prio_plan = Self::priority_plan(dag, &c0);
         let fair_plan = Plan::fair();
-        let plan = match (
-            evaluate(dag, cluster, &prio_plan),
-            evaluate(dag, cluster, &fair_plan),
-        ) {
+        let plan = match (ctx.evaluate(&prio_plan), ctx.evaluate(&fair_plan)) {
             (Ok(p), Ok(f)) if f.makespan < p.makespan - self.min_gain => fair_plan,
             _ => prio_plan,
         };
         if self.pipeline_search {
-            self.search_pipelines(dag, cluster, plan)
+            self.search_pipelines(dag, cluster, &mut ctx, dur0, c0, plan)
         } else {
             plan
         }
@@ -173,7 +297,7 @@ impl Scheduler for MxScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::{run, FairScheduler};
+    use crate::sched::{evaluate, run, FairScheduler};
     use crate::sim::Cluster;
 
     /// Fig. 1: co-scheduling prioritises flow 1 over flow 3 so the
@@ -225,6 +349,24 @@ mod tests {
         let g = b.finalize().unwrap();
         let cluster = Cluster::uniform(2);
         let s = MxScheduler::default();
+        let plan = s.plan(&g, &cluster);
+        assert!(!plan.ann.pipelined.is_empty(), "should adopt helpful pipeline");
+        let r = evaluate(&g, &cluster, &plan).unwrap();
+        assert!((r.makespan - 5.0).abs() < 1e-9, "got {}", r.makespan);
+    }
+
+    /// `threads > 1` scores whole rounds in parallel but must still
+    /// find the same obviously-best move here and emit a plan the
+    /// simulation accepts.
+    #[test]
+    fn parallel_move_rounds_find_helpful_pipeline() {
+        let mut b = MXDag::builder();
+        let p = b.compute_full("p", 0, 4.0, 1.0);
+        let f = b.flow_full("f", 0, 1, 4.0, 1.0);
+        b.dep(p, f);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(2);
+        let s = MxScheduler::with_threads(4);
         let plan = s.plan(&g, &cluster);
         assert!(!plan.ann.pipelined.is_empty(), "should adopt helpful pipeline");
         let r = evaluate(&g, &cluster, &plan).unwrap();

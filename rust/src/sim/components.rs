@@ -101,7 +101,7 @@ const NONE: usize = usize::MAX;
 /// Task ids index `0..n_tasks`; resource ids index the flat arena
 /// `0..n_res` *including* any virtual coflow-group slots appended by the
 /// caller. A task is a member of at most one component while queued.
-#[derive(Debug)]
+#[derive(Debug, Default)]
 pub struct CompSet {
     // per task
     task_comp: Vec<usize>,
@@ -155,6 +155,42 @@ impl CompSet {
             root_comp: Vec::new(),
             spare: Vec::new(),
         }
+    }
+
+    /// Reset to an empty partition over `n_tasks` task ids and `n_res`
+    /// resource ids — the between-runs reuse hook
+    /// ([`SimScratch`](crate::sim::SimScratch)): every slot is retired
+    /// to the free list with its member/resource buffers kept, all
+    /// claims are dropped. The free list is ordered so slot ids are
+    /// handed out lowest-first again, exactly as from a fresh
+    /// [`CompSet::new`].
+    pub fn reset(&mut self, n_tasks: usize, n_res: usize) {
+        self.task_comp.clear();
+        self.task_comp.resize(n_tasks, NONE);
+        self.pos.clear();
+        self.pos.resize(n_tasks, NONE);
+        self.owner.clear();
+        self.owner.resize(n_res, NONE);
+        self.owner_gen.clear();
+        self.owner_gen.resize(n_res, 0);
+        for c in 0..self.members.len() {
+            self.members[c].clear();
+            self.res[c].clear();
+            self.alive[c] = false;
+            self.dirty_flag[c] = false;
+            self.live_pos[c] = NONE;
+        }
+        self.live.clear();
+        self.dirty.clear();
+        self.free.clear();
+        self.free.extend((0..self.members.len()).rev());
+        self.seen_res.clear();
+        self.seen_res.resize(n_res, 0);
+        self.seen_epoch.clear();
+        self.seen_epoch.resize(n_res, 0);
+        self.epoch = 0;
+        // parent/root_comp are per-rebuild scratch; `spare` buffers and
+        // `gen_of` stamps carry over (claims are owner-side, all dropped)
     }
 
     /// The component currently owning resource `r`, if any. Claims by

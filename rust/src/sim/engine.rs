@@ -570,18 +570,152 @@ fn sebf_bound_group(
     bnd
 }
 
-/// Run the fluid simulation to completion.
+/// Reusable engine state for batched plan evaluation: the ready queues
+/// (both kinds, kept warm), the contention partition ([`CompSet`]), the
+/// finish-time heap ([`FinHeap`]), the allocation scratch
+/// ([`AllocScratch`]) and every per-task / per-resource / per-group
+/// buffer the event loop touches. [`simulate_in`] *resets* (never
+/// reallocates) this state between runs, so scoring plan `k+1` of a
+/// sweep costs only the simulation itself — a warm scratch allocates
+/// nothing in steady state. One scratch serves DAGs and clusters of any
+/// size (buffers grow to high-water marks). It is plain mutable state
+/// with no cross-run semantics: a simulation's result is bit-for-bit
+/// independent of what the scratch ran before (asserted by the
+/// `scratch_reuse_is_bit_identical` test and, transitively, by the
+/// parallel-what-if equivalence oracle).
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    rq_cpu_bucket: BucketQueue,
+    rq_net_bucket: BucketQueue,
+    rq_cpu_resort: ResortQueue,
+    rq_net_resort: ResortQueue,
+    comps: CompSet,
+    fins: FinHeap,
+    ascr: AllocScratch,
+    // per-task
+    remaining: Vec<f64>,
+    indeg: Vec<usize>,
+    done: Vec<bool>,
+    started: Vec<bool>,
+    seq: Vec<u64>,
+    queued: Vec<bool>,
+    key_of: Vec<PrioKey>,
+    rate_of: Vec<f64>,
+    anchor_t: Vec<f64>,
+    group_of: Vec<Option<usize>>,
+    virt: Vec<Option<usize>>,
+    // per-resource
+    caps: Vec<f64>,
+    users: Vec<f64>,
+    sat_mark: Vec<bool>,
+    load: Vec<f64>,
+    load_touched: Vec<bool>,
+    // per-coflow-group
+    members: Vec<Vec<usize>>,
+    group_pending: Vec<usize>,
+    group_open: Vec<bool>,
+    parked: Vec<Vec<usize>>,
+    group_dirty: Vec<bool>,
+    grp_seen: Vec<bool>,
+    // heaps / maps
+    arrivals: BinaryHeap<Reverse<(u64, usize)>>,
+    gates: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    fifo_prio_orig: BTreeMap<TaskId, i64>,
+    comp_rated: Vec<Vec<(usize, f64)>>,
+    // worklists
+    comp_sorted: Vec<usize>,
+    new_comps: Vec<usize>,
+    live_scratch: Vec<usize>,
+    near_done: Vec<usize>,
+    grp_list: Vec<usize>,
+    sub_res: Vec<TaskRes>,
+    sub_idx: Vec<usize>,
+    sub_rates: Vec<f64>,
+    rated: Vec<(usize, f64)>,
+    completed: Vec<usize>,
+    touched: Vec<usize>,
+    grp_scratch: Vec<usize>,
+    dirty_groups: Vec<usize>,
+    dirty_singles: Vec<usize>,
+    heap_removed: Vec<usize>,
+    heap_inserts: Vec<(usize, f64)>,
+    // footprint buffers for the `simulate_in` convenience path
+    fp_task_res: Vec<TaskRes>,
+    fp_is_flow: Vec<bool>,
+}
+
+/// Truncate/grow a nested scratch vector to `n` cleared inner buffers,
+/// keeping inner capacity wherever the shape matches across runs.
+fn reset_nested<T>(v: &mut Vec<Vec<T>>, n: usize) {
+    v.truncate(n);
+    for inner in v.iter_mut() {
+        inner.clear();
+    }
+    while v.len() < n {
+        v.push(Vec::new());
+    }
+}
+
+/// Run the fluid simulation to completion (cold path: throwaway
+/// scratch). Sweeps that score many plans reuse one [`SimScratch`] via
+/// [`simulate_in`] instead.
 pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimResult, SimError> {
+    simulate_in(dag, cluster, cfg, &mut SimScratch::default())
+}
+
+/// As [`simulate`], but reusing `scratch` across calls (reset, not
+/// reallocated). Resource footprints and arena capacities are
+/// recomputed per run into scratch-owned buffers; callers that can
+/// cache them per `(expansion, cluster)` — the evaluation context at
+/// the sched/sim boundary — call [`simulate_with_footprints`] directly.
+pub fn simulate_in(
+    dag: &SimDag,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    scratch: &mut SimScratch,
+) -> Result<SimResult, SimError> {
+    let mut tr_buf = std::mem::take(&mut scratch.fp_task_res);
+    let mut if_buf = std::mem::take(&mut scratch.fp_is_flow);
+    tr_buf.clear();
+    if_buf.clear();
+    for t in dag.tasks.iter() {
+        tr_buf.push(cluster.task_res(&t.kind));
+        if_buf.push(t.kind.is_flow());
+    }
+    let caps_v = cluster.capacities();
+    let r = simulate_with_footprints(dag, cluster, cfg, &tr_buf, &if_buf, &caps_v, scratch);
+    scratch.fp_task_res = tr_buf;
+    scratch.fp_is_flow = if_buf;
+    r
+}
+
+/// The engine core behind [`simulate`] / [`simulate_in`]: the caller
+/// supplies the per-chunk resource footprints (`task_res`, computed by
+/// [`Cluster::task_res`] for this cluster), the per-chunk flow flags
+/// and the arena capacities ([`Cluster::capacities`]). All three are
+/// pure functions of `(dag, cluster)`, which is what lets evaluation
+/// contexts cache them across plan evaluations. Passing footprints
+/// computed for a *different* cluster or expansion is a logic error
+/// (debug-asserted on length only).
+///
+/// On success the scratch keeps its buffers warm for the next run; on
+/// an error return some buffers are left drained — still valid (the
+/// next reset rebuilds them), just cold.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_with_footprints(
+    dag: &SimDag,
+    cluster: &Cluster,
+    cfg: &SimConfig,
+    task_res: &[TaskRes],
+    is_flow_v: &[bool],
+    caps0: &[f64],
+    scratch: &mut SimScratch,
+) -> Result<SimResult, SimError> {
     let n = dag.len();
-    let caps0 = cluster.capacities();
+    debug_assert_eq!(task_res.len(), n, "footprints must cover every task");
+    debug_assert_eq!(is_flow_v.len(), n, "flow flags must cover every task");
     let n_hosts = cluster.n_hosts();
     let n_res = caps0.len();
-    // §Perf: precompute per-task resource footprints once (topology-aware:
-    // a flow's footprint includes the fabric links it crosses); reuse
-    // scratch buffers across events (no allocation in the hot loop).
-    let task_res: Vec<TaskRes> =
-        dag.tasks.iter().map(|t| cluster.task_res(&t.kind)).collect();
-    let is_flow_v: Vec<bool> = dag.tasks.iter().map(|t| t.kind.is_flow()).collect();
 
     // Resource classes are disjoint: computes draw only on cores
     // (`res_core`), flows only on NICs + fabric links. Count the
@@ -599,10 +733,20 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
         }
     }
 
-    let mut remaining: Vec<f64> = dag.tasks.iter().map(|t| t.size).collect();
-    let mut indeg: Vec<usize> = dag.preds.iter().map(|p| p.len()).collect();
-    let mut done = vec![false; n];
-    let mut started = vec![false; n];
+    let mut remaining = std::mem::take(&mut scratch.remaining);
+    remaining.clear();
+    remaining.extend(dag.tasks.iter().map(|t| t.size));
+    let mut indeg = std::mem::take(&mut scratch.indeg);
+    indeg.clear();
+    indeg.extend(dag.preds.iter().map(|p| p.len()));
+    let mut done = std::mem::take(&mut scratch.done);
+    done.clear();
+    done.resize(n, false);
+    let mut started = std::mem::take(&mut scratch.started);
+    started.clear();
+    started.resize(n, false);
+    // the trace is the run's *output* (moved into the result), so it is
+    // the one per-task buffer allocated fresh each run
     let mut trace = vec![TaskTrace { start: f64::NAN, finish: f64::NAN }; n];
     let mut n_done = 0usize;
     let mut now = 0.0f64;
@@ -623,7 +767,8 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     // `fifo_base` jumps past every slot of earlier instants so tasks
     // from different instants can never share a priority level.
     let use_fifo = cfg.policy.cpu == CpuPolicy::Fifo || cfg.policy.net == NetPolicy::Fifo;
-    let mut fifo_prio_orig: BTreeMap<TaskId, i64> = BTreeMap::new();
+    let mut fifo_prio_orig = std::mem::take(&mut scratch.fifo_prio_orig);
+    fifo_prio_orig.clear();
     let mut fifo_tie_time: i64 = i64::MIN;
     let mut fifo_tie_count: i64 = 0;
     let mut fifo_base: i64 = 0;
@@ -636,8 +781,10 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     // dependencies are still unmet; the all-or-nothing barrier opens
     // when it reaches zero, releasing any parked members.
     let coflow_on = cfg.policy.net == NetPolicy::Coflow;
-    let mut group_of: Vec<Option<usize>> = vec![None; n];
-    let mut members: Vec<Vec<usize>> = Vec::new();
+    let mut group_of = std::mem::take(&mut scratch.group_of);
+    group_of.clear();
+    group_of.resize(n, None);
+    let mut members = std::mem::take(&mut scratch.members);
     if coflow_on {
         let mut dense: BTreeMap<usize, usize> = BTreeMap::new();
         for t in dag.tasks.iter() {
@@ -648,7 +795,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
         for (i, (_, v)) in dense.iter_mut().enumerate() {
             *v = i;
         }
-        members = vec![Vec::new(); dense.len()];
+        reset_nested(&mut members, dense.len());
         for (i, t) in dag.tasks.iter().enumerate() {
             if let Some(g) = t.coflow {
                 let gi = dense[&g];
@@ -656,34 +803,53 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                 group_of[i] = Some(gi);
             }
         }
+    } else {
+        reset_nested(&mut members, 0);
     }
     let n_groups = members.len();
-    let mut group_pending: Vec<usize> = members.iter().map(|m| m.len()).collect();
-    let mut group_open: Vec<bool> = vec![false; n_groups];
-    let mut parked: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+    let mut group_pending = std::mem::take(&mut scratch.group_pending);
+    group_pending.clear();
+    group_pending.extend(members.iter().map(|m| m.len()));
+    let mut group_open = std::mem::take(&mut scratch.group_open);
+    group_open.clear();
+    group_open.resize(n_groups, false);
+    let mut parked = std::mem::take(&mut scratch.parked);
+    reset_nested(&mut parked, n_groups);
 
     // Live-entry sequence numbers: the order tasks entered the ready
     // ("live") set. Arrival processing, FIFO slot assignment and
     // same-instant completion handling all follow this order, which is
     // exactly the old engine's linear live-vector scan order.
-    let mut seq: Vec<u64> = vec![0; n];
+    let mut seq = std::mem::take(&mut scratch.seq);
+    seq.clear();
+    seq.resize(n, 0);
     let mut next_seq: u64 = 0;
     // Worklist of tasks whose dependencies are met, awaiting
     // classification (gate check → gate heap; barrier check → parked;
     // otherwise enqueue or instant-complete), drained in seq order.
-    let mut arrivals: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut arrivals = std::mem::take(&mut scratch.arrivals);
+    arrivals.clear();
     // Gate min-heap: (gate time bits, live seq, task).
-    let mut gates: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+    let mut gates = std::mem::take(&mut scratch.gates);
+    gates.clear();
 
-    let mut rq_cpu: Box<dyn ReadyQueue> = match cfg.queue {
-        QueueKind::Incremental => Box::new(BucketQueue::with_capacity(n)),
-        QueueKind::FullResort => Box::new(ResortQueue::with_capacity(n)),
+    // both queue kinds stay warm in the scratch; `cfg.queue` picks the
+    // pair this run dispatches through
+    let mut q_cpu_bucket = std::mem::take(&mut scratch.rq_cpu_bucket);
+    let mut q_net_bucket = std::mem::take(&mut scratch.rq_net_bucket);
+    let mut q_cpu_resort = std::mem::take(&mut scratch.rq_cpu_resort);
+    let mut q_net_resort = std::mem::take(&mut scratch.rq_net_resort);
+    q_cpu_bucket.reset(n);
+    q_net_bucket.reset(n);
+    q_cpu_resort.reset(n);
+    q_net_resort.reset(n);
+    let (rq_cpu, rq_net): (&mut dyn ReadyQueue, &mut dyn ReadyQueue) = match cfg.queue {
+        QueueKind::Incremental => (&mut q_cpu_bucket, &mut q_net_bucket),
+        QueueKind::FullResort => (&mut q_cpu_resort, &mut q_net_resort),
     };
-    let mut rq_net: Box<dyn ReadyQueue> = match cfg.queue {
-        QueueKind::Incremental => Box::new(BucketQueue::with_capacity(n)),
-        QueueKind::FullResort => Box::new(ResortQueue::with_capacity(n)),
-    };
-    let mut queued = vec![false; n];
+    let mut queued = std::mem::take(&mut scratch.queued);
+    queued.clear();
+    queued.resize(n, false);
 
     // Contention components (AllocKind::Components): incremental
     // partition of the queued tasks over the flat arena. Coflow groups
@@ -692,15 +858,28 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     // engine tracks each task's current queue key so a dirty component
     // can replay the queues' level partition locally.
     let comps_on = cfg.alloc == AllocKind::Components;
-    let mut comps = CompSet::new(n, n_res + n_groups);
-    let virt: Vec<Option<usize>> = (0..n).map(|t| group_of[t].map(|gi| n_res + gi)).collect();
-    let mut key_of: Vec<PrioKey> = vec![PrioKey::LEVEL; n];
+    let mut comps = std::mem::take(&mut scratch.comps);
+    comps.reset(n, n_res + n_groups);
+    let mut virt = std::mem::take(&mut scratch.virt);
+    virt.clear();
+    virt.extend((0..n).map(|t| group_of[t].map(|gi| n_res + gi)));
+    let mut key_of = std::mem::take(&mut scratch.key_of);
+    key_of.clear();
+    key_of.resize(n, PrioKey::LEVEL);
     // per-component memoized allocation, indexed by component slot
-    let mut comp_rated: Vec<Vec<(usize, f64)>> = Vec::new();
-    let mut comp_sorted: Vec<usize> = Vec::new();
-    let mut new_comps: Vec<usize> = Vec::new();
-    let mut live_scratch: Vec<usize> = Vec::new();
-    let mut ascr = AllocScratch::default();
+    // (stale inner content is overwritten by `fill_component` before a
+    // slot can be read; clearing keeps dumps comprehensible)
+    let mut comp_rated = std::mem::take(&mut scratch.comp_rated);
+    for v in comp_rated.iter_mut() {
+        v.clear();
+    }
+    let mut comp_sorted = std::mem::take(&mut scratch.comp_sorted);
+    comp_sorted.clear();
+    let mut new_comps = std::mem::take(&mut scratch.new_comps);
+    new_comps.clear();
+    let mut live_scratch = std::mem::take(&mut scratch.live_scratch);
+    live_scratch.clear();
+    let mut ascr = std::mem::take(&mut scratch.ascr);
 
     // Anchored time advance (HorizonKind::Anchored): a rated task's
     // `remaining` holds its bytes *as of* `anchor_t`, its current rate
@@ -712,16 +891,30 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     // carry exact bytes (rate 0 ⇒ nothing to integrate), so
     // `remaining[t]` is always exact for tasks outside the heap.
     let anchored = cfg.horizon == HorizonKind::Anchored;
-    let mut rate_of: Vec<f64> = vec![0.0; n];
-    let mut anchor_t: Vec<f64> = vec![0.0; n];
-    let mut fins = FinHeap::with_capacity(n);
+    let mut rate_of = std::mem::take(&mut scratch.rate_of);
+    rate_of.clear();
+    rate_of.resize(n, 0.0);
+    let mut anchor_t = std::mem::take(&mut scratch.anchor_t);
+    anchor_t.clear();
+    anchor_t.resize(n, 0.0);
+    let mut fins = std::mem::take(&mut scratch.fins);
+    fins.reset(n);
     // tasks whose materialized bytes crossed the completion epsilon
     // while unrated — re-armed with an immediate finish after refill so
     // they cannot strand in a quiescent component (see step 3)
-    let mut near_done: Vec<usize> = Vec::new();
+    let mut near_done = std::mem::take(&mut scratch.near_done);
+    near_done.clear();
     // scratch for the per-component SEBF key refresh
-    let mut grp_seen = vec![false; n_groups];
-    let mut grp_list: Vec<usize> = Vec::new();
+    let mut grp_seen = std::mem::take(&mut scratch.grp_seen);
+    grp_seen.clear();
+    grp_seen.resize(n_groups, false);
+    let mut grp_list = std::mem::take(&mut scratch.grp_list);
+    grp_list.clear();
+    // staging for the batch `FinHeap` rebuild (dominant dirty component)
+    let mut heap_removed = std::mem::take(&mut scratch.heap_removed);
+    heap_removed.clear();
+    let mut heap_inserts = std::mem::take(&mut scratch.heap_inserts);
+    heap_inserts.clear();
 
     // A task's dependencies are met: record its live order, hand it to
     // the arrival worklist, and update its coflow barrier.
@@ -755,22 +948,43 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
     // allocation scratch; under component-wise allocation `caps` is
     // *persistent* residual state (a component's slice is reset to full
     // capacity exactly when that component refills)
-    let mut users_scratch = vec![0.0; n_res];
-    let mut caps = caps0.clone();
-    let mut sub_res: Vec<TaskRes> = Vec::with_capacity(64);
-    let mut sub_idx: Vec<usize> = Vec::with_capacity(64);
-    let mut sub_rates: Vec<f64> = Vec::with_capacity(64);
-    let mut rated: Vec<(usize, f64)> = Vec::new();
-    let mut completed: Vec<usize> = Vec::new();
-    let mut sat_mark = vec![false; n_res];
-    let mut load = vec![0.0; n_res];
-    let mut load_touched = vec![false; n_res];
-    let mut touched: Vec<usize> = Vec::new();
-    let mut grp_scratch: Vec<usize> = Vec::new();
+    let mut users_scratch = std::mem::take(&mut scratch.users);
+    users_scratch.clear();
+    users_scratch.resize(n_res, 0.0);
+    let mut caps = std::mem::take(&mut scratch.caps);
+    caps.clear();
+    caps.extend_from_slice(caps0);
+    let mut sub_res = std::mem::take(&mut scratch.sub_res);
+    sub_res.clear();
+    let mut sub_idx = std::mem::take(&mut scratch.sub_idx);
+    sub_idx.clear();
+    let mut sub_rates = std::mem::take(&mut scratch.sub_rates);
+    sub_rates.clear();
+    let mut rated = std::mem::take(&mut scratch.rated);
+    rated.clear();
+    let mut completed = std::mem::take(&mut scratch.completed);
+    completed.clear();
+    let mut sat_mark = std::mem::take(&mut scratch.sat_mark);
+    sat_mark.clear();
+    sat_mark.resize(n_res, false);
+    let mut load = std::mem::take(&mut scratch.load);
+    load.clear();
+    load.resize(n_res, 0.0);
+    let mut load_touched = std::mem::take(&mut scratch.load_touched);
+    load_touched.clear();
+    load_touched.resize(n_res, false);
+    let mut touched = std::mem::take(&mut scratch.touched);
+    touched.clear();
+    let mut grp_scratch = std::mem::take(&mut scratch.grp_scratch);
+    grp_scratch.clear();
     // SEBF key invalidation worklists
-    let mut dirty_groups: Vec<usize> = Vec::new();
-    let mut group_dirty = vec![false; n_groups];
-    let mut dirty_singles: Vec<usize> = Vec::new();
+    let mut dirty_groups = std::mem::take(&mut scratch.dirty_groups);
+    dirty_groups.clear();
+    let mut group_dirty = std::mem::take(&mut scratch.group_dirty);
+    group_dirty.clear();
+    group_dirty.resize(n_groups, false);
+    let mut dirty_singles = std::mem::take(&mut scratch.dirty_singles);
+    dirty_singles.clear();
 
     while n_done < n {
         events += 1;
@@ -871,7 +1085,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                         // exactly the per-event active-list order the old
                         // stable sort fell back to on equal bounds
                         None => PrioKey::from_bound_asc(
-                            sebf_bound_single(t, &remaining, &task_res, &caps0),
+                            sebf_bound_single(t, &remaining, task_res, caps0),
                             n_groups as u64 + seq[t],
                         ),
                     },
@@ -950,10 +1164,10 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                 let bnd = sebf_bound_group(
                     &members[gi],
                     &queued,
-                    &is_flow_v,
+                    is_flow_v,
                     &remaining,
-                    &task_res,
-                    &caps0,
+                    task_res,
+                    caps0,
                     &mut load,
                     &mut load_touched,
                     &mut touched,
@@ -972,7 +1186,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             dirty_groups.clear();
             for &t in dirty_singles.iter() {
                 if queued[t] {
-                    let bnd = sebf_bound_single(t, &remaining, &task_res, &caps0);
+                    let bnd = sebf_bound_single(t, &remaining, task_res, caps0);
                     let key = PrioKey::from_bound_asc(bnd, n_groups as u64 + seq[t]);
                     key_of[t] = key;
                     rq_net.update_key(t, key);
@@ -995,7 +1209,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                 continue;
             }
             return Err(deadlock_report(
-                dag, &caps0, &task_res, &done, &queued, &indeg, &group_of, &group_open, now,
+                dag, caps0, task_res, &done, &queued, &indeg, &group_of, &group_open, now,
                 n - n_done,
             ));
         }
@@ -1008,6 +1222,15 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             // memoized rates (immutable between the events that touch
             // it — the invariant `docs/ARCHITECTURE.md` documents).
             while let Some(c) = comps.pop_dirty() {
+                // Batch `FinHeap` rebuild: when this dirty component
+                // covers more than half of the heap's rated tasks, the
+                // per-task `remove`/`push` calls (n·O(log n)) lose to
+                // compacting + re-heapifying wholesale (O(n)), so the
+                // removals and re-inserts are staged and applied in one
+                // `apply_batch` at the end of this iteration. Pop/peek
+                // order is a total (fin, task) order either way — the
+                // two paths are bit-identical.
+                let batch = anchored && 2 * comps.members(c).len() > fins.len();
                 // anchored: a dirty component's members re-anchor at
                 // `now` — bytes are materialized exactly when the refill
                 // is about to read them, and the stale finish predictions
@@ -1021,7 +1244,13 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                         }
                         // unconditional: a zero-rate member may still
                         // hold a near-done re-arm entry (below)
-                        fins.remove(t);
+                        if batch {
+                            if fins.contains(t) {
+                                heap_removed.push(t);
+                            }
+                        } else {
+                            fins.remove(t);
+                        }
                         anchor_t[t] = now;
                         if remaining[t] <= EPS {
                             near_done.push(t);
@@ -1036,7 +1265,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                     }
                 }
                 new_comps.clear();
-                comps.rebuild(c, &task_res, &virt, &mut new_comps);
+                comps.rebuild(c, task_res, &virt, &mut new_comps);
                 if comp_rated.len() < comps.slot_bound() {
                     comp_rated.resize_with(comps.slot_bound(), Vec::new);
                 }
@@ -1063,7 +1292,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                                 }
                                 None => {
                                     let bnd =
-                                        sebf_bound_single(t, &remaining, &task_res, &caps0);
+                                        sebf_bound_single(t, &remaining, task_res, caps0);
                                     let key = PrioKey::from_bound_asc(
                                         bnd,
                                         n_groups as u64 + seq[t],
@@ -1079,10 +1308,10 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                             let bnd = sebf_bound_group(
                                 &members[gi],
                                 &queued,
-                                &is_flow_v,
+                                is_flow_v,
                                 &remaining,
-                                &task_res,
-                                &caps0,
+                                task_res,
+                                caps0,
                                 &mut load,
                                 &mut load_touched,
                                 &mut touched,
@@ -1101,8 +1330,8 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                         comps.members(nc),
                         &key_of,
                         coflow_on,
-                        &is_flow_v,
-                        &task_res,
+                        is_flow_v,
+                        task_res,
                         &remaining,
                         &mut caps,
                         &mut users_scratch,
@@ -1131,15 +1360,24 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                             anchor_t[t] = now;
                             let fin =
                                 if remaining[t] <= EPS { now } else { now + remaining[t] / r };
-                            fins.push(t, fin);
+                            if batch {
+                                heap_inserts.push((t, fin));
+                            } else {
+                                fins.push(t, fin);
+                            }
                         }
                     }
+                }
+                if batch {
+                    fins.apply_batch(&heap_removed, &heap_inserts);
+                    heap_removed.clear();
+                    heap_inserts.clear();
                 }
             }
         } else {
             // Whole-set oracle: reprice everything, walking priority
             // levels high → low on residual capacity.
-            caps.copy_from_slice(&caps0);
+            caps.copy_from_slice(caps0);
             rated.clear();
             for m in sat_mark.iter_mut() {
                 *m = false;
@@ -1151,7 +1389,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                 rq_cpu.for_each_level(&mut |_key, level| {
                     alloc_level_maxmin(
                         level,
-                        &task_res,
+                        task_res,
                         &mut caps,
                         &mut users_scratch,
                         &mut ascr,
@@ -1189,7 +1427,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                         madd_level(
                             &grp_scratch,
                             &remaining,
-                            &task_res,
+                            task_res,
                             &mut caps,
                             &mut load,
                             &mut load_touched,
@@ -1211,7 +1449,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
                     rq_net.for_each_level(&mut |_key, level| {
                         alloc_level_maxmin(
                             level,
-                            &task_res,
+                            task_res,
                             &mut caps,
                             &mut users_scratch,
                             &mut ascr,
@@ -1274,7 +1512,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             }
             if !t_next.is_finite() {
                 return Err(deadlock_report(
-                    dag, &caps0, &task_res, &done, &queued, &indeg, &group_of, &group_open,
+                    dag, caps0, task_res, &done, &queued, &indeg, &group_of, &group_open,
                     now, n - n_done,
                 ));
             }
@@ -1329,7 +1567,7 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
             }
             if !dt.is_finite() || dt <= 0.0 {
                 return Err(deadlock_report(
-                    dag, &caps0, &task_res, &done, &queued, &indeg, &group_of, &group_open,
+                    dag, caps0, task_res, &done, &queued, &indeg, &group_of, &group_open,
                     now, n - n_done,
                 ));
             }
@@ -1438,6 +1676,57 @@ pub fn simulate(dag: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> Result<SimR
         let e = orig_finish.entry(t.orig).or_insert(f64::NEG_INFINITY);
         *e = e.max(trace[i].finish);
     }
+
+    // hand every buffer back so the next run on this scratch is warm
+    scratch.rq_cpu_bucket = q_cpu_bucket;
+    scratch.rq_net_bucket = q_net_bucket;
+    scratch.rq_cpu_resort = q_cpu_resort;
+    scratch.rq_net_resort = q_net_resort;
+    scratch.comps = comps;
+    scratch.fins = fins;
+    scratch.ascr = ascr;
+    scratch.remaining = remaining;
+    scratch.indeg = indeg;
+    scratch.done = done;
+    scratch.started = started;
+    scratch.seq = seq;
+    scratch.queued = queued;
+    scratch.key_of = key_of;
+    scratch.rate_of = rate_of;
+    scratch.anchor_t = anchor_t;
+    scratch.group_of = group_of;
+    scratch.virt = virt;
+    scratch.caps = caps;
+    scratch.users = users_scratch;
+    scratch.sat_mark = sat_mark;
+    scratch.load = load;
+    scratch.load_touched = load_touched;
+    scratch.members = members;
+    scratch.group_pending = group_pending;
+    scratch.group_open = group_open;
+    scratch.parked = parked;
+    scratch.group_dirty = group_dirty;
+    scratch.grp_seen = grp_seen;
+    scratch.arrivals = arrivals;
+    scratch.gates = gates;
+    scratch.fifo_prio_orig = fifo_prio_orig;
+    scratch.comp_rated = comp_rated;
+    scratch.comp_sorted = comp_sorted;
+    scratch.new_comps = new_comps;
+    scratch.live_scratch = live_scratch;
+    scratch.near_done = near_done;
+    scratch.grp_list = grp_list;
+    scratch.sub_res = sub_res;
+    scratch.sub_idx = sub_idx;
+    scratch.sub_rates = sub_rates;
+    scratch.rated = rated;
+    scratch.completed = completed;
+    scratch.touched = touched;
+    scratch.grp_scratch = grp_scratch;
+    scratch.dirty_groups = dirty_groups;
+    scratch.dirty_singles = dirty_singles;
+    scratch.heap_removed = heap_removed;
+    scratch.heap_inserts = heap_inserts;
 
     Ok(SimResult { makespan: now, trace, orig_start, orig_finish, events })
 }
@@ -2072,6 +2361,80 @@ mod tests {
         assert_eq!(cfg.horizon, HorizonKind::Anchored);
         assert!(cfg.apply_json(&Json::parse(r#"{"horizon":"lazy"}"#).unwrap()).is_err());
         assert!(cfg.apply_json(&Json::parse(r#"{"quue":"incremental"}"#).unwrap()).is_err());
+    }
+
+    /// One scratch, many runs: every run must be bit-identical to a
+    /// cold run whatever ran on the scratch before — the invariant
+    /// batched plan evaluation (`EvalContext`, `whatif::explore`)
+    /// relies on. Crosses two structurally different DAGs (different
+    /// sizes, coflow groups vs none), all four policies and both
+    /// orders, over the default engine configuration.
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let mut d1 = SimDag::default();
+        let a = d1.push({ let mut t = task(SimKind::Compute { host: 0 }, 1.5); t.orig = 1; t });
+        let f1 = d1.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 2.0);
+            t.orig = 2;
+            t.priority = 5;
+            t
+        });
+        let f2 = d1.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.priority = 1;
+            t.gate = 0.5;
+            t
+        });
+        let b = d1.push({ let mut t = task(SimKind::Compute { host: 1 }, 1.0); t.orig = 4; t });
+        d1.dep(a, f1);
+        d1.dep(f1, b);
+        let _ = f2;
+        let mut d2 = SimDag::default();
+        let c = d2.push({ let mut t = task(SimKind::Compute { host: 3 }, 2.5); t.orig = 1; t });
+        let fa = d2.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 3.0);
+            t.orig = 2;
+            t.coflow = Some(7);
+            t
+        });
+        let fb = d2.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 2 }, 1.0);
+            t.orig = 3;
+            t.coflow = Some(9);
+            t
+        });
+        d2.dep(c, fb);
+        let _ = fa;
+        let cluster = Cluster::uniform(4);
+        let policies = [Policy::fair(), Policy::priority(), Policy::fifo(), Policy::coflow()];
+        let mut scratch = SimScratch::default();
+        for &(da, db) in &[(&d1, &d2), (&d2, &d1)] {
+            for pa in policies {
+                for pb in policies {
+                    let cfg_a = SimConfig { policy: pa, ..Default::default() };
+                    let cfg_b = SimConfig { policy: pb, ..Default::default() };
+                    let cold_a = simulate(da, &cluster, &cfg_a).unwrap();
+                    let cold_b = simulate(db, &cluster, &cfg_b).unwrap();
+                    let warm_a = simulate_in(da, &cluster, &cfg_a, &mut scratch).unwrap();
+                    let warm_b = simulate_in(db, &cluster, &cfg_b, &mut scratch).unwrap();
+                    for (cold, warm) in [(&cold_a, &warm_a), (&cold_b, &warm_b)] {
+                        assert_eq!(cold.events, warm.events);
+                        assert_eq!(cold.makespan.to_bits(), warm.makespan.to_bits());
+                        for i in 0..cold.trace.len() {
+                            assert_eq!(
+                                cold.trace[i].start.to_bits(),
+                                warm.trace[i].start.to_bits()
+                            );
+                            assert_eq!(
+                                cold.trace[i].finish.to_bits(),
+                                warm.trace[i].finish.to_bits()
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Anchored + components: a disjoint quiescent flow is never

@@ -34,6 +34,33 @@ fn kind_of(dag: &MXDag, t: TaskId) -> SimKind {
     }
 }
 
+/// Apply the *per-task* annotation fields — priority, start gate,
+/// coflow tag — to an already-expanded `SimDag`, in place. These fields
+/// are plain value rewrites: the chunk structure depends solely on the
+/// pipelined set, so [`expand`] calls this once on a fresh expansion
+/// and [`crate::sched::EvalContext`] re-calls it on a *cached*
+/// expansion when scoring another plan with the same pipelined set —
+/// one definition of the field semantics for both paths. Gates bind to
+/// a task's first chunk only (later chunks are released by the chunk
+/// chain); priorities and coflow tags cover every chunk.
+pub fn apply_annotations(sim: &mut SimDag, ann: &Annotations) {
+    let mut coflow_of: BTreeMap<TaskId, usize> = BTreeMap::new();
+    for (g, members) in ann.coflows.iter().enumerate() {
+        for &m in members {
+            coflow_of.insert(m, g);
+        }
+    }
+    for task in sim.tasks.iter_mut() {
+        task.priority = ann.priorities.get(&task.orig).copied().unwrap_or(0);
+        task.gate = if task.chunk.0 == 0 {
+            ann.gates.get(&task.orig).copied().unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        task.coflow = coflow_of.get(&task.orig).copied();
+    }
+}
+
 /// Expand `dag` into a physical SimDag under `ann`.
 pub fn expand(dag: &MXDag, ann: &Annotations) -> SimDag {
     let n = dag.len();
@@ -46,14 +73,13 @@ pub fn expand(dag: &MXDag, ann: &Annotations) -> SimDag {
         }
         v
     };
-    let mut coflow_of: BTreeMap<TaskId, usize> = BTreeMap::new();
-    for (g, members) in ann.coflows.iter().enumerate() {
+    #[cfg(debug_assertions)]
+    for members in ann.coflows.iter() {
         for &m in members {
             debug_assert!(
                 !piped[m],
                 "coflow semantics are defined on unpipelined flows"
             );
-            coflow_of.insert(m, g);
         }
     }
 
@@ -64,22 +90,21 @@ pub fn expand(dag: &MXDag, ann: &Annotations) -> SimDag {
     // Create chunks in *task-id* (insertion) order — not topo order — so
     // that FIFO tie-breaking between same-instant-ready tasks follows the
     // order the application issued them (the NIC send-queue semantics the
-    // Fig. 3 baseline assumes).
+    // Fig. 3 baseline assumes). Per-task annotation fields are applied
+    // by `apply_annotations` below.
     for t in 0..n {
         let task = dag.task(t);
         let k = if piped[t] { task.chunks() } else { 1 };
         let chunk_size = if k == 0 { 0.0 } else { task.size / k as f64 };
-        let prio = ann.priorities.get(&t).copied().unwrap_or(0);
-        let gate = ann.gates.get(&t).copied().unwrap_or(0.0);
         for j in 0..k {
             let id = out.push(SimTask {
                 orig: t,
                 chunk: (j, k),
                 kind: kind_of(dag, t),
                 size: chunk_size,
-                priority: prio,
-                gate: if j == 0 { gate } else { 0.0 },
-                coflow: coflow_of.get(&t).copied(),
+                priority: 0,
+                gate: 0.0,
+                coflow: None,
             });
             chunks[t].push(id);
             if j > 0 {
@@ -88,6 +113,7 @@ pub fn expand(dag: &MXDag, ann: &Annotations) -> SimDag {
             }
         }
     }
+    apply_annotations(&mut out, ann);
 
     // cross edges
     for u in 0..n {
@@ -194,6 +220,27 @@ mod tests {
         assert_eq!(sim.tasks[a0].gate, 2.0);
         let r = simulate(&sim, &Cluster::uniform(2), &SimConfig::default()).unwrap();
         assert!(r.start_of(a) >= 2.0 - 1e-9);
+    }
+
+    /// The cached-expansion path: re-applying different field
+    /// annotations to an existing expansion must equal a fresh
+    /// expansion with those annotations (same structure, new fields).
+    #[test]
+    fn apply_annotations_rewrites_cached_structure() {
+        let (g, a, f) = two_stage(4.0, 1.0, 4.0, 1.0);
+        let ann1 = Annotations { pipelined: vec![a, f], ..Default::default() };
+        let mut sim = expand(&g, &ann1);
+        let mut ann2 = ann1.clone();
+        ann2.priorities.insert(f, 7);
+        ann2.gates.insert(a, 2.0);
+        apply_annotations(&mut sim, &ann2);
+        let fresh = expand(&g, &ann2);
+        assert_eq!(sim.len(), fresh.len());
+        for (x, y) in sim.tasks.iter().zip(fresh.tasks.iter()) {
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.gate.to_bits(), y.gate.to_bits());
+            assert_eq!(x.coflow, y.coflow);
+        }
     }
 
     #[test]

@@ -121,6 +121,16 @@ impl FinHeap {
         self.pos[task] != ABSENT
     }
 
+    /// Empty the heap and re-index over task ids `0..n` — the
+    /// between-runs reset used by the engine's reusable scratch
+    /// ([`SimScratch`](crate::sim::SimScratch)). Buffer capacity is
+    /// kept, so a warm scratch never reallocates here.
+    pub fn reset(&mut self, n: usize) {
+        self.heap.clear();
+        self.pos.clear();
+        self.pos.resize(n, ABSENT);
+    }
+
     /// The earliest `(finish, task)` entry, if any — the event horizon.
     pub fn peek(&self) -> Option<(f64, usize)> {
         self.heap.first().copied()
@@ -172,6 +182,40 @@ impl FinHeap {
         let top = *self.heap.first()?;
         self.remove(top.1);
         Some(top)
+    }
+
+    /// Apply a batch of removals and (re)insertions in one pass:
+    /// stale entries are compacted out, the new entries appended, and
+    /// the array re-heapified bottom-up — `O(n + k)` against the
+    /// `k · O(log n)` of individual [`remove`](FinHeap::remove) /
+    /// [`push`](FinHeap::push) calls. The engine switches to this when
+    /// a dirty component covers more than half of the heap's rated
+    /// tasks. Heap *layout* may differ from the incremental path, but
+    /// the observable order — [`peek`](FinHeap::peek) / [`pop`](FinHeap::pop)
+    /// by the total `(finish, task)` order — is identical, so
+    /// simulations are bit-for-bit the same whichever path ran.
+    ///
+    /// Tasks listed in `remove` that are absent are ignored; a task may
+    /// appear in both lists (removed, then re-inserted at a new finish)
+    /// but must not appear twice in `insert`.
+    pub fn apply_batch(&mut self, remove: &[usize], insert: &[(usize, f64)]) {
+        for &t in remove {
+            self.pos[t] = ABSENT;
+        }
+        self.heap.retain(|&(_, t)| self.pos[t] != ABSENT);
+        for &(t, fin) in insert {
+            debug_assert!(self.pos[t] == ABSENT, "task {t} already in the finish heap");
+            self.pos[t] = self.heap.len(); // provisional: marks presence, fixed below
+            self.heap.push((fin, t));
+        }
+        let len = self.heap.len();
+        for i in (0..len / 2).rev() {
+            self.sift_down(i);
+        }
+        for i in 0..len {
+            let (_, t) = self.heap[i];
+            self.pos[t] = i;
+        }
     }
 
     #[inline]
@@ -277,10 +321,57 @@ mod tests {
         assert_eq!(order, vec![0, 1, 3, 4]);
     }
 
+    /// `apply_batch` must be observably identical to the equivalent
+    /// sequence of individual `remove`/`push` calls: same membership,
+    /// same drain order — whatever the internal layout.
+    #[test]
+    fn apply_batch_matches_incremental_ops() {
+        let n = 12;
+        let mut inc = FinHeap::with_capacity(n);
+        let mut bat = FinHeap::with_capacity(n);
+        for t in 0..8 {
+            let fin = (t as f64) * 0.5 + 1.0;
+            inc.push(t, fin);
+            bat.push(t, fin);
+        }
+        // remove 0..5 (plus an absent task, ignored), re-insert 1 and 3
+        // at new finishes, add two fresh tasks
+        let remove = [0usize, 1, 2, 3, 4, 10];
+        let insert = [(1usize, 9.0), (3, 0.25), (8, 2.0), (9, 2.0)];
+        for &t in &remove {
+            inc.remove(t);
+        }
+        for &(t, fin) in &insert {
+            inc.push(t, fin);
+        }
+        bat.apply_batch(&remove, &insert);
+        assert_eq!(inc.len(), bat.len());
+        for t in 0..n {
+            assert_eq!(inc.contains(t), bat.contains(t), "task {t}");
+        }
+        let a: Vec<(f64, usize)> = std::iter::from_fn(|| inc.pop()).collect();
+        let b: Vec<(f64, usize)> = std::iter::from_fn(|| bat.pop()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reset_empties_and_reindexes() {
+        let mut h = FinHeap::with_capacity(4);
+        h.push(1, 2.0);
+        h.push(3, 1.0);
+        h.reset(6);
+        assert!(h.is_empty());
+        for t in 0..6 {
+            assert!(!h.contains(t));
+        }
+        h.push(5, 0.5); // beyond the old index range
+        assert_eq!(h.pop(), Some((0.5, 5)));
+    }
+
     /// The standalone property oracle: under a long random
-    /// push/re-key/remove/pop sequence the heap agrees with a naive
-    /// scan over a plain vector — same membership, same minimum at
-    /// every step, same final drain order.
+    /// push/re-key/remove/pop/batch sequence the heap agrees with a
+    /// naive scan over a plain vector — same membership, same minimum
+    /// at every step, same final drain order.
     #[test]
     fn prop_heap_matches_naive_scan_under_random_ops() {
         let mut rng = Rng::new(0xF1A7);
@@ -305,7 +396,7 @@ mod tests {
             let t = rng.below(n);
             // coarse keys force heavy finish-time collisions
             let fin = (rng.below(16) as f64) * 0.25;
-            match rng.below(5) {
+            match rng.below(6) {
                 0 | 1 => {
                     if naive[t].is_nan() {
                         h.push(t, fin);
@@ -319,6 +410,24 @@ mod tests {
                 3 => {
                     h.remove(t);
                     naive[t] = f64::NAN;
+                }
+                5 => {
+                    // batch: remove a random prefix of ids, re-insert a
+                    // disjoint batch at fresh finishes
+                    let k = rng.below(n / 2) + 1;
+                    let remove: Vec<usize> = (0..k).collect();
+                    let mut insert = Vec::new();
+                    for t in 0..k {
+                        naive[t] = f64::NAN;
+                    }
+                    for t in k..n {
+                        if naive[t].is_nan() && rng.bool(0.25) {
+                            let f = (rng.below(16) as f64) * 0.25;
+                            insert.push((t, f));
+                            naive[t] = f;
+                        }
+                    }
+                    h.apply_batch(&remove, &insert);
                 }
                 _ => {
                     let got = h.pop();

@@ -18,11 +18,14 @@ pub mod ready;
 pub mod spec;
 pub mod topology;
 
-pub use alloc::AllocScratch;
+pub use alloc::{AllocScratch, TaskRes};
 pub use components::{AllocKind, CompSet};
-pub use engine::{simulate, QueueKind, SimConfig, SimError, SimResult, StuckReason};
+pub use engine::{
+    simulate, simulate_in, simulate_with_footprints, QueueKind, SimConfig, SimError, SimResult,
+    SimScratch, StuckReason,
+};
 pub use horizon::{within_tolerance, FinHeap, HorizonKind, TOLERANCE_REL};
-pub use expand::{expand, Annotations};
+pub use expand::{apply_annotations, expand, Annotations};
 pub use ready::{BucketQueue, Keying, PrioKey, QueueDiscipline, ReadyQueue, ResortQueue};
 pub use spec::{Cluster, CpuPolicy, Host, NetPolicy, Policy, SimDag, SimKind, SimTask};
 pub use topology::{PathSelect, Topology};

@@ -212,6 +212,10 @@ pub struct BucketQueue {
     pos: Vec<usize>,
     present: Vec<bool>,
     len: usize,
+    /// Retired bucket buffers, recycled when a key (re)appears — a warm
+    /// [`reset`](BucketQueue::reset) hands buffers back here instead of
+    /// dropping them, so steady-state reuse allocates only B-tree nodes.
+    spare: Vec<Vec<usize>>,
 }
 
 const ABSENT: usize = usize::MAX;
@@ -225,14 +229,39 @@ impl BucketQueue {
             pos: vec![ABSENT; n],
             present: vec![false; n],
             len: 0,
+            spare: Vec::new(),
         }
+    }
+
+    /// Empty the queue and re-index over task ids `0..n` — the
+    /// between-runs reset used by the engine's reusable scratch
+    /// ([`SimScratch`](crate::sim::SimScratch)). Per-task index
+    /// capacity is kept and bucket buffers are recycled to the spare
+    /// pool, so a warm reset reallocates nothing but B-tree nodes.
+    pub fn reset(&mut self, n: usize) {
+        for (_, mut v) in std::mem::take(&mut self.buckets) {
+            v.clear();
+            self.spare.push(v);
+        }
+        self.key_of.clear();
+        self.key_of.resize(n, PrioKey::LEVEL);
+        self.pos.clear();
+        self.pos.resize(n, ABSENT);
+        self.present.clear();
+        self.present.resize(n, false);
+        self.len = 0;
     }
 }
 
 impl ReadyQueue for BucketQueue {
     fn push(&mut self, task: usize, key: PrioKey) {
         debug_assert!(!self.present[task], "task {task} already queued");
-        let bucket = self.buckets.entry(Reverse(key)).or_default();
+        let bucket = match self.buckets.entry(Reverse(key)) {
+            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(self.spare.pop().unwrap_or_default())
+            }
+        };
         self.pos[task] = bucket.len();
         bucket.push(task);
         self.key_of[task] = key;
@@ -253,7 +282,9 @@ impl ReadyQueue for BucketQueue {
             self.pos[moved] = i;
         }
         if bucket.is_empty() {
-            self.buckets.remove(&Reverse(key));
+            if let Some(v) = self.buckets.remove(&Reverse(key)) {
+                self.spare.push(v);
+            }
         }
         self.pos[task] = ABSENT;
         self.present[task] = false;
@@ -304,6 +335,16 @@ impl ResortQueue {
             pos: vec![ABSENT; n],
             scratch: Vec::new(),
         }
+    }
+
+    /// Empty the queue and re-index over task ids `0..n` (see
+    /// [`BucketQueue::reset`]).
+    pub fn reset(&mut self, n: usize) {
+        self.items.clear();
+        self.key_of.clear();
+        self.key_of.resize(n, PrioKey::LEVEL);
+        self.pos.clear();
+        self.pos.resize(n, ABSENT);
     }
 }
 

@@ -1,11 +1,12 @@
 //! Substrates this repo builds in-tree so the default `cargo build`
 //! needs **zero external crates** (see DESIGN.md §5): JSON, PRNG, CLI
-//! parsing, micro-benchmarking, property testing, and an
-//! `anyhow`-shaped error type.
+//! parsing, micro-benchmarking, property testing, deterministic
+//! scoped-thread parallelism, and an `anyhow`-shaped error type.
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod par;
 pub mod propcheck;
 pub mod rng;

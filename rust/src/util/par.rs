@@ -1,0 +1,125 @@
+//! Zero-dependency deterministic parallel map over `std::thread::scope`.
+//!
+//! The batched plan-space engine fans what-if evaluations across
+//! workers ([`crate::whatif::explore`], MxScheduler's move batches).
+//! Determinism contract: results are returned **in item order**, and as
+//! long as `f` is a pure function of `(index, item)` — per-worker state
+//! is a cache, never an input — the output is bit-identical for every
+//! `threads` value, including the fully inline `threads == 1` path.
+//! Work is dealt round-robin (worker `w` takes items `w, w+W, …`), so
+//! the assignment itself is deterministic too.
+
+/// Apply `f` to every item with per-worker state built by `init`
+/// (e.g. an evaluation context), on `threads` workers (`<= 1` runs
+/// inline on the calling thread, spawning nothing). States are built
+/// fresh per call; loops that fan out repeatedly over the same workers
+/// keep their states warm across calls via [`par_map_with`].
+///
+/// Panics in `f` propagate (the join unwraps), so a poisoned sweep
+/// fails loudly instead of returning partial results.
+pub fn par_map_indexed<T, R, S, I, F>(items: &[T], threads: usize, mut init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    I: FnMut() -> S,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let workers = threads.max(1).min(items.len().max(1));
+    let mut states: Vec<S> = (0..workers).map(|_| init()).collect();
+    par_map_with(items, &mut states, f)
+}
+
+/// As [`par_map_indexed`], but over caller-owned worker states that
+/// survive the call — round-based callers (MxScheduler's move loop)
+/// build their evaluation contexts once and stay warm across every
+/// round instead of paying a cold context per round. Worker count is
+/// `min(states.len(), items.len())`; a single state (or single item)
+/// runs inline on the calling thread, spawning nothing. The
+/// determinism contract is unchanged: item-order results, round-robin
+/// dealing, so for a pure `f` the output is identical for any state
+/// count.
+pub fn par_map_with<T, R, S, F>(items: &[T], states: &mut [S], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    assert!(!states.is_empty(), "need at least one worker state");
+    let workers = states.len().min(items.len().max(1));
+    if workers <= 1 {
+        let state = &mut states[0];
+        return items.iter().enumerate().map(|(i, it)| f(state, i, it)).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = states[..workers]
+            .iter_mut()
+            .enumerate()
+            .map(|(w, state)| {
+                let f = &f;
+                scope.spawn(move || {
+                    let mut res: Vec<(usize, R)> = Vec::new();
+                    let mut i = w;
+                    while i < items.len() {
+                        res.push((i, f(state, i, &items[i])));
+                        i += workers;
+                    }
+                    res
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("parallel map worker panicked") {
+                out[i] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|r| r.expect("every index produced exactly once")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_item_order_for_all_thread_counts() {
+        let items: Vec<usize> = (0..37).collect();
+        let serial = par_map_indexed(&items, 1, || 0usize, |_, i, &x| (i, x * x));
+        for threads in [2, 3, 8, 64] {
+            let par = par_map_indexed(&items, threads, || 0usize, |_, i, &x| (i, x * x));
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_run_inline() {
+        let none: Vec<u8> = Vec::new();
+        assert!(par_map_indexed(&none, 8, || (), |_, _, _| 1).is_empty());
+        let one = [41u8];
+        assert_eq!(par_map_indexed(&one, 8, || (), |_, _, &x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn caller_owned_states_survive_across_calls() {
+        let items = [1u8, 2, 3, 4, 5];
+        let mut states = vec![0usize; 2];
+        let _ = par_map_with(&items, &mut states, |s, _, _| *s += 1);
+        let _ = par_map_with(&items, &mut states, |s, _, _| *s += 1);
+        // 5 calls per round, dealt round-robin over the two states
+        assert_eq!(states.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn worker_state_is_reused_within_a_worker() {
+        // state counts calls; with 1 thread all items share one state
+        let items = [0u8; 5];
+        let counts = par_map_indexed(&items, 1, || 0usize, |s, _, _| {
+            *s += 1;
+            *s
+        });
+        assert_eq!(counts, vec![1, 2, 3, 4, 5]);
+    }
+}

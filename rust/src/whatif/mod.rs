@@ -2,43 +2,195 @@
 //! on the MXDAG *before* changing the application — pipelining choices
 //! and work re-partitioning — which "are not possible with traditional
 //! DAG".
+//!
+//! The batch entry point is [`explore`]: a zero-dependency parallel
+//! sweep over [`Hypothetical`]s with per-worker [`EvalContext`]s
+//! (cached expansions + reusable engine scratch) and a hard determinism
+//! contract — results are **bit-identical for every thread count**,
+//! in input order (oracle: `tests/prop_whatif_explore.rs`). A failing
+//! hypothetical (invalid revision, deadlocking variant) is captured in
+//! its own [`WhatIf::outcome`] and never discards the rest of the
+//! sweep; only a *baseline* failure aborts, since there is nothing to
+//! compare against.
 
 use crate::mxdag::{MXDag, TaskId, TaskKind};
-use crate::sched::{evaluate, Plan};
-use crate::sim::{Cluster, SimError};
+use crate::sched::mxsched::cpm_on;
+use crate::sched::{evaluate, EvalContext, Plan};
+use crate::sim::{Annotations, Cluster, CpuPolicy, NetPolicy, SimError};
+use crate::util::par::par_map_indexed;
 
 /// Outcome of one hypothetical.
 #[derive(Debug, Clone)]
 pub struct WhatIf {
     pub label: String,
-    pub jct: f64,
-    /// JCT delta vs the baseline plan (negative = improvement).
-    pub delta: f64,
+    /// `Ok((jct, delta))` — delta vs the baseline JCT (negative =
+    /// improvement) — or this hypothetical's own failure, stringified
+    /// (`SimError` for a variant whose simulation deadlocks, or the
+    /// revision error, e.g. re-partitioning a flow task).
+    pub outcome: Result<(f64, f64), String>,
 }
 
-/// Evaluate every single-task pipelining toggle on top of `base`.
-/// Returns the baseline JCT and one entry per pipelineable task.
+impl WhatIf {
+    /// JCT of the hypothetical, if it evaluated.
+    pub fn jct(&self) -> Option<f64> {
+        self.outcome.as_ref().ok().map(|&(j, _)| j)
+    }
+
+    /// JCT delta vs the baseline (negative = improvement), if it
+    /// evaluated.
+    pub fn delta(&self) -> Option<f64> {
+        self.outcome.as_ref().ok().map(|&(_, d)| d)
+    }
+
+    /// The captured failure, if the hypothetical did not evaluate.
+    pub fn error(&self) -> Option<&str> {
+        self.outcome.as_ref().err().map(|s| s.as_str())
+    }
+}
+
+/// One hypothetical application revision for [`explore`].
+#[derive(Debug, Clone)]
+pub enum Hypothetical {
+    /// Toggle these tasks pipelined on top of the base plan
+    /// (non-pipelineable entries are ignored by expansion, as always).
+    Pipeline(Vec<TaskId>),
+    /// Split compute task `target` into `shard_hosts.len()` parallel
+    /// shards fed by scatter/gather flows (see [`repartition`]). The
+    /// revised DAG has fresh task ids, so the base plan's per-task
+    /// annotations cannot carry over: the variant is scored under the
+    /// base *policy*, with priorities re-derived via [`cpm_on`] when
+    /// the base policy is priority-based.
+    Repartition {
+        target: TaskId,
+        shard_hosts: Vec<usize>,
+        scatter: f64,
+        gather: f64,
+    },
+}
+
+impl Hypothetical {
+    /// Stable human-readable label (identical across thread counts).
+    pub fn label(&self, dag: &MXDag) -> String {
+        match self {
+            Hypothetical::Pipeline(ts) => {
+                let names: Vec<&str> =
+                    ts.iter().map(|&t| dag.task(t).name.as_str()).collect();
+                format!("pipeline({})", names.join("+"))
+            }
+            Hypothetical::Repartition { target, shard_hosts, .. } => {
+                format!("repartition({} x{})", dag.task(*target).name, shard_hosts.len())
+            }
+        }
+    }
+}
+
+/// Result of an [`explore`] sweep.
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    /// JCT of the base plan.
+    pub baseline: f64,
+    /// One entry per hypothetical, in input order.
+    pub results: Vec<WhatIf>,
+}
+
+/// Batched what-if exploration: score every hypothetical against the
+/// baseline, fanned across `threads` workers (`std::thread::scope`
+/// via [`par_map_indexed`]; `1` runs inline and spawns nothing). Each
+/// worker owns an [`EvalContext`], so evaluation `k+1` on a worker
+/// reuses cached expansions, cluster footprints and engine scratch —
+/// scoring a plan costs only its simulation.
+///
+/// Determinism contract: every hypothetical is a pure function of
+/// `(dag, cluster, base)` and results are returned in input order, so
+/// the output — baseline, labels, JCTs, bit for bit — is identical for
+/// every `threads` value.
+pub fn explore(
+    dag: &MXDag,
+    cluster: &Cluster,
+    base: &Plan,
+    hypos: &[Hypothetical],
+    threads: usize,
+) -> Result<Exploration, SimError> {
+    let mut base_ctx = EvalContext::new(dag, cluster);
+    let baseline = base_ctx.evaluate(base)?.makespan;
+    // the baseline context becomes worker 0's state instead of being
+    // dropped — the serial sweep in particular runs entirely warm
+    let mut base_ctx = Some(base_ctx);
+    let results = par_map_indexed(
+        hypos,
+        threads,
+        move || base_ctx.take().unwrap_or_else(|| EvalContext::new(dag, cluster)),
+        |ctx, _, h| eval_hypothetical(ctx, base, baseline, h),
+    );
+    Ok(Exploration { baseline, results })
+}
+
+/// Score one hypothetical — a pure function of
+/// `(ctx.dag, ctx.cluster, base, h)`; the context only caches.
+fn eval_hypothetical(
+    ctx: &mut EvalContext<'_>,
+    base: &Plan,
+    baseline: f64,
+    h: &Hypothetical,
+) -> WhatIf {
+    let label = h.label(ctx.dag());
+    let jct: Result<f64, String> = match h {
+        Hypothetical::Pipeline(ts) => {
+            let mut trial = base.clone();
+            for &t in ts {
+                if !trial.ann.pipelined.contains(&t) {
+                    trial.ann.pipelined.push(t);
+                }
+            }
+            ctx.evaluate(&trial).map(|r| r.makespan).map_err(|e| e.to_string())
+        }
+        Hypothetical::Repartition { target, shard_hosts, scatter, gather } => {
+            repartition(ctx.dag(), *target, shard_hosts, *scatter, *gather).and_then(|g2| {
+                let mut ann = Annotations::default();
+                // any priority-bearing policy (cpu or net side) needs
+                // fresh priorities, or strict-priority queues would run
+                // on all-zero ranks and the delta would conflate the
+                // repartition with an annotation change
+                if base.policy.cpu == CpuPolicy::Priority
+                    || base.policy.net == NetPolicy::Priority
+                {
+                    let prios = cpm_on(&g2, ctx.cluster()).priorities();
+                    for t in g2.real_tasks() {
+                        ann.priorities.insert(t, prios[t]);
+                    }
+                }
+                let plan = Plan { ann, policy: base.policy };
+                evaluate(&g2, ctx.cluster(), &plan)
+                    .map(|r| r.makespan)
+                    .map_err(|e| e.to_string())
+            })
+        }
+    };
+    WhatIf { label, outcome: jct.map(|j| (j, j - baseline)) }
+}
+
+/// The §4.3 candidate set: one [`Hypothetical::Pipeline`] per
+/// pipelineable task not already pipelined by `base`, in task order.
+pub fn single_pipeline_toggles(dag: &MXDag, base: &Plan) -> Vec<Hypothetical> {
+    dag.real_tasks()
+        .filter(|&t| dag.task(t).pipelineable() && !base.ann.pipelined.contains(&t))
+        .map(|t| Hypothetical::Pipeline(vec![t]))
+        .collect()
+}
+
+/// Evaluate every single-task pipelining toggle on top of `base` — the
+/// classic §4.3 sweep, now a serial [`explore`] call. Returns the
+/// baseline JCT and one entry per pipelineable task; a failing toggle
+/// is captured in its entry (see [`WhatIf::outcome`]), never
+/// propagated.
 pub fn pipeline_whatif(
     dag: &MXDag,
     cluster: &Cluster,
     base: &Plan,
 ) -> Result<(f64, Vec<WhatIf>), SimError> {
-    let baseline = evaluate(dag, cluster, base)?.makespan;
-    let mut out = Vec::new();
-    for t in dag.real_tasks() {
-        if !dag.task(t).pipelineable() || base.ann.pipelined.contains(&t) {
-            continue;
-        }
-        let mut plan = base.clone();
-        plan.ann.pipelined.push(t);
-        let jct = evaluate(dag, cluster, &plan)?.makespan;
-        out.push(WhatIf {
-            label: format!("pipeline({})", dag.task(t).name),
-            jct,
-            delta: jct - baseline,
-        });
-    }
-    Ok((baseline, out))
+    let hypos = single_pipeline_toggles(dag, base);
+    let ex = explore(dag, cluster, base, &hypos, 1)?;
+    Ok((ex.baseline, ex.results))
 }
 
 /// Re-partitioning hypothetical: split compute task `target` into `k`
@@ -153,10 +305,102 @@ mod tests {
                 .unwrap()
         };
         // pipelining D alone (off-critical): no harm
-        assert!(by_label("D").delta.abs() < 1e-9);
+        assert!(by_label("D").delta.unwrap().abs() < 1e-9);
         // pipelining f3 alone: its stream still queues behind the blocking
         // f1 send (issue order), so nothing changes
-        assert!(by_label("f3").delta.abs() < 1e-6);
+        assert!(by_label("f3").delta.unwrap().abs() < 1e-6);
+    }
+
+    /// The satellite bugfix: one failing hypothetical must not abort
+    /// the sweep. An invalid revision (re-partitioning a flow, too few
+    /// shards) and a *deadlocking* variant (scatter into a dead NIC)
+    /// each capture their own error while the healthy hypotheticals
+    /// around them still score.
+    #[test]
+    fn failing_hypotheticals_do_not_abort_the_sweep() {
+        let mut b = MXDag::builder();
+        let pre = b.compute("pre", 0, 0.5);
+        let big = b.compute_full("big", 0, 8.0, 1.0);
+        let f = b.flow("f", 0, 1, 1.0);
+        b.dep(pre, big).dep(big, f);
+        let g = b.finalize().unwrap();
+        // host 2 exists but its NICs are dead: any variant that routes
+        // a flow through it deadlocks, while the baseline never does
+        let mut cluster = Cluster::uniform(3);
+        cluster.hosts[2].nic_up = 0.0;
+        cluster.hosts[2].nic_down = 0.0;
+        let base = Plan::fair();
+        let hypos = vec![
+            Hypothetical::Pipeline(vec![big]),
+            Hypothetical::Repartition {
+                target: f, // flow: invalid revision
+                shard_hosts: vec![0, 1],
+                scatter: 0.1,
+                gather: 0.1,
+            },
+            Hypothetical::Repartition {
+                target: big, // scatter 0 -> 2 starves: deadlock
+                shard_hosts: vec![0, 2],
+                scatter: 0.1,
+                gather: 0.1,
+            },
+            Hypothetical::Repartition {
+                target: big,
+                shard_hosts: vec![0], // too few shards
+                scatter: 0.1,
+                gather: 0.1,
+            },
+            Hypothetical::Repartition {
+                target: big, // healthy split across live hosts
+                shard_hosts: vec![0, 1],
+                scatter: 0.1,
+                gather: 0.1,
+            },
+        ];
+        let ex = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+        assert_eq!(ex.results.len(), hypos.len());
+        assert!(ex.results[0].jct().is_some(), "pipeline toggle scores");
+        assert!(ex.results[1].error().unwrap().contains("not a compute task"));
+        assert!(
+            ex.results[2].error().unwrap().contains("deadlock"),
+            "deadlocking variant is captured, not propagated: {:?}",
+            ex.results[2]
+        );
+        assert!(ex.results[3].error().unwrap().contains("at least 2 shards"));
+        let healthy = &ex.results[4];
+        assert!(
+            healthy.delta().unwrap() < -1.0,
+            "the split past the failures still scores: {healthy:?}"
+        );
+    }
+
+    /// Unit-level determinism slice of the parallel oracle (the full
+    /// random sweep lives in `tests/prop_whatif_explore.rs`): thread
+    /// counts must not change a single bit of the exploration.
+    #[test]
+    fn explore_parallel_matches_serial() {
+        let (g, _) = workloads::fig3_dag();
+        let cluster = crate::workloads::figs::fig3_cluster();
+        let base = Plan { ann: Default::default(), policy: crate::sim::Policy::fifo() };
+        let hypos = single_pipeline_toggles(&g, &base);
+        assert!(hypos.len() >= 2, "fig3 has pipelineable tasks");
+        let serial = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+        for threads in [2, 3, 16] {
+            let par = explore(&g, &cluster, &base, &hypos, threads).unwrap();
+            assert_eq!(serial.baseline.to_bits(), par.baseline.to_bits());
+            assert_eq!(serial.results.len(), par.results.len());
+            for (a, b) in serial.results.iter().zip(par.results.iter()) {
+                assert_eq!(a.label, b.label);
+                match (&a.outcome, &b.outcome) {
+                    (Ok((ja, da)), Ok((jb, db))) => {
+                        assert_eq!(ja.to_bits(), jb.to_bits());
+                        assert_eq!(da.to_bits(), db.to_bits());
+                    }
+                    (Err(ea), Err(eb)) => assert_eq!(ea, eb),
+                    (x, y) => panic!("outcome kind diverged: {x:?} vs {y:?}"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! The parallel what-if equivalence oracle (batched plan-space engine).
+//!
+//! Two contracts, asserted over random layered DAGs, two base-plan
+//! families and mixed hypothetical sets (single toggles, pair toggles,
+//! valid/invalid/degenerate repartitions):
+//!
+//! 1. **Thread-count invariance** — `whatif::explore` at N workers is
+//!    bit-identical to the serial sweep for every N: same baseline,
+//!    same labels, same JCT/delta bits, same captured errors, same
+//!    order. The workers' per-context caches are cost-only.
+//! 2. **Context-reuse soundness** — every pipeline hypothetical's JCT
+//!    equals a cold `sched::evaluate` of the same trial plan, bitwise
+//!    (the `EvalContext` expansion/footprint/scratch reuse changes
+//!    nothing observable).
+
+use mxdag::mxdag::{TaskId, TaskKind};
+use mxdag::sched::{evaluate, MxScheduler, Plan, Scheduler};
+use mxdag::sim::{Cluster, Policy};
+use mxdag::whatif::{explore, single_pipeline_toggles, Hypothetical, WhatIf};
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn assert_whatif_bits(a: &WhatIf, b: &WhatIf) {
+    assert_eq!(a.label, b.label);
+    match (&a.outcome, &b.outcome) {
+        (Ok((ja, da)), Ok((jb, db))) => {
+            assert_eq!(ja.to_bits(), jb.to_bits(), "{}: jct", a.label);
+            assert_eq!(da.to_bits(), db.to_bits(), "{}: delta", a.label);
+        }
+        (Err(ea), Err(eb)) => assert_eq!(ea, eb, "{}: error", a.label),
+        (x, y) => panic!("{}: outcome kind diverged: {x:?} vs {y:?}", a.label),
+    }
+}
+
+#[test]
+fn explore_is_bit_identical_for_all_thread_counts() {
+    for seed in [1u64, 4, 9] {
+        let p = RandomParams {
+            layers: 5,
+            width: 4,
+            hosts: 6,
+            seed,
+            pipe_frac: 0.5,
+            ..Default::default()
+        };
+        let g = random_dag(&p);
+        let cluster = Cluster::uniform(p.hosts);
+        let bases = [
+            Plan { ann: Default::default(), policy: Policy::fifo() },
+            MxScheduler::without_pipelining().plan(&g, &cluster),
+        ];
+        for base in bases {
+            let mut hypos = single_pipeline_toggles(&g, &base);
+            let piped: Vec<TaskId> =
+                g.real_tasks().filter(|&t| g.task(t).pipelineable()).collect();
+            if piped.len() >= 2 {
+                hypos.push(Hypothetical::Pipeline(vec![piped[0], piped[1]]));
+                hypos.push(Hypothetical::Pipeline(vec![piped[1], piped[0]]));
+            }
+            let comp = g
+                .real_tasks()
+                .find(|&t| matches!(g.task(t).kind, TaskKind::Compute { .. }));
+            if let Some(c) = comp {
+                hypos.push(Hypothetical::Repartition {
+                    target: c,
+                    shard_hosts: vec![0, 1, 2],
+                    scatter: 0.05,
+                    gather: 0.05,
+                });
+                // degenerate: single shard — captured error, not abort
+                hypos.push(Hypothetical::Repartition {
+                    target: c,
+                    shard_hosts: vec![0],
+                    scatter: 0.05,
+                    gather: 0.05,
+                });
+            }
+            assert!(hypos.len() >= 4, "seed {seed}: want a non-trivial sweep");
+
+            let serial = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+            assert_eq!(serial.results.len(), hypos.len());
+
+            // contract 2: context reuse vs the cold path, bitwise
+            for (h, w) in hypos.iter().zip(serial.results.iter()) {
+                if let Hypothetical::Pipeline(ts) = h {
+                    let mut trial = base.clone();
+                    for &t in ts {
+                        if !trial.ann.pipelined.contains(&t) {
+                            trial.ann.pipelined.push(t);
+                        }
+                    }
+                    match (evaluate(&g, &cluster, &trial), &w.outcome) {
+                        (Ok(cold), Ok((jct, _))) => {
+                            assert_eq!(cold.makespan.to_bits(), jct.to_bits(), "{}", w.label)
+                        }
+                        (Err(e), Err(we)) => assert_eq!(&e.to_string(), we),
+                        (x, y) => {
+                            panic!("{}: cold/context diverged: {:?} vs {y:?}", w.label, x.map(|r| r.makespan))
+                        }
+                    }
+                }
+            }
+
+            // contract 1: thread-count invariance, bitwise
+            for threads in [2usize, 3, 7, 32] {
+                let par = explore(&g, &cluster, &base, &hypos, threads).unwrap();
+                assert_eq!(
+                    serial.baseline.to_bits(),
+                    par.baseline.to_bits(),
+                    "seed {seed} threads {threads}: baseline"
+                );
+                assert_eq!(serial.results.len(), par.results.len());
+                for (a, b) in serial.results.iter().zip(par.results.iter()) {
+                    assert_whatif_bits(a, b);
+                }
+            }
+        }
+    }
+}
