@@ -1,16 +1,27 @@
-//! Scheduler scaling, three stories:
+//! Scheduler scaling, four stories:
 //!
 //! 1. *Plan cost* vs DAG size, per scheduler — plan time must stay far
 //!    below simulated makespan for online use (L3 §Perf).
-//! 2. *Engine events/s* on wide-fanout DAGs at 1k / 5k / 10k tasks under
-//!    the mxdag co-scheduler's priority plan: the pre-refactor full
-//!    re-sort baseline vs the incremental ready queue (PR 2) vs
-//!    component-wise allocation with memoized rates (PR 3) vs anchored
-//!    time advance over the finish-time heap (PR 4) on top of it.
+//! 2. *Engine events/s* on wide-fanout DAGs at 1k / 5k / 10k / 100k
+//!    tasks under the mxdag co-scheduler's priority plan: the
+//!    pre-refactor full re-sort baseline vs the incremental ready queue
+//!    (PR 2) vs component-wise allocation (PR 3) vs anchored time
+//!    advance (PR 4). The O(n)-per-event whole-set baselines are only
+//!    affordable up to 10k tasks; above that their columns are emitted
+//!    as JSON `null` and the identity baseline shifts to the
+//!    components-eager corner (itself transitively anchored to the
+//!    whole-set oracle at the smaller sizes and in the prop tests).
 //! 3. The same A/B under the **fair** policy, where every ready task
 //!    shares one level, whole-set allocation is costliest and the eager
-//!    integration sweep touches every rated task — the headline for
-//!    `AllocKind::Components` + `HorizonKind::Anchored`.
+//!    integration sweep touches every rated task.
+//! 4. *Parallel refill scaling* (PR 6): a lockstep parallel-fabrics
+//!    workload — 128 independent host pairs completing in unison, so
+//!    every event re-fills 256 members across 128 fresh components —
+//!    timed at `threads` 1 / 2 / 4. Before any timing, a threads=4 run
+//!    is asserted bit-identical to threads=1 under the eager horizon
+//!    (and within tolerance under anchored): the bench-smoke
+//!    parallel-identity oracle. `events_per_sec_per_core`
+//!    (t4 events/s ÷ 4) is the headline tracked in `BENCH_sim.json`.
 //!
 //! Every eager-horizon A/B asserts *bit-identical* results (event
 //! counts, makespans) across configurations — the equivalence-oracle
@@ -24,8 +35,9 @@
 //!
 //! `BENCH_SMOKE=1` shrinks everything to one small size and skips the
 //! plan-cost story — the CI bench-smoke job uses it to catch oracle
-//! drift and bench bitrot (in both horizon modes) without paying
-//! full-scale runtimes.
+//! drift and bench bitrot (in both horizon modes, serial and parallel)
+//! without paying full-scale runtimes. `MXDAG_BENCH_1M=1` appends a
+//! 1M-task size to the non-smoke sweeps.
 
 use std::time::Instant;
 
@@ -35,7 +47,7 @@ use mxdag::sched::{
 };
 use mxdag::sim::{
     expand, simulate, within_tolerance, AllocKind, Cluster, HorizonKind, Policy, QueueKind,
-    SimConfig, SimDag, SimResult,
+    SimConfig, SimDag, SimKind, SimResult, SimTask,
 };
 use mxdag::util::bench::{bench, bench_header, write_bench_json, Table};
 use mxdag::util::json::Json;
@@ -47,11 +59,19 @@ fn smoke() -> bool {
 
 fn sizes() -> Vec<usize> {
     if smoke() {
-        vec![300]
-    } else {
-        vec![1_000, 5_000, 10_000]
+        return vec![300];
     }
+    let mut s = vec![1_000, 5_000, 10_000, 100_000];
+    if std::env::var("MXDAG_BENCH_1M").map(|v| v == "1").unwrap_or(false) {
+        s.push(1_000_000);
+    }
+    s
 }
+
+/// The O(n)-per-event whole-set / full-resort baselines are only
+/// affordable up to this size; beyond it their columns are emitted as
+/// JSON `null` and identity is asserted against the components corner.
+const FULL_MATRIX_MAX: usize = 10_000;
 
 fn plan_cost() {
     for (layers, width) in [(6usize, 6usize), (12, 12), (20, 20)] {
@@ -168,52 +188,75 @@ fn engine_events_per_sec() -> Json {
         }
         let sim = expand(&g, &plan.ann);
 
-        let configs = [
-            (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
-            (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
-            (QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
-            (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
-        ];
-        let mut results: Vec<(SimResult, f64)> = Vec::new();
-        for (queue, alloc, horizon) in configs {
-            let cfg = SimConfig {
-                policy: plan.policy,
-                queue,
-                alloc,
-                horizon,
-                ..Default::default()
-            };
-            // the whole-set paths are slow at scale: one rep there,
-            // best-of-3 for the cheap runs
-            let reps = if alloc == AllocKind::WholeSet && target >= 5_000 { 1 } else { 3 };
-            results.push(timed(&sim, &cluster, &cfg, reps));
-        }
+        let mk = |queue, alloc, horizon| SimConfig {
+            policy: plan.policy,
+            queue,
+            alloc,
+            horizon,
+            ..Default::default()
+        };
+        // the O(n)-per-event whole-set baselines are unaffordable past
+        // FULL_MATRIX_MAX: skip them and emit `null` columns instead
+        let full_matrix = target <= FULL_MATRIX_MAX;
+        let reps_whole = if target >= 5_000 { 1 } else { 3 };
+        let whole = full_matrix.then(|| {
+            timed(
+                &sim,
+                &cluster,
+                &mk(QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+                reps_whole,
+            )
+        });
+        let incr = full_matrix.then(|| {
+            timed(
+                &sim,
+                &cluster,
+                &mk(QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
+                reps_whole,
+            )
+        });
+        let comp = timed(
+            &sim,
+            &cluster,
+            &mk(QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
+            3,
+        );
+        let anch = timed(
+            &sim,
+            &cluster,
+            &mk(QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
+            3,
+        );
         // eager corners are bit-identical; the anchored corner is held
         // to the tolerance oracle against its eager twin
-        for (tag, r) in [("incremental", &results[1].0), ("components", &results[2].0)] {
-            assert_bit_identical(tag, &results[0].0, r);
+        if let (Some(w), Some(i)) = (&whole, &incr) {
+            assert_bit_identical("incremental", &w.0, &i.0);
+            assert_bit_identical("components", &w.0, &comp.0);
         }
-        assert_within_tolerance("anchored", &results[2].0, &results[3].0);
+        assert_within_tolerance("anchored", &comp.0, &anch.0);
         let tasks = g.real_tasks().count();
-        let anch_speedup = results[3].1 / results[2].1;
+        let anch_speedup = anch.1 / comp.1;
+        let fmt_opt =
+            |r: &Option<(SimResult, f64)>| r.as_ref().map_or("-".into(), |x| format!("{:.3e}", x.1));
         table.row(
             &format!("{tasks} tasks"),
             &[
-                format!("{}", results[0].0.events),
-                format!("{:.3e}", results[0].1),
-                format!("{:.3e}", results[1].1),
-                format!("{:.3e}", results[2].1),
-                format!("{:.3e}", results[3].1),
+                format!("{}", comp.0.events),
+                fmt_opt(&whole),
+                fmt_opt(&incr),
+                format!("{:.3e}", comp.1),
+                format!("{:.3e}", anch.1),
                 format!("{anch_speedup:.1}x"),
             ],
         );
+        let json_opt = |r: &Option<(SimResult, f64)>| r.as_ref().map_or(Json::Null, |x| Json::Num(x.1));
         rows.push(Json::obj(vec![
             ("tasks", Json::Num(tasks as f64)),
-            ("events", Json::Num(results[0].0.events as f64)),
-            ("evps_fullresort_wholeset", Json::Num(results[0].1)),
-            ("evps_incremental_wholeset", Json::Num(results[1].1)),
-            ("evps_incremental_components", Json::Num(results[2].1)),
-            ("evps_incremental_components_anchored", Json::Num(results[3].1)),
+            ("events", Json::Num(comp.0.events as f64)),
+            ("evps_fullresort_wholeset", json_opt(&whole)),
+            ("evps_incremental_wholeset", json_opt(&incr)),
+            ("evps_incremental_components", Json::Num(comp.1)),
+            ("evps_incremental_components_anchored", Json::Num(anch.1)),
             ("speedup_anchored_vs_eager", Json::Num(anch_speedup)),
         ]));
     }
@@ -249,14 +292,17 @@ fn fair_events_per_sec() -> Json {
             horizon,
             ..Default::default()
         };
+        let full_matrix = target <= FULL_MATRIX_MAX;
         let reps_whole = if target >= 5_000 { 1 } else { 3 };
-        let (whole, evps_whole) =
-            timed(&sim, &cluster, &mk(AllocKind::WholeSet, HorizonKind::Eager), reps_whole);
+        let whole = full_matrix
+            .then(|| timed(&sim, &cluster, &mk(AllocKind::WholeSet, HorizonKind::Eager), reps_whole));
         let (comp, evps_comp) =
             timed(&sim, &cluster, &mk(AllocKind::Components, HorizonKind::Eager), 3);
         let (anch, evps_anch) =
             timed(&sim, &cluster, &mk(AllocKind::Components, HorizonKind::Anchored), 3);
-        assert_bit_identical("fair", &whole, &comp);
+        if let Some((w, _)) = &whole {
+            assert_bit_identical("fair", w, &comp);
+        }
         assert_within_tolerance("fair-anchored", &comp, &anch);
 
         let tasks = g.real_tasks().count();
@@ -264,8 +310,8 @@ fn fair_events_per_sec() -> Json {
         table.row(
             &format!("{tasks} tasks"),
             &[
-                format!("{}", whole.events),
-                format!("{evps_whole:.3e}"),
+                format!("{}", comp.events),
+                whole.as_ref().map_or("-".into(), |(_, e)| format!("{e:.3e}")),
                 format!("{evps_comp:.3e}"),
                 format!("{evps_anch:.3e}"),
                 format!("{anch_speedup:.1}x"),
@@ -273,12 +319,117 @@ fn fair_events_per_sec() -> Json {
         );
         rows.push(Json::obj(vec![
             ("tasks", Json::Num(tasks as f64)),
-            ("events", Json::Num(whole.events as f64)),
-            ("evps_wholeset", Json::Num(evps_whole)),
+            ("events", Json::Num(comp.events as f64)),
+            ("evps_wholeset", whole.as_ref().map_or(Json::Null, |(_, e)| Json::Num(*e))),
             ("evps_components", Json::Num(evps_comp)),
             ("evps_components_anchored", Json::Num(evps_anch)),
-            ("speedup_components_vs_wholeset", Json::Num(evps_comp / evps_whole)),
+            (
+                "speedup_components_vs_wholeset",
+                whole.as_ref().map_or(Json::Null, |(_, e)| Json::Num(evps_comp / e)),
+            ),
             ("speedup_anchored_vs_eager", Json::Num(anch_speedup)),
+        ]));
+    }
+    table.print();
+    Json::Arr(rows)
+}
+
+/// The parallel-refill showcase workload: `PAIRS` independent host
+/// pairs, each running a lockstep chain of stages whose flow sizes
+/// depend only on the stage index — every pair completes each stage at
+/// the same instant, so every completion event drains and re-fills all
+/// `PAIRS` components at once (`PAIRS × PER_STAGE` members, past the
+/// engine's parallel fan-out threshold). This is the identical-
+/// parallel-networks regime from the paper's related work: maximal
+/// component concurrency, worst case for a serial refill loop.
+fn lockstep_pairs_dag(stages: usize) -> (SimDag, Cluster) {
+    const PAIRS: usize = 128;
+    const PER_STAGE: usize = 2;
+    let mut d = SimDag::default();
+    let mut prev: Vec<Vec<usize>> = vec![Vec::new(); PAIRS];
+    for s in 0..stages {
+        // identical across pairs → lockstep completions
+        let size = 1.0 + (s % 7) as f64 * 0.25;
+        for pair in 0..PAIRS {
+            let mut next = Vec::with_capacity(PER_STAGE);
+            for _ in 0..PER_STAGE {
+                let orig = d.len();
+                let id = d.push(SimTask {
+                    orig,
+                    chunk: (0, 1),
+                    kind: SimKind::Flow { src: 2 * pair, dst: 2 * pair + 1 },
+                    size,
+                    priority: 0,
+                    gate: 0.0,
+                    coflow: None,
+                });
+                for &g in prev[pair].iter() {
+                    d.dep(g, id);
+                }
+                next.push(id);
+            }
+            prev[pair] = next;
+        }
+    }
+    (d, Cluster::uniform(2 * PAIRS))
+}
+
+/// Story 4: the parallel event loop, `threads` 1 / 2 / 4 on the
+/// lockstep workload. The identity oracle runs *before* any timing —
+/// eager threads=4 bit-identical to threads=1 (makespan, events and
+/// every trace float), anchored within tolerance — so a determinism
+/// regression fails the bench (and the CI bench-smoke job) even when
+/// nobody reads the numbers.
+fn parallel_events_per_sec() -> Json {
+    let mut table = Table::new(
+        "parallel refill scaling, fair policy on 128 lockstep host pairs \
+         (every event re-fills 256 members across 128 fresh components)",
+        &["events", "t1 ev/s", "t2 ev/s", "t4 ev/s", "per-core t4", "t4/t1"],
+    );
+    let mut rows = Vec::new();
+    for target in sizes() {
+        let stages = (target / 256).max(2);
+        let (d, cluster) = lockstep_pairs_dag(stages);
+        let mk = |horizon, threads| SimConfig {
+            policy: Policy::fair(),
+            horizon,
+            threads,
+            ..Default::default()
+        };
+        // parallel-identity oracle (bench-smoke gate)
+        let eager1 = simulate(&d, &cluster, &mk(HorizonKind::Eager, 1)).unwrap();
+        let eager4 = simulate(&d, &cluster, &mk(HorizonKind::Eager, 4)).unwrap();
+        assert_bit_identical("parallel-eager", &eager1, &eager4);
+        for (i, (a, b)) in eager1.trace.iter().zip(eager4.trace.iter()).enumerate() {
+            assert_eq!(a.start.to_bits(), b.start.to_bits(), "parallel-eager chunk {i} start");
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "parallel-eager chunk {i} finish");
+        }
+        let (anch1, evps1) = timed(&d, &cluster, &mk(HorizonKind::Anchored, 1), 3);
+        let (anch2, evps2) = timed(&d, &cluster, &mk(HorizonKind::Anchored, 2), 3);
+        let (anch4, evps4) = timed(&d, &cluster, &mk(HorizonKind::Anchored, 4), 3);
+        assert_within_tolerance("parallel-anchored-t2", &anch1, &anch2);
+        assert_within_tolerance("parallel-anchored-t4", &anch1, &anch4);
+        let per_core = evps4 / 4.0;
+        let speedup = evps4 / evps1;
+        table.row(
+            &format!("{} tasks", d.len()),
+            &[
+                format!("{}", anch1.events),
+                format!("{evps1:.3e}"),
+                format!("{evps2:.3e}"),
+                format!("{evps4:.3e}"),
+                format!("{per_core:.3e}"),
+                format!("{speedup:.2}x"),
+            ],
+        );
+        rows.push(Json::obj(vec![
+            ("tasks", Json::Num(d.len() as f64)),
+            ("events", Json::Num(anch1.events as f64)),
+            ("evps_threads1", Json::Num(evps1)),
+            ("evps_parallel_t2", Json::Num(evps2)),
+            ("evps_parallel_t4", Json::Num(evps4)),
+            ("events_per_sec_per_core", Json::Num(per_core)),
+            ("speedup_t4_vs_t1", Json::Num(speedup)),
         ]));
     }
     table.print();
@@ -372,12 +523,14 @@ fn main() {
     policy_identity();
     let mxsched = engine_events_per_sec();
     let fair = fair_events_per_sec();
+    let parallel = parallel_events_per_sec();
     write_bench_json(
         "sched_scaling",
         Json::obj(vec![
             ("smoke", Json::Bool(smoke())),
             ("mxsched_priority", mxsched),
             ("fair", fair),
+            ("parallel", parallel),
         ]),
     );
     println!("\nwrote BENCH_sim.json (section `sched_scaling`)");

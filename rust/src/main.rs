@@ -53,12 +53,14 @@ fn print_usage() {
            simulate --dag FILE.json [--scheduler mxdag|fair|fifo|coflow|packing]\n\
                     [--topology bigswitch|oversub:RACKS:RATIO|fabrics:K:TRUNK[:hash|bysrc]]\n\
                     [--queue incremental|fullresort] [--alloc components|wholeset]\n\
-                    [--horizon eager|anchored]\n\
+                    [--horizon eager|anchored] [--threads N]\n\
                     (the DAG file may also declare a \"cluster\" object and an\n\
-                     \"engine\" object {{\"queue\", \"alloc\", \"horizon\"}}; the\n\
-                     --topology/--queue/--alloc/--horizon flags override them\n\
-                     and select the engine's ready-queue, rate-allocation and\n\
-                     time-advance paths)\n\
+                     \"engine\" object {{\"queue\", \"alloc\", \"horizon\", \"threads\"}};\n\
+                     the --topology/--queue/--alloc/--horizon/--threads flags\n\
+                     override them and select the engine's ready-queue,\n\
+                     rate-allocation, time-advance and parallel-refill paths;\n\
+                     N>1 fans component refills across worker threads with\n\
+                     results identical to the N=1 serial oracle)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -373,18 +375,28 @@ fn cmd_simulate(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(v) = args.get("threads") {
+        match v.parse::<usize>() {
+            Ok(t) if t >= 1 => cfg.threads = t,
+            _ => {
+                eprintln!("--threads: expected an integer >= 1, got {v:?}");
+                return 1;
+            }
+        }
+    }
     let plan = sched.plan(&g, &cluster);
     match evaluate_with(&g, &cluster, &plan, &cfg) {
         Ok(r) => {
             println!(
                 "scheduler={} hosts={} topology={:?} queue={:?} alloc={:?} horizon={:?} \
-                 tasks={} makespan={:.4} events={}",
+                 threads={} tasks={} makespan={:.4} events={}",
                 sched.name(),
                 cluster.n_hosts(),
                 cluster.topology,
                 cfg.queue,
                 cfg.alloc,
                 cfg.horizon,
+                cfg.threads,
                 g.real_tasks().count(),
                 r.makespan,
                 r.events

@@ -19,6 +19,12 @@
 //!   context.
 //! * **Engine scratch** — one [`SimScratch`] is reset (not reallocated)
 //!   between runs, so plan `k+1` costs only the simulation itself.
+//!   Since the parallel event loop this scratch also carries the
+//!   engine's per-worker refill arenas, so a context whose
+//!   [`SimConfig`] sets `threads > 1` keeps those workers' buffers
+//!   warm across every plan it scores (the `threads` axis flows into
+//!   each evaluation through the context's config like every other
+//!   engine knob).
 //!
 //! Results are bit-for-bit identical to the cold path (asserted by
 //! `context_matches_cold_evaluate_bitwise` below and by the parallel

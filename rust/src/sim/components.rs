@@ -59,6 +59,21 @@
 //! that can change a member's rate (arrival, completion, gate expiry,
 //! SEBF drift at refill) marks the component dirty *before* the next
 //! refill reads its bytes.
+//!
+//! ## Disjointness ⇒ shard ownership (parallel event loop)
+//!
+//! The rebuild contract is also what makes the engine's parallel
+//! refill sound: the fresh components a drain emits are pairwise
+//! disjoint in **both members and resources** (each is one exact
+//! connectivity class over the drained members, and a resource claim
+//! names at most one live component). `SimConfig.threads > 1` fans
+//! the refills of those fresh components across worker threads — each
+//! worker's writes are confined to state derived from its own
+//! component, so no synchronisation is needed inside the fan-out and
+//! a serial replay of the outputs reproduces the serial engine
+//! exactly. Merge and split transitions never happen concurrently
+//! with refills: insert/remove/rebuild all run in the engine's serial
+//! event phases (see "Parallel event loop" in `docs/ARCHITECTURE.md`).
 
 use super::alloc::{find, TaskRes, MAX_TASK_RES};
 

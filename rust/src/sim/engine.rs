@@ -75,6 +75,32 @@
 //! tolerance-based (per-task trace times and makespan within `1e-6`
 //! relative) rather than bitwise — see `sim/horizon.rs` and
 //! `docs/ARCHITECTURE.md` ("Time advance").
+//!
+//! ## Parallel event loop (§Perf)
+//!
+//! The fourth orthogonal axis, [`SimConfig::threads`], exploits the
+//! component partition for wall-clock parallelism. Every event is an
+//! *epoch*: a serial prologue on the coordinating thread drains the
+//! dirty-component list (re-anchoring, capacity release, partition
+//! rebuild — every merge/split of the contention graph happens here,
+//! behind the epoch barrier), then the refills of the freshly rebuilt
+//! components — mutually independent by construction, since fresh
+//! components have disjoint members *and* disjoint resources — fan out
+//! across worker threads via [`crate::util::par::par_map_with`], and a
+//! serial epilogue replays each worker's recorded effects (key
+//! updates, capacity residuals, rates, starts, finish predictions) in
+//! component order, which is exactly the serial path's order. Workers
+//! write only to per-worker arenas (`EngineWorker`, kept warm in the
+//! [`SimScratch`] across events and runs), so each refill is a pure
+//! function of `(component, pre-epoch state)` and the result is
+//! bit-identical for every thread count — `threads == 1` (default) is
+//! the serial oracle path, exactly like `FullResort` / `WholeSet` /
+//! `Eager` before it. Only [`AllocKind::Components`] has shardable
+//! work; other configs run serially regardless of `threads`. Events
+//! that touch few tasks skip the fan-out entirely
+//! (`PAR_FILL_MIN_TASKS`) so thread-spawn overhead never lands on
+//! the small-event fast path. See `docs/ARCHITECTURE.md` ("Parallel
+//! event loop") for the shard-ownership and barrier rules.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
@@ -86,6 +112,7 @@ use super::ready::{f64_ord, BucketQueue, PrioKey, ReadyQueue, ResortQueue};
 use super::spec::{CpuPolicy, Cluster, NetPolicy, Policy, SimDag};
 use crate::mxdag::TaskId;
 use crate::util::json::Json;
+use crate::util::par::par_map_with;
 
 const EPS: f64 = 1e-9;
 /// Resource-saturation threshold. Must match the allocator's internal
@@ -281,6 +308,31 @@ pub struct SimConfig {
     /// sweep. Anchored is the default; eager is the bit-exact baseline
     /// the tolerance oracle pairs it with.
     pub horizon: HorizonKind,
+    /// Worker threads for the component-sharded parallel fill (see the
+    /// module docs, "Parallel event loop"): `1` is the serial oracle
+    /// path; `N > 1` fans dirty-component refills across `N` workers
+    /// with effects replayed in deterministic serial order, so results
+    /// are bit-identical across thread counts. Only
+    /// [`AllocKind::Components`] has shardable work; other configs run
+    /// serially regardless. The default is `1`, overridable by the
+    /// `MXDAG_TEST_THREADS` environment variable (read once per
+    /// process) so CI can sweep the whole test suite through the
+    /// parallel path without touching every construction site.
+    pub threads: usize,
+}
+
+/// Default worker-thread count: `1` (serial oracle), or the
+/// `MXDAG_TEST_THREADS` override when set to an integer ≥ 1. Read once
+/// per process so `SimConfig::default()` stays cheap on the hot path.
+fn default_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("MXDAG_TEST_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    })
 }
 
 impl Default for SimConfig {
@@ -291,21 +343,26 @@ impl Default for SimConfig {
             queue: QueueKind::Incremental,
             alloc: AllocKind::Components,
             horizon: HorizonKind::Anchored,
+            threads: default_threads(),
         }
     }
 }
 
 impl SimConfig {
     /// Apply a scenario-JSON `"engine"` object, the file-side mirror of
-    /// the CLI's `--queue` / `--alloc` / `--horizon` flags (which
-    /// override it): `{"queue": "incremental|fullresort", "alloc":
-    /// "components|wholeset", "horizon": "eager|anchored"}`, every key
-    /// optional.
+    /// the CLI's `--queue` / `--alloc` / `--horizon` / `--threads`
+    /// flags (which override it): `{"queue":
+    /// "incremental|fullresort", "alloc": "components|wholeset",
+    /// "horizon": "eager|anchored", "threads": N}`, every key
+    /// optional. `threads` must be an integer ≥ 1 (0 is rejected — the
+    /// serial oracle is `threads: 1`, not "no threads").
     pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
         let obj = j.as_obj().map_err(|e| e.to_string())?;
         for key in obj.keys() {
-            if !matches!(key.as_str(), "queue" | "alloc" | "horizon") {
-                return Err(format!("unknown engine key `{key}` (queue|alloc|horizon)"));
+            if !matches!(key.as_str(), "queue" | "alloc" | "horizon" | "threads") {
+                return Err(format!(
+                    "unknown engine key `{key}` (queue|alloc|horizon|threads)"
+                ));
             }
         }
         if let Some(v) = obj.get("queue") {
@@ -316,6 +373,13 @@ impl SimConfig {
         }
         if let Some(v) = obj.get("horizon") {
             self.horizon = HorizonKind::parse(v.as_str().map_err(|e| e.to_string())?)?;
+        }
+        if let Some(v) = obj.get("threads") {
+            let x = v.as_f64().map_err(|e| e.to_string())?;
+            if x.fract() != 0.0 || x < 1.0 {
+                return Err(format!("engine threads must be an integer >= 1, got {x}"));
+            }
+            self.threads = x as usize;
         }
         Ok(())
     }
@@ -329,6 +393,13 @@ impl SimConfig {
 /// it to update its class-saturation counter for the early-exit test
 /// (the component path walks all of a component's levels and needs no
 /// saturation bookkeeping).
+///
+/// Starts are *deferred*: a not-yet-started task receiving its first
+/// positive rate is appended to `starts` (at most once per event — a
+/// task is filled by exactly one level of one walk) and the caller
+/// stamps `started` / `trace` after the allocation step. `started` is
+/// read-only here so fills can run on worker threads against shared
+/// state.
 #[allow(clippy::too_many_arguments)]
 fn alloc_level_maxmin(
     level: &[usize],
@@ -339,10 +410,9 @@ fn alloc_level_maxmin(
     sub_res: &mut Vec<TaskRes>,
     sub_idx: &mut Vec<usize>,
     sub_rates: &mut Vec<f64>,
-    started: &mut [bool],
-    trace: &mut [TaskTrace],
+    started: &[bool],
+    starts: &mut Vec<usize>,
     rated: &mut Vec<(usize, f64)>,
-    now: f64,
 ) {
     sub_res.clear();
     sub_idx.clear();
@@ -363,8 +433,7 @@ fn alloc_level_maxmin(
         let r = sub_rates[i];
         if r > EPS {
             if !started[t] {
-                started[t] = true;
-                trace[t].start = now;
+                starts.push(t);
             }
             rated.push((t, r));
         }
@@ -377,6 +446,8 @@ fn alloc_level_maxmin(
 /// every (queue, alloc) configuration bit-for-bit comparable. Leaves
 /// `touched` populated with the unit's resources (the whole-set walk
 /// reads it for saturation marking); `load_touched` is reset on return.
+/// Starts are deferred into `starts` exactly as in
+/// [`alloc_level_maxmin`].
 #[allow(clippy::too_many_arguments)]
 fn madd_level(
     level: &[usize],
@@ -386,10 +457,9 @@ fn madd_level(
     load: &mut [f64],
     load_touched: &mut [bool],
     touched: &mut Vec<usize>,
-    started: &mut [bool],
-    trace: &mut [TaskTrace],
+    started: &[bool],
+    starts: &mut Vec<usize>,
     rated: &mut Vec<(usize, f64)>,
-    now: f64,
 ) {
     let mut tau = 0.0f64;
     touched.clear();
@@ -416,8 +486,7 @@ fn madd_level(
             let rate = remaining[t] / tau;
             if rate > EPS {
                 if !started[t] {
-                    started[t] = true;
-                    trace[t].start = now;
+                    starts.push(t);
                 }
                 rated.push((t, rate));
             }
@@ -433,11 +502,16 @@ fn madd_level(
 
 /// Refill one (freshly rebuilt) contention component: sort its members
 /// into the same key levels the ready queues would expose, then walk
-/// them high → low allocating on residual capacity. The rates land in
-/// `out_rated`, the component's memoized allocation. The caller must
-/// have reset the component's resources to full capacity first — only
-/// this component's tasks draw on them, so the per-resource arithmetic
-/// replays exactly what the whole-set walk would do.
+/// them high → low allocating on residual capacity. The rates are
+/// *appended* to `out_rated` (serial callers clear the memoized slot
+/// first; parallel workers pack many components' rates into one arena
+/// and slice it by spans) — the component's memoized allocation. The
+/// caller must have reset the component's resources to full capacity
+/// first — only this component's tasks draw on them, so the
+/// per-resource arithmetic replays exactly what the whole-set walk
+/// would do. Everything shared is `&` (read-only); all mutation lands
+/// in caller-owned scratch/output buffers, which is what lets the
+/// parallel path run this concurrently per component.
 #[allow(clippy::too_many_arguments)]
 fn fill_component(
     sorted: &mut Vec<usize>,
@@ -453,15 +527,13 @@ fn fill_component(
     sub_res: &mut Vec<TaskRes>,
     sub_idx: &mut Vec<usize>,
     sub_rates: &mut Vec<f64>,
-    started: &mut [bool],
-    trace: &mut [TaskTrace],
+    started: &[bool],
+    starts: &mut Vec<usize>,
     out_rated: &mut Vec<(usize, f64)>,
     load: &mut [f64],
     load_touched: &mut [bool],
     touched: &mut Vec<usize>,
-    now: f64,
 ) {
-    out_rated.clear();
     sorted.clear();
     sorted.extend_from_slice(members);
     // the queue's level partition: descending key, ascending id within a
@@ -484,9 +556,8 @@ fn fill_component(
                 load_touched,
                 touched,
                 started,
-                trace,
+                starts,
                 out_rated,
-                now,
             );
         } else {
             alloc_level_maxmin(
@@ -499,9 +570,8 @@ fn fill_component(
                 sub_idx,
                 sub_rates,
                 started,
-                trace,
+                starts,
                 out_rated,
-                now,
             );
         }
         i = j;
@@ -568,6 +638,86 @@ fn sebf_bound_group(
         load_touched[r] = false;
     }
     bnd
+}
+
+/// Minimum total member count (summed over an epoch's freshly rebuilt
+/// components) before the refill fan-out spawns worker threads. Below
+/// this the epoch runs inline on the coordinating thread through the
+/// *same* code path (one worker state), so the choice is pure wall
+/// clock: a scoped spawn costs tens of microseconds while a typical
+/// small-event refill costs ~1 µs. The threshold is deterministic —
+/// it depends only on the epoch's dirty set, never on timing — so it
+/// cannot perturb results.
+const PAR_FILL_MIN_TASKS: usize = 256;
+
+/// Per-worker state for the component-sharded parallel fill (module
+/// docs, "Parallel event loop"). A worker owns private scratch
+/// (capacities, keys, allocation buffers) plus append-only output
+/// arenas; the coordinator slices the arenas by the spans each refill
+/// returns and replays them in component order. Workers live in the
+/// [`SimScratch`] so they stay warm across epochs and runs.
+#[derive(Debug, Default)]
+struct EngineWorker {
+    /// This worker's index in the fan-out slice, stamped by the
+    /// coordinator before each epoch so a refill can record which
+    /// arenas its spans point into.
+    id: usize,
+    /// Private residual capacities, seeded per component from `caps0`
+    /// over the component's (exact, disjoint) resource set.
+    wcaps: Vec<f64>,
+    /// Private key view (anchored+coflow only): global `key_of` seeded
+    /// for the component's members, then locally re-keyed from
+    /// re-anchored bytes. The refreshed keys are recorded in
+    /// `keys_out` for the coordinator to apply to the real queues.
+    wkeys: Vec<PrioKey>,
+    users: Vec<f64>,
+    ascr: AllocScratch,
+    load: Vec<f64>,
+    load_touched: Vec<bool>,
+    touched: Vec<usize>,
+    sorted: Vec<usize>,
+    grp_seen: Vec<bool>,
+    grp_list: Vec<usize>,
+    sub_res: Vec<TaskRes>,
+    sub_idx: Vec<usize>,
+    sub_rates: Vec<f64>,
+    // append-only output arenas, sliced by `FillSpans`
+    keys_out: Vec<(usize, PrioKey)>,
+    rated_out: Vec<(usize, f64)>,
+    starts_out: Vec<usize>,
+    caps_out: Vec<(usize, f64)>,
+}
+
+impl EngineWorker {
+    /// Grow the private per-resource / per-group buffers to this run's
+    /// arena shape (grow-only, so warm workers allocate nothing in
+    /// steady state). `load_touched` / `grp_seen` keep their all-false
+    /// invariant: new slots are false and the fill algorithms reset
+    /// every slot they set.
+    fn ensure(&mut self, n_res: usize, n_groups: usize) {
+        if self.wcaps.len() < n_res {
+            self.wcaps.resize(n_res, 0.0);
+            self.users.resize(n_res, 0.0);
+            self.load.resize(n_res, 0.0);
+            self.load_touched.resize(n_res, false);
+        }
+        if self.grp_seen.len() < n_groups {
+            self.grp_seen.resize(n_groups, false);
+        }
+    }
+}
+
+/// One parallel refill's result: which worker ran it plus half-open
+/// ranges into that worker's output arenas. Replaying the ranges in
+/// item (= component) order reproduces the serial path's effect order
+/// exactly.
+#[derive(Clone, Copy)]
+struct FillSpans {
+    worker: usize,
+    keys: (usize, usize),
+    rated: (usize, usize),
+    starts: (usize, usize),
+    caps: (usize, usize),
 }
 
 /// Reusable engine state for batched plan evaluation: the ready queues
@@ -639,6 +789,13 @@ pub struct SimScratch {
     dirty_singles: Vec<usize>,
     heap_removed: Vec<usize>,
     heap_inserts: Vec<(usize, f64)>,
+    // deferred starts: tasks receiving their first positive rate this
+    // event, stamped into `started`/`trace` right after step 3
+    starts: Vec<usize>,
+    // parallel event loop: warm per-worker states and the epoch's
+    // fresh-component worklist (see "Parallel event loop" module docs)
+    workers: Vec<EngineWorker>,
+    fill_list: Vec<usize>,
     // footprint buffers for the `simulate_in` convenience path
     fp_task_res: Vec<TaskRes>,
     fp_is_flow: Vec<bool>,
@@ -915,6 +1072,21 @@ pub fn simulate_with_footprints(
     heap_removed.clear();
     let mut heap_inserts = std::mem::take(&mut scratch.heap_inserts);
     heap_inserts.clear();
+    // deferred starts (applied after step 3 each event)
+    let mut starts = std::mem::take(&mut scratch.starts);
+    starts.clear();
+
+    // Parallel event loop (module docs): fan dirty-component refills
+    // across `cfg.threads` warm workers. Shardable work only exists
+    // under component-wise allocation; `threads <= 1` keeps the serial
+    // oracle path.
+    let par_on = comps_on && cfg.threads > 1;
+    let mut workers = std::mem::take(&mut scratch.workers);
+    if par_on && workers.len() < cfg.threads {
+        workers.resize_with(cfg.threads, EngineWorker::default);
+    }
+    let mut fill_list = std::mem::take(&mut scratch.fill_list);
+    fill_list.clear();
 
     // A task's dependencies are met: record its live order, hand it to
     // the arrival worklist, and update its coflow barrier.
@@ -1216,7 +1388,221 @@ pub fn simulate_with_footprints(
 
         // 3. allocate rates
         let allow_exit = cfg.queue == QueueKind::Incremental;
-        if comps_on {
+        if par_on {
+            // Parallel event loop (module docs): the same component-wise
+            // allocation, restructured as one epoch per event.
+            //
+            // Phase A (serial prologue): drain every dirty component —
+            // re-anchor members, release capacity, rebuild the
+            // partition. All merges/splits of the contention graph
+            // happen here, behind the epoch barrier, so the fresh
+            // components collected in `fill_list` are mutually
+            // independent: disjoint members *and* disjoint exact
+            // resource sets.
+            fill_list.clear();
+            let mut total_members = 0usize;
+            while let Some(c) = comps.pop_dirty() {
+                if anchored {
+                    for &t in comps.members(c) {
+                        let r = rate_of[t];
+                        if r > 0.0 {
+                            rate_of[t] = 0.0;
+                            remaining[t] = (remaining[t] - r * (now - anchor_t[t])).max(0.0);
+                        }
+                        fins.remove(t);
+                        anchor_t[t] = now;
+                        if remaining[t] <= EPS {
+                            near_done.push(t);
+                        }
+                    }
+                }
+                for &r in comps.res_of(c) {
+                    if r < n_res {
+                        caps[r] = caps0[r];
+                    }
+                }
+                new_comps.clear();
+                comps.rebuild(c, task_res, &virt, &mut new_comps);
+                for &nc in &new_comps {
+                    total_members += comps.members(nc).len();
+                    fill_list.push(nc);
+                }
+            }
+            if comp_rated.len() < comps.slot_bound() {
+                comp_rated.resize_with(comps.slot_bound(), Vec::new);
+            }
+
+            // Phase B (parallel): refill every fresh component. Below
+            // the deterministic size threshold the same closure runs
+            // inline on one worker state — identical results, no spawn
+            // overhead on small events. Workers read only pre-epoch
+            // shared state and write only their own arenas, so each
+            // refill is a pure function of `(component, epoch state)`.
+            let nw = if total_members >= PAR_FILL_MIN_TASKS {
+                cfg.threads.min(workers.len())
+            } else {
+                1
+            };
+            for (i, w) in workers.iter_mut().enumerate().take(nw) {
+                w.id = i;
+                w.keys_out.clear();
+                w.rated_out.clear();
+                w.starts_out.clear();
+                w.caps_out.clear();
+            }
+            let rekey = anchored && coflow_on;
+            let spans = {
+                let comps_view = &comps;
+                let key_view: &[PrioKey] = &key_of;
+                let started_view: &[bool] = &started;
+                let remaining_view: &[f64] = &remaining;
+                let queued_view: &[bool] = &queued;
+                let seq_view: &[u64] = &seq;
+                let group_of_view: &[Option<usize>] = &group_of;
+                let members_view: &[Vec<usize>] = &members;
+                par_map_with(&fill_list, &mut workers[..nw], |w, _i, &nc| {
+                    w.ensure(n_res, n_groups);
+                    let mem = comps_view.members(nc);
+                    // seed private capacities: exactly the post-release
+                    // state the serial fill reads
+                    for &r in comps_view.res_of(nc) {
+                        if r < n_res {
+                            w.wcaps[r] = caps0[r];
+                        }
+                    }
+                    let keys_s = w.keys_out.len();
+                    if rekey {
+                        // SEBF drift detection, parallel flavour: the
+                        // serial path's per-component re-key loop run
+                        // against the worker's private key view, every
+                        // refreshed key recorded for the coordinator to
+                        // replay onto the real queues in order.
+                        if w.wkeys.len() < n {
+                            w.wkeys.resize(n, PrioKey::LEVEL);
+                        }
+                        for &t in mem {
+                            w.wkeys[t] = key_view[t];
+                        }
+                        w.grp_list.clear();
+                        for &t in mem {
+                            if !is_flow_v[t] {
+                                continue;
+                            }
+                            match group_of_view[t] {
+                                Some(gi) => {
+                                    if !w.grp_seen[gi] {
+                                        w.grp_seen[gi] = true;
+                                        w.grp_list.push(gi);
+                                    }
+                                }
+                                None => {
+                                    let bnd = sebf_bound_single(
+                                        t,
+                                        remaining_view,
+                                        task_res,
+                                        caps0,
+                                    );
+                                    let key = PrioKey::from_bound_asc(
+                                        bnd,
+                                        n_groups as u64 + seq_view[t],
+                                    );
+                                    w.wkeys[t] = key;
+                                    w.keys_out.push((t, key));
+                                }
+                            }
+                        }
+                        for gi_at in 0..w.grp_list.len() {
+                            let gi = w.grp_list[gi_at];
+                            w.grp_seen[gi] = false;
+                            let bnd = sebf_bound_group(
+                                &members_view[gi],
+                                queued_view,
+                                is_flow_v,
+                                remaining_view,
+                                task_res,
+                                caps0,
+                                &mut w.load,
+                                &mut w.load_touched,
+                                &mut w.touched,
+                            );
+                            let key = PrioKey::from_bound_asc(bnd, gi as u64);
+                            for &m in members_view[gi].iter() {
+                                if queued_view[m] && is_flow_v[m] {
+                                    w.wkeys[m] = key;
+                                    w.keys_out.push((m, key));
+                                }
+                            }
+                        }
+                    }
+                    let rated_s = w.rated_out.len();
+                    let starts_s = w.starts_out.len();
+                    let keyref: &[PrioKey] = if rekey { &w.wkeys } else { key_view };
+                    fill_component(
+                        &mut w.sorted,
+                        mem,
+                        keyref,
+                        coflow_on,
+                        is_flow_v,
+                        task_res,
+                        remaining_view,
+                        &mut w.wcaps,
+                        &mut w.users,
+                        &mut w.ascr,
+                        &mut w.sub_res,
+                        &mut w.sub_idx,
+                        &mut w.sub_rates,
+                        started_view,
+                        &mut w.starts_out,
+                        &mut w.rated_out,
+                        &mut w.load,
+                        &mut w.load_touched,
+                        &mut w.touched,
+                    );
+                    let caps_s = w.caps_out.len();
+                    for &r in comps_view.res_of(nc) {
+                        if r < n_res {
+                            w.caps_out.push((r, w.wcaps[r]));
+                        }
+                    }
+                    FillSpans {
+                        worker: w.id,
+                        keys: (keys_s, w.keys_out.len()),
+                        rated: (rated_s, w.rated_out.len()),
+                        starts: (starts_s, w.starts_out.len()),
+                        caps: (caps_s, w.caps_out.len()),
+                    }
+                })
+            };
+
+            // Epilogue (serial): replay each refill's recorded effects
+            // in component order — exactly the serial path's order, so
+            // key updates, capacity residuals, memoized rates, starts
+            // and finish predictions land byte-for-byte where the
+            // `threads == 1` oracle puts them.
+            for (k, sp) in spans.iter().enumerate() {
+                let nc = fill_list[k];
+                let w = &workers[sp.worker];
+                for &(t, key) in &w.keys_out[sp.keys.0..sp.keys.1] {
+                    key_of[t] = key;
+                    rq_net.update_key(t, key);
+                }
+                for &(r, v) in &w.caps_out[sp.caps.0..sp.caps.1] {
+                    caps[r] = v;
+                }
+                comp_rated[nc].clear();
+                comp_rated[nc].extend_from_slice(&w.rated_out[sp.rated.0..sp.rated.1]);
+                starts.extend_from_slice(&w.starts_out[sp.starts.0..sp.starts.1]);
+                if anchored {
+                    for &(t, r) in comp_rated[nc].iter() {
+                        rate_of[t] = r;
+                        anchor_t[t] = now;
+                        let fin =
+                            if remaining[t] <= EPS { now } else { now + remaining[t] / r };
+                        fins.push(t, fin);
+                    }
+                }
+            }
+        } else if comps_on {
             // Component-wise: release and refill only the components an
             // event has touched; every clean component keeps its
             // memoized rates (immutable between the events that touch
@@ -1325,6 +1711,7 @@ pub fn simulate_with_footprints(
                             }
                         }
                     }
+                    comp_rated[nc].clear();
                     fill_component(
                         &mut comp_sorted,
                         comps.members(nc),
@@ -1339,13 +1726,12 @@ pub fn simulate_with_footprints(
                         &mut sub_res,
                         &mut sub_idx,
                         &mut sub_rates,
-                        &mut started,
-                        &mut trace,
+                        &started,
+                        &mut starts,
                         &mut comp_rated[nc],
                         &mut load,
                         &mut load_touched,
                         &mut touched,
-                        now,
                     );
                     if anchored {
                         // fresh finish predictions anchor the refilled
@@ -1396,10 +1782,9 @@ pub fn simulate_with_footprints(
                         &mut sub_res,
                         &mut sub_idx,
                         &mut sub_rates,
-                        &mut started,
-                        &mut trace,
+                        &started,
+                        &mut starts,
                         &mut rated,
-                        now,
                     );
                     for &t in sub_idx.iter() {
                         for r in task_res[t].iter() {
@@ -1432,10 +1817,9 @@ pub fn simulate_with_footprints(
                             &mut load,
                             &mut load_touched,
                             &mut touched,
-                            &mut started,
-                            &mut trace,
+                            &started,
+                            &mut starts,
                             &mut rated,
-                            now,
                         );
                         for &r in touched.iter() {
                             if !sat_mark[r] && caps[r] <= ALLOC_EPS && caps0[r] > ALLOC_EPS {
@@ -1456,10 +1840,9 @@ pub fn simulate_with_footprints(
                             &mut sub_res,
                             &mut sub_idx,
                             &mut sub_rates,
-                            &mut started,
-                            &mut trace,
+                            &started,
+                            &mut starts,
                             &mut rated,
-                            now,
                         );
                         for &t in sub_idx.iter() {
                             for r in task_res[t].iter() {
@@ -1474,6 +1857,22 @@ pub fn simulate_with_footprints(
                 }
             }
         }
+
+        // Apply the deferred starts: every task that received its first
+        // positive rate this event (each appears at most once — a task
+        // is filled by exactly one level of one walk). Deferring the
+        // `started`/`trace` stamps to this single serial site keeps the
+        // fills read-only on shared per-task state, which is what the
+        // parallel phase-B workers rely on; the observable effect
+        // (`trace[t].start = now`) is identical, and nothing between
+        // the fill and this point reads `started`.
+        for &t in starts.iter() {
+            if !started[t] {
+                started[t] = true;
+                trace[t].start = now;
+            }
+        }
+        starts.clear();
 
         if anchored {
             if !comps_on {
@@ -1727,6 +2126,9 @@ pub fn simulate_with_footprints(
     scratch.dirty_singles = dirty_singles;
     scratch.heap_removed = heap_removed;
     scratch.heap_inserts = heap_inserts;
+    scratch.starts = starts;
+    scratch.workers = workers;
+    scratch.fill_list = fill_list;
 
     Ok(SimResult { makespan: now, trace, orig_start, orig_finish, events })
 }
@@ -2361,6 +2763,16 @@ mod tests {
         assert_eq!(cfg.horizon, HorizonKind::Anchored);
         assert!(cfg.apply_json(&Json::parse(r#"{"horizon":"lazy"}"#).unwrap()).is_err());
         assert!(cfg.apply_json(&Json::parse(r#"{"quue":"incremental"}"#).unwrap()).is_err());
+        // threads: integer >= 1; 0, fractions and non-numbers rejected
+        let mut cfg = SimConfig::default();
+        cfg.apply_json(&Json::parse(r#"{"threads":4}"#).unwrap()).unwrap();
+        assert_eq!(cfg.threads, 4);
+        cfg.apply_json(&Json::parse(r#"{"threads":1}"#).unwrap()).unwrap();
+        assert_eq!(cfg.threads, 1);
+        assert!(cfg.apply_json(&Json::parse(r#"{"threads":0}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"threads":2.5}"#).unwrap()).is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"threads":"four"}"#).unwrap()).is_err());
+        assert_eq!(cfg.threads, 4, "rejected values must not clobber the config");
     }
 
     /// One scratch, many runs: every run must be bit-identical to a
@@ -2471,5 +2883,136 @@ mod tests {
         assert!((r.finish_of(2) - 3.0).abs() < 1e-9, "A keeps the NIC: {}", r.finish_of(2));
         assert!((r.finish_of(3) - 4.0).abs() < 1e-9, "B follows: {}", r.finish_of(3));
         assert!((r.finish_of(4) - 1.2).abs() < 1e-9, "solo flow: {}", r.finish_of(4));
+    }
+
+    /// A wide wave of flows over disjoint host pairs (many live
+    /// components, enough members to cross `PAR_FILL_MIN_TASKS`) plus a
+    /// gated bridge wave that merges neighbouring pairs as the first
+    /// wave drains: the parallel event loop must reproduce the
+    /// `threads = 1` oracle for every thread count — bitwise under the
+    /// eager horizon, within the documented `1e-6` tolerance under
+    /// anchored (in practice the epilogue replay makes anchored bitwise
+    /// too, but the promised contract is the tolerance one).
+    fn wave_dag() -> (SimDag, Cluster) {
+        let hosts = 64;
+        let n_wave = 2 * PAR_FILL_MIN_TASKS;
+        let mut d = SimDag::default();
+        let mut prev = Vec::new();
+        for i in 0..n_wave {
+            let src = (2 * i) % hosts;
+            let dst = (2 * i + 1) % hosts;
+            let t = d.push({
+                let mut t = task(SimKind::Flow { src, dst }, 1.0 + (i % 7) as f64 * 0.25);
+                t.orig = i;
+                t
+            });
+            prev.push(t);
+        }
+        // bridge wave: each flow straddles two neighbouring pairs and
+        // is gated behind both, so completions repeatedly merge and
+        // re-split components; every fourth shares a coflow group to
+        // drive the grouped re-key path through the workers
+        for i in 0..n_wave / 2 {
+            let src = (2 * i + 1) % hosts;
+            let dst = (2 * i + 2) % hosts;
+            let t = d.push({
+                let mut t = task(SimKind::Flow { src, dst }, 0.5 + (i % 5) as f64 * 0.3);
+                t.orig = n_wave + i;
+                t.coflow = Some(i / 4);
+                t
+            });
+            d.dep(prev[i], t);
+            d.dep(prev[i + 1], t);
+        }
+        (d, Cluster::uniform(hosts))
+    }
+
+    #[test]
+    fn parallel_threads_match_serial_oracle() {
+        let (d, cluster) = wave_dag();
+        for policy in [Policy::fair(), Policy::priority(), Policy::fifo(), Policy::coflow()] {
+            for horizon in [HorizonKind::Eager, HorizonKind::Anchored] {
+                let mk = |threads| SimConfig { policy, horizon, threads, ..Default::default() };
+                let base = simulate(&d, &cluster, &mk(1)).unwrap();
+                for threads in [2usize, 4] {
+                    let par = simulate(&d, &cluster, &mk(threads)).unwrap();
+                    if horizon == HorizonKind::Eager {
+                        assert_eq!(
+                            base.events, par.events,
+                            "{policy:?}/{horizon:?} t{threads}"
+                        );
+                        assert_eq!(
+                            base.makespan.to_bits(),
+                            par.makespan.to_bits(),
+                            "{policy:?}/{horizon:?} t{threads}: {} vs {}",
+                            base.makespan,
+                            par.makespan
+                        );
+                        for i in 0..d.len() {
+                            assert_eq!(
+                                base.trace[i].start.to_bits(),
+                                par.trace[i].start.to_bits(),
+                                "{policy:?} t{threads} chunk {i} start"
+                            );
+                            assert_eq!(
+                                base.trace[i].finish.to_bits(),
+                                par.trace[i].finish.to_bits(),
+                                "{policy:?} t{threads} chunk {i} finish"
+                            );
+                        }
+                    } else {
+                        let close = crate::sim::horizon::within_tolerance;
+                        assert!(
+                            close(base.makespan, par.makespan),
+                            "{policy:?} t{threads}: makespan {} vs {}",
+                            base.makespan,
+                            par.makespan
+                        );
+                        for i in 0..d.len() {
+                            assert!(
+                                close(base.trace[i].start, par.trace[i].start)
+                                    && close(base.trace[i].finish, par.trace[i].finish),
+                                "{policy:?} t{threads} chunk {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Small events must not regress under `threads > 1`: a DAG far
+    /// below the fan-out threshold runs the parallel path inline (one
+    /// worker, zero spawns) and still matches the oracle bitwise.
+    #[test]
+    fn parallel_inline_below_threshold_is_bit_identical() {
+        let mut d = SimDag::default();
+        let a = d.push({ let mut t = task(SimKind::Compute { host: 0 }, 1.5); t.orig = 1; t });
+        let f1 = d.push({
+            let mut t = task(SimKind::Flow { src: 0, dst: 1 }, 2.0);
+            t.orig = 2;
+            t.priority = 5;
+            t
+        });
+        let b = d.push({ let mut t = task(SimKind::Compute { host: 1 }, 1.0); t.orig = 4; t });
+        d.dep(a, f1);
+        d.dep(f1, b);
+        let cluster = Cluster::uniform(3);
+        for horizon in [HorizonKind::Eager, HorizonKind::Anchored] {
+            let mk = |threads| SimConfig {
+                policy: Policy::priority(),
+                horizon,
+                threads,
+                ..Default::default()
+            };
+            let base = simulate(&d, &cluster, &mk(1)).unwrap();
+            let par = simulate(&d, &cluster, &mk(4)).unwrap();
+            assert_eq!(base.events, par.events, "{horizon:?}");
+            assert_eq!(base.makespan.to_bits(), par.makespan.to_bits(), "{horizon:?}");
+            for i in 0..d.len() {
+                assert_eq!(base.trace[i].start.to_bits(), par.trace[i].start.to_bits());
+                assert_eq!(base.trace[i].finish.to_bits(), par.trace[i].finish.to_bits());
+            }
+        }
     }
 }

@@ -35,8 +35,13 @@
 //! `{Incremental, FullResort} × {Components, WholeSet} × {Eager,
 //! Anchored}` matrix by `tests/prop_queue_equivalence.rs` and
 //! `benches/sched_scaling.rs`, while the eager corners keep their
-//! bit-exact oracle among themselves. See `docs/ARCHITECTURE.md`
-//! ("Time advance") for the anchor lifecycle.
+//! bit-exact oracle among themselves. The parallel event loop
+//! (`SimConfig.threads`) answers to the same split: its eager runs are
+//! bit-identical to serial, its anchored runs are promised at this
+//! tolerance (the fan-out computes finish times in worker arenas and a
+//! serial epilogue pushes them in serial order, so in practice the
+//! heap content matches serial bit-for-bit too). See
+//! `docs/ARCHITECTURE.md` ("Time advance") for the anchor lifecycle.
 
 const ABSENT: usize = usize::MAX;
 

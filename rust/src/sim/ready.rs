@@ -56,6 +56,13 @@
 //! these queues would expose globally. A key update therefore also
 //! dirties the task's component — a re-keyed task can change its
 //! component's level structure even when nothing else moved.
+//!
+//! Under the parallel event loop (`SimConfig.threads > 1`) refill
+//! workers never mutate these queues: anchored SEBF re-keys are
+//! computed against per-worker key shadows and replayed through
+//! [`ReadyQueue::update_key`] by the engine's serial epilogue, in the
+//! same order the serial loop would have issued them — the queue
+//! remains a single-threaded structure by design.
 
 use std::cmp::Reverse;
 use std::collections::BTreeMap;

@@ -1,7 +1,11 @@
 //! Zero-dependency deterministic parallel map over `std::thread::scope`.
 //!
 //! The batched plan-space engine fans what-if evaluations across
-//! workers ([`crate::whatif::explore`], MxScheduler's move batches).
+//! workers ([`crate::whatif::explore`], MxScheduler's move batches),
+//! and the simulation engine's parallel event loop fans per-component
+//! refills over warm [`par_map_with`] worker states
+//! (`SimConfig.threads`, see `docs/ARCHITECTURE.md` "Parallel event
+//! loop").
 //! Determinism contract: results are returned **in item order**, and as
 //! long as `f` is a pure function of `(index, item)` — per-worker state
 //! is a cache, never an input — the output is bit-identical for every

@@ -23,7 +23,7 @@ use mxdag::sched::{
 use mxdag::sched::{evaluate, AltruisticScheduler, SelfishScheduler};
 use mxdag::sim::{
     expand, simulate, within_tolerance, AllocKind, Cluster, HorizonKind, Policy, QueueKind,
-    SimConfig, SimResult,
+    SimConfig, SimDag, SimKind, SimResult, SimTask,
 };
 use mxdag::util::propcheck::{check, Config};
 use mxdag::util::rng::Rng;
@@ -56,30 +56,49 @@ const MATRIX: [(QueueKind, AllocKind, HorizonKind); 8] = [
     (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
 ];
 
+/// Thread counts crossed with every corner. `threads = 1` is the
+/// serial oracle (pinned explicitly so a `MXDAG_TEST_THREADS` override
+/// cannot shift the baseline); higher counts fan component refills
+/// across workers and must reproduce the oracle — bit-for-bit on the
+/// eager corners, within the documented tolerance on anchored.
+const THREADS: [usize; 3] = [1, 2, 4];
+
 fn run_matrix(
     plan: &Plan,
     dag: &mxdag::mxdag::MXDag,
     cluster: &Cluster,
-) -> Result<Vec<SimResult>, String> {
+) -> Result<Vec<Vec<SimResult>>, String> {
     let sim = expand(dag, &plan.ann);
     MATRIX
         .iter()
         .map(|&(queue, alloc, horizon)| {
-            simulate(
-                &sim,
-                cluster,
-                &SimConfig { policy: plan.policy, queue, alloc, horizon, ..Default::default() },
-            )
-            .map_err(|e| format!("{queue:?}/{alloc:?}/{horizon:?}: {e}"))
+            THREADS
+                .iter()
+                .map(|&threads| {
+                    simulate(
+                        &sim,
+                        cluster,
+                        &SimConfig {
+                            policy: plan.policy,
+                            queue,
+                            alloc,
+                            horizon,
+                            threads,
+                            ..Default::default()
+                        },
+                    )
+                    .map_err(|e| format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}: {e}"))
+                })
+                .collect()
         })
         .collect()
 }
 
-fn assert_equivalent(tag: &str, results: &[SimResult]) -> Result<(), String> {
-    let base = &results[0];
-    for (k, r) in results.iter().enumerate().skip(1) {
+fn assert_equivalent(tag: &str, results: &[Vec<SimResult>]) -> Result<(), String> {
+    let base = &results[0][0];
+    for (k, corner) in results.iter().enumerate() {
         let (queue, alloc, horizon) = MATRIX[k];
-        let tag = format!("{tag} [{queue:?}/{alloc:?}/{horizon:?}]");
+        let serial = &corner[0];
         // eager corners replay the baseline's event boundaries exactly;
         // anchored corners legitimately group completions differently
         // and are compared on times only, through the shared
@@ -89,21 +108,78 @@ fn assert_equivalent(tag: &str, results: &[SimResult]) -> Result<(), String> {
             HorizonKind::Eager => (x - y).abs() <= 1e-9 || (x.is_nan() && y.is_nan()),
             HorizonKind::Anchored => within_tolerance(x, y),
         };
-        if check_events && base.events != r.events {
-            return Err(format!("{tag}: events {} vs {}", base.events, r.events));
-        }
-        if !same(base.makespan, r.makespan) {
-            return Err(format!("{tag}: makespan {} vs {}", base.makespan, r.makespan));
-        }
-        if base.trace.len() != r.trace.len() {
-            return Err(format!("{tag}: trace length differs"));
-        }
-        for (i, (a, b)) in base.trace.iter().zip(r.trace.iter()).enumerate() {
-            if !same(a.start, b.start) || !same(a.finish, b.finish) {
+        if k > 0 {
+            let tag = format!("{tag} [{queue:?}/{alloc:?}/{horizon:?}]");
+            if check_events && base.events != serial.events {
+                return Err(format!("{tag}: events {} vs {}", base.events, serial.events));
+            }
+            if !same(base.makespan, serial.makespan) {
                 return Err(format!(
-                    "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
-                    a.start, a.finish, b.start, b.finish
+                    "{tag}: makespan {} vs {}",
+                    base.makespan, serial.makespan
                 ));
+            }
+            if base.trace.len() != serial.trace.len() {
+                return Err(format!("{tag}: trace length differs"));
+            }
+            for (i, (a, b)) in base.trace.iter().zip(serial.trace.iter()).enumerate() {
+                if !same(a.start, b.start) || !same(a.finish, b.finish) {
+                    return Err(format!(
+                        "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                        a.start, a.finish, b.start, b.finish
+                    ));
+                }
+            }
+        }
+        // the parallel loop is judged against its own corner's serial
+        // run: eager corners must not change a single bit (same event
+        // boundaries, same float payloads), anchored corners are held
+        // to the tolerance contract
+        for (j, r) in corner.iter().enumerate().skip(1) {
+            let tag = format!("{tag} [{queue:?}/{alloc:?}/{horizon:?} t{}]", THREADS[j]);
+            match horizon {
+                HorizonKind::Eager => {
+                    if serial.events != r.events {
+                        return Err(format!(
+                            "{tag}: events {} vs {}",
+                            serial.events, r.events
+                        ));
+                    }
+                    if serial.makespan.to_bits() != r.makespan.to_bits() {
+                        return Err(format!(
+                            "{tag}: makespan bits {} vs {}",
+                            serial.makespan, r.makespan
+                        ));
+                    }
+                    for (i, (a, b)) in serial.trace.iter().zip(r.trace.iter()).enumerate() {
+                        if a.start.to_bits() != b.start.to_bits()
+                            || a.finish.to_bits() != b.finish.to_bits()
+                        {
+                            return Err(format!(
+                                "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                                a.start, a.finish, b.start, b.finish
+                            ));
+                        }
+                    }
+                }
+                HorizonKind::Anchored => {
+                    if !within_tolerance(serial.makespan, r.makespan) {
+                        return Err(format!(
+                            "{tag}: makespan {} vs {}",
+                            serial.makespan, r.makespan
+                        ));
+                    }
+                    for (i, (a, b)) in serial.trace.iter().zip(r.trace.iter()).enumerate() {
+                        if !within_tolerance(a.start, b.start)
+                            || !within_tolerance(a.finish, b.finish)
+                        {
+                            return Err(format!(
+                                "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                                a.start, a.finish, b.start, b.finish
+                            ));
+                        }
+                    }
+                }
             }
         }
     }
@@ -251,5 +327,134 @@ fn anchored_drift_bounded_on_long_run() {
     println!(
         "anchored drift over {} events: worst relative finish drift {worst:.3e}",
         eager.events
+    );
+}
+
+/// Parameters for the merge/split storm: alternating waves of flows
+/// over disjoint host pairs (many small components) and gated bridge
+/// flows that straddle neighbouring pairs (components merge as bridges
+/// arrive, re-split as they drain). The widest waves exceed the
+/// parallel fill threshold, so `threads > 1` runs take the fan-out
+/// path — not the inline fallback — through every merge and split.
+#[derive(Debug, Clone, Copy)]
+struct StormParams {
+    pairs: usize,
+    per_pair: usize,
+    waves: usize,
+    seed: u64,
+}
+
+fn storm_dag(p: &StormParams) -> (SimDag, Cluster) {
+    let hosts = 2 * p.pairs;
+    let mut rng = Rng::new(p.seed);
+    let mut d = SimDag::default();
+    let flow = |src: usize, dst: usize, size: f64, coflow: Option<usize>| SimTask {
+        orig: 0,
+        chunk: (0, 1),
+        kind: SimKind::Flow { src, dst },
+        size,
+        priority: 0,
+        gate: 0.0,
+        coflow,
+    };
+    // prev[p] holds the previous wave's tasks touching host pair p
+    let mut prev: Vec<Vec<usize>> = vec![Vec::new(); p.pairs];
+    for w in 0..p.waves {
+        let mut next: Vec<Vec<usize>> = vec![Vec::new(); p.pairs];
+        if w % 2 == 0 {
+            // split wave: flows stay inside their own pair, so any
+            // components the previous bridge wave glued together fall
+            // apart again as it drains
+            for pair in 0..p.pairs {
+                for _ in 0..p.per_pair {
+                    let mut t = flow(
+                        2 * pair,
+                        2 * pair + 1,
+                        rng.range_f64(0.5, 3.0),
+                        None,
+                    );
+                    t.orig = d.len();
+                    let id = d.push(t);
+                    for &g in prev[pair].iter() {
+                        d.dep(g, id);
+                    }
+                    next[pair].push(id);
+                }
+            }
+        } else {
+            // bridge wave: each flow straddles two neighbouring pairs
+            // and is gated on both, arriving exactly when the engine
+            // must merge their components; shared coflow tags pull the
+            // grouped SEBF re-key path into the storm as well
+            for pair in 0..p.pairs - 1 {
+                let mut t = flow(
+                    2 * pair + 1,
+                    2 * pair + 2,
+                    rng.range_f64(0.5, 2.0),
+                    Some(pair / 2),
+                );
+                t.orig = d.len();
+                let id = d.push(t);
+                if let Some(&g) = prev[pair].last() {
+                    d.dep(g, id);
+                }
+                if let Some(&g) = prev[pair + 1].first() {
+                    d.dep(g, id);
+                }
+                next[pair].push(id);
+                next[pair + 1].push(id);
+            }
+        }
+        prev = next;
+    }
+    (d, Cluster::uniform(hosts))
+}
+
+/// The dedicated merge/split storm: adversarial arrivals repeatedly
+/// bridge and re-split components while every corner of the
+/// (queue, alloc, horizon, threads) matrix must keep agreeing.
+#[test]
+fn prop_merge_split_storm_agrees() {
+    check(
+        "merge-split-storm",
+        &Config { cases: 6, ..Default::default() },
+        |rng: &mut Rng| StormParams {
+            pairs: rng.range(8, 33),
+            per_pair: rng.range(4, 11),
+            waves: rng.range(3, 7),
+            seed: rng.next_u64(),
+        },
+        |p| {
+            let (d, cluster) = storm_dag(p);
+            for policy in [Policy::fair(), Policy::priority(), Policy::coflow()] {
+                let results: Vec<Vec<SimResult>> = MATRIX
+                    .iter()
+                    .map(|&(queue, alloc, horizon)| {
+                        THREADS
+                            .iter()
+                            .map(|&threads| {
+                                simulate(
+                                    &d,
+                                    &cluster,
+                                    &SimConfig {
+                                        policy,
+                                        queue,
+                                        alloc,
+                                        horizon,
+                                        threads,
+                                        ..Default::default()
+                                    },
+                                )
+                                .map_err(|e| {
+                                    format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}: {e}")
+                                })
+                            })
+                            .collect::<Result<Vec<_>, _>>()
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                assert_equivalent(&format!("storm {policy:?}"), &results)?;
+            }
+            Ok(())
+        },
     );
 }
