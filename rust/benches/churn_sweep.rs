@@ -1,0 +1,218 @@
+//! Cluster-dynamics throughput — what fabric churn costs the engine's
+//! fast paths. Three regimes per workload size, all on the
+//! incremental-queue + component-allocation corner:
+//!
+//! 1. **frozen** — empty timeline (the pre-dynamics cost profile; the
+//!    engine must not pay for churn it isn't experiencing),
+//! 2. **churn** — a seeded random timeline of degradations, restores
+//!    and stragglers spread across the run,
+//! 3. **flap** — a link degrading/restoring on a period far denser
+//!    than the task event rate, so nearly every step is a dynamics
+//!    boundary (the worst case for the step-0 rescan).
+//!
+//! Oracles run on every invocation, before timing: under the churn
+//! timeline every corner of the {queue} × {alloc} × {horizon} matrix ×
+//! threads ∈ {1, 4} must match the serial whole-set oracle —
+//! bit-identical events/makespan/traces on the eager corners, within
+//! the shared 1e-6 tolerance on anchored — and the frozen run must be
+//! bit-identical to a `SimConfig` that never mentions dynamics at all.
+//! `BENCH_SMOKE=1` (the CI bench-smoke job) shrinks sizes and still
+//! runs every oracle.
+//!
+//! Results are printed as tables (README §Performance) and persisted
+//! to `BENCH_sim.json` (section `churn_sweep`) for cross-PR tracking.
+
+use std::time::Instant;
+
+use mxdag::sim::{
+    expand, simulate, within_tolerance, AllocKind, Cluster, DynTimeline, HorizonKind, LinkRef,
+    QueueKind, SimConfig, SimDag, SimResult,
+};
+use mxdag::util::bench::{write_bench_json, Table};
+use mxdag::util::json::Json;
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn shapes() -> Vec<(usize, usize)> {
+    if smoke() {
+        vec![(4, 4)]
+    } else {
+        vec![(10, 10), (16, 16), (24, 24)]
+    }
+}
+
+/// Best-of-`reps` wall time for `f` (which must be pure).
+fn timed<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+const MATRIX: [(QueueKind, AllocKind, HorizonKind); 8] = [
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
+];
+
+fn run(sim: &SimDag, cluster: &Cluster, cfg: &SimConfig) -> SimResult {
+    simulate(sim, cluster, cfg).expect("bench workload must complete")
+}
+
+/// The full-matrix churn oracle (untimed): every corner × threads
+/// {1, 4} against the serial whole-set baseline.
+fn churn_oracle(sim: &SimDag, cluster: &Cluster, timeline: &DynTimeline) {
+    let mk = |(queue, alloc, horizon): (QueueKind, AllocKind, HorizonKind), threads| SimConfig {
+        queue,
+        alloc,
+        horizon,
+        threads,
+        dynamics: timeline.clone(),
+        ..Default::default()
+    };
+    let base = run(sim, cluster, &mk(MATRIX[0], 1));
+    for &corner in MATRIX.iter() {
+        for threads in [1usize, 4] {
+            let r = run(sim, cluster, &mk(corner, threads));
+            let tag = format!("{corner:?} t{threads}");
+            match corner.2 {
+                HorizonKind::Eager => {
+                    assert_eq!(base.events, r.events, "{tag}: event count");
+                    assert_eq!(
+                        base.makespan.to_bits(),
+                        r.makespan.to_bits(),
+                        "{tag}: makespan"
+                    );
+                    for (i, (a, b)) in base.trace.iter().zip(r.trace.iter()).enumerate() {
+                        assert_eq!(a.start.to_bits(), b.start.to_bits(), "{tag}: chunk {i}");
+                        assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "{tag}: chunk {i}");
+                    }
+                }
+                HorizonKind::Anchored => {
+                    assert!(
+                        within_tolerance(base.makespan, r.makespan),
+                        "{tag}: makespan {} vs {}",
+                        base.makespan,
+                        r.makespan
+                    );
+                    for (i, (a, b)) in base.trace.iter().zip(r.trace.iter()).enumerate() {
+                        assert!(
+                            within_tolerance(a.start, b.start)
+                                && within_tolerance(a.finish, b.finish),
+                            "{tag}: chunk {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn churn_sweep() -> Json {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let mut table = Table::new(
+        "churn sweep events/s (frozen cluster vs random churn vs flap storm)",
+        &["events", "dyn evts", "frozen", "churn", "flap", "churn/frozen"],
+    );
+    let mut rows = Vec::new();
+    for (layers, width) in shapes() {
+        let p = RandomParams { layers, width, hosts, seed: 47, ..Default::default() };
+        let g = random_dag(&p);
+        let sim = expand(&g, &Default::default());
+        let fast = SimConfig {
+            queue: QueueKind::Incremental,
+            alloc: AllocKind::Components,
+            ..Default::default()
+        };
+
+        // the frozen baseline also sizes the timelines: churn events
+        // are spread over the first 90% of the run, the flap period is
+        // a small fraction of the makespan
+        let frozen = run(&sim, &cluster, &fast);
+        let n_dyn = if smoke() { 8 } else { 64 };
+        let churn = DynTimeline::random(0xC0FE ^ g.len() as u64, &cluster, n_dyn, frozen.makespan * 0.9);
+        let flap_period = frozen.makespan / if smoke() { 20.0 } else { 200.0 };
+        let flap = DynTimeline::flap(LinkRef::NicUp(0), 0.3, flap_period, frozen.makespan);
+
+        // -- oracles first (untimed)
+        // an explicitly-empty timeline must be bit-identical to the
+        // default config: the engine pays nothing for churn it isn't
+        // experiencing
+        let with_empty = run(
+            &sim,
+            &cluster,
+            &SimConfig { dynamics: DynTimeline::new(), ..fast.clone() },
+        );
+        assert_eq!(frozen.events, with_empty.events, "empty timeline must be free");
+        assert_eq!(frozen.makespan.to_bits(), with_empty.makespan.to_bits());
+        churn_oracle(&sim, &cluster, &churn);
+        churn_oracle(&sim, &cluster, &flap);
+
+        // -- timings
+        let reps = if smoke() { 1 } else { 3 };
+        let churn_cfg = SimConfig { dynamics: churn.clone(), ..fast.clone() };
+        let flap_cfg = SimConfig { dynamics: flap.clone(), ..fast.clone() };
+        let r_churn = run(&sim, &cluster, &churn_cfg);
+        let r_flap = run(&sim, &cluster, &flap_cfg);
+        let t_frozen = timed(reps, || {
+            std::hint::black_box(run(&sim, &cluster, &fast).makespan);
+        });
+        let t_churn = timed(reps, || {
+            std::hint::black_box(run(&sim, &cluster, &churn_cfg).makespan);
+        });
+        let t_flap = timed(reps, || {
+            std::hint::black_box(run(&sim, &cluster, &flap_cfg).makespan);
+        });
+        let evps_frozen = frozen.events as f64 / t_frozen;
+        let evps_churn = r_churn.events as f64 / t_churn;
+        let evps_flap = r_flap.events as f64 / t_flap;
+        table.row(
+            &format!("{} tasks", g.real_tasks().count()),
+            &[
+                format!("{}", frozen.events),
+                format!("{}", churn.len() + flap.len()),
+                format!("{evps_frozen:.0}"),
+                format!("{evps_churn:.0}"),
+                format!("{evps_flap:.0}"),
+                format!("{:.2}x", t_churn / t_frozen),
+            ],
+        );
+        rows.push(Json::obj(vec![
+            ("tasks", Json::Num(g.real_tasks().count() as f64)),
+            ("events_frozen", Json::Num(frozen.events as f64)),
+            ("events_churn", Json::Num(r_churn.events as f64)),
+            ("events_flap", Json::Num(r_flap.events as f64)),
+            ("dyn_events_churn", Json::Num(churn.len() as f64)),
+            ("dyn_events_flap", Json::Num(flap.len() as f64)),
+            ("events_per_sec_frozen", Json::Num(evps_frozen)),
+            ("events_per_sec_churn", Json::Num(evps_churn)),
+            ("events_per_sec_flap", Json::Num(evps_flap)),
+            ("overhead_churn_vs_frozen", Json::Num(t_churn / t_frozen)),
+            ("overhead_flap_vs_frozen", Json::Num(t_flap / t_frozen)),
+        ]));
+    }
+    table.print();
+    Json::Arr(rows)
+}
+
+fn main() {
+    println!("== full-matrix churn oracles run before every timing ==");
+    let rows = churn_sweep();
+    write_bench_json(
+        "churn_sweep",
+        Json::obj(vec![("smoke", Json::Bool(smoke())), ("rows", rows)]),
+    );
+    println!("\nwrote BENCH_sim.json (section `churn_sweep`)");
+}

@@ -53,14 +53,22 @@ fn print_usage() {
            simulate --dag FILE.json [--scheduler mxdag|fair|fifo|coflow|packing]\n\
                     [--topology bigswitch|oversub:RACKS:RATIO|fabrics:K:TRUNK[:hash|bysrc]]\n\
                     [--queue incremental|fullresort] [--alloc components|wholeset]\n\
-                    [--horizon eager|anchored] [--threads N]\n\
+                    [--horizon eager|anchored] [--threads N] [--dynamics FILE.json]\n\
                     (the DAG file may also declare a \"cluster\" object and an\n\
                      \"engine\" object {{\"queue\", \"alloc\", \"horizon\", \"threads\"}};\n\
                      the --topology/--queue/--alloc/--horizon/--threads flags\n\
                      override them and select the engine's ready-queue,\n\
                      rate-allocation, time-advance and parallel-refill paths;\n\
                      N>1 fans component refills across worker threads with\n\
-                     results identical to the N=1 serial oracle)\n\
+                     results identical to the N=1 serial oracle;\n\
+                     --dynamics FILE.json injects a cluster-churn timeline —\n\
+                     a JSON array of events like\n\
+                     {{\"at\": 2.0, \"kind\": \"degrade\", \"link\": \"up:0\", \"factor\": 0.5}}\n\
+                     {{\"at\": 3.0, \"kind\": \"fail\", \"link\": \"trunk:1\"}}\n\
+                     {{\"at\": 4.0, \"kind\": \"restore\", \"link\": \"trunk:1\"}}\n\
+                     {{\"at\": 5.0, \"kind\": \"slow_host\", \"host\": 2, \"factor\": 0.25}}\n\
+                     — the DAG file may declare the same array under a\n\
+                     top-level \"dynamics\" key; the flag overrides it)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -384,12 +392,52 @@ fn cmd_simulate(args: &Args) -> i32 {
             }
         }
     }
+    // cluster dynamics: a scenario "dynamics" array first, then
+    // --dynamics FILE overrides it — the same layering as the engine
+    // object vs the engine flags
+    if let Ok(dj) = json.get("dynamics") {
+        match mxdag::sim::DynTimeline::from_json(dj) {
+            Ok(t) => cfg.dynamics = t,
+            Err(e) => {
+                eprintln!("invalid dynamics block: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(dpath) = args.get("dynamics") {
+        let dtext = match std::fs::read_to_string(&dpath) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("read {dpath}: {e}");
+                return 1;
+            }
+        };
+        let djson = match mxdag::util::json::Json::parse(&dtext) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("parse {dpath}: {e}");
+                return 1;
+            }
+        };
+        match mxdag::sim::DynTimeline::from_json(&djson) {
+            Ok(t) => cfg.dynamics = t,
+            Err(e) => {
+                eprintln!("--dynamics: {e}");
+                return 1;
+            }
+        }
+    }
+    // validate against the *final* cluster (after --topology overrides)
+    if let Err(e) = cfg.dynamics.validate(&cluster) {
+        eprintln!("invalid dynamics: {e}");
+        return 1;
+    }
     let plan = sched.plan(&g, &cluster);
     match evaluate_with(&g, &cluster, &plan, &cfg) {
         Ok(r) => {
             println!(
                 "scheduler={} hosts={} topology={:?} queue={:?} alloc={:?} horizon={:?} \
-                 threads={} tasks={} makespan={:.4} events={}",
+                 threads={} dynamics={} tasks={} makespan={:.4} events={}",
                 sched.name(),
                 cluster.n_hosts(),
                 cluster.topology,
@@ -397,6 +445,7 @@ fn cmd_simulate(args: &Args) -> i32 {
                 cfg.alloc,
                 cfg.horizon,
                 cfg.threads,
+                cfg.dynamics.len(),
                 g.real_tasks().count(),
                 r.makespan,
                 r.events

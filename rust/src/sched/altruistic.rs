@@ -11,8 +11,9 @@
 
 use std::collections::BTreeMap;
 
+use super::mxsched::{cpm_durations, cpm_on};
 use super::{Plan, Scheduler};
-use crate::mxdag::{cpm, MXDag, TaskId, TaskKind};
+use crate::mxdag::{MXDag, TaskId, TaskKind};
 use crate::sim::{Annotations, Cluster, Policy, QueueDiscipline, SimResult};
 
 /// Several MXDAGs merged onto one shared cluster.
@@ -66,13 +67,21 @@ impl MultiDag {
 }
 
 /// Per-job CPM restricted to the merged graph: durations of other jobs'
-/// tasks are zeroed so each job sees only its own structure.
-fn per_job_cpm(multi: &MultiDag, job: usize) -> crate::mxdag::Cpm {
+/// tasks are zeroed so each job sees only its own structure. `costed`
+/// supplies the full-graph per-task durations — plain sizes for the
+/// historical size-based spelling, or [`cpm_durations`] when the gates
+/// should reason about the cluster's real per-path bandwidths.
+fn per_job_cpm(multi: &MultiDag, job: usize, costed: &[f64]) -> crate::mxdag::Cpm {
     let mut dur: Vec<f64> = vec![0.0; multi.dag.len()];
     for &t in &multi.jobs[job] {
-        dur[t] = multi.dag.task(t).size;
+        dur[t] = costed[t];
     }
     crate::mxdag::cpm_with(&multi.dag, &dur)
+}
+
+/// Plain task sizes as durations (the unit-rate assumption).
+fn size_durations(multi: &MultiDag) -> Vec<f64> {
+    multi.dag.tasks().iter().map(|t| t.size).collect()
 }
 
 /// Principle-2 scheduler.
@@ -86,18 +95,38 @@ impl AltruisticScheduler {
     /// half rate (fair sharing after the gate) the task still meets its
     /// latest finish time.
     pub fn plan_multi_raw(&self, multi: &MultiDag) -> Plan {
+        self.plan_with_durations(multi, &size_durations(multi))
+    }
+
+    /// The Principle-2 plan gated by *cluster-costed* durations: per-job
+    /// CPM runs over `size / solo-bottleneck-rate` ([`cpm_durations`]),
+    /// so a flow squeezed through an oversubscribed or degraded fabric
+    /// link carries its real duration into the LST computation. The
+    /// gates — and hence how long a non-critical task may altruistically
+    /// wait — then reason about fabric links, not just the unit-NIC
+    /// assumption. On a uniform big-switch cluster every solo rate is 1
+    /// and this is bit-identical to
+    /// [`plan_multi_raw`](AltruisticScheduler::plan_multi_raw).
+    pub fn plan_multi_on(&self, multi: &MultiDag, cluster: &Cluster) -> Plan {
+        self.plan_with_durations(multi, &cpm_durations(&multi.dag, cluster))
+    }
+
+    /// Shared body of the raw/cluster-costed plans: critical tasks of
+    /// any job outrank all non-critical tasks; non-critical tasks are
+    /// gated to `max(EST, LST − duration)` in whatever duration domain
+    /// `costed` expresses.
+    fn plan_with_durations(&self, multi: &MultiDag, costed: &[f64]) -> Plan {
         let mut ann = Annotations::default();
         let n = multi.dag.len();
         for (job, tasks) in multi.jobs.iter().enumerate() {
-            let c = per_job_cpm(multi, job);
+            let c = per_job_cpm(multi, job, costed);
             let prios = c.priorities();
             for &t in tasks {
                 if c.is_critical(t) {
                     ann.priorities.insert(t, n as i64 + prios[t]);
                 } else {
                     ann.priorities.insert(t, prios[t]);
-                    let margin_gate =
-                        (c.lst[t] - multi.dag.task(t).size).max(c.est[t]);
+                    let margin_gate = (c.lst[t] - costed[t]).max(c.est[t]);
                     ann.gates.insert(t, margin_gate);
                 }
             }
@@ -106,15 +135,18 @@ impl AltruisticScheduler {
     }
 
     /// Principle-2 plan with the paper's guarantee enforced ("without
-    /// increasing its own end-to-end completion time"): the raw plan is
-    /// what-if simulated against the selfish plan on `cluster`; if any
-    /// job would regress, fall back to selfish.
+    /// increasing its own end-to-end completion time"): the
+    /// cluster-costed plan
+    /// ([`plan_multi_on`](AltruisticScheduler::plan_multi_on)) is
+    /// what-if simulated
+    /// against the selfish plan on `cluster`; if any job would regress,
+    /// fall back to selfish.
     pub fn plan_multi_checked(
         &self,
         multi: &MultiDag,
         cluster: &crate::sim::Cluster,
     ) -> Plan {
-        let altru = self.plan_multi_raw(multi);
+        let altru = self.plan_multi_on(multi, cluster);
         let selfish = SelfishScheduler.plan_multi(multi);
         let (Ok(ra), Ok(rs)) = (
             super::evaluate(&multi.dag, cluster, &altru),
@@ -140,15 +172,28 @@ impl Scheduler for AltruisticScheduler {
     fn name(&self) -> &'static str {
         "altruistic"
     }
-    /// Single-DAG degenerate case: behaves like critical-path priority.
-    fn plan(&self, dag: &MXDag, _cluster: &Cluster) -> Plan {
-        let c = cpm(dag);
+    /// Single-DAG degenerate case: behaves like critical-path priority,
+    /// costed against the cluster ([`cpm_on`]) so a degraded or
+    /// oversubscribed link reshapes criticality exactly as in the
+    /// multi-job gates.
+    fn plan(&self, dag: &MXDag, cluster: &Cluster) -> Plan {
+        let c = cpm_on(dag, cluster);
         let prios = c.priorities();
         let mut ann = Annotations::default();
         for t in dag.real_tasks() {
             ann.priorities.insert(t, prios[t]);
         }
         Plan { ann, policy: Policy::priority() }
+    }
+
+    /// Reactive replanning after cluster churn: the whole pipeline —
+    /// per-path costing, per-job CPM, LST gates — is a pure function of
+    /// `(dag, cluster)`, so reacting to a degraded fabric is simply
+    /// re-running it against the *current* capacities. The previous
+    /// plan's gates are in stale time units and are deliberately
+    /// discarded.
+    fn replan(&self, dag: &MXDag, cluster: &Cluster, _previous: &Plan) -> Plan {
+        self.plan(dag, cluster)
     }
     /// Static priorities plus gates; the leftover-bandwidth altruism is
     /// expressed through gate times, not through drifting keys, so the
@@ -169,9 +214,10 @@ pub struct SelfishScheduler;
 
 impl SelfishScheduler {
     pub fn plan_multi(&self, multi: &MultiDag) -> Plan {
+        let sizes = size_durations(multi);
         let mut ann = Annotations::default();
         for (job, tasks) in multi.jobs.iter().enumerate() {
-            let c = per_job_cpm(multi, job);
+            let c = per_job_cpm(multi, job, &sizes);
             let prios = c.priorities();
             for &t in tasks {
                 ann.priorities.insert(t, prios[t]);
@@ -251,9 +297,52 @@ mod tests {
     fn per_job_cpm_ignores_other_jobs() {
         let (j1, j2) = workloads::fig7_jobs();
         let multi = merge(&[j1, j2]);
-        let c0 = per_job_cpm(&multi, 0);
+        let c0 = per_job_cpm(&multi, 0, &size_durations(&multi));
         // job 1's critical path length is its own 5.0, not inflated by job 2
         assert!((c0.makespan - 5.0).abs() < 1e-9, "got {}", c0.makespan);
+    }
+
+    /// On a uniform big-switch cluster every solo rate is 1, so the
+    /// cluster-costed plan must be bit-identical to the size-based one
+    /// (this is what keeps `plan_multi_checked`'s switch to
+    /// [`AltruisticScheduler::plan_multi_on`] invisible on the Fig. 7
+    /// scenarios).
+    #[test]
+    fn plan_multi_on_uniform_matches_size_based() {
+        let (j1, j2) = workloads::fig7_jobs();
+        let multi = merge(&[j1, j2]);
+        let raw = AltruisticScheduler.plan_multi_raw(&multi);
+        let on = AltruisticScheduler.plan_multi_on(&multi, &Cluster::uniform(4));
+        assert_eq!(raw.ann.priorities, on.ann.priorities);
+        assert_eq!(raw.ann.gates.len(), on.ann.gates.len());
+        for (t, g) in &raw.ann.gates {
+            assert_eq!(g.to_bits(), on.ann.gates[t].to_bits(), "gate of task {t}");
+        }
+    }
+
+    /// Principle-2 gating must reason about oversubscribed fabric links:
+    /// a size-2 cross-rack flow really takes 4 through a 0.5-capacity
+    /// aggregation link, so its latest start collapses from 4 to 2 and
+    /// the one-duration altruism margin swallows the whole gate. The
+    /// size-based spelling would happily hold it back until t = 2.
+    #[test]
+    fn fabric_costing_tightens_altruistic_gates() {
+        let mut b = MXDag::builder();
+        let fa = b.flow("fa", 2, 3, 6.0); // intra-rack: solo rate 1
+        let fb = b.flow("fb", 0, 2, 2.0); // cross-rack: solo rate 0.5
+        let _ = fa;
+        let g = b.finalize().unwrap();
+        let multi = merge(&[g]);
+        let fb = multi.dag.by_name("fb").unwrap();
+
+        // size-based: critical path 6, fb LST 4, gate max(0, 4-2) = 2
+        let raw = AltruisticScheduler.plan_multi_raw(&multi);
+        assert!((raw.ann.gates[&fb] - 2.0).abs() < 1e-9, "size-based gate {:?}", raw.ann.gates);
+
+        // costed on agg cap 0.5: fb duration 4, LST 2, gate max(0, 2-4) = 0
+        let oversub = Cluster::oversubscribed(4, 2, 4.0);
+        let on = AltruisticScheduler.plan_multi_on(&multi, &oversub);
+        assert!((on.ann.gates[&fb] - 0.0).abs() < 1e-9, "costed gate {:?}", on.ann.gates);
     }
 
     #[test]

@@ -80,6 +80,19 @@ pub trait Scheduler {
     /// Produce the schedule for `dag` on `cluster`.
     fn plan(&self, dag: &MXDag, cluster: &Cluster) -> Plan;
 
+    /// React to a cluster change mid-run: produce a fresh schedule for
+    /// the (possibly degraded) `cluster`, given the plan that was in
+    /// force before the change. The default simply re-plans from
+    /// scratch — correct for every scheduler whose `plan` is a pure
+    /// function of `(dag, cluster)`. Schedulers that cost paths through
+    /// the cluster (`MxScheduler`'s Eq. 2 ordering, the altruistic
+    /// CPM gates) override this to document that the re-run sees the
+    /// *degraded* capacities, so Principle-2 gating reasons about
+    /// oversubscribed fabric links rather than the nominal NIC rates.
+    fn replan(&self, dag: &MXDag, cluster: &Cluster, _previous: &Plan) -> Plan {
+        self.plan(dag, cluster)
+    }
+
     /// The ready-queue disciplines this scheduler's plans may request
     /// from the engine (see the module docs). Most schedulers emit a
     /// single discipline; `MxScheduler` may also fall back to fair

@@ -287,6 +287,21 @@ impl Scheduler for MxScheduler {
         }
     }
 
+    /// Reactive replanning after cluster churn (fabric degradation,
+    /// stragglers, trunk failure): Eq. 2 ranking and the pipeline
+    /// what-if search are pure functions of `(dag, cluster)` — the
+    /// costed CPM pass re-runs [`cpm_durations`] against the *current*
+    /// capacities and every what-if evaluation goes through a fresh
+    /// [`EvalContext`] on the degraded cluster, so priorities that were
+    /// correct under nominal NIC rates flip when an oversubscribed or
+    /// degraded fabric link becomes the real bottleneck (see the
+    /// `replan_reacts_to_degraded_fabric` test). The previous plan is
+    /// not reused: stale pipelining decisions were accepted against
+    /// simulations of a cluster that no longer exists.
+    fn replan(&self, dag: &MXDag, cluster: &Cluster, _previous: &Plan) -> Plan {
+        self.plan(dag, cluster)
+    }
+
     /// Critical-path static priorities; may fall back to plain fair
     /// sharing when the what-if comparison favours it (see `plan`).
     fn disciplines(&self) -> &'static [QueueDiscipline] {
@@ -424,6 +439,47 @@ mod tests {
         }
         let r = evaluate(&g, &cluster, &plan).unwrap();
         assert!(r.makespan <= 5.0 + 1e-9, "topology-aware plan: {}", r.makespan);
+    }
+
+    /// The replan hook reacting to fabric degradation: the plan drawn
+    /// on the healthy uniform cluster ranks the size-3 intra-rack flow
+    /// above the size-2 cross-rack one; after the aggregation layer
+    /// degrades to 0.5 capacity the cross-rack flow really takes 4, and
+    /// replanning on the degraded cluster must both flip that ordering
+    /// and beat the stale plan's simulated JCT.
+    #[test]
+    fn replan_reacts_to_degraded_fabric() {
+        let mut b = MXDag::builder();
+        let fx = b.flow("fx", 2, 3, 3.0); // intra rack {2,3}
+        let fy = b.flow("fy", 0, 3, 2.0); // cross-rack, same dst NIC
+        let g = b.finalize().unwrap();
+
+        let s = MxScheduler::without_pipelining();
+        let healthy = Cluster::uniform(4);
+        let stale = s.plan(&g, &healthy);
+        if stale.policy == Policy::priority() {
+            assert!(
+                stale.ann.priorities[&fx] > stale.ann.priorities[&fy],
+                "healthy cluster: bigger flow is the critical one: {:?}",
+                stale.ann.priorities
+            );
+        }
+
+        let degraded = Cluster::oversubscribed(4, 2, 4.0); // agg cap 0.5
+        let fresh = s.replan(&g, &degraded, &stale);
+        if fresh.policy == Policy::priority() {
+            assert!(
+                fresh.ann.priorities[&fy] > fresh.ann.priorities[&fx],
+                "replan must flip to the fabric-squeezed flow: {:?}",
+                fresh.ann.priorities
+            );
+        }
+        let stale_ms = evaluate(&g, &degraded, &stale).unwrap().makespan;
+        let fresh_ms = evaluate(&g, &degraded, &fresh).unwrap().makespan;
+        assert!(
+            fresh_ms + 1e-9 < stale_ms,
+            "replanned {fresh_ms} must beat stale {stale_ms} on the degraded fabric"
+        );
     }
 
     #[test]

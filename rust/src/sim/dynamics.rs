@@ -1,0 +1,678 @@
+//! Mid-simulation cluster dynamics: fabric churn as first-class events.
+//!
+//! A [`DynTimeline`] is a deterministic, time-sorted list of
+//! [`DynEvent`]s — link capacity degradation/restore, full link failure
+//! (with `ParallelFabrics` path re-selection in the engine), host
+//! slowdowns/stragglers, and host churn (a host leaving is a slowdown
+//! to zero; rejoining restores it). The engine folds the timeline into
+//! its event loop as a new event class: when simulated time reaches the
+//! next entry, effective base capacities are rescaled, touched
+//! contention components are dirtied, failed-trunk flows are rerouted,
+//! and the finish-time horizon is re-armed (see `sim/engine.rs` step 0).
+//!
+//! Semantics are *absolute*, not cumulative: `Degrade { factor }` sets
+//! the link's capacity multiplier to `factor` (so a second degrade of
+//! the same link overwrites the first rather than compounding), and
+//! `Restore` sets it back to `1.0`. This makes capacity flaps
+//! (degrade/restore cycles) exact round trips: after a restore the
+//! effective capacity is bit-identical to the pre-failure value.
+//!
+//! [`DynState`] is the engine-side cursor: per-slot link factors,
+//! per-host factors, and the index of the next pending event. It lives
+//! in `SimScratch` so warm re-runs reuse its buffers.
+
+use crate::sim::spec::Cluster;
+use crate::sim::topology::Topology;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A named capacity-bearing resource slot: per-host slots by role, or a
+/// fabric extra (aggregation link / parallel-fabric trunk).
+///
+/// String spelling (CLI / scenario JSON): `core:H`, `up:H`, `down:H`,
+/// `agg_up:R`, `agg_down:R`, `trunk:J`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkRef {
+    /// Host `h`'s compute slot.
+    Core(usize),
+    /// Host `h`'s NIC uplink.
+    NicUp(usize),
+    /// Host `h`'s NIC downlink.
+    NicDown(usize),
+    /// Rack `r`'s aggregation uplink (leaf/spine topologies only).
+    AggUp(usize),
+    /// Rack `r`'s aggregation downlink (leaf/spine topologies only).
+    AggDown(usize),
+    /// Parallel fabric `j`'s trunk (`ParallelFabrics` only).
+    Trunk(usize),
+}
+
+impl LinkRef {
+    /// Flat arena slot of this link for a cluster with `n_hosts` hosts.
+    pub fn slot(&self, n_hosts: usize) -> usize {
+        match *self {
+            LinkRef::Core(h) => 3 * h,
+            LinkRef::NicUp(h) => 3 * h + 1,
+            LinkRef::NicDown(h) => 3 * h + 2,
+            LinkRef::AggUp(r) => Topology::agg_up(r, n_hosts),
+            LinkRef::AggDown(r) => Topology::agg_down(r, n_hosts),
+            LinkRef::Trunk(j) => Topology::trunk(j, n_hosts),
+        }
+    }
+
+    /// Stable string spelling, inverse of [`LinkRef::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            LinkRef::Core(h) => format!("core:{h}"),
+            LinkRef::NicUp(h) => format!("up:{h}"),
+            LinkRef::NicDown(h) => format!("down:{h}"),
+            LinkRef::AggUp(r) => format!("agg_up:{r}"),
+            LinkRef::AggDown(r) => format!("agg_down:{r}"),
+            LinkRef::Trunk(j) => format!("trunk:{j}"),
+        }
+    }
+
+    /// Parse a `kind:index` spelling (see type docs).
+    pub fn parse(s: &str) -> Result<LinkRef, String> {
+        let (kind, idx) = s
+            .split_once(':')
+            .ok_or_else(|| format!("link `{s}`: expected kind:index"))?;
+        let i: usize = idx
+            .parse()
+            .map_err(|_| format!("link `{s}`: bad index `{idx}`"))?;
+        match kind {
+            "core" => Ok(LinkRef::Core(i)),
+            "up" => Ok(LinkRef::NicUp(i)),
+            "down" => Ok(LinkRef::NicDown(i)),
+            "agg_up" => Ok(LinkRef::AggUp(i)),
+            "agg_down" => Ok(LinkRef::AggDown(i)),
+            "trunk" => Ok(LinkRef::Trunk(i)),
+            _ => Err(format!(
+                "link `{s}`: unknown kind `{kind}` (core|up|down|agg_up|agg_down|trunk)"
+            )),
+        }
+    }
+
+    /// Check the reference resolves to a real slot of `cluster`.
+    pub fn validate(&self, cluster: &Cluster) -> Result<(), String> {
+        let n = cluster.n_hosts();
+        match *self {
+            LinkRef::Core(h) | LinkRef::NicUp(h) | LinkRef::NicDown(h) => {
+                if h >= n {
+                    return Err(format!(
+                        "link `{}`: host {h} out of range (n_hosts = {n})",
+                        self.label()
+                    ));
+                }
+            }
+            LinkRef::AggUp(r) | LinkRef::AggDown(r) => match cluster.topology {
+                Topology::Oversubscribed { racks, .. } if r < racks => {}
+                Topology::Oversubscribed { racks, .. } => {
+                    return Err(format!(
+                        "link `{}`: rack {r} out of range (racks = {racks})",
+                        self.label()
+                    ));
+                }
+                _ => {
+                    return Err(format!(
+                        "link `{}`: topology has no aggregation links",
+                        self.label()
+                    ));
+                }
+            },
+            LinkRef::Trunk(j) => match cluster.topology {
+                Topology::ParallelFabrics { k, .. } if j < k => {}
+                Topology::ParallelFabrics { k, .. } => {
+                    return Err(format!(
+                        "link `{}`: fabric {j} out of range (k = {k})",
+                        self.label()
+                    ));
+                }
+                _ => {
+                    return Err(format!(
+                        "link `{}`: topology has no parallel-fabric trunks",
+                        self.label()
+                    ));
+                }
+            },
+        }
+        Ok(())
+    }
+}
+
+/// One cluster-state mutation. Factors are absolute multipliers on the
+/// link's or host's base capacity (`0.0` = failed/offline, `1.0` =
+/// healthy); they overwrite rather than compound.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DynAction {
+    /// Set `link`'s capacity multiplier to `factor` (`0.0` = failure).
+    Degrade { link: LinkRef, factor: f64 },
+    /// Set `link`'s multiplier back to `1.0`.
+    Restore { link: LinkRef },
+    /// Scale all three of `host`'s slots (core, NIC up, NIC down) by
+    /// `factor` — a straggler (`0 < factor < 1`) or a departure (`0.0`).
+    SlowHost { host: usize, factor: f64 },
+    /// Set `host`'s multiplier back to `1.0` (a churned host rejoins).
+    RestoreHost { host: usize },
+}
+
+/// A [`DynAction`] scheduled at simulated time `at`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DynEvent {
+    pub at: f64,
+    pub action: DynAction,
+}
+
+/// A time-sorted sequence of [`DynEvent`]s. Equal-time events keep
+/// insertion order (applied in that order within one engine event).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DynTimeline {
+    events: Vec<DynEvent>,
+}
+
+impl DynTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The sorted event list.
+    pub fn events(&self) -> &[DynEvent] {
+        &self.events
+    }
+
+    /// Insert an event, keeping the list sorted by time (stable: an
+    /// event lands after existing events with the same `at`).
+    pub fn push(&mut self, at: f64, action: DynAction) {
+        let i = self.events.partition_point(|e| e.at <= at);
+        self.events.insert(i, DynEvent { at, action });
+    }
+
+    /// Chainable [`DynTimeline::push`].
+    pub fn with(mut self, at: f64, action: DynAction) -> Self {
+        self.push(at, action);
+        self
+    }
+
+    /// A capacity flap: degrade `link` to `factor` at `period`,
+    /// restore at `2 * period`, degrade again at `3 * period`, … while
+    /// the event time stays `< until`.
+    pub fn flap(link: LinkRef, factor: f64, period: f64, until: f64) -> Self {
+        let mut tl = Self::new();
+        let mut t = period;
+        let mut down = true;
+        while t < until {
+            let action = if down {
+                DynAction::Degrade { link, factor }
+            } else {
+                DynAction::Restore { link }
+            };
+            tl.push(t, action);
+            down = !down;
+            t += period;
+        }
+        tl
+    }
+
+    /// A seeded random timeline over `cluster`'s links: `n_events`
+    /// degrade/restore/slow-host events with factors in
+    /// `[0.1, 1.0]` (never a full failure — callers that want failures
+    /// add them explicitly), times in `(0, t_max)`. Deterministic in
+    /// `seed`; used by the equivalence property tests and the bench.
+    pub fn random(seed: u64, cluster: &Cluster, n_events: usize, t_max: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let n = cluster.n_hosts();
+        let mut tl = Self::new();
+        for _ in 0..n_events {
+            let at = rng.range_f64(0.0, t_max).max(1e-3);
+            let roll = rng.below(8);
+            let action = match roll {
+                0 => DynAction::SlowHost {
+                    host: rng.below(n),
+                    factor: rng.range_f64(0.1, 1.0),
+                },
+                1 => DynAction::RestoreHost { host: rng.below(n) },
+                2 | 3 => DynAction::Restore {
+                    link: Self::random_link(&mut rng, cluster),
+                },
+                _ => DynAction::Degrade {
+                    link: Self::random_link(&mut rng, cluster),
+                    factor: rng.range_f64(0.1, 1.0),
+                },
+            };
+            tl.push(at, action);
+        }
+        tl
+    }
+
+    fn random_link(rng: &mut Rng, cluster: &Cluster) -> LinkRef {
+        let n = cluster.n_hosts();
+        match cluster.topology {
+            Topology::BigSwitch => match rng.below(3) {
+                0 => LinkRef::Core(rng.below(n)),
+                1 => LinkRef::NicUp(rng.below(n)),
+                _ => LinkRef::NicDown(rng.below(n)),
+            },
+            Topology::Oversubscribed { racks, .. } => match rng.below(5) {
+                0 => LinkRef::Core(rng.below(n)),
+                1 => LinkRef::NicUp(rng.below(n)),
+                2 => LinkRef::NicDown(rng.below(n)),
+                3 => LinkRef::AggUp(rng.below(racks)),
+                _ => LinkRef::AggDown(rng.below(racks)),
+            },
+            Topology::ParallelFabrics { k, .. } => match rng.below(5) {
+                0 => LinkRef::Core(rng.below(n)),
+                1 => LinkRef::NicUp(rng.below(n)),
+                2 => LinkRef::NicDown(rng.below(n)),
+                _ => LinkRef::Trunk(rng.below(k)),
+            },
+        }
+    }
+
+    /// Check every event against `cluster`: link references must
+    /// resolve, times and factors must be finite and non-negative.
+    pub fn validate(&self, cluster: &Cluster) -> Result<(), String> {
+        let n = cluster.n_hosts();
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.at.is_finite() || e.at < 0.0 {
+                return Err(format!("dynamics[{i}]: bad time {}", e.at));
+            }
+            match e.action {
+                DynAction::Degrade { link, factor } => {
+                    link.validate(cluster)?;
+                    if !factor.is_finite() || factor < 0.0 {
+                        return Err(format!("dynamics[{i}]: bad factor {factor}"));
+                    }
+                }
+                DynAction::Restore { link } => link.validate(cluster)?,
+                DynAction::SlowHost { host, factor } => {
+                    if host >= n {
+                        return Err(format!(
+                            "dynamics[{i}]: host {host} out of range (n_hosts = {n})"
+                        ));
+                    }
+                    if !factor.is_finite() || factor < 0.0 {
+                        return Err(format!("dynamics[{i}]: bad factor {factor}"));
+                    }
+                }
+                DynAction::RestoreHost { host } => {
+                    if host >= n {
+                        return Err(format!(
+                            "dynamics[{i}]: host {host} out of range (n_hosts = {n})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a JSON array of event objects:
+    ///
+    /// ```json
+    /// [{"at": 2.0, "kind": "degrade", "link": "trunk:1", "factor": 0.5},
+    ///  {"at": 3.0, "kind": "fail",    "link": "up:0"},
+    ///  {"at": 4.0, "kind": "restore", "link": "trunk:1"},
+    ///  {"at": 1.0, "kind": "slow_host",    "host": 3, "factor": 0.25},
+    ///  {"at": 5.0, "kind": "restore_host", "host": 3}]
+    /// ```
+    ///
+    /// `fail` is shorthand for `degrade` with factor `0.0`.
+    pub fn from_json(j: &Json) -> Result<DynTimeline, String> {
+        let arr = j.as_arr().map_err(|e| format!("dynamics: {e}"))?;
+        let mut tl = DynTimeline::new();
+        for (i, ev) in arr.iter().enumerate() {
+            let ctx = |e: &dyn std::fmt::Display| format!("dynamics[{i}]: {e}");
+            let at = ev.get("at").and_then(|v| v.as_f64()).map_err(|e| ctx(&e))?;
+            let kind = ev.get("kind").and_then(|v| v.as_str()).map_err(|e| ctx(&e))?;
+            let link = |key: &str| -> Result<LinkRef, String> {
+                let s = ev.get(key).and_then(|v| v.as_str()).map_err(|e| ctx(&e))?;
+                LinkRef::parse(s).map_err(|e| ctx(&e))
+            };
+            let host = || ev.get("host").and_then(|v| v.as_usize()).map_err(|e| ctx(&e));
+            let factor = || ev.get("factor").and_then(|v| v.as_f64()).map_err(|e| ctx(&e));
+            let action = match kind {
+                "degrade" => DynAction::Degrade { link: link("link")?, factor: factor()? },
+                "fail" => DynAction::Degrade { link: link("link")?, factor: 0.0 },
+                "restore" => DynAction::Restore { link: link("link")? },
+                "slow_host" => DynAction::SlowHost { host: host()?, factor: factor()? },
+                "restore_host" => DynAction::RestoreHost { host: host()? },
+                _ => {
+                    return Err(format!(
+                        "dynamics[{i}]: unknown kind `{kind}` \
+                         (degrade|fail|restore|slow_host|restore_host)"
+                    ))
+                }
+            };
+            tl.push(at, action);
+        }
+        Ok(tl)
+    }
+
+    /// Serialize to the [`DynTimeline::from_json`] format.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| match e.action {
+                    DynAction::Degrade { link, factor } => Json::obj(vec![
+                        ("at", Json::Num(e.at)),
+                        ("kind", Json::Str("degrade".into())),
+                        ("link", Json::Str(link.label())),
+                        ("factor", Json::Num(factor)),
+                    ]),
+                    DynAction::Restore { link } => Json::obj(vec![
+                        ("at", Json::Num(e.at)),
+                        ("kind", Json::Str("restore".into())),
+                        ("link", Json::Str(link.label())),
+                    ]),
+                    DynAction::SlowHost { host, factor } => Json::obj(vec![
+                        ("at", Json::Num(e.at)),
+                        ("kind", Json::Str("slow_host".into())),
+                        ("host", Json::Num(host as f64)),
+                        ("factor", Json::Num(factor)),
+                    ]),
+                    DynAction::RestoreHost { host } => Json::obj(vec![
+                        ("at", Json::Num(e.at)),
+                        ("kind", Json::Str("restore_host".into())),
+                        ("host", Json::Num(host as f64)),
+                    ]),
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Engine-side cursor over a [`DynTimeline`]: the current per-slot link
+/// factors, per-host factors, and the next pending event index. Owned
+/// by `SimScratch` so its buffers survive across warm runs.
+#[derive(Debug, Default)]
+pub struct DynState {
+    /// Per-resource-slot capacity multiplier (fabric extras included).
+    link_factor: Vec<f64>,
+    /// Per-host multiplier, applied on top of the three host slots.
+    host_factor: Vec<f64>,
+    /// Index of the next unapplied timeline event.
+    cursor: usize,
+}
+
+impl DynState {
+    /// Reset to the healthy state (all factors `1.0`, cursor at 0).
+    pub fn reset(&mut self, n_res: usize, n_hosts: usize) {
+        self.link_factor.clear();
+        self.link_factor.resize(n_res, 1.0);
+        self.host_factor.clear();
+        self.host_factor.resize(n_hosts, 1.0);
+        self.cursor = 0;
+    }
+
+    /// Time of the next unapplied event, if any.
+    pub fn next_at(&self, tl: &DynTimeline) -> Option<f64> {
+        tl.events.get(self.cursor).map(|e| e.at)
+    }
+
+    /// Effective multiplier for slot `r`: the link factor, times the
+    /// host factor when `r` is one of the `3 * n_hosts` host slots.
+    pub fn factor_of(&self, r: usize, n_hosts: usize) -> f64 {
+        let f = self.link_factor[r];
+        if r < 3 * n_hosts {
+            f * self.host_factor[r / 3]
+        } else {
+            f
+        }
+    }
+
+    /// Whether the fabric link occupying slot `r` is up (host factors
+    /// do not apply to fabric extras).
+    pub fn link_alive(&self, r: usize) -> bool {
+        self.link_factor[r] > 0.0
+    }
+
+    /// Apply every event with `at <= now + eps`, rescaling
+    /// `caps0[r] = base[r] * factor_of(r)` for each touched slot.
+    /// Touched slots are recorded in `touched`/`touched_list`
+    /// (deduplicated; the caller clears the marks after consuming the
+    /// list). Returns `true` if any fabric-extra slot (`r >= 3 *
+    /// n_hosts`) was touched — the signal that `ParallelFabrics` path
+    /// re-selection must re-run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_due(
+        &mut self,
+        tl: &DynTimeline,
+        now: f64,
+        eps: f64,
+        n_hosts: usize,
+        base: &[f64],
+        caps0: &mut [f64],
+        touched: &mut [bool],
+        touched_list: &mut Vec<usize>,
+    ) -> bool {
+        let mut extra_touched = false;
+        let mut touch = |r: usize,
+                         touched: &mut [bool],
+                         touched_list: &mut Vec<usize>| {
+            if !touched[r] {
+                touched[r] = true;
+                touched_list.push(r);
+            }
+            if r >= 3 * n_hosts {
+                extra_touched = true;
+            }
+        };
+        while let Some(e) = tl.events.get(self.cursor) {
+            if e.at > now + eps {
+                break;
+            }
+            self.cursor += 1;
+            match e.action {
+                DynAction::Degrade { link, factor } => {
+                    let r = link.slot(n_hosts);
+                    self.link_factor[r] = factor;
+                    touch(r, touched, touched_list);
+                }
+                DynAction::Restore { link } => {
+                    let r = link.slot(n_hosts);
+                    self.link_factor[r] = 1.0;
+                    touch(r, touched, touched_list);
+                }
+                DynAction::SlowHost { host, factor } => {
+                    self.host_factor[host] = factor;
+                    for r in 3 * host..3 * host + 3 {
+                        touch(r, touched, touched_list);
+                    }
+                }
+                DynAction::RestoreHost { host } => {
+                    self.host_factor[host] = 1.0;
+                    for r in 3 * host..3 * host + 3 {
+                        touch(r, touched, touched_list);
+                    }
+                }
+            }
+        }
+        for &r in touched_list.iter() {
+            caps0[r] = base[r] * self.factor_of(r, n_hosts);
+        }
+        extra_touched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_ref_parse_label_round_trip() {
+        for s in ["core:0", "up:3", "down:7", "agg_up:1", "agg_down:0", "trunk:2"] {
+            let l = LinkRef::parse(s).unwrap();
+            assert_eq!(l.label(), s);
+        }
+        assert!(LinkRef::parse("nope:1").is_err());
+        assert!(LinkRef::parse("trunk").is_err());
+        assert!(LinkRef::parse("up:x").is_err());
+    }
+
+    #[test]
+    fn link_ref_slots_match_arena_layout() {
+        let n = 4;
+        assert_eq!(LinkRef::Core(2).slot(n), 6);
+        assert_eq!(LinkRef::NicUp(2).slot(n), 7);
+        assert_eq!(LinkRef::NicDown(2).slot(n), 8);
+        assert_eq!(LinkRef::AggUp(1).slot(n), Topology::agg_up(1, n));
+        assert_eq!(LinkRef::Trunk(0).slot(n), Topology::trunk(0, n));
+    }
+
+    #[test]
+    fn link_ref_validate_checks_topology_kind() {
+        let big = Cluster::uniform(4);
+        assert!(LinkRef::NicUp(3).validate(&big).is_ok());
+        assert!(LinkRef::NicUp(4).validate(&big).is_err());
+        assert!(LinkRef::Trunk(0).validate(&big).is_err());
+        assert!(LinkRef::AggUp(0).validate(&big).is_err());
+
+        let fab = Cluster::parallel_fabrics(4, 2, 1.5);
+        assert!(LinkRef::Trunk(1).validate(&fab).is_ok());
+        assert!(LinkRef::Trunk(2).validate(&fab).is_err());
+        assert!(LinkRef::AggUp(0).validate(&fab).is_err());
+
+        let over = Cluster::oversubscribed(4, 2, 2.0);
+        assert!(LinkRef::AggDown(1).validate(&over).is_ok());
+        assert!(LinkRef::AggDown(2).validate(&over).is_err());
+    }
+
+    #[test]
+    fn timeline_push_keeps_sorted_and_stable() {
+        let mut tl = DynTimeline::new();
+        tl.push(2.0, DynAction::Restore { link: LinkRef::NicUp(0) });
+        tl.push(1.0, DynAction::Degrade { link: LinkRef::NicUp(0), factor: 0.5 });
+        tl.push(2.0, DynAction::Restore { link: LinkRef::NicUp(1) });
+        let ats: Vec<f64> = tl.events().iter().map(|e| e.at).collect();
+        assert_eq!(ats, vec![1.0, 2.0, 2.0]);
+        // equal-time events keep insertion order
+        assert_eq!(
+            tl.events()[1].action,
+            DynAction::Restore { link: LinkRef::NicUp(0) }
+        );
+        assert_eq!(
+            tl.events()[2].action,
+            DynAction::Restore { link: LinkRef::NicUp(1) }
+        );
+    }
+
+    #[test]
+    fn flap_alternates_degrade_restore() {
+        let tl = DynTimeline::flap(LinkRef::Trunk(0), 0.5, 1.0, 4.5);
+        assert_eq!(tl.len(), 4);
+        assert!(matches!(tl.events()[0].action, DynAction::Degrade { .. }));
+        assert!(matches!(tl.events()[1].action, DynAction::Restore { .. }));
+        assert!(matches!(tl.events()[2].action, DynAction::Degrade { .. }));
+        assert_eq!(tl.events()[3].at, 4.0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let tl = DynTimeline::new()
+            .with(1.0, DynAction::Degrade { link: LinkRef::Trunk(1), factor: 0.25 })
+            .with(2.0, DynAction::SlowHost { host: 3, factor: 0.5 })
+            .with(3.0, DynAction::Restore { link: LinkRef::Trunk(1) })
+            .with(4.0, DynAction::RestoreHost { host: 3 });
+        let j = tl.to_json();
+        let back = DynTimeline::from_json(&j).unwrap();
+        assert_eq!(back, tl);
+        // `fail` parses as a zero-factor degrade
+        let j = Json::parse(r#"[{"at": 1.5, "kind": "fail", "link": "up:0"}]"#).unwrap();
+        let tl = DynTimeline::from_json(&j).unwrap();
+        assert_eq!(
+            tl.events()[0].action,
+            DynAction::Degrade { link: LinkRef::NicUp(0), factor: 0.0 }
+        );
+        assert!(DynTimeline::from_json(
+            &Json::parse(r#"[{"at": 1, "kind": "warp", "link": "up:0"}]"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_and_bad_factors() {
+        let fab = Cluster::parallel_fabrics(4, 2, 1.5);
+        let ok = DynTimeline::new()
+            .with(1.0, DynAction::Degrade { link: LinkRef::Trunk(0), factor: 0.5 });
+        assert!(ok.validate(&fab).is_ok());
+        let bad_link = DynTimeline::new()
+            .with(1.0, DynAction::Restore { link: LinkRef::Trunk(9) });
+        assert!(bad_link.validate(&fab).is_err());
+        let bad_factor = DynTimeline::new()
+            .with(1.0, DynAction::SlowHost { host: 0, factor: -1.0 });
+        assert!(bad_factor.validate(&fab).is_err());
+        let bad_host = DynTimeline::new()
+            .with(1.0, DynAction::RestoreHost { host: 4 });
+        assert!(bad_host.validate(&fab).is_err());
+        let bad_time = DynTimeline::new()
+            .with(f64::NAN, DynAction::RestoreHost { host: 0 });
+        assert!(bad_time.validate(&fab).is_err());
+    }
+
+    #[test]
+    fn apply_due_rescales_and_marks_touched() {
+        let fab = Cluster::parallel_fabrics(2, 2, 1.5);
+        let n = fab.n_hosts();
+        let base = fab.capacities();
+        let mut caps0 = base.clone();
+        let tl = DynTimeline::new()
+            .with(1.0, DynAction::Degrade { link: LinkRef::Trunk(0), factor: 0.5 })
+            .with(1.0, DynAction::SlowHost { host: 1, factor: 0.25 })
+            .with(5.0, DynAction::Restore { link: LinkRef::Trunk(0) });
+        let mut st = DynState::default();
+        st.reset(fab.n_resources(), n);
+        let mut touched = vec![false; fab.n_resources()];
+        let mut list = Vec::new();
+
+        // nothing due before t = 1
+        assert!(!st.apply_due(&tl, 0.5, 1e-9, n, &base, &mut caps0, &mut touched, &mut list));
+        assert!(list.is_empty());
+        assert_eq!(st.next_at(&tl), Some(1.0));
+
+        // both t = 1 events land atomically; trunk touch reported
+        let extra = st.apply_due(&tl, 1.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list);
+        assert!(extra);
+        let trunk0 = Topology::trunk(0, n);
+        assert_eq!(caps0[trunk0], base[trunk0] * 0.5);
+        for r in 3..6 {
+            assert_eq!(caps0[r], base[r] * 0.25);
+        }
+        assert!(st.link_alive(trunk0)); // degraded but not failed
+        assert_eq!(list.len(), 4); // trunk + 3 host slots, deduped
+        assert_eq!(st.next_at(&tl), Some(5.0));
+        for &r in &list {
+            touched[r] = false;
+        }
+        list.clear();
+
+        // restore is an exact round trip
+        st.apply_due(&tl, 5.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list);
+        assert_eq!(caps0[trunk0].to_bits(), base[trunk0].to_bits());
+        assert_eq!(st.next_at(&tl), None);
+    }
+
+    #[test]
+    fn random_timeline_is_deterministic_and_valid() {
+        let fab = Cluster::parallel_fabrics(6, 3, 1.5);
+        let a = DynTimeline::random(42, &fab, 20, 10.0);
+        let b = DynTimeline::random(42, &fab, 20, 10.0);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        a.validate(&fab).unwrap();
+        let c = DynTimeline::random(43, &fab, 20, 10.0);
+        assert_ne!(a, c);
+        // sorted
+        for w in a.events().windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+}

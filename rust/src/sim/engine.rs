@@ -107,9 +107,11 @@ use std::collections::{BTreeMap, BinaryHeap};
 
 use super::alloc::{self, AllocScratch, TaskRes};
 use super::components::{AllocKind, CompSet};
+use super::dynamics::{DynState, DynTimeline};
 use super::horizon::{FinHeap, HorizonKind};
 use super::ready::{f64_ord, BucketQueue, PrioKey, ReadyQueue, ResortQueue};
-use super::spec::{CpuPolicy, Cluster, NetPolicy, Policy, SimDag};
+use super::spec::{res_down, res_up, CpuPolicy, Cluster, NetPolicy, Policy, SimDag, SimKind};
+use super::topology::Topology;
 use crate::mxdag::TaskId;
 use crate::util::json::Json;
 use crate::util::par::par_map_with;
@@ -319,6 +321,12 @@ pub struct SimConfig {
     /// process) so CI can sweep the whole test suite through the
     /// parallel path without touching every construction site.
     pub threads: usize,
+    /// Mid-simulation cluster dynamics (see `sim/dynamics.rs`): a
+    /// time-sorted churn timeline folded into the event loop as its own
+    /// event class. Empty (the default) means a frozen cluster — the
+    /// engine then never copies capacities or footprints and every
+    /// code path is bit-identical to the pre-dynamics behaviour.
+    pub dynamics: DynTimeline,
 }
 
 /// Default worker-thread count: `1` (serial oracle), or the
@@ -344,6 +352,7 @@ impl Default for SimConfig {
             alloc: AllocKind::Components,
             horizon: HorizonKind::Anchored,
             threads: default_threads(),
+            dynamics: DynTimeline::default(),
         }
     }
 }
@@ -799,6 +808,17 @@ pub struct SimScratch {
     // footprint buffers for the `simulate_in` convenience path
     fp_task_res: Vec<TaskRes>,
     fp_is_flow: Vec<bool>,
+    // cluster dynamics (`sim/dynamics.rs`): timeline cursor + factor
+    // state, the engine-owned effective capacities / footprints, the
+    // touched-slot marks of the event being applied, and the surviving
+    // trunk list for `ParallelFabrics` reroute. All empty (and never
+    // touched) while the run's timeline is empty.
+    dyn_state: DynState,
+    dyn_caps: Vec<f64>,
+    dyn_task_res: Vec<TaskRes>,
+    dyn_touched: Vec<bool>,
+    dyn_touched_list: Vec<usize>,
+    dyn_alive: Vec<usize>,
 }
 
 /// Truncate/grow a nested scratch vector to `n` cleared inner buffers,
@@ -863,24 +883,25 @@ pub fn simulate_with_footprints(
     dag: &SimDag,
     cluster: &Cluster,
     cfg: &SimConfig,
-    task_res: &[TaskRes],
+    task_res_in: &[TaskRes],
     is_flow_v: &[bool],
-    caps0: &[f64],
+    caps0_in: &[f64],
     scratch: &mut SimScratch,
 ) -> Result<SimResult, SimError> {
     let n = dag.len();
-    debug_assert_eq!(task_res.len(), n, "footprints must cover every task");
+    debug_assert_eq!(task_res_in.len(), n, "footprints must cover every task");
     debug_assert_eq!(is_flow_v.len(), n, "flow flags must cover every task");
     let n_hosts = cluster.n_hosts();
-    let n_res = caps0.len();
+    let n_res = caps0_in.len();
 
     // Resource classes are disjoint: computes draw only on cores
     // (`res_core`), flows only on NICs + fabric links. Count the
     // positive-capacity resources of each class once — when a level walk
     // has saturated all of them, every remaining level allocates zero.
+    // (Recounted in dynamics step 0 whenever churn rescales a capacity.)
     let mut n_cores_pos = 0usize;
     let mut n_net_pos = 0usize;
-    for (r, &c) in caps0.iter().enumerate() {
+    for (r, &c) in caps0_in.iter().enumerate() {
         if c > ALLOC_EPS {
             if super::spec::is_core_slot(r, n_hosts) {
                 n_cores_pos += 1;
@@ -888,6 +909,37 @@ pub fn simulate_with_footprints(
                 n_net_pos += 1;
             }
         }
+    }
+
+    // Cluster dynamics (`sim/dynamics.rs`). With an empty timeline the
+    // engine copies nothing: the per-iteration `caps0` / `task_res`
+    // bindings below alias the caller's slices directly and every code
+    // path is bit-identical to a frozen cluster. With a non-empty
+    // timeline the engine owns mutable copies (scratch-backed, warm
+    // across runs) that step 0 rescales / reroutes in place. The
+    // timeline must be valid for `cluster` (CLI and what-if layers
+    // validate; direct callers are debug-asserted here).
+    let dyn_on = !cfg.dynamics.is_empty();
+    let mut dyn_state = std::mem::take(&mut scratch.dyn_state);
+    let mut dyn_caps = std::mem::take(&mut scratch.dyn_caps);
+    let mut dyn_task_res = std::mem::take(&mut scratch.dyn_task_res);
+    let mut dyn_touched = std::mem::take(&mut scratch.dyn_touched);
+    let mut dyn_touched_list = std::mem::take(&mut scratch.dyn_touched_list);
+    let mut dyn_alive = std::mem::take(&mut scratch.dyn_alive);
+    if dyn_on {
+        debug_assert!(
+            cfg.dynamics.validate(cluster).is_ok(),
+            "invalid dynamics timeline (validate against the cluster before simulating)"
+        );
+        dyn_state.reset(n_res, n_hosts);
+        dyn_caps.clear();
+        dyn_caps.extend_from_slice(caps0_in);
+        dyn_task_res.clear();
+        dyn_task_res.extend_from_slice(task_res_in);
+        dyn_touched.clear();
+        dyn_touched.resize(n_res, false);
+        dyn_touched_list.clear();
+        dyn_alive.clear();
     }
 
     let mut remaining = std::mem::take(&mut scratch.remaining);
@@ -1125,7 +1177,7 @@ pub fn simulate_with_footprints(
     users_scratch.resize(n_res, 0.0);
     let mut caps = std::mem::take(&mut scratch.caps);
     caps.clear();
-    caps.extend_from_slice(caps0);
+    caps.extend_from_slice(caps0_in);
     let mut sub_res = std::mem::take(&mut scratch.sub_res);
     sub_res.clear();
     let mut sub_idx = std::mem::take(&mut scratch.sub_idx);
@@ -1163,6 +1215,131 @@ pub fn simulate_with_footprints(
         if events > cfg.max_events {
             return Err(SimError::EventLimit(events));
         }
+
+        // 0. cluster dynamics: fold every timeline entry due at `now`
+        //    into the effective cluster state. Rescale touched
+        //    capacities, re-run `ParallelFabrics` path selection over
+        //    the surviving trunks when a fabric extra changed, and
+        //    dirty exactly the queued tasks whose footprints meet a
+        //    touched slot — their components reprice (and their SEBF
+        //    keys refresh) this event, clean components stay memoized.
+        //    Time advance (steps 4/4') never integrates across a
+        //    pending entry, so rates read here are never stale.
+        if dyn_on && dyn_state.next_at(&cfg.dynamics).map_or(false, |at| at <= now + EPS) {
+            let trunk_change = dyn_state.apply_due(
+                &cfg.dynamics,
+                now,
+                EPS,
+                n_hosts,
+                caps0_in,
+                &mut dyn_caps,
+                &mut dyn_touched,
+                &mut dyn_touched_list,
+            );
+            // the class-saturation counters follow the effective caps
+            n_cores_pos = 0;
+            n_net_pos = 0;
+            for (r, &c) in dyn_caps.iter().enumerate() {
+                if c > ALLOC_EPS {
+                    if super::spec::is_core_slot(r, n_hosts) {
+                        n_cores_pos += 1;
+                    } else {
+                        n_net_pos += 1;
+                    }
+                }
+            }
+            // reroute: re-pick each unfinished flow's trunk over the
+            // surviving fabrics (deterministic task-id order). A flow
+            // with no surviving path keeps its dead footprint so it is
+            // reported as starved on the failed trunk slot.
+            if trunk_change {
+                if let Topology::ParallelFabrics { k, .. } = cluster.topology {
+                    dyn_alive.clear();
+                    for j in 0..k {
+                        if dyn_state.link_alive(Topology::trunk(j, n_hosts)) {
+                            dyn_alive.push(j);
+                        }
+                    }
+                    for t in 0..n {
+                        if done[t] || !is_flow_v[t] {
+                            continue;
+                        }
+                        let (src, dst) = match dag.tasks[t].kind {
+                            SimKind::Flow { src, dst } => (src, dst),
+                            _ => continue,
+                        };
+                        let new_trunk = cluster
+                            .topology
+                            .reroute_trunk(src, dst, &dyn_alive)
+                            .map(|j| Topology::trunk(j, n_hosts));
+                        let cur_trunk = dyn_task_res[t].iter().find(|&r| r >= 3 * n_hosts);
+                        let nt = match (new_trunk, cur_trunk) {
+                            (Some(nt), Some(cur)) if nt != cur => nt,
+                            _ => continue,
+                        };
+                        let mut tr = TaskRes::default();
+                        tr.push(res_up(src));
+                        tr.push(res_down(dst));
+                        tr.push(nt);
+                        dyn_task_res[t] = tr;
+                        if queued[t] {
+                            if comps_on {
+                                // re-home the flow: removal dirties the
+                                // old component (whose stale resource
+                                // list still covers the old trunk's
+                                // release), insertion claims the new
+                                // trunk and dirties the new home
+                                comps.remove(t);
+                                comps.insert(t, &dyn_task_res[t], virt[t]);
+                            }
+                            if coflow_on {
+                                match group_of[t] {
+                                    Some(gi) => {
+                                        if !group_dirty[gi] {
+                                            group_dirty[gi] = true;
+                                            dirty_groups.push(gi);
+                                        }
+                                    }
+                                    None => dirty_singles.push(t),
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // dirty every queued task whose footprint meets a touched
+            // slot: the component repricing (step 3) and the SEBF key
+            // refresh (step 2b) pick these up
+            for t in 0..n {
+                if !queued[t] || !dyn_task_res[t].iter().any(|r| dyn_touched[r]) {
+                    continue;
+                }
+                if comps_on {
+                    comps.mark_task_dirty(t);
+                }
+                if coflow_on && is_flow_v[t] {
+                    match group_of[t] {
+                        Some(gi) => {
+                            if !group_dirty[gi] {
+                                group_dirty[gi] = true;
+                                dirty_groups.push(gi);
+                            }
+                        }
+                        None => dirty_singles.push(t),
+                    }
+                }
+            }
+            for &r in dyn_touched_list.iter() {
+                dyn_touched[r] = false;
+            }
+            dyn_touched_list.clear();
+        }
+
+        // Effective cluster state for this iteration: with dynamics the
+        // engine-owned copies, otherwise the caller's slices verbatim
+        // (no copies, bit-identical to the pre-dynamics engine).
+        let caps0: &[f64] = if dyn_on { &dyn_caps } else { caps0_in };
+        let task_res: &[TaskRes] = if dyn_on { &dyn_task_res } else { task_res_in };
 
         // 1. admit gate-expired tasks back into the arrival stream (their
         //    original live order is preserved through `seq`)
@@ -1909,6 +2086,14 @@ pub fn simulate_with_footprints(
             if let Some(&Reverse((_, _, tg))) = gates.peek() {
                 t_next = t_next.min(dag.tasks[tg].gate);
             }
+            // never advance across a pending dynamics entry: memoized
+            // rates and predicted finishes are only valid up to the
+            // capacity change (step 0 applies it next iteration)
+            if dyn_on {
+                if let Some(at) = dyn_state.next_at(&cfg.dynamics) {
+                    t_next = t_next.min(at);
+                }
+            }
             if !t_next.is_finite() {
                 return Err(deadlock_report(
                     dag, caps0, task_res, &done, &queued, &indeg, &group_of, &group_open,
@@ -1963,6 +2148,14 @@ pub fn simulate_with_footprints(
             }
             if let Some(&Reverse((_, _, tg))) = gates.peek() {
                 dt = dt.min(dag.tasks[tg].gate - now);
+            }
+            // stop the integration sweep at the next dynamics entry
+            // (strictly ahead of `now`: step 0 consumed everything due,
+            // so this can never pin `dt` at zero)
+            if dyn_on {
+                if let Some(at) = dyn_state.next_at(&cfg.dynamics) {
+                    dt = dt.min(at - now);
+                }
             }
             if !dt.is_finite() || dt <= 0.0 {
                 return Err(deadlock_report(
@@ -2129,6 +2322,12 @@ pub fn simulate_with_footprints(
     scratch.starts = starts;
     scratch.workers = workers;
     scratch.fill_list = fill_list;
+    scratch.dyn_state = dyn_state;
+    scratch.dyn_caps = dyn_caps;
+    scratch.dyn_task_res = dyn_task_res;
+    scratch.dyn_touched = dyn_touched;
+    scratch.dyn_touched_list = dyn_touched_list;
+    scratch.dyn_alive = dyn_alive;
 
     Ok(SimResult { makespan: now, trace, orig_start, orig_finish, events })
 }

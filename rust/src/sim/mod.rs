@@ -4,13 +4,15 @@
 //! policies served from an incremental ready-queue (`ready`), a
 //! component-wise rate allocator with memoized rates (`components`,
 //! `alloc`), and anchored time advance over a finish-time heap
-//! (`horizon`). This is
+//! (`horizon`), plus mid-simulation cluster dynamics — fabric churn,
+//! stragglers, reroute — folded into the event loop (`dynamics`). This is
 //! the testbed every scheduler in `sched/` is evaluated on (DESIGN.md §5
 //! records why a fluid model preserves the paper's comparisons;
 //! `docs/ARCHITECTURE.md` documents the engine ↔ scheduler contract).
 
 pub mod alloc;
 pub mod components;
+pub mod dynamics;
 pub mod engine;
 pub mod expand;
 pub mod horizon;
@@ -20,6 +22,7 @@ pub mod topology;
 
 pub use alloc::{AllocScratch, TaskRes};
 pub use components::{AllocKind, CompSet};
+pub use dynamics::{DynAction, DynEvent, DynState, DynTimeline, LinkRef};
 pub use engine::{
     simulate, simulate_in, simulate_with_footprints, QueueKind, SimConfig, SimError, SimResult,
     SimScratch, StuckReason,

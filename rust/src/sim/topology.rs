@@ -165,6 +165,33 @@ impl Topology {
         }
     }
 
+    /// Re-run `ParallelFabrics` path selection for a `(src, dst)` flow
+    /// against the surviving trunk set. `alive` is the ascending list
+    /// of fabric indices whose trunks are up (see `sim/dynamics.rs`).
+    ///
+    /// - All `k` trunks alive → the original static pick, so restoring
+    ///   every failed link is a bit-exact round trip (and a restored
+    ///   trunk is re-eligible the moment its restore event applies).
+    /// - Some alive → the same selection rule applied over the alive
+    ///   list (deterministic, shared by every engine corner).
+    /// - None alive (or not `ParallelFabrics`) → `None`; the caller
+    ///   keeps the dead footprint so the stuck flow is reported as
+    ///   starved on the failed trunk slot.
+    pub fn reroute_trunk(&self, src: usize, dst: usize, alive: &[usize]) -> Option<usize> {
+        match self {
+            Topology::ParallelFabrics { k, select, .. } => {
+                if alive.is_empty() {
+                    None
+                } else if alive.len() == *k {
+                    Some(select.pick(src, dst, *k))
+                } else {
+                    Some(alive[select.pick(src, dst, alive.len())])
+                }
+            }
+            _ => None,
+        }
+    }
+
     /// Parse a CLI spec: `bigswitch`, `oversub:RACKS:RATIO`, or
     /// `fabrics:K:TRUNK[:hash|bysrc]`.
     pub fn parse(s: &str) -> Result<Topology, String> {
@@ -321,6 +348,22 @@ mod tests {
         let mut tr = TaskRes::default();
         bysrc.push_flow_extras(1, 3, 4, &mut tr); // 1%2 = 1 -> index 13
         assert_eq!(tr.iter().collect::<Vec<_>>(), vec![13]);
+    }
+
+    #[test]
+    fn reroute_trunk_over_surviving_fabrics() {
+        let hash = Topology::ParallelFabrics { k: 3, select: PathSelect::Hash, trunk: 0.5 };
+        // all alive -> the original static pick
+        assert_eq!(hash.reroute_trunk(1, 3, &[0, 1, 2]), Some((1 + 3) % 3));
+        // fabric 1 down -> selection rule over the alive list
+        assert_eq!(hash.reroute_trunk(1, 3, &[0, 2]), Some([0, 2][(1 + 3) % 2]));
+        // single survivor carries everything
+        assert_eq!(hash.reroute_trunk(0, 1, &[2]), Some(2));
+        assert_eq!(hash.reroute_trunk(4, 5, &[2]), Some(2));
+        // no survivors -> no path
+        assert_eq!(hash.reroute_trunk(0, 1, &[]), None);
+        // non-fabric topologies never reroute
+        assert_eq!(Topology::BigSwitch.reroute_trunk(0, 1, &[0]), None);
     }
 
     #[test]

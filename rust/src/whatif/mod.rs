@@ -1,22 +1,30 @@
-//! What-if analysis (§4.3): evaluate hypothetical application revisions
-//! on the MXDAG *before* changing the application — pipelining choices
-//! and work re-partitioning — which "are not possible with traditional
-//! DAG".
+//! What-if analysis (§4.3): evaluate hypotheticals on the MXDAG
+//! *before* committing to them — application revisions (pipelining
+//! choices and work re-partitioning, which "are not possible with
+//! traditional DAG") and *cluster* hypotheticals (a degraded link, a
+//! failed parallel fabric) expressed as one-event dynamics timelines
+//! (`sim/dynamics.rs`), so a scheduler can ask "what would this plan
+//! cost if trunk 1 died?" without mutating the cluster.
 //!
 //! The batch entry point is [`explore`]: a zero-dependency parallel
 //! sweep over [`Hypothetical`]s with per-worker [`EvalContext`]s
 //! (cached expansions + reusable engine scratch) and a hard determinism
 //! contract — results are **bit-identical for every thread count**,
 //! in input order (oracle: `tests/prop_whatif_explore.rs`). A failing
-//! hypothetical (invalid revision, deadlocking variant) is captured in
-//! its own [`WhatIf::outcome`] and never discards the rest of the
-//! sweep; only a *baseline* failure aborts, since there is nothing to
-//! compare against.
+//! hypothetical (invalid revision, invalid link reference, or a
+//! variant whose simulation deadlocks — e.g. a degradation that
+//! strands a flow with no surviving path) is captured in its own
+//! [`WhatIf::outcome`] and never discards the rest of the sweep; only
+//! a *baseline* failure aborts, since there is nothing to compare
+//! against.
 
 use crate::mxdag::{MXDag, TaskId, TaskKind};
 use crate::sched::mxsched::cpm_on;
-use crate::sched::{evaluate, EvalContext, Plan};
-use crate::sim::{Annotations, Cluster, CpuPolicy, NetPolicy, SimError};
+use crate::sched::{evaluate, evaluate_with, EvalContext, Plan};
+use crate::sim::{
+    Annotations, Cluster, CpuPolicy, DynAction, DynTimeline, LinkRef, NetPolicy, SimConfig,
+    SimError,
+};
 use crate::util::par::par_map_indexed;
 
 /// Outcome of one hypothetical.
@@ -66,6 +74,18 @@ pub enum Hypothetical {
         scatter: f64,
         gather: f64,
     },
+    /// Cluster hypothetical: score the base plan with `link`'s capacity
+    /// scaled by `factor` from t = 0 (a one-event dynamics timeline —
+    /// the cluster itself is untouched). `factor: 0.0` asks "what if
+    /// this link were down?"; a variant that deadlocks (no surviving
+    /// path) captures the error in its own outcome.
+    Degrade { link: LinkRef, factor: f64 },
+    /// Cluster hypothetical: fail parallel fabric `trunk` at t = 0 and
+    /// let the engine re-run `ParallelFabrics` path selection over the
+    /// survivors — the cost of losing one fabric plane under the base
+    /// plan. Only meaningful on a `ParallelFabrics` cluster (elsewhere
+    /// the link validation error is captured in the outcome).
+    Reroute { trunk: usize },
 }
 
 impl Hypothetical {
@@ -80,6 +100,10 @@ impl Hypothetical {
             Hypothetical::Repartition { target, shard_hosts, .. } => {
                 format!("repartition({} x{})", dag.task(*target).name, shard_hosts.len())
             }
+            Hypothetical::Degrade { link, factor } => {
+                format!("degrade({},x{factor})", link.label())
+            }
+            Hypothetical::Reroute { trunk } => format!("reroute(-trunk:{trunk})"),
         }
     }
 }
@@ -165,8 +189,35 @@ fn eval_hypothetical(
                     .map_err(|e| e.to_string())
             })
         }
+        Hypothetical::Degrade { link, factor } => cluster_jct(
+            ctx,
+            base,
+            DynTimeline::new().with(0.0, DynAction::Degrade { link: *link, factor: *factor }),
+        ),
+        Hypothetical::Reroute { trunk } => cluster_jct(
+            ctx,
+            base,
+            DynTimeline::new()
+                .with(0.0, DynAction::Degrade { link: LinkRef::Trunk(*trunk), factor: 0.0 }),
+        ),
     };
     WhatIf { label, outcome: jct.map(|j| (j, j - baseline)) }
+}
+
+/// Score the base plan under a hypothetical dynamics timeline. Invalid
+/// link references and deadlocking variants both surface as `Err` —
+/// the sweep-level contract that cluster hypotheticals must never
+/// poison the exploration.
+fn cluster_jct(
+    ctx: &mut EvalContext<'_>,
+    base: &Plan,
+    timeline: DynTimeline,
+) -> Result<f64, String> {
+    timeline.validate(ctx.cluster())?;
+    let cfg = SimConfig { dynamics: timeline, ..SimConfig::default() };
+    evaluate_with(ctx.dag(), ctx.cluster(), base, &cfg)
+        .map(|r| r.makespan)
+        .map_err(|e| e.to_string())
 }
 
 /// The §4.3 candidate set: one [`Hypothetical::Pipeline`] per
@@ -313,9 +364,11 @@ mod tests {
 
     /// The satellite bugfix: one failing hypothetical must not abort
     /// the sweep. An invalid revision (re-partitioning a flow, too few
-    /// shards) and a *deadlocking* variant (scatter into a dead NIC)
-    /// each capture their own error while the healthy hypotheticals
-    /// around them still score.
+    /// shards), a *deadlocking* variant (scatter into a dead NIC), and
+    /// failing cluster hypotheticals (a degradation that strands the
+    /// flow, a link reference this topology doesn't have) each capture
+    /// their own error while the healthy hypotheticals around them
+    /// still score.
     #[test]
     fn failing_hypotheticals_do_not_abort_the_sweep() {
         let mut b = MXDag::builder();
@@ -356,6 +409,12 @@ mod tests {
                 scatter: 0.1,
                 gather: 0.1,
             },
+            // cluster hypotheticals: killing the flow's own uplink
+            // deadlocks (captured), a trunk reference doesn't resolve
+            // on a big switch (captured), halving the uplink scores
+            Hypothetical::Degrade { link: LinkRef::NicUp(0), factor: 0.0 },
+            Hypothetical::Reroute { trunk: 0 },
+            Hypothetical::Degrade { link: LinkRef::NicUp(0), factor: 0.5 },
         ];
         let ex = explore(&g, &cluster, &base, &hypos, 1).unwrap();
         assert_eq!(ex.results.len(), hypos.len());
@@ -371,6 +430,71 @@ mod tests {
         assert!(
             healthy.delta().unwrap() < -1.0,
             "the split past the failures still scores: {healthy:?}"
+        );
+        assert!(
+            ex.results[5].error().unwrap().contains("deadlock"),
+            "a degradation that strands the flow is captured: {:?}",
+            ex.results[5]
+        );
+        assert!(
+            ex.results[6].error().unwrap().contains("trunk"),
+            "bad link reference is captured: {:?}",
+            ex.results[6]
+        );
+        let slower = &ex.results[7];
+        assert!(
+            slower.delta().unwrap() > 0.5,
+            "half uplink capacity must slow the flow: {slower:?}"
+        );
+    }
+
+    /// Reroute hypotheticals on a parallel-fabric cluster: failing a
+    /// trunk re-picks every flow over the survivors — colliding flows
+    /// slow down, a symmetric re-pick costs nothing — and failing the
+    /// only trunk of a k = 1 fabric deadlocks and is captured
+    /// per-hypothetical.
+    #[test]
+    fn reroute_hypotheticals_score_surviving_fabrics() {
+        let mut b = MXDag::builder();
+        let f = b.flow("f", 1, 0, 2.0); // hash pick: (1+0) % 3 = 1
+        let h = b.flow("h", 0, 2, 2.0); // hash pick: (0+2) % 3 = 2
+        let _ = (f, h);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::parallel_fabrics(3, 3, 1.0);
+        let base = Plan::fair();
+        let hypos = vec![
+            // survivors [0, 2]: both flows re-pick trunk 0 and collide
+            Hypothetical::Reroute { trunk: 1 },
+            // survivors [1, 2]: the flows swap trunks — same cost
+            Hypothetical::Reroute { trunk: 0 },
+        ];
+        let ex = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+        let collided = &ex.results[0];
+        assert!(
+            collided.delta().unwrap() > 0.5,
+            "two flows sharing one survivor must slow down: {collided:?}"
+        );
+        let swapped = &ex.results[1];
+        assert_eq!(
+            swapped.jct().unwrap().to_bits(),
+            ex.baseline.to_bits(),
+            "a symmetric re-pick over identical trunks is free: {swapped:?}"
+        );
+
+        // k = 1: the only trunk dying strands every flow — captured
+        let one = Cluster::parallel_fabrics(3, 1, 1.0);
+        let ex = explore(
+            &g,
+            &one,
+            &base,
+            &[Hypothetical::Reroute { trunk: 0 }],
+            1,
+        )
+        .unwrap();
+        assert!(
+            ex.results[0].error().unwrap().contains("deadlock"),
+            "no surviving path: {:?}",
+            ex.results[0]
         );
     }
 

@@ -1,0 +1,485 @@
+//! Equivalence oracle for mid-simulation cluster dynamics: a seeded
+//! random `DynTimeline` (degradations, restores, stragglers, host
+//! churn) is injected into every corner of the {Incremental,
+//! FullResort} × {Components, WholeSet} × {Eager, Anchored} ×
+//! threads ∈ {1, 2, 4} matrix, with the serial FullResort/WholeSet
+//! corner pinned as the oracle. The contract is the one
+//! `prop_queue_equivalence` establishes for the static cluster and
+//! churn must not weaken: eager corners agree bitwise (same event
+//! boundaries — dynamics events split steps identically everywhere —
+//! same makespan, same per-chunk traces), anchored corners within the
+//! shared `mxdag::sim::within_tolerance` bound. On top of the matrix,
+//! deterministic scenarios pin the *semantics*: a degraded link really
+//! caps progress, a failed link carries zero flow until restored, a
+//! restored link is re-eligible at the restore instant, a failed trunk
+//! reroutes over the surviving parallel fabrics, and a stranded flow
+//! deadlocks naming the dead link's arena slot.
+
+use mxdag::sched::Plan;
+use mxdag::sim::{
+    simulate, within_tolerance, AllocKind, Cluster, DynAction, DynTimeline, HorizonKind,
+    LinkRef, Policy, QueueKind, SimConfig, SimDag, SimError, SimKind, SimResult, SimTask,
+    StuckReason,
+};
+use mxdag::util::propcheck::{check, Config};
+use mxdag::util::rng::Rng;
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn gen_params(rng: &mut Rng) -> RandomParams {
+    RandomParams {
+        layers: rng.range(2, 6),
+        width: rng.range(2, 6),
+        hosts: rng.range(2, 10),
+        edge_p: rng.range_f64(0.2, 0.9),
+        pipe_frac: 0.0,
+        min_size: 0.1,
+        max_size: 3.0,
+        seed: rng.next_u64(),
+    }
+}
+
+/// The full configuration matrix; the first entry is the serial
+/// whole-set baseline every other corner is compared against.
+const MATRIX: [(QueueKind, AllocKind, HorizonKind); 8] = [
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
+];
+
+/// Thread counts crossed with every corner; `threads = 1` is pinned
+/// explicitly so a `MXDAG_TEST_THREADS` override cannot shift the
+/// per-corner oracle.
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// Run `sim` through the whole matrix with `timeline` injected into
+/// every corner's `SimConfig`.
+fn run_matrix(
+    sim: &SimDag,
+    cluster: &Cluster,
+    policy: Policy,
+    timeline: &DynTimeline,
+) -> Result<Vec<Vec<SimResult>>, String> {
+    MATRIX
+        .iter()
+        .map(|&(queue, alloc, horizon)| {
+            THREADS
+                .iter()
+                .map(|&threads| {
+                    simulate(
+                        sim,
+                        cluster,
+                        &SimConfig {
+                            policy,
+                            queue,
+                            alloc,
+                            horizon,
+                            threads,
+                            dynamics: timeline.clone(),
+                            ..Default::default()
+                        },
+                    )
+                    .map_err(|e| format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}: {e}"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The `prop_queue_equivalence` agreement contract, verbatim: corner
+/// serials against the whole-set baseline (bitwise-ish for eager,
+/// tolerance for anchored), threaded runs against their own corner's
+/// serial (bitwise for eager, tolerance for anchored).
+fn assert_equivalent(tag: &str, results: &[Vec<SimResult>]) -> Result<(), String> {
+    let base = &results[0][0];
+    for (k, corner) in results.iter().enumerate() {
+        let (queue, alloc, horizon) = MATRIX[k];
+        let serial = &corner[0];
+        let check_events = horizon == HorizonKind::Eager;
+        let same = |x: f64, y: f64| match horizon {
+            HorizonKind::Eager => (x - y).abs() <= 1e-9 || (x.is_nan() && y.is_nan()),
+            HorizonKind::Anchored => within_tolerance(x, y),
+        };
+        if k > 0 {
+            let tag = format!("{tag} [{queue:?}/{alloc:?}/{horizon:?}]");
+            if check_events && base.events != serial.events {
+                return Err(format!("{tag}: events {} vs {}", base.events, serial.events));
+            }
+            if !same(base.makespan, serial.makespan) {
+                return Err(format!(
+                    "{tag}: makespan {} vs {}",
+                    base.makespan, serial.makespan
+                ));
+            }
+            if base.trace.len() != serial.trace.len() {
+                return Err(format!("{tag}: trace length differs"));
+            }
+            for (i, (a, b)) in base.trace.iter().zip(serial.trace.iter()).enumerate() {
+                if !same(a.start, b.start) || !same(a.finish, b.finish) {
+                    return Err(format!(
+                        "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                        a.start, a.finish, b.start, b.finish
+                    ));
+                }
+            }
+        }
+        for (j, r) in corner.iter().enumerate().skip(1) {
+            let tag = format!("{tag} [{queue:?}/{alloc:?}/{horizon:?} t{}]", THREADS[j]);
+            match horizon {
+                HorizonKind::Eager => {
+                    if serial.events != r.events {
+                        return Err(format!("{tag}: events {} vs {}", serial.events, r.events));
+                    }
+                    if serial.makespan.to_bits() != r.makespan.to_bits() {
+                        return Err(format!(
+                            "{tag}: makespan bits {} vs {}",
+                            serial.makespan, r.makespan
+                        ));
+                    }
+                    for (i, (a, b)) in serial.trace.iter().zip(r.trace.iter()).enumerate() {
+                        if a.start.to_bits() != b.start.to_bits()
+                            || a.finish.to_bits() != b.finish.to_bits()
+                        {
+                            return Err(format!(
+                                "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                                a.start, a.finish, b.start, b.finish
+                            ));
+                        }
+                    }
+                }
+                HorizonKind::Anchored => {
+                    if !within_tolerance(serial.makespan, r.makespan) {
+                        return Err(format!(
+                            "{tag}: makespan {} vs {}",
+                            serial.makespan, r.makespan
+                        ));
+                    }
+                    for (i, (a, b)) in serial.trace.iter().zip(r.trace.iter()).enumerate() {
+                        if !within_tolerance(a.start, b.start)
+                            || !within_tolerance(a.finish, b.finish)
+                        {
+                            return Err(format!(
+                                "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                                a.start, a.finish, b.start, b.finish
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The headline churn oracle: random DAGs × random timelines (factors
+/// in [0.1, 1.0] — no failures, so every corner completes) under every
+/// static-plan policy family; all 24 matrix cells must keep agreeing
+/// while links degrade, recover and hosts slow down mid-run.
+#[test]
+fn prop_random_churn_matrix_agrees() {
+    check(
+        "dynamics-equivalence",
+        &Config { cases: 10, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let cluster = Cluster::uniform(p.hosts);
+            let timeline = DynTimeline::random(p.seed ^ 0x9e37, &cluster, 6, 6.0);
+            for policy in [Policy::fair(), Policy::fifo(), Policy::priority(), Policy::coflow()]
+            {
+                let plan = Plan { ann: Default::default(), policy };
+                let sim = mxdag::sim::expand(&g, &plan.ann);
+                let results = run_matrix(&sim, &cluster, policy, &timeline)?;
+                assert_equivalent(&format!("{policy:?}"), &results)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Churn on parallel fabrics, including a full trunk failure and a
+/// restore: rerouting over the surviving trunks must happen at the
+/// same instant — with the same deterministic task order — in every
+/// corner, and the restore must fold everyone back onto their static
+/// path selection.
+#[test]
+fn prop_fabric_churn_with_reroute_agrees() {
+    check(
+        "dynamics-equivalence-fabrics",
+        &Config { cases: 8, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let cluster = Cluster::parallel_fabrics(p.hosts.max(2), 2, 0.5);
+            let timeline = DynTimeline::random(p.seed ^ 0x51ed, &cluster, 4, 6.0)
+                .with(1.0, DynAction::Degrade { link: LinkRef::Trunk(0), factor: 0.0 })
+                .with(3.0, DynAction::Restore { link: LinkRef::Trunk(0) });
+            for policy in [Policy::fair(), Policy::priority(), Policy::coflow()] {
+                let plan = Plan { ann: Default::default(), policy };
+                let sim = mxdag::sim::expand(&g, &plan.ann);
+                let results = run_matrix(&sim, &cluster, policy, &timeline)?;
+                assert_equivalent(&format!("fabrics {policy:?}"), &results)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Flap storm: a NIC capacity that degrades/restores every quarter
+/// time unit — far denser than the task event rate — so nearly every
+/// engine step is a dynamics boundary. The matrix must still agree.
+#[test]
+fn flap_storm_matches_oracle() {
+    let p = RandomParams {
+        layers: 4,
+        width: 4,
+        hosts: 4,
+        edge_p: 0.5,
+        pipe_frac: 0.0,
+        min_size: 0.5,
+        max_size: 3.0,
+        seed: 0xf1a9,
+    };
+    let g = random_dag(&p);
+    let cluster = Cluster::uniform(p.hosts);
+    let mut timeline = DynTimeline::flap(LinkRef::NicUp(0), 0.3, 0.25, 30.0);
+    // a second flapping link, phase-shifted, so flaps overlap
+    for e in DynTimeline::flap(LinkRef::NicDown(1), 0.5, 0.4, 30.0).events() {
+        timeline.push(e.at, e.action);
+    }
+    for policy in [Policy::fair(), Policy::priority()] {
+        let sim = mxdag::sim::expand(&g, &Default::default());
+        let results = run_matrix(&sim, &cluster, policy, &timeline).unwrap();
+        assert_equivalent(&format!("flap {policy:?}"), &results).unwrap();
+    }
+}
+
+/// A timeline whose events all land after the last task finishes must
+/// leave every corner bit-identical to the no-dynamics run: pending
+/// events bound the step size from above but never shrink it below the
+/// task horizon, and unapplied events are simply dropped at exit.
+#[test]
+fn post_completion_events_change_nothing() {
+    let p = RandomParams {
+        layers: 3,
+        width: 3,
+        hosts: 3,
+        edge_p: 0.5,
+        pipe_frac: 0.0,
+        min_size: 0.5,
+        max_size: 2.0,
+        seed: 7,
+    };
+    let g = random_dag(&p);
+    let cluster = Cluster::uniform(p.hosts);
+    let sim = mxdag::sim::expand(&g, &Default::default());
+    let late = DynTimeline::new()
+        .with(1e6, DynAction::Degrade { link: LinkRef::NicUp(0), factor: 0.1 })
+        .with(2e6, DynAction::SlowHost { host: 1, factor: 0.2 });
+    let frozen = run_matrix(&sim, &cluster, Policy::fair(), &DynTimeline::new()).unwrap();
+    let with_late = run_matrix(&sim, &cluster, Policy::fair(), &late).unwrap();
+    for (k, (a_corner, b_corner)) in frozen.iter().zip(with_late.iter()).enumerate() {
+        for (j, (a, b)) in a_corner.iter().zip(b_corner.iter()).enumerate() {
+            assert_eq!(a.events, b.events, "corner {k} t{}", THREADS[j]);
+            assert_eq!(
+                a.makespan.to_bits(),
+                b.makespan.to_bits(),
+                "corner {k} t{}: {} vs {}",
+                THREADS[j],
+                a.makespan,
+                b.makespan
+            );
+            for (i, (ta, tb)) in a.trace.iter().zip(b.trace.iter()).enumerate() {
+                assert_eq!(ta.start.to_bits(), tb.start.to_bits(), "corner {k} chunk {i}");
+                assert_eq!(ta.finish.to_bits(), tb.finish.to_bits(), "corner {k} chunk {i}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deterministic semantics: capacity bounds, failure, restore, reroute.
+// ---------------------------------------------------------------------
+
+/// One flow `src -> dst` of `size`, as a bare `SimDag` (no dummies).
+fn one_flow(src: usize, dst: usize, size: f64) -> SimDag {
+    let mut d = SimDag::default();
+    d.push(SimTask {
+        orig: 0,
+        chunk: (0, 1),
+        kind: SimKind::Flow { src, dst },
+        size,
+        priority: 0,
+        gate: 0.0,
+        coflow: None,
+    });
+    d
+}
+
+fn run_all_corners(
+    sim: &SimDag,
+    cluster: &Cluster,
+    timeline: &DynTimeline,
+) -> Vec<Result<SimResult, SimError>> {
+    MATRIX
+        .iter()
+        .map(|&(queue, alloc, horizon)| {
+            simulate(
+                sim,
+                cluster,
+                &SimConfig {
+                    queue,
+                    alloc,
+                    horizon,
+                    dynamics: timeline.clone(),
+                    ..Default::default()
+                },
+            )
+        })
+        .collect()
+}
+
+/// No task may progress faster than the degraded capacity of a claimed
+/// resource: a size-2 flow whose uplink drops to 0.25 at t = 1 has
+/// exactly 1 byte left that now drains at 0.25 — finish at 5, in every
+/// corner. Finishing any earlier would mean the flow ran above the
+/// degraded cap.
+#[test]
+fn degraded_capacity_bounds_progress() {
+    let sim = one_flow(0, 1, 2.0);
+    let cluster = Cluster::uniform(2);
+    let tl = DynTimeline::new()
+        .with(1.0, DynAction::Degrade { link: LinkRef::NicUp(0), factor: 0.25 });
+    for (k, r) in run_all_corners(&sim, &cluster, &tl).into_iter().enumerate() {
+        let r = r.unwrap_or_else(|e| panic!("corner {k} failed: {e}"));
+        assert!(
+            (r.makespan - 5.0).abs() < 1e-6,
+            "corner {k}: makespan {} (expected 5.0)",
+            r.makespan
+        );
+    }
+}
+
+/// A failed link carries zero rated flow for the whole outage, and the
+/// restored link is re-eligible at the restore instant: 1 byte moves
+/// before the failure at t = 1, nothing during [1, 3], and the last
+/// byte right after — finish at exactly 4.
+#[test]
+fn failed_link_carries_nothing_until_restore() {
+    let sim = one_flow(0, 1, 2.0);
+    let cluster = Cluster::uniform(2);
+    let tl = DynTimeline::new()
+        .with(1.0, DynAction::Degrade { link: LinkRef::NicUp(0), factor: 0.0 })
+        .with(3.0, DynAction::Restore { link: LinkRef::NicUp(0) });
+    for (k, r) in run_all_corners(&sim, &cluster, &tl).into_iter().enumerate() {
+        let r = r.unwrap_or_else(|e| panic!("corner {k} failed: {e}"));
+        assert!(
+            (r.makespan - 4.0).abs() < 1e-6,
+            "corner {k}: makespan {} (expected 4.0)",
+            r.makespan
+        );
+    }
+}
+
+/// A straggler host throttles its compute slot: a size-2 compute task
+/// on a host that slows to 0.5 at t = 1 finishes at 3.
+#[test]
+fn slow_host_throttles_compute() {
+    let mut d = SimDag::default();
+    d.push(SimTask {
+        orig: 0,
+        chunk: (0, 1),
+        kind: SimKind::Compute { host: 0 },
+        size: 2.0,
+        priority: 0,
+        gate: 0.0,
+        coflow: None,
+    });
+    let cluster = Cluster::uniform(2);
+    let tl = DynTimeline::new().with(1.0, DynAction::SlowHost { host: 0, factor: 0.5 });
+    for (k, r) in run_all_corners(&d, &cluster, &tl).into_iter().enumerate() {
+        let r = r.unwrap_or_else(|e| panic!("corner {k} failed: {e}"));
+        assert!(
+            (r.makespan - 3.0).abs() < 1e-6,
+            "corner {k}: makespan {} (expected 3.0)",
+            r.makespan
+        );
+    }
+}
+
+/// A permanent NIC failure with no pending recovery strands the flow:
+/// every corner must report `Deadlock` whose sampled stuck task is
+/// starved on exactly the dead uplink's arena slot.
+#[test]
+fn permanent_failure_deadlocks_naming_the_link() {
+    let sim = one_flow(0, 1, 2.0);
+    let cluster = Cluster::uniform(2);
+    let dead = LinkRef::NicUp(0);
+    let tl = DynTimeline::new().with(1.0, DynAction::Degrade { link: dead, factor: 0.0 });
+    for (k, r) in run_all_corners(&sim, &cluster, &tl).into_iter().enumerate() {
+        match r {
+            Err(SimError::Deadlock { now, n_remaining, stuck, .. }) => {
+                assert!((now - 1.0).abs() < 1e-6, "corner {k}: stuck at t={now}");
+                assert_eq!(n_remaining, 1, "corner {k}");
+                assert_eq!(
+                    stuck,
+                    Some((0, StuckReason::Starved { resource: Some(dead.slot(2)) })),
+                    "corner {k}: deadlock must name the dead uplink"
+                );
+            }
+            other => panic!("corner {k}: expected deadlock, got {other:?}"),
+        }
+    }
+}
+
+/// Failing the trunk a flow was hashed onto makes `ParallelFabrics`
+/// re-select among the survivors: with k = 2 trunks of full capacity
+/// the flow continues at rate 1 and still finishes at 2; a restore
+/// mid-flight folds it back onto its static pick without a hiccup.
+#[test]
+fn trunk_failure_reroutes_to_survivor() {
+    let sim = one_flow(0, 1, 2.0); // hash pick: trunk (0 + 1) % 2 = 1
+    let cluster = Cluster::parallel_fabrics(2, 2, 1.0);
+    let fail_only = DynTimeline::new()
+        .with(1.0, DynAction::Degrade { link: LinkRef::Trunk(1), factor: 0.0 });
+    let fail_restore = fail_only
+        .clone()
+        .with(1.5, DynAction::Restore { link: LinkRef::Trunk(1) });
+    for tl in [&fail_only, &fail_restore] {
+        for (k, r) in run_all_corners(&sim, &cluster, tl).into_iter().enumerate() {
+            let r = r.unwrap_or_else(|e| panic!("corner {k} failed: {e}"));
+            assert!(
+                (r.makespan - 2.0).abs() < 1e-6,
+                "corner {k}: makespan {} (expected 2.0 via surviving trunk)",
+                r.makespan
+            );
+        }
+    }
+}
+
+/// With a single fabric (k = 1) there is no survivor to reroute to:
+/// the flow keeps its dead footprint and every corner deadlocks naming
+/// the failed trunk's slot.
+#[test]
+fn stranded_flow_names_the_failed_trunk() {
+    let sim = one_flow(0, 1, 2.0);
+    let cluster = Cluster::parallel_fabrics(2, 1, 1.0);
+    let dead = LinkRef::Trunk(0);
+    let tl = DynTimeline::new().with(1.0, DynAction::Degrade { link: dead, factor: 0.0 });
+    for (k, r) in run_all_corners(&sim, &cluster, &tl).into_iter().enumerate() {
+        match r {
+            Err(SimError::Deadlock { stuck, .. }) => {
+                assert_eq!(
+                    stuck,
+                    Some((0, StuckReason::Starved { resource: Some(dead.slot(2)) })),
+                    "corner {k}: deadlock must name the failed trunk"
+                );
+            }
+            other => panic!("corner {k}: expected deadlock, got {other:?}"),
+        }
+    }
+}
