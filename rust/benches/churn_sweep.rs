@@ -19,14 +19,23 @@
 //! `BENCH_SMOKE=1` (the CI bench-smoke job) shrinks sizes and still
 //! runs every oracle.
 //!
+//! A second sweep prices the fault-recovery layer (`sim/recovery.rs`)
+//! under a crash/restore cycle: **failfast** (crashes are pure
+//! capacity events — the PR 7 cost profile), **retry** (the same
+//! timeline with in-flight victims killed, backoff-gated and re-run)
+//! and **storm** (permanent host deaths quarantining whole jobs while
+//! the survivors keep simulating). Its oracle — the same full matrix,
+//! NaN-aware for quarantined traces, retry accounting compared
+//! bitwise on the eager corners — also runs before any timing.
+//!
 //! Results are printed as tables (README §Performance) and persisted
 //! to `BENCH_sim.json` (section `churn_sweep`) for cross-PR tracking.
 
 use std::time::Instant;
 
 use mxdag::sim::{
-    expand, simulate, within_tolerance, AllocKind, Cluster, DynTimeline, HorizonKind, LinkRef,
-    QueueKind, SimConfig, SimDag, SimResult,
+    expand, simulate, within_tolerance, AllocKind, Annotations, Cluster, DynAction, DynTimeline,
+    HorizonKind, LinkRef, QueueKind, RecoveryPolicy, SimConfig, SimDag, SimResult,
 };
 use mxdag::util::bench::{write_bench_json, Table};
 use mxdag::util::json::Json;
@@ -207,12 +216,189 @@ fn churn_sweep() -> Json {
     Json::Arr(rows)
 }
 
+/// The recovery matrix oracle (untimed): every corner × threads
+/// {1, 4} under `policy` against the serial whole-set baseline —
+/// NaN-aware (quarantined chunks keep NaN traces everywhere), with
+/// the discrete recovery outputs (retry count, per-job outcome kinds)
+/// compared exactly on the bitwise corners.
+fn recovery_oracle(
+    sim: &SimDag,
+    cluster: &Cluster,
+    timeline: &DynTimeline,
+    policy: RecoveryPolicy,
+) {
+    let mk = |(queue, alloc, horizon): (QueueKind, AllocKind, HorizonKind), threads| SimConfig {
+        queue,
+        alloc,
+        horizon,
+        threads,
+        dynamics: timeline.clone(),
+        recovery: policy,
+        ..Default::default()
+    };
+    let base = run(sim, cluster, &mk(MATRIX[0], 1));
+    for &corner in MATRIX.iter() {
+        for threads in [1usize, 4] {
+            let r = run(sim, cluster, &mk(corner, threads));
+            let tag = format!("recovery {corner:?} t{threads}");
+            assert_eq!(base.jobs.len(), r.jobs.len(), "{tag}: job count");
+            for (j, (a, b)) in base.jobs.iter().zip(r.jobs.iter()).enumerate() {
+                assert_eq!(
+                    a.is_completed(),
+                    b.is_completed(),
+                    "{tag}: job {j} outcome {a:?} vs {b:?}"
+                );
+            }
+            match corner.2 {
+                HorizonKind::Eager => {
+                    assert_eq!(base.events, r.events, "{tag}: event count");
+                    assert_eq!(base.retries, r.retries, "{tag}: retries");
+                    assert_eq!(
+                        base.makespan.to_bits(),
+                        r.makespan.to_bits(),
+                        "{tag}: makespan"
+                    );
+                    for (i, (a, b)) in base.trace.iter().zip(r.trace.iter()).enumerate() {
+                        assert_eq!(a.start.to_bits(), b.start.to_bits(), "{tag}: chunk {i}");
+                        assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "{tag}: chunk {i}");
+                    }
+                }
+                HorizonKind::Anchored => {
+                    assert!(
+                        within_tolerance(base.makespan, r.makespan),
+                        "{tag}: makespan {} vs {}",
+                        base.makespan,
+                        r.makespan
+                    );
+                    let ok = |x: f64, y: f64| {
+                        within_tolerance(x, y) || (x.is_nan() && y.is_nan())
+                    };
+                    for (i, (a, b)) in base.trace.iter().zip(r.trace.iter()).enumerate() {
+                        assert!(
+                            ok(a.start, b.start) && ok(a.finish, b.finish),
+                            "{tag}: chunk {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn recovery_sweep() -> Json {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let n_jobs = 8usize;
+    let mut table = Table::new(
+        "recovery sweep events/s (failfast vs retry vs quarantine storm)",
+        &["events", "failfast", "retry", "storm", "retries", "quarantined", "retry/failfast"],
+    );
+    let mut rows = Vec::new();
+    for (layers, width) in shapes() {
+        let p = RandomParams { layers, width, hosts, seed: 47, ..Default::default() };
+        let g = random_dag(&p);
+        // round-robin job map: the quarantine unit for the storm regime
+        let mut ann = Annotations::default();
+        for (i, t) in g.real_tasks().enumerate() {
+            ann.jobs.insert(t, i % n_jobs);
+        }
+        let sim = expand(&g, &ann);
+        let fast = SimConfig {
+            queue: QueueKind::Incremental,
+            alloc: AllocKind::Components,
+            ..Default::default()
+        };
+        let frozen = run(&sim, &cluster, &fast);
+        let mk = frozen.makespan;
+
+        // two crash/restore cycles, sized to land mid-run: recoverable
+        // under both policies (FailFast stalls through the outage,
+        // Retry re-runs the victims), so the regimes are comparable
+        let cycle = DynTimeline::new()
+            .with(mk * 0.31, DynAction::FailHost { host: 0 })
+            .with(mk * 0.47, DynAction::RestoreHost { host: 0 })
+            .with(mk * 0.55, DynAction::FailHost { host: 1 })
+            .with(mk * 0.71, DynAction::RestoreHost { host: 1 });
+        // the storm: hosts 0-2 die for good — their jobs exhaust or
+        // starve and are quarantined while the rest keeps simulating
+        let storm = DynTimeline::new()
+            .with(mk * 0.23, DynAction::FailHost { host: 0 })
+            .with(mk * 0.37, DynAction::FailHost { host: 1 })
+            .with(mk * 0.53, DynAction::FailHost { host: 2 });
+        let retry = RecoveryPolicy::Retry { max_attempts: 5, backoff: mk * 0.02 };
+        let storm_policy = RecoveryPolicy::Retry { max_attempts: 2, backoff: mk * 0.02 };
+
+        // -- oracles first (untimed)
+        recovery_oracle(&sim, &cluster, &cycle, RecoveryPolicy::FailFast);
+        recovery_oracle(&sim, &cluster, &cycle, retry);
+        recovery_oracle(&sim, &cluster, &storm, storm_policy);
+
+        // -- timings
+        let reps = if smoke() { 1 } else { 3 };
+        let ff_cfg = SimConfig { dynamics: cycle.clone(), ..fast.clone() };
+        let retry_cfg =
+            SimConfig { dynamics: cycle.clone(), recovery: retry, ..fast.clone() };
+        let storm_cfg =
+            SimConfig { dynamics: storm.clone(), recovery: storm_policy, ..fast.clone() };
+        let r_ff = run(&sim, &cluster, &ff_cfg);
+        let r_retry = run(&sim, &cluster, &retry_cfg);
+        let r_storm = run(&sim, &cluster, &storm_cfg);
+        let quarantined = r_storm.jobs.iter().filter(|j| !j.is_completed()).count();
+        let t_ff = timed(reps, || {
+            std::hint::black_box(run(&sim, &cluster, &ff_cfg).makespan);
+        });
+        let t_retry = timed(reps, || {
+            std::hint::black_box(run(&sim, &cluster, &retry_cfg).makespan);
+        });
+        let t_storm = timed(reps, || {
+            std::hint::black_box(run(&sim, &cluster, &storm_cfg).makespan);
+        });
+        let evps_ff = r_ff.events as f64 / t_ff;
+        let evps_retry = r_retry.events as f64 / t_retry;
+        let evps_storm = r_storm.events as f64 / t_storm;
+        table.row(
+            &format!("{} tasks", g.real_tasks().count()),
+            &[
+                format!("{}", r_ff.events),
+                format!("{evps_ff:.0}"),
+                format!("{evps_retry:.0}"),
+                format!("{evps_storm:.0}"),
+                format!("{}", r_retry.retries),
+                format!("{quarantined}/{n_jobs}"),
+                format!("{:.2}x", t_retry / t_ff),
+            ],
+        );
+        rows.push(Json::obj(vec![
+            ("tasks", Json::Num(g.real_tasks().count() as f64)),
+            ("jobs", Json::Num(n_jobs as f64)),
+            ("events_failfast", Json::Num(r_ff.events as f64)),
+            ("events_retry", Json::Num(r_retry.events as f64)),
+            ("events_storm", Json::Num(r_storm.events as f64)),
+            ("retries_retry", Json::Num(r_retry.retries as f64)),
+            ("retries_storm", Json::Num(r_storm.retries as f64)),
+            ("quarantined_storm", Json::Num(quarantined as f64)),
+            ("lost_work_storm", Json::Num(r_storm.lost_work)),
+            ("events_per_sec_failfast", Json::Num(evps_ff)),
+            ("events_per_sec_retry", Json::Num(evps_retry)),
+            ("events_per_sec_storm", Json::Num(evps_storm)),
+            ("overhead_retry_vs_failfast", Json::Num(t_retry / t_ff)),
+        ]));
+    }
+    table.print();
+    Json::Arr(rows)
+}
+
 fn main() {
-    println!("== full-matrix churn oracles run before every timing ==");
+    println!("== full-matrix churn + recovery oracles run before every timing ==");
     let rows = churn_sweep();
+    let recovery_rows = recovery_sweep();
     write_bench_json(
         "churn_sweep",
-        Json::obj(vec![("smoke", Json::Bool(smoke())), ("rows", rows)]),
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke())),
+            ("rows", rows),
+            ("recovery", recovery_rows),
+        ]),
     );
     println!("\nwrote BENCH_sim.json (section `churn_sweep`)");
 }

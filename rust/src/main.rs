@@ -16,8 +16,12 @@ use mxdag::sched::{
     self, evaluate, evaluate_with, AltruisticScheduler, CoflowScheduler, FairScheduler,
     FifoScheduler, Grouping, MxScheduler, PackingScheduler, Plan, Scheduler, SelfishScheduler,
 };
-use mxdag::sim::{AllocKind, Annotations, Cluster, HorizonKind, Policy, QueueKind, SimConfig};
+use mxdag::sim::{
+    AllocKind, Annotations, Cluster, HorizonKind, Policy, QueueKind, RecoveryPolicy, SimConfig,
+    SimError,
+};
 use mxdag::util::bench::Table;
+use mxdag::util::json::Json;
 use mxdag::util::cli::Args;
 use mxdag::workloads::{self, WukongCoflows};
 
@@ -54,11 +58,13 @@ fn print_usage() {
                     [--topology bigswitch|oversub:RACKS:RATIO|fabrics:K:TRUNK[:hash|bysrc]]\n\
                     [--queue incremental|fullresort] [--alloc components|wholeset]\n\
                     [--horizon eager|anchored] [--threads N] [--dynamics FILE.json]\n\
+                    [--recovery failfast|retry|retry:MAX_ATTEMPTS:BACKOFF]\n\
                     (the DAG file may also declare a \"cluster\" object and an\n\
-                     \"engine\" object {{\"queue\", \"alloc\", \"horizon\", \"threads\"}};\n\
-                     the --topology/--queue/--alloc/--horizon/--threads flags\n\
-                     override them and select the engine's ready-queue,\n\
-                     rate-allocation, time-advance and parallel-refill paths;\n\
+                     \"engine\" object {{\"queue\", \"alloc\", \"horizon\", \"threads\",\n\
+                     \"recovery\"}}; the --topology/--queue/--alloc/--horizon/\n\
+                     --threads/--recovery flags override them and select the\n\
+                     engine's ready-queue, rate-allocation, time-advance,\n\
+                     parallel-refill and fault-recovery paths;\n\
                      N>1 fans component refills across worker threads with\n\
                      results identical to the N=1 serial oracle;\n\
                      --dynamics FILE.json injects a cluster-churn timeline —\n\
@@ -67,8 +73,15 @@ fn print_usage() {
                      {{\"at\": 3.0, \"kind\": \"fail\", \"link\": \"trunk:1\"}}\n\
                      {{\"at\": 4.0, \"kind\": \"restore\", \"link\": \"trunk:1\"}}\n\
                      {{\"at\": 5.0, \"kind\": \"slow_host\", \"host\": 2, \"factor\": 0.25}}\n\
+                     {{\"at\": 6.0, \"kind\": \"fail_host\", \"host\": 2}}\n\
                      — the DAG file may declare the same array under a\n\
-                     top-level \"dynamics\" key; the flag overrides it)\n\
+                     top-level \"dynamics\" key; the flag overrides it;\n\
+                     under --recovery retry a fail_host kills the host's\n\
+                     in-flight tasks, retries them behind exponential backoff\n\
+                     and quarantines terminally-stuck jobs instead of failing;\n\
+                     the run always ends with one JSON line of per-job\n\
+                     outcomes; exit code 0 = ok, 1 = config error,\n\
+                     2 = deadlock, 3 = event-limit)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -392,6 +405,15 @@ fn cmd_simulate(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(v) = args.get("recovery") {
+        match RecoveryPolicy::parse(&v) {
+            Ok(p) => cfg.recovery = p,
+            Err(e) => {
+                eprintln!("--recovery: {e}");
+                return 1;
+            }
+        }
+    }
     // cluster dynamics: a scenario "dynamics" array first, then
     // --dynamics FILE overrides it — the same layering as the engine
     // object vs the engine flags
@@ -437,7 +459,8 @@ fn cmd_simulate(args: &Args) -> i32 {
         Ok(r) => {
             println!(
                 "scheduler={} hosts={} topology={:?} queue={:?} alloc={:?} horizon={:?} \
-                 threads={} dynamics={} tasks={} makespan={:.4} events={}",
+                 threads={} dynamics={} recovery={} tasks={} makespan={:.4} events={} \
+                 retries={} lost_work={:.4}",
                 sched.name(),
                 cluster.n_hosts(),
                 cluster.topology,
@@ -446,15 +469,48 @@ fn cmd_simulate(args: &Args) -> i32 {
                 cfg.horizon,
                 cfg.threads,
                 cfg.dynamics.len(),
+                cfg.recovery.label(),
                 g.real_tasks().count(),
                 r.makespan,
-                r.events
+                r.events,
+                r.retries,
+                r.lost_work
+            );
+            let jobs: Vec<Json> =
+                r.jobs.iter().enumerate().map(|(j, o)| o.to_json(j)).collect();
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("status", Json::Str("ok".into())),
+                    ("makespan", Json::Num(r.makespan)),
+                    ("events", Json::Num(r.events as f64)),
+                    ("retries", Json::Num(r.retries as f64)),
+                    ("lost_work", Json::Num(r.lost_work)),
+                    ("jobs", Json::Arr(jobs)),
+                ])
             );
             0
         }
         Err(e) => {
+            // structured report on failure too, with the failure class
+            // in the exit code: 2 = deadlock (the plan/cluster starved),
+            // 3 = event limit (the run never converged) — distinct from
+            // 1, which is reserved for config/input errors above
             eprintln!("simulation failed: {e}");
-            1
+            let (kind, code) = match &e {
+                SimError::Deadlock { .. } => ("deadlock", 2),
+                SimError::EventLimit(_) => ("event_limit", 3),
+            };
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("status", Json::Str("error".into())),
+                    ("kind", Json::Str(kind.into())),
+                    ("error", Json::Str(e.to_string())),
+                    ("jobs", Json::Arr(Vec::new())),
+                ])
+            );
+            code
         }
     }
 }

@@ -122,6 +122,7 @@ impl AltruisticScheduler {
             let c = per_job_cpm(multi, job, costed);
             let prios = c.priorities();
             for &t in tasks {
+                ann.jobs.insert(t, job);
                 if c.is_critical(t) {
                     ann.priorities.insert(t, n as i64 + prios[t]);
                 } else {
@@ -220,6 +221,7 @@ impl SelfishScheduler {
             let c = per_job_cpm(multi, job, &sizes);
             let prios = c.priorities();
             for &t in tasks {
+                ann.jobs.insert(t, job);
                 ann.priorities.insert(t, prios[t]);
             }
         }
@@ -343,6 +345,27 @@ mod tests {
         let oversub = Cluster::oversubscribed(4, 2, 4.0);
         let on = AltruisticScheduler.plan_multi_on(&multi, &oversub);
         assert!((on.ann.gates[&fb] - 0.0).abs() < 1e-9, "costed gate {:?}", on.ann.gates);
+    }
+
+    /// Both multi-DAG planners stamp every task with its job index —
+    /// the quarantine unit the recovery layer keys on — and the map
+    /// survives expansion into the physical DAG.
+    #[test]
+    fn multi_plans_carry_the_job_map() {
+        let (j1, j2) = workloads::fig7_jobs();
+        let multi = merge(&[j1, j2]);
+        for plan in [
+            AltruisticScheduler.plan_multi(&multi),
+            SelfishScheduler.plan_multi(&multi),
+        ] {
+            for (job, tasks) in multi.jobs.iter().enumerate() {
+                for t in tasks {
+                    assert_eq!(plan.ann.jobs.get(t), Some(&job), "task {t} of job {job}");
+                }
+            }
+            let sim = crate::sim::expand(&multi.dag, &plan.ann);
+            assert_eq!(sim.n_jobs(), 2);
+        }
     }
 
     #[test]

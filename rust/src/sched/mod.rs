@@ -42,8 +42,8 @@ pub mod packing;
 
 use crate::mxdag::MXDag;
 use crate::sim::{
-    expand, simulate, Annotations, Cluster, Policy, QueueDiscipline, SimConfig, SimError,
-    SimResult,
+    expand, simulate, Annotations, Cluster, DynAction, DynTimeline, LinkRef, Policy,
+    QueueDiscipline, SimConfig, SimError, SimResult,
 };
 
 pub use altruistic::{AltruisticScheduler, SelfishScheduler};
@@ -127,6 +127,87 @@ pub fn run(s: &dyn Scheduler, dag: &MXDag, cluster: &Cluster) -> Result<SimResul
     evaluate(dag, cluster, &s.plan(dag, cluster))
 }
 
+/// The cluster after every event in `tl` has fired: host-level factors
+/// (`SlowHost`, `FailHost`, `RestoreHost`) and per-host-slot link
+/// factors (`Degrade`/`Restore` on `core:`/`up:`/`down:` links) are
+/// folded, in timeline order, into the host capacities. Factors are
+/// absolute (last writer wins), mirroring `DynState`. Fabric-extra
+/// factors (aggregation uplinks, parallel-fabric trunks) have no slot
+/// in [`Cluster`]'s host list and are ignored — a replan against the
+/// settled cluster sees degraded *hosts* exactly, degraded *fabric*
+/// only through whatever the topology already encodes.
+pub fn settled_cluster(cluster: &Cluster, tl: &DynTimeline) -> Cluster {
+    let n = cluster.hosts.len();
+    let mut host_f = vec![1.0f64; n];
+    // Per-slot link factors in arena order: [core, up, down] per host.
+    let mut link_f = vec![1.0f64; 3 * n];
+    let slot_of = |link: LinkRef| -> Option<usize> {
+        match link {
+            LinkRef::Core(h) if h < n => Some(3 * h),
+            LinkRef::NicUp(h) if h < n => Some(3 * h + 1),
+            LinkRef::NicDown(h) if h < n => Some(3 * h + 2),
+            _ => None,
+        }
+    };
+    for e in tl.events() {
+        match e.action {
+            DynAction::Degrade { link, factor } => {
+                if let Some(r) = slot_of(link) {
+                    link_f[r] = factor;
+                }
+            }
+            DynAction::Restore { link } => {
+                if let Some(r) = slot_of(link) {
+                    link_f[r] = 1.0;
+                }
+            }
+            DynAction::SlowHost { host, factor } if host < n => host_f[host] = factor,
+            DynAction::RestoreHost { host } if host < n => host_f[host] = 1.0,
+            DynAction::FailHost { host } if host < n => host_f[host] = 0.0,
+            _ => {}
+        }
+    }
+    let mut out = cluster.clone();
+    for (h, host) in out.hosts.iter_mut().enumerate() {
+        host.cores *= host_f[h] * link_f[3 * h];
+        host.nic_up *= host_f[h] * link_f[3 * h + 1];
+        host.nic_down *= host_f[h] * link_f[3 * h + 2];
+    }
+    out
+}
+
+/// Evaluate `plan` under `cfg`, then — when the run shows the cluster
+/// changed out from under the plan — ask the scheduler for a reactive
+/// replan against the [`settled_cluster`]. The replan fires when any
+/// job finished non-[`Completed`](crate::sim::JobOutcome::Completed)
+/// (quarantine / retry exhaustion) **or** the timeline contains a
+/// [`DynAction::FailHost`]: either way the capacities the original
+/// plan was costed against are gone, so `MxScheduler`'s Eq. 2 ordering
+/// and the altruistic CPM gates should re-cost the surviving work.
+/// Returns the first run's result plus the fresh plan (if one fired);
+/// the caller decides what to do with it (re-evaluate, diff, ship).
+pub fn evaluate_reactive(
+    s: &dyn Scheduler,
+    dag: &MXDag,
+    cluster: &Cluster,
+    plan: &Plan,
+    cfg: &SimConfig,
+) -> Result<(SimResult, Option<Plan>), SimError> {
+    let result = evaluate_with(dag, cluster, plan, cfg)?;
+    let crashed = cfg
+        .dynamics
+        .events()
+        .iter()
+        .any(|e| matches!(e.action, DynAction::FailHost { .. }));
+    let degraded = crashed || result.jobs.iter().any(|j| !j.is_completed());
+    let fresh = if degraded {
+        Some(s.replan(dag, &settled_cluster(cluster, &cfg.dynamics), plan))
+    } else {
+        None
+    };
+    Ok((result, fresh))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +233,62 @@ mod tests {
         let g = b.finalize().unwrap();
         let r = run(&FairScheduler, &g, &Cluster::uniform(1)).unwrap();
         assert!((r.makespan - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn settled_cluster_folds_terminal_host_factors() {
+        use crate::sim::{DynAction, DynTimeline, LinkRef};
+        let cluster = Cluster::uniform(3);
+        let tl = DynTimeline::new()
+            .with(1.0, DynAction::SlowHost { host: 0, factor: 0.5 })
+            .with(2.0, DynAction::FailHost { host: 1 })
+            .with(3.0, DynAction::SlowHost { host: 0, factor: 0.25 })
+            .with(4.0, DynAction::Degrade { link: LinkRef::NicUp(2), factor: 0.1 })
+            .with(5.0, DynAction::RestoreHost { host: 1 });
+        let c = settled_cluster(&cluster, &tl);
+        // Host 0: last writer 0.25 on all three slots.
+        assert!((c.hosts[0].cores - 0.25).abs() < 1e-12);
+        assert!((c.hosts[0].nic_down - 0.25).abs() < 1e-12);
+        // Host 1: crashed then restored — back to nominal.
+        assert!((c.hosts[1].cores - 1.0).abs() < 1e-12);
+        // Host 2: only the uplink degraded.
+        assert!((c.hosts[2].nic_up - 0.1).abs() < 1e-12);
+        assert!((c.hosts[2].cores - 1.0).abs() < 1e-12);
+        assert!((c.hosts[2].nic_down - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evaluate_reactive_replans_on_host_failure() {
+        use crate::sim::{DynAction, DynTimeline, RecoveryPolicy};
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 2.0);
+        let c = b.compute("c", 1, 2.0);
+        let f = b.flow("f", 0, 1, 1.0);
+        b.dep(a, f);
+        let _ = c;
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(2);
+        let s = MxScheduler::without_pipelining();
+        let plan = s.plan(&g, &cluster);
+
+        // Quiet cluster: no replan fires.
+        let (_, fresh) =
+            evaluate_reactive(&s, &g, &cluster, &plan, &SimConfig::default()).unwrap();
+        assert!(fresh.is_none());
+
+        // A crash after everything on the host finished: job completes,
+        // but the FailHost alone is reason enough to re-cost.
+        let cfg = SimConfig {
+            dynamics: DynTimeline::new().with(100.0, DynAction::FailHost { host: 1 }),
+            recovery: RecoveryPolicy::retry_default(),
+            ..SimConfig::default()
+        };
+        let (r, fresh) = evaluate_reactive(&s, &g, &cluster, &plan, &cfg).unwrap();
+        assert!(r.jobs.iter().all(|j| j.is_completed()));
+        let fresh = fresh.expect("FailHost must trigger a replan");
+        // The replan saw the settled (host-1-dead) cluster and is a
+        // usable plan: it still declares a covered discipline.
+        assert!(s.disciplines().contains(&fresh.policy.discipline()));
     }
 
     /// The contract: every plan a scheduler emits must use one of its

@@ -154,6 +154,16 @@ pub enum DynAction {
     SlowHost { host: usize, factor: f64 },
     /// Set `host`'s multiplier back to `1.0` (a churned host rejoins).
     RestoreHost { host: usize },
+    /// `host` crashes: capacity-wise identical to
+    /// `SlowHost { factor: 0.0 }`, but under
+    /// [`RecoveryPolicy::Retry`](crate::sim::recovery::RecoveryPolicy)
+    /// the engine additionally *kills* every in-flight task whose
+    /// footprint touches the host — progress is lost, bytes reset to
+    /// full, and the task re-enters behind an exponential-backoff gate
+    /// (see `sim/recovery.rs`). Under `FailFast` the two are
+    /// indistinguishable. A later [`DynAction::RestoreHost`] brings the
+    /// host back.
+    FailHost { host: usize },
 }
 
 /// A [`DynAction`] scheduled at simulated time `at`.
@@ -199,6 +209,24 @@ impl DynTimeline {
     pub fn with(mut self, at: f64, action: DynAction) -> Self {
         self.push(at, action);
         self
+    }
+
+    /// Merge `other`'s events into `self`, preserving **last-writer-wins
+    /// order for same-timestamp events**: every event keeps its relative
+    /// order within its source timeline, and at any shared timestamp
+    /// `other`'s events land *after* `self`'s — exactly as if they had
+    /// been [`push`](DynTimeline::push)ed one by one in `other`'s order.
+    /// Factors are absolute (they overwrite, not compound), and the
+    /// engine applies all same-instant events atomically in list order,
+    /// so this ordering guarantee is what makes a merged timeline replay
+    /// bit-identically to the individually-pushed spelling — flap storms
+    /// routinely put a degrade and a restore of the same link on the
+    /// same instant, where any reordering would flip the surviving
+    /// factor (prop-tested in `tests/prop_recovery_equivalence.rs`).
+    pub fn merge(&mut self, other: &DynTimeline) {
+        for e in other.events.iter() {
+            self.push(e.at, e.action);
+        }
     }
 
     /// A capacity flap: degrade `link` to `factor` at `period`,
@@ -302,7 +330,7 @@ impl DynTimeline {
                         return Err(format!("dynamics[{i}]: bad factor {factor}"));
                     }
                 }
-                DynAction::RestoreHost { host } => {
+                DynAction::RestoreHost { host } | DynAction::FailHost { host } => {
                     if host >= n {
                         return Err(format!(
                             "dynamics[{i}]: host {host} out of range (n_hosts = {n})"
@@ -321,10 +349,13 @@ impl DynTimeline {
     ///  {"at": 3.0, "kind": "fail",    "link": "up:0"},
     ///  {"at": 4.0, "kind": "restore", "link": "trunk:1"},
     ///  {"at": 1.0, "kind": "slow_host",    "host": 3, "factor": 0.25},
+    ///  {"at": 2.5, "kind": "fail_host",    "host": 3},
     ///  {"at": 5.0, "kind": "restore_host", "host": 3}]
     /// ```
     ///
-    /// `fail` is shorthand for `degrade` with factor `0.0`.
+    /// `fail` is shorthand for `degrade` with factor `0.0`; `fail_host`
+    /// is a crash that kills in-flight work under retry recovery (see
+    /// [`DynAction::FailHost`]).
     pub fn from_json(j: &Json) -> Result<DynTimeline, String> {
         let arr = j.as_arr().map_err(|e| format!("dynamics: {e}"))?;
         let mut tl = DynTimeline::new();
@@ -344,10 +375,11 @@ impl DynTimeline {
                 "restore" => DynAction::Restore { link: link("link")? },
                 "slow_host" => DynAction::SlowHost { host: host()?, factor: factor()? },
                 "restore_host" => DynAction::RestoreHost { host: host()? },
+                "fail_host" => DynAction::FailHost { host: host()? },
                 _ => {
                     return Err(format!(
                         "dynamics[{i}]: unknown kind `{kind}` \
-                         (degrade|fail|restore|slow_host|restore_host)"
+                         (degrade|fail|restore|slow_host|fail_host|restore_host)"
                     ))
                 }
             };
@@ -382,6 +414,11 @@ impl DynTimeline {
                     DynAction::RestoreHost { host } => Json::obj(vec![
                         ("at", Json::Num(e.at)),
                         ("kind", Json::Str("restore_host".into())),
+                        ("host", Json::Num(host as f64)),
+                    ]),
+                    DynAction::FailHost { host } => Json::obj(vec![
+                        ("at", Json::Num(e.at)),
+                        ("kind", Json::Str("fail_host".into())),
                         ("host", Json::Num(host as f64)),
                     ]),
                 })
@@ -439,9 +476,12 @@ impl DynState {
     /// `caps0[r] = base[r] * factor_of(r)` for each touched slot.
     /// Touched slots are recorded in `touched`/`touched_list`
     /// (deduplicated; the caller clears the marks after consuming the
-    /// list). Returns `true` if any fabric-extra slot (`r >= 3 *
-    /// n_hosts`) was touched — the signal that `ParallelFabrics` path
-    /// re-selection must re-run.
+    /// list). Hosts crashed by a due [`DynAction::FailHost`] are
+    /// appended to `failed_hosts` (not deduplicated — one entry per
+    /// crash event) so the engine's retry layer can kill their
+    /// in-flight work. Returns `true` if any fabric-extra slot (`r >=
+    /// 3 * n_hosts`) was touched — the signal that `ParallelFabrics`
+    /// path re-selection must re-run.
     #[allow(clippy::too_many_arguments)]
     pub fn apply_due(
         &mut self,
@@ -453,6 +493,7 @@ impl DynState {
         caps0: &mut [f64],
         touched: &mut [bool],
         touched_list: &mut Vec<usize>,
+        failed_hosts: &mut Vec<usize>,
     ) -> bool {
         let mut extra_touched = false;
         let mut touch = |r: usize,
@@ -493,6 +534,13 @@ impl DynState {
                     for r in 3 * host..3 * host + 3 {
                         touch(r, touched, touched_list);
                     }
+                }
+                DynAction::FailHost { host } => {
+                    self.host_factor[host] = 0.0;
+                    for r in 3 * host..3 * host + 3 {
+                        touch(r, touched, touched_list);
+                    }
+                    failed_hosts.push(host);
                 }
             }
         }
@@ -580,6 +628,7 @@ mod tests {
         let tl = DynTimeline::new()
             .with(1.0, DynAction::Degrade { link: LinkRef::Trunk(1), factor: 0.25 })
             .with(2.0, DynAction::SlowHost { host: 3, factor: 0.5 })
+            .with(2.5, DynAction::FailHost { host: 2 })
             .with(3.0, DynAction::Restore { link: LinkRef::Trunk(1) })
             .with(4.0, DynAction::RestoreHost { host: 3 });
         let j = tl.to_json();
@@ -632,14 +681,19 @@ mod tests {
         st.reset(fab.n_resources(), n);
         let mut touched = vec![false; fab.n_resources()];
         let mut list = Vec::new();
+        let mut failed = Vec::new();
 
         // nothing due before t = 1
-        assert!(!st.apply_due(&tl, 0.5, 1e-9, n, &base, &mut caps0, &mut touched, &mut list));
+        assert!(!st.apply_due(
+            &tl, 0.5, 1e-9, n, &base, &mut caps0, &mut touched, &mut list, &mut failed
+        ));
         assert!(list.is_empty());
         assert_eq!(st.next_at(&tl), Some(1.0));
 
         // both t = 1 events land atomically; trunk touch reported
-        let extra = st.apply_due(&tl, 1.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list);
+        let extra = st.apply_due(
+            &tl, 1.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list, &mut failed
+        );
         assert!(extra);
         let trunk0 = Topology::trunk(0, n);
         assert_eq!(caps0[trunk0], base[trunk0] * 0.5);
@@ -654,10 +708,70 @@ mod tests {
         }
         list.clear();
 
-        // restore is an exact round trip
-        st.apply_due(&tl, 5.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list);
+        // restore is an exact round trip; nothing crashed along the way
+        st.apply_due(&tl, 5.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list, &mut failed);
         assert_eq!(caps0[trunk0].to_bits(), base[trunk0].to_bits());
         assert_eq!(st.next_at(&tl), None);
+        assert!(failed.is_empty());
+    }
+
+    #[test]
+    fn fail_host_zeroes_slots_and_reports_the_crash() {
+        let fab = Cluster::parallel_fabrics(2, 2, 1.5);
+        let n = fab.n_hosts();
+        let base = fab.capacities();
+        let mut caps0 = base.clone();
+        let tl = DynTimeline::new()
+            .with(1.0, DynAction::FailHost { host: 1 })
+            .with(3.0, DynAction::RestoreHost { host: 1 });
+        let mut st = DynState::default();
+        st.reset(fab.n_resources(), n);
+        let mut touched = vec![false; fab.n_resources()];
+        let mut list = Vec::new();
+        let mut failed = Vec::new();
+
+        st.apply_due(&tl, 1.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list, &mut failed);
+        assert_eq!(failed, vec![1]);
+        for r in 3..6 {
+            assert_eq!(caps0[r], 0.0);
+        }
+        for &r in &list {
+            touched[r] = false;
+        }
+        list.clear();
+        failed.clear();
+
+        // the rejoin is a bit-exact round trip and reports no crash
+        st.apply_due(&tl, 3.0, 1e-9, n, &base, &mut caps0, &mut touched, &mut list, &mut failed);
+        assert!(failed.is_empty());
+        for r in 3..6 {
+            assert_eq!(caps0[r].to_bits(), base[r].to_bits());
+        }
+    }
+
+    #[test]
+    fn merge_preserves_last_writer_wins_at_equal_times() {
+        let up = LinkRef::NicUp(0);
+        let mut a = DynTimeline::new()
+            .with(1.0, DynAction::Degrade { link: up, factor: 0.5 })
+            .with(2.0, DynAction::Degrade { link: up, factor: 0.25 });
+        let b = DynTimeline::new()
+            .with(2.0, DynAction::Restore { link: up })
+            .with(3.0, DynAction::FailHost { host: 1 });
+        a.merge(&b);
+        // sorted, and at t = 2 `b`'s restore lands AFTER `a`'s degrade,
+        // so the restore is the surviving writer at that instant
+        let ats: Vec<f64> = a.events().iter().map(|e| e.at).collect();
+        assert_eq!(ats, vec![1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(a.events()[1].action, DynAction::Degrade { link: up, factor: 0.25 });
+        assert_eq!(a.events()[2].action, DynAction::Restore { link: up });
+        // merged == individually pushed in the same order
+        let pushed = DynTimeline::new()
+            .with(1.0, DynAction::Degrade { link: up, factor: 0.5 })
+            .with(2.0, DynAction::Degrade { link: up, factor: 0.25 })
+            .with(2.0, DynAction::Restore { link: up })
+            .with(3.0, DynAction::FailHost { host: 1 });
+        assert_eq!(a, pushed);
     }
 
     #[test]

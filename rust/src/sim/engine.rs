@@ -110,6 +110,7 @@ use super::components::{AllocKind, CompSet};
 use super::dynamics::{DynState, DynTimeline};
 use super::horizon::{FinHeap, HorizonKind};
 use super::ready::{f64_ord, BucketQueue, PrioKey, ReadyQueue, ResortQueue};
+use super::recovery::{retry_backoff, JobOutcome, RecoveryPolicy};
 use super::spec::{res_down, res_up, CpuPolicy, Cluster, NetPolicy, Policy, SimDag, SimKind};
 use super::topology::Topology;
 use crate::mxdag::TaskId;
@@ -133,6 +134,19 @@ pub enum StuckReason {
     Parked { group: usize },
     /// Dependencies unmet — stuck upstream of the reported deadlock.
     Blocked,
+}
+
+impl StuckReason {
+    /// Stable string spelling for structured reports (CLI JSON, per-job
+    /// outcome tables).
+    pub fn label(&self) -> String {
+        match *self {
+            StuckReason::Starved { resource: Some(r) } => format!("starved:res{r}"),
+            StuckReason::Starved { resource: None } => "starved".into(),
+            StuckReason::Parked { group } => format!("parked:coflow{group}"),
+            StuckReason::Blocked => "blocked".into(),
+        }
+    }
 }
 
 /// Simulation failure modes.
@@ -262,6 +276,18 @@ pub struct SimResult {
     pub orig_finish: BTreeMap<TaskId, f64>,
     /// Number of engine iterations (profiling).
     pub events: usize,
+    /// Per-job verdicts, indexed by job id (`SimDag::job_of`; a DAG
+    /// with no job map is the single job 0). Every job is
+    /// [`JobOutcome::Completed`] unless the recovery layer quarantined
+    /// it; quarantined jobs keep `NaN` start/finish entries in `trace`
+    /// for their unfinished chunks and are absent from the per-logical
+    /// aggregates.
+    pub jobs: Vec<JobOutcome>,
+    /// Task re-enqueues performed by [`RecoveryPolicy::Retry`].
+    pub retries: usize,
+    /// Work destroyed by host crashes: the sum over killed attempts of
+    /// the bytes/work completed at kill time.
+    pub lost_work: f64,
 }
 
 impl SimResult {
@@ -327,6 +353,14 @@ pub struct SimConfig {
     /// engine then never copies capacities or footprints and every
     /// code path is bit-identical to the pre-dynamics behaviour.
     pub dynamics: DynTimeline,
+    /// Fault-recovery policy (see `sim/recovery.rs`):
+    /// [`RecoveryPolicy::FailFast`] (the default) aborts on the first
+    /// terminally-stuck task exactly as the pre-recovery engine did —
+    /// the bitwise oracle corner — while [`RecoveryPolicy::Retry`]
+    /// retries crashed-host victims behind exponential-backoff gates
+    /// and quarantines terminally-stuck jobs instead of failing the
+    /// run.
+    pub recovery: RecoveryPolicy,
 }
 
 /// Default worker-thread count: `1` (serial oracle), or the
@@ -353,24 +387,29 @@ impl Default for SimConfig {
             horizon: HorizonKind::Anchored,
             threads: default_threads(),
             dynamics: DynTimeline::default(),
+            recovery: RecoveryPolicy::FailFast,
         }
     }
 }
 
 impl SimConfig {
     /// Apply a scenario-JSON `"engine"` object, the file-side mirror of
-    /// the CLI's `--queue` / `--alloc` / `--horizon` / `--threads`
-    /// flags (which override it): `{"queue":
+    /// the CLI's `--queue` / `--alloc` / `--horizon` / `--threads` /
+    /// `--recovery` flags (which override it): `{"queue":
     /// "incremental|fullresort", "alloc": "components|wholeset",
-    /// "horizon": "eager|anchored", "threads": N}`, every key
+    /// "horizon": "eager|anchored", "threads": N, "recovery":
+    /// "failfast" | {"kind": "retry", ...}}`, every key
     /// optional. `threads` must be an integer ≥ 1 (0 is rejected — the
     /// serial oracle is `threads: 1`, not "no threads").
     pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
         let obj = j.as_obj().map_err(|e| e.to_string())?;
         for key in obj.keys() {
-            if !matches!(key.as_str(), "queue" | "alloc" | "horizon" | "threads") {
+            if !matches!(
+                key.as_str(),
+                "queue" | "alloc" | "horizon" | "threads" | "recovery"
+            ) {
                 return Err(format!(
-                    "unknown engine key `{key}` (queue|alloc|horizon|threads)"
+                    "unknown engine key `{key}` (queue|alloc|horizon|threads|recovery)"
                 ));
             }
         }
@@ -389,6 +428,9 @@ impl SimConfig {
                 return Err(format!("engine threads must be an integer >= 1, got {x}"));
             }
             self.threads = x as usize;
+        }
+        if let Some(v) = obj.get("recovery") {
+            self.recovery = RecoveryPolicy::from_json(v)?;
         }
         Ok(())
     }
@@ -819,6 +861,17 @@ pub struct SimScratch {
     dyn_touched: Vec<bool>,
     dyn_touched_list: Vec<usize>,
     dyn_alive: Vec<usize>,
+    // fault recovery (`sim/recovery.rs`): per-task failed-attempt
+    // counters and retry gates, per-task quarantine marks, per-job
+    // recorded outcomes / stuck reasons, and the crashed-host list the
+    // dynamics cursor reports into. All empty (and never touched)
+    // under `RecoveryPolicy::FailFast`.
+    attempts: Vec<usize>,
+    retry_gate: Vec<f64>,
+    quarantined: Vec<bool>,
+    job_down: Vec<Option<JobOutcome>>,
+    job_stuck: Vec<Option<StuckReason>>,
+    failed_hosts: Vec<usize>,
 }
 
 /// Truncate/grow a nested scratch vector to `n` cleared inner buffers,
@@ -941,6 +994,38 @@ pub fn simulate_with_footprints(
         dyn_touched_list.clear();
         dyn_alive.clear();
     }
+
+    // Fault recovery (`sim/recovery.rs`). Like the dynamics buffers,
+    // the retry bookkeeping is live only under `RecoveryPolicy::Retry`;
+    // FailFast initializes none of it and every code path below is
+    // bit-identical to the recovery-free engine.
+    let (retry_on, max_attempts, backoff) = match cfg.recovery {
+        RecoveryPolicy::FailFast => (false, 0usize, 0.0f64),
+        RecoveryPolicy::Retry { max_attempts, backoff } => (true, max_attempts, backoff),
+    };
+    let n_jobs = dag.n_jobs();
+    let mut attempts = std::mem::take(&mut scratch.attempts);
+    let mut retry_gate = std::mem::take(&mut scratch.retry_gate);
+    let mut quarantined = std::mem::take(&mut scratch.quarantined);
+    let mut job_down = std::mem::take(&mut scratch.job_down);
+    let mut job_stuck = std::mem::take(&mut scratch.job_stuck);
+    let mut failed_hosts = std::mem::take(&mut scratch.failed_hosts);
+    failed_hosts.clear();
+    if retry_on {
+        debug_assert!(cfg.recovery.validate().is_ok(), "invalid recovery policy");
+        attempts.clear();
+        attempts.resize(n, 0);
+        retry_gate.clear();
+        retry_gate.resize(n, 0.0);
+        quarantined.clear();
+        quarantined.resize(n, false);
+        job_down.clear();
+        job_down.resize(n_jobs, None);
+        job_stuck.clear();
+        job_stuck.resize(n_jobs, None);
+    }
+    let mut retries = 0usize;
+    let mut lost_work = 0.0f64;
 
     let mut remaining = std::mem::take(&mut scratch.remaining);
     remaining.clear();
@@ -1210,6 +1295,155 @@ pub fn simulate_with_footprints(
     let mut dirty_singles = std::mem::take(&mut scratch.dirty_singles);
     dirty_singles.clear();
 
+    // Fault-recovery machinery (`sim/recovery.rs`); every call site is
+    // guarded by `retry_on`, so FailFast runs stay bit-identical to the
+    // recovery-free engine.
+    //
+    // Effective gate of a task: its plan gate, or the retry-backoff
+    // gate when a crashed attempt re-gated it later. For a retried task
+    // the backoff gate always dominates (the task was admitted once, so
+    // `retry_gate >= now-at-kill >= plan gate`), which keeps the gate
+    // heap's pushed keys consistent with this accessor.
+    macro_rules! eff_gate {
+        ($t:expr) => {{
+            let t_: usize = $t;
+            if retry_on {
+                dag.tasks[t_].gate.max(retry_gate[t_])
+            } else {
+                dag.tasks[t_].gate
+            }
+        }};
+    }
+
+    // Quarantine job `$j` with outcome `$out` (first writer wins):
+    // remove every unfinished task of the job in task-id order, marking
+    // it done and releasing its queue / component / finish-heap /
+    // coflow state through the same protocol completions use. Held
+    // capacity is released by the component dirty protocol —
+    // `comps.remove` dirties the victim's component, whose stale
+    // resource list still covers the victim's slots at the next refill
+    // (the reroute path established this invariant). Dummy tasks
+    // (shared structure) are left to complete through the normal
+    // cascade; surviving dependents outside the job are released as if
+    // the quarantined task had finished.
+    macro_rules! quarantine_job {
+        ($j:expr, $out:expr) => {{
+            let j_: usize = $j;
+            if job_down[j_].is_none() {
+                job_down[j_] = Some($out);
+                for t_q in 0..n {
+                    if dag.job(t_q) == j_ && !matches!(dag.tasks[t_q].kind, SimKind::Dummy) {
+                        quarantined[t_q] = true;
+                    }
+                }
+                for t_q in 0..n {
+                    if !quarantined[t_q] || dag.job(t_q) != j_ || done[t_q] {
+                        continue;
+                    }
+                    done[t_q] = true;
+                    n_done += 1;
+                    if queued[t_q] {
+                        queued[t_q] = false;
+                        if comps_on {
+                            comps.remove(t_q);
+                        }
+                        if anchored {
+                            fins.remove(t_q);
+                        }
+                        rate_of[t_q] = 0.0;
+                        if is_flow_v[t_q] {
+                            rq_net.remove(t_q);
+                        } else {
+                            rq_cpu.remove(t_q);
+                        }
+                    }
+                    if coflow_on {
+                        if let Some(gi) = group_of[t_q] {
+                            parked[gi].retain(|&m| m != t_q);
+                            if is_flow_v[t_q] && !group_dirty[gi] {
+                                group_dirty[gi] = true;
+                                dirty_groups.push(gi);
+                            }
+                            if indeg[t_q] > 0 {
+                                // never became ready, so the barrier
+                                // still counts it — release it so the
+                                // group's survivors are not parked
+                                // forever
+                                group_pending[gi] -= 1;
+                                if group_pending[gi] == 0 {
+                                    group_open[gi] = true;
+                                    for &m in parked[gi].iter() {
+                                        arrivals.push(Reverse((seq[m], m)));
+                                    }
+                                    parked[gi].clear();
+                                }
+                            }
+                        }
+                    }
+                    for &s in &dag.succs[t_q] {
+                        indeg[s] -= 1;
+                        if indeg[s] == 0 && !quarantined[s] {
+                            on_ready!(s);
+                        }
+                    }
+                }
+                gates.retain(|&Reverse((_, _, t_q))| !quarantined[t_q]);
+            }
+        }};
+    }
+
+    // Terminal-stuck catch-all: where FailFast aborts with
+    // `SimError::Deadlock`, Retry quarantines every job still owning an
+    // unfinished non-dummy task — per-job reasons sampled exactly as
+    // `deadlock_report` samples them (starved / parked preferred over
+    // merely-blocked). Evaluates to whether anything was quarantined;
+    // the caller falls through to the deadlock report when nothing was
+    // (all-dummy remainders cannot happen, but the guard keeps the
+    // loop provably progressing).
+    macro_rules! quarantine_stuck {
+        ($caps0:expr, $task_res:expr) => {{
+            for r in job_stuck.iter_mut() {
+                *r = None;
+            }
+            for t_q in 0..n {
+                if done[t_q] || matches!(dag.tasks[t_q].kind, SimKind::Dummy) {
+                    continue;
+                }
+                let reason = if queued[t_q] {
+                    StuckReason::Starved {
+                        resource: $task_res[t_q].iter().find(|&r| $caps0[r] <= ALLOC_EPS),
+                    }
+                } else if indeg[t_q] == 0 {
+                    match group_of[t_q] {
+                        Some(gi) if !group_open[gi] => StuckReason::Parked {
+                            group: dag.tasks[t_q].coflow.unwrap_or(gi),
+                        },
+                        _ => StuckReason::Blocked,
+                    }
+                } else {
+                    StuckReason::Blocked
+                };
+                let slot = &mut job_stuck[dag.job(t_q)];
+                let better = match slot {
+                    None => true,
+                    Some(StuckReason::Blocked) => reason != StuckReason::Blocked,
+                    _ => false,
+                };
+                if better {
+                    *slot = Some(reason);
+                }
+            }
+            let mut any_q = false;
+            for j_q in 0..n_jobs {
+                if let Some(reason) = job_stuck[j_q] {
+                    any_q = true;
+                    quarantine_job!(j_q, JobOutcome::Quarantined { reason, at: now });
+                }
+            }
+            any_q
+        }};
+    }
+
     while n_done < n {
         events += 1;
         if events > cfg.max_events {
@@ -1235,6 +1469,7 @@ pub fn simulate_with_footprints(
                 &mut dyn_caps,
                 &mut dyn_touched,
                 &mut dyn_touched_list,
+                &mut failed_hosts,
             );
             // the class-saturation counters follow the effective caps
             n_cores_pos = 0;
@@ -1307,6 +1542,72 @@ pub fn simulate_with_footprints(
                     }
                 }
             }
+            // Host crashes (`DynAction::FailHost`) under Retry: every
+            // in-flight victim — queued, started, footprint touching a
+            // crashed host's slots — loses its progress. Bytes reset to
+            // full, held capacity is released through the component
+            // dirty protocol (`comps.remove` dirties the old component,
+            // whose stale resource list covers the release at the next
+            // refill), and the task re-enters the gate heap behind its
+            // exponential-backoff timer, keeping its original live
+            // order. A victim whose failed-attempt budget is spent
+            // quarantines its job instead. Under FailFast the crash is
+            // purely a capacity event (identical to `SlowHost{0}`).
+            if retry_on && !failed_hosts.is_empty() {
+                for t in 0..n {
+                    if !queued[t] || !started[t] || done[t] {
+                        continue;
+                    }
+                    let hit = failed_hosts.iter().any(|&h| {
+                        dyn_task_res[t].iter().any(|r| r >= 3 * h && r < 3 * h + 3)
+                    });
+                    if !hit {
+                        continue;
+                    }
+                    // materialize the killed attempt's progress for the
+                    // lost-work account (anchored runs integrate lazily)
+                    let rem_now = if anchored && rate_of[t] > 0.0 {
+                        (remaining[t] - rate_of[t] * (now - anchor_t[t])).max(0.0)
+                    } else {
+                        remaining[t]
+                    };
+                    lost_work += (dag.tasks[t].size - rem_now).max(0.0);
+                    remaining[t] = dag.tasks[t].size;
+                    rate_of[t] = 0.0;
+                    anchor_t[t] = now;
+                    if anchored {
+                        fins.remove(t);
+                    }
+                    queued[t] = false;
+                    if comps_on {
+                        comps.remove(t);
+                    }
+                    if is_flow_v[t] {
+                        rq_net.remove(t);
+                    } else {
+                        rq_cpu.remove(t);
+                    }
+                    if coflow_on && is_flow_v[t] {
+                        if let Some(gi) = group_of[t] {
+                            if !group_dirty[gi] {
+                                group_dirty[gi] = true;
+                                dirty_groups.push(gi);
+                            }
+                        }
+                    }
+                    attempts[t] += 1;
+                    if attempts[t] >= max_attempts {
+                        quarantine_job!(dag.job(t), JobOutcome::Exhausted { attempts: attempts[t] });
+                    } else {
+                        retries += 1;
+                        retry_gate[t] = now + retry_backoff(backoff, attempts[t]);
+                        gates.push(Reverse((f64_ord(retry_gate[t]), seq[t], t)));
+                    }
+                }
+            }
+            // the cursor reports crashes whatever the policy; FailFast
+            // treats them as pure capacity events and drops the list
+            failed_hosts.clear();
             // dirty every queued task whose footprint meets a touched
             // slot: the component repricing (step 3) and the SEBF key
             // refresh (step 2b) pick these up
@@ -1342,9 +1643,10 @@ pub fn simulate_with_footprints(
         let task_res: &[TaskRes] = if dyn_on { &dyn_task_res } else { task_res_in };
 
         // 1. admit gate-expired tasks back into the arrival stream (their
-        //    original live order is preserved through `seq`)
+        //    original live order is preserved through `seq`; retried
+        //    tasks sit here behind their backoff gate)
         while let Some(&Reverse((_, s, t))) = gates.peek() {
-            if now + EPS >= dag.tasks[t].gate {
+            if now + EPS >= eff_gate!(t) {
                 gates.pop();
                 arrivals.push(Reverse((s, t)));
             } else {
@@ -1359,8 +1661,9 @@ pub fn simulate_with_footprints(
                 continue;
             }
             debug_assert_eq!(indeg[t], 0);
-            if now + EPS < dag.tasks[t].gate {
-                gates.push(Reverse((f64_ord(dag.tasks[t].gate), seq[t], t)));
+            let gate_t = eff_gate!(t);
+            if now + EPS < gate_t {
+                gates.push(Reverse((f64_ord(gate_t), seq[t], t)));
                 continue;
             }
             if remaining[t] <= EPS {
@@ -1552,9 +1855,13 @@ pub fn simulate_with_footprints(
         }
 
         if rq_cpu.is_empty() && rq_net.is_empty() {
-            // nothing runnable: jump to the next gate expiry or give up
+            // nothing runnable: jump to the next gate expiry, quarantine
+            // the stuck jobs (Retry), or give up (FailFast)
             if let Some(&Reverse((_, _, tg))) = gates.peek() {
-                now = dag.tasks[tg].gate;
+                now = eff_gate!(tg);
+                continue;
+            }
+            if retry_on && quarantine_stuck!(caps0, task_res) {
                 continue;
             }
             return Err(deadlock_report(
@@ -2084,7 +2391,7 @@ pub fn simulate_with_footprints(
                 None => f64::INFINITY,
             };
             if let Some(&Reverse((_, _, tg))) = gates.peek() {
-                t_next = t_next.min(dag.tasks[tg].gate);
+                t_next = t_next.min(eff_gate!(tg));
             }
             // never advance across a pending dynamics entry: memoized
             // rates and predicted finishes are only valid up to the
@@ -2095,6 +2402,9 @@ pub fn simulate_with_footprints(
                 }
             }
             if !t_next.is_finite() {
+                if retry_on && quarantine_stuck!(caps0, task_res) {
+                    continue;
+                }
                 return Err(deadlock_report(
                     dag, caps0, task_res, &done, &queued, &indeg, &group_of, &group_open,
                     now, n - n_done,
@@ -2147,7 +2457,7 @@ pub fn simulate_with_footprints(
                 }
             }
             if let Some(&Reverse((_, _, tg))) = gates.peek() {
-                dt = dt.min(dag.tasks[tg].gate - now);
+                dt = dt.min(eff_gate!(tg) - now);
             }
             // stop the integration sweep at the next dynamics entry
             // (strictly ahead of `now`: step 0 consumed everything due,
@@ -2158,6 +2468,9 @@ pub fn simulate_with_footprints(
                 }
             }
             if !dt.is_finite() || dt <= 0.0 {
+                if retry_on && quarantine_stuck!(caps0, task_res) {
+                    continue;
+                }
                 return Err(deadlock_report(
                     dag, caps0, task_res, &done, &queued, &indeg, &group_of, &group_open,
                     now, n - n_done,
@@ -2259,15 +2572,39 @@ pub fn simulate_with_footprints(
         }
     }
 
-    // aggregate per logical task
+    // aggregate per logical task; quarantined chunks keep NaN traces
+    // and are skipped (a fully-quarantined logical task has no entry —
+    // without recovery every finish is set, so nothing is ever skipped)
     let mut orig_start: BTreeMap<TaskId, f64> = BTreeMap::new();
     let mut orig_finish: BTreeMap<TaskId, f64> = BTreeMap::new();
     for (i, t) in dag.tasks.iter().enumerate() {
+        if trace[i].finish.is_nan() {
+            continue;
+        }
         let e = orig_start.entry(t.orig).or_insert(f64::INFINITY);
         *e = e.min(trace[i].start);
         let e = orig_finish.entry(t.orig).or_insert(f64::NEG_INFINITY);
         *e = e.max(trace[i].finish);
     }
+
+    // per-job verdicts: a quarantined / exhausted job carries the
+    // outcome recorded when it went down; every other job completed at
+    // its latest member finish
+    let mut job_fin = vec![0.0f64; n_jobs];
+    for i in 0..n {
+        if !trace[i].finish.is_nan() {
+            let j = dag.job(i);
+            if trace[i].finish > job_fin[j] {
+                job_fin[j] = trace[i].finish;
+            }
+        }
+    }
+    let jobs: Vec<JobOutcome> = (0..n_jobs)
+        .map(|j| match job_down.get(j).copied().flatten() {
+            Some(out) => out,
+            None => JobOutcome::Completed { finish: job_fin[j] },
+        })
+        .collect();
 
     // hand every buffer back so the next run on this scratch is warm
     scratch.rq_cpu_bucket = q_cpu_bucket;
@@ -2328,8 +2665,14 @@ pub fn simulate_with_footprints(
     scratch.dyn_touched = dyn_touched;
     scratch.dyn_touched_list = dyn_touched_list;
     scratch.dyn_alive = dyn_alive;
+    scratch.attempts = attempts;
+    scratch.retry_gate = retry_gate;
+    scratch.quarantined = quarantined;
+    scratch.job_down = job_down;
+    scratch.job_stuck = job_stuck;
+    scratch.failed_hosts = failed_hosts;
 
-    Ok(SimResult { makespan: now, trace, orig_start, orig_finish, events })
+    Ok(SimResult { makespan: now, trace, orig_start, orig_finish, events, jobs, retries, lost_work })
 }
 
 #[cfg(test)]

@@ -24,6 +24,11 @@ pub struct Annotations {
     pub pipelined: Vec<TaskId>,
     /// Coflow groups over logical *flow* tasks (must not be pipelined).
     pub coflows: Vec<Vec<TaskId>>,
+    /// Owning job per logical task — the quarantine / per-job-outcome
+    /// unit of the fault-recovery layer (`sim/recovery.rs`). Missing =
+    /// job 0; empty map = single-job DAG (`SimDag::job_of` stays
+    /// empty).
+    pub jobs: BTreeMap<TaskId, usize>,
 }
 
 fn kind_of(dag: &MXDag, t: TaskId) -> SimKind {
@@ -59,6 +64,15 @@ pub fn apply_annotations(sim: &mut SimDag, ann: &Annotations) {
         };
         task.coflow = coflow_of.get(&task.orig).copied();
     }
+    // the job map is another value rewrite keyed by `orig`, so cached
+    // expansions pick up job ownership the same way; no map keeps the
+    // cheap single-job default (an empty `job_of`)
+    let mut job_of = std::mem::take(&mut sim.job_of);
+    job_of.clear();
+    if !ann.jobs.is_empty() {
+        job_of.extend(sim.tasks.iter().map(|t| ann.jobs.get(&t.orig).copied().unwrap_or(0)));
+    }
+    sim.job_of = job_of;
 }
 
 /// Expand `dag` into a physical SimDag under `ann`.
@@ -241,6 +255,31 @@ mod tests {
             assert_eq!(x.gate.to_bits(), y.gate.to_bits());
             assert_eq!(x.coflow, y.coflow);
         }
+    }
+
+    #[test]
+    fn job_map_propagates_to_every_chunk() {
+        let (g, a, f) = two_stage(4.0, 1.0, 4.0, 1.0);
+        let mut ann = Annotations { pipelined: vec![a, f], ..Default::default() };
+        // no jobs annotated: the cheap single-job default
+        let sim = expand(&g, &ann);
+        assert!(sim.job_of.is_empty());
+        assert_eq!(sim.n_jobs(), 1);
+        // annotated: every chunk inherits its logical task's job, and
+        // re-applying to a cached expansion matches a fresh one
+        ann.jobs.insert(f, 1);
+        let fresh = expand(&g, &ann);
+        assert_eq!(fresh.job_of.len(), fresh.len());
+        assert_eq!(fresh.n_jobs(), 2);
+        for id in chunk_ids(&fresh, f) {
+            assert_eq!(fresh.job(id), 1);
+        }
+        for id in chunk_ids(&fresh, a) {
+            assert_eq!(fresh.job(id), 0);
+        }
+        let mut cached = sim;
+        apply_annotations(&mut cached, &ann);
+        assert_eq!(cached.job_of, fresh.job_of);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! component-wise rate allocator with memoized rates (`components`,
 //! `alloc`), and anchored time advance over a finish-time heap
 //! (`horizon`), plus mid-simulation cluster dynamics — fabric churn,
-//! stragglers, reroute — folded into the event loop (`dynamics`). This is
+//! stragglers, reroute — folded into the event loop (`dynamics`), and a
+//! fault-recovery layer — task retry with exponential backoff, per-job
+//! quarantine and outcome reporting (`recovery`). This is
 //! the testbed every scheduler in `sched/` is evaluated on (DESIGN.md §5
 //! records why a fluid model preserves the paper's comparisons;
 //! `docs/ARCHITECTURE.md` documents the engine ↔ scheduler contract).
@@ -17,6 +19,7 @@ pub mod engine;
 pub mod expand;
 pub mod horizon;
 pub mod ready;
+pub mod recovery;
 pub mod spec;
 pub mod topology;
 
@@ -29,6 +32,7 @@ pub use engine::{
 };
 pub use horizon::{within_tolerance, FinHeap, HorizonKind, TOLERANCE_REL};
 pub use expand::{apply_annotations, expand, Annotations};
+pub use recovery::{retry_backoff, JobOutcome, RecoveryPolicy};
 pub use ready::{BucketQueue, Keying, PrioKey, QueueDiscipline, ReadyQueue, ResortQueue};
 pub use spec::{Cluster, CpuPolicy, Host, NetPolicy, Policy, SimDag, SimKind, SimTask};
 pub use topology::{PathSelect, Topology};

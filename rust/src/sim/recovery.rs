@@ -1,0 +1,289 @@
+//! Fault recovery: task retry with backoff, and per-job quarantine.
+//!
+//! PR 7 made the *cluster* fail; this layer makes the *application*
+//! survive it. [`RecoveryPolicy`] is the fifth orthogonal engine axis
+//! (after queue / alloc / horizon / threads) and follows the same
+//! oracle-pairing convention: the default [`RecoveryPolicy::FailFast`]
+//! is bit-identical to the recovery-free engine — a stuck simulation
+//! still aborts with `SimError::Deadlock` — while
+//! [`RecoveryPolicy::Retry`] turns two kinds of misfortune into
+//! simulated-time mechanics instead of aborts:
+//!
+//! - **Host crashes** ([`DynAction::FailHost`](super::dynamics::DynAction)):
+//!   every in-flight task whose footprint touches the crashed host
+//!   *loses its progress* — remaining bytes reset to full, held
+//!   capacity is released through the component dirty protocol, and
+//!   the task re-enters the engine behind a deterministic
+//!   exponential-backoff timer ([`retry_backoff`]) implemented as a
+//!   plain gate event, so eager event boundaries stay bit-comparable
+//!   across every engine corner.
+//! - **Terminal starvation**: where FailFast would deadlock (a flow
+//!   stranded on a dead trunk with no survivor, a task parked behind a
+//!   barrier that can never open, or attempts exhausted), Retry
+//!   **quarantines the owning job** — removes its unfinished tasks in
+//!   task-id order, releases every held cap, dirties exactly the
+//!   touched contention components — and keeps simulating everyone
+//!   else. The per-job verdicts come back as [`JobOutcome`]s on
+//!   `SimResult`.
+//!
+//! Jobs are identified by `SimDag::job_of` (annotated through
+//! `Annotations::jobs` by the multi-job planners; a DAG with no job map
+//! is a single job `0`). See `docs/ARCHITECTURE.md` ("Failure
+//! recovery") for the cap-release protocol and the recovery oracle.
+
+use super::engine::StuckReason;
+use crate::util::json::Json;
+
+/// Default failed-attempt budget for `retry` with no arguments.
+pub const DEFAULT_MAX_ATTEMPTS: usize = 3;
+/// Default base backoff (simulated seconds) for `retry` with no
+/// arguments.
+pub const DEFAULT_BACKOFF: f64 = 1.0;
+
+/// How the engine responds to lost work and terminally-stuck tasks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RecoveryPolicy {
+    /// Abort the whole simulation on the first terminally-stuck task
+    /// (`SimError::Deadlock`), exactly as before this layer existed.
+    /// The default, and the bitwise oracle corner: FailFast with *any*
+    /// timeline is bit-identical to the recovery-free engine.
+    FailFast,
+    /// Survive failures: crashed-host victims retry behind
+    /// [`retry_backoff`] gates, and terminally-stuck or
+    /// attempts-exhausted tasks quarantine their job instead of
+    /// aborting the run.
+    Retry {
+        /// A task's `max_attempts`-th *failed* attempt quarantines its
+        /// job with [`JobOutcome::Exhausted`]; up to `max_attempts - 1`
+        /// failures are retried. Must be at least 1.
+        max_attempts: usize,
+        /// Base backoff delay: the `k`-th failure re-gates the task at
+        /// `now + backoff * 2^(k-1)` simulated seconds.
+        backoff: f64,
+    },
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy::FailFast
+    }
+}
+
+impl RecoveryPolicy {
+    /// `retry` with the default attempt budget and backoff.
+    pub fn retry_default() -> Self {
+        RecoveryPolicy::Retry { max_attempts: DEFAULT_MAX_ATTEMPTS, backoff: DEFAULT_BACKOFF }
+    }
+
+    pub fn is_retry(&self) -> bool {
+        matches!(self, RecoveryPolicy::Retry { .. })
+    }
+
+    /// Parse the CLI spelling: `failfast`, `retry`, or
+    /// `retry:MAX_ATTEMPTS:BACKOFF`.
+    pub fn parse(s: &str) -> Result<RecoveryPolicy, String> {
+        match s {
+            "failfast" => return Ok(RecoveryPolicy::FailFast),
+            "retry" => return Ok(RecoveryPolicy::retry_default()),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("retry:") {
+            let (a, b) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("recovery `{s}`: expected retry:MAX_ATTEMPTS:BACKOFF"))?;
+            let max_attempts: usize = a
+                .parse()
+                .map_err(|_| format!("recovery `{s}`: bad max_attempts `{a}`"))?;
+            let backoff: f64 = b
+                .parse()
+                .map_err(|_| format!("recovery `{s}`: bad backoff `{b}`"))?;
+            let p = RecoveryPolicy::Retry { max_attempts, backoff };
+            p.validate()?;
+            return Ok(p);
+        }
+        Err(format!(
+            "recovery `{s}`: expected failfast | retry | retry:MAX_ATTEMPTS:BACKOFF"
+        ))
+    }
+
+    /// Stable string spelling, inverse of [`RecoveryPolicy::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            RecoveryPolicy::FailFast => "failfast".into(),
+            RecoveryPolicy::Retry { max_attempts, backoff } => {
+                format!("retry:{max_attempts}:{backoff}")
+            }
+        }
+    }
+
+    /// Parse the scenario-JSON spelling: the string `"failfast"` /
+    /// `"retry"`, or `{"kind": "retry", "max_attempts": N, "backoff": X}`
+    /// (both object fields optional, defaulting as in
+    /// [`RecoveryPolicy::retry_default`]).
+    pub fn from_json(j: &Json) -> Result<RecoveryPolicy, String> {
+        if let Ok(s) = j.as_str() {
+            return RecoveryPolicy::parse(s);
+        }
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .map_err(|e| format!("recovery: {e}"))?;
+        match kind {
+            "failfast" => Ok(RecoveryPolicy::FailFast),
+            "retry" => {
+                let max_attempts = match j.get("max_attempts") {
+                    Ok(v) => v.as_usize().map_err(|e| format!("recovery: {e}"))?,
+                    Err(_) => DEFAULT_MAX_ATTEMPTS,
+                };
+                let backoff = match j.get("backoff") {
+                    Ok(v) => v.as_f64().map_err(|e| format!("recovery: {e}"))?,
+                    Err(_) => DEFAULT_BACKOFF,
+                };
+                let p = RecoveryPolicy::Retry { max_attempts, backoff };
+                p.validate()?;
+                Ok(p)
+            }
+            _ => Err(format!("recovery: unknown kind `{kind}` (failfast|retry)")),
+        }
+    }
+
+    /// Serialize to the [`RecoveryPolicy::from_json`] format.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            RecoveryPolicy::FailFast => Json::Str("failfast".into()),
+            RecoveryPolicy::Retry { max_attempts, backoff } => Json::obj(vec![
+                ("kind", Json::Str("retry".into())),
+                ("max_attempts", Json::Num(max_attempts as f64)),
+                ("backoff", Json::Num(backoff)),
+            ]),
+        }
+    }
+
+    /// Reject degenerate parameters (`max_attempts == 0`, or a backoff
+    /// that is negative / non-finite — zero is legal and means an
+    /// immediate re-gate at `now`).
+    pub fn validate(&self) -> Result<(), String> {
+        if let RecoveryPolicy::Retry { max_attempts, backoff } = *self {
+            if max_attempts == 0 {
+                return Err("recovery: max_attempts must be at least 1".into());
+            }
+            if !backoff.is_finite() || backoff < 0.0 {
+                return Err(format!("recovery: bad backoff {backoff}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic exponential backoff: the delay charged after a task's
+/// `attempt`-th failure (`attempt >= 1`) is `backoff * 2^(attempt-1)`.
+/// Pure simulated-time arithmetic — the retry lands as an ordinary gate
+/// event, so event boundaries stay identical across engine corners.
+pub fn retry_backoff(backoff: f64, attempt: usize) -> f64 {
+    backoff * f64::powi(2.0, attempt.saturating_sub(1) as i32)
+}
+
+/// Per-job verdict reported by `SimResult::jobs`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobOutcome {
+    /// Every task of the job finished; `finish` is the latest task
+    /// finish time (the job's completion time).
+    Completed { finish: f64 },
+    /// The job was quarantined at simulated time `at` because a member
+    /// task was terminally stuck for `reason` (dead-trunk starvation, a
+    /// barrier that can never open, …).
+    Quarantined { reason: StuckReason, at: f64 },
+    /// A member task burned through its whole failed-attempt budget.
+    Exhausted { attempts: usize },
+}
+
+impl JobOutcome {
+    pub fn is_completed(&self) -> bool {
+        matches!(self, JobOutcome::Completed { .. })
+    }
+
+    /// Completion time, when the job completed.
+    pub fn finish(&self) -> Option<f64> {
+        match *self {
+            JobOutcome::Completed { finish } => Some(finish),
+            _ => None,
+        }
+    }
+
+    /// One row of the CLI's per-job outcome table.
+    pub fn to_json(&self, job: usize) -> Json {
+        match *self {
+            JobOutcome::Completed { finish } => Json::obj(vec![
+                ("job", Json::Num(job as f64)),
+                ("outcome", Json::Str("completed".into())),
+                ("finish", Json::Num(finish)),
+            ]),
+            JobOutcome::Quarantined { reason, at } => Json::obj(vec![
+                ("job", Json::Num(job as f64)),
+                ("outcome", Json::Str("quarantined".into())),
+                ("reason", Json::Str(reason.label())),
+                ("at", Json::Num(at)),
+            ]),
+            JobOutcome::Exhausted { attempts } => Json::obj(vec![
+                ("job", Json::Num(job as f64)),
+                ("outcome", Json::Str("exhausted".into())),
+                ("attempts", Json::Num(attempts as f64)),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_label_round_trip() {
+        for s in ["failfast", "retry:5:0.25"] {
+            let p = RecoveryPolicy::parse(s).unwrap();
+            assert_eq!(p.label(), s);
+        }
+        assert_eq!(RecoveryPolicy::parse("retry").unwrap(), RecoveryPolicy::retry_default());
+        assert!(RecoveryPolicy::parse("retry:0:1").is_err()); // zero attempts
+        assert!(RecoveryPolicy::parse("retry:3:-1").is_err()); // negative backoff
+        assert!(RecoveryPolicy::parse("retry:3").is_err()); // missing backoff
+        assert!(RecoveryPolicy::parse("never").is_err());
+    }
+
+    #[test]
+    fn json_round_trip_and_defaults() {
+        for p in [RecoveryPolicy::FailFast, RecoveryPolicy::Retry { max_attempts: 7, backoff: 0.5 }]
+        {
+            assert_eq!(RecoveryPolicy::from_json(&p.to_json()).unwrap(), p);
+        }
+        // bare string and defaulted object fields
+        let j = Json::parse(r#""retry""#).unwrap();
+        assert_eq!(RecoveryPolicy::from_json(&j).unwrap(), RecoveryPolicy::retry_default());
+        let j = Json::parse(r#"{"kind": "retry", "backoff": 2.0}"#).unwrap();
+        assert_eq!(
+            RecoveryPolicy::from_json(&j).unwrap(),
+            RecoveryPolicy::Retry { max_attempts: DEFAULT_MAX_ATTEMPTS, backoff: 2.0 }
+        );
+        assert!(RecoveryPolicy::from_json(&Json::parse(r#"{"kind": "pray"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt() {
+        assert_eq!(retry_backoff(0.5, 1), 0.5);
+        assert_eq!(retry_backoff(0.5, 2), 1.0);
+        assert_eq!(retry_backoff(0.5, 4), 4.0);
+        assert_eq!(retry_backoff(0.0, 3), 0.0);
+    }
+
+    #[test]
+    fn outcome_accessors() {
+        let c = JobOutcome::Completed { finish: 2.5 };
+        assert!(c.is_completed());
+        assert_eq!(c.finish(), Some(2.5));
+        let q = JobOutcome::Quarantined { reason: StuckReason::Blocked, at: 1.0 };
+        assert!(!q.is_completed());
+        assert_eq!(q.finish(), None);
+        let row = q.to_json(3).to_string();
+        assert!(row.contains("\"quarantined\""), "{row}");
+    }
+}

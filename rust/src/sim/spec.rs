@@ -284,6 +284,13 @@ pub struct SimDag {
     pub tasks: Vec<SimTask>,
     pub preds: Vec<Vec<usize>>,
     pub succs: Vec<Vec<usize>>,
+    /// Owning *job* per task, parallel to `tasks` — the quarantine unit
+    /// of the fault-recovery layer (`sim/recovery.rs`) and the grouping
+    /// key for `SimResult` per-job outcomes. Left empty (the default,
+    /// and what `push` maintains) every task belongs to the implicit
+    /// job `0`; multi-job planners populate it through
+    /// `Annotations::jobs`.
+    pub job_of: Vec<usize>,
 }
 
 impl SimDag {
@@ -306,6 +313,16 @@ impl SimDag {
     }
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
+    }
+
+    /// Owning job of task `t` (`0` when no job map is annotated).
+    pub fn job(&self, t: usize) -> usize {
+        self.job_of.get(t).copied().unwrap_or(0)
+    }
+
+    /// Number of jobs — at least 1 (the implicit job `0`).
+    pub fn n_jobs(&self) -> usize {
+        self.job_of.iter().copied().max().map_or(1, |m| m + 1)
     }
 }
 

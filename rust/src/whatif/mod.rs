@@ -22,8 +22,8 @@ use crate::mxdag::{MXDag, TaskId, TaskKind};
 use crate::sched::mxsched::cpm_on;
 use crate::sched::{evaluate, evaluate_with, EvalContext, Plan};
 use crate::sim::{
-    Annotations, Cluster, CpuPolicy, DynAction, DynTimeline, LinkRef, NetPolicy, SimConfig,
-    SimError,
+    Annotations, Cluster, CpuPolicy, DynAction, DynTimeline, LinkRef, NetPolicy, RecoveryPolicy,
+    SimConfig, SimError,
 };
 use crate::util::par::par_map_indexed;
 
@@ -86,6 +86,16 @@ pub enum Hypothetical {
     /// plan. Only meaningful on a `ParallelFabrics` cluster (elsewhere
     /// the link validation error is captured in the outcome).
     Reroute { trunk: usize },
+    /// Cluster hypothetical: crash `host` at t = `at` and score the base
+    /// plan under the default [`RecoveryPolicy::Retry`] — in-flight work
+    /// on the host is killed and retried behind backoff gates, and a job
+    /// left terminally stuck is quarantined rather than deadlocking the
+    /// whole variant (the makespan then covers the *surviving* work).
+    /// The asymmetry with [`Hypothetical::Degrade`] is deliberate:
+    /// degradations answer "what does this plan cost if capacity
+    /// shrinks?" under the oracle FailFast corner, while a crash is
+    /// precisely the question the recovery layer exists for.
+    FailHost { host: usize, at: f64 },
 }
 
 impl Hypothetical {
@@ -104,6 +114,7 @@ impl Hypothetical {
                 format!("degrade({},x{factor})", link.label())
             }
             Hypothetical::Reroute { trunk } => format!("reroute(-trunk:{trunk})"),
+            Hypothetical::FailHost { host, at } => format!("fail_host({host}@{at})"),
         }
     }
 }
@@ -193,12 +204,20 @@ fn eval_hypothetical(
             ctx,
             base,
             DynTimeline::new().with(0.0, DynAction::Degrade { link: *link, factor: *factor }),
+            RecoveryPolicy::FailFast,
         ),
         Hypothetical::Reroute { trunk } => cluster_jct(
             ctx,
             base,
             DynTimeline::new()
                 .with(0.0, DynAction::Degrade { link: LinkRef::Trunk(*trunk), factor: 0.0 }),
+            RecoveryPolicy::FailFast,
+        ),
+        Hypothetical::FailHost { host, at } => cluster_jct(
+            ctx,
+            base,
+            DynTimeline::new().with(*at, DynAction::FailHost { host: *host }),
+            RecoveryPolicy::retry_default(),
         ),
     };
     WhatIf { label, outcome: jct.map(|j| (j, j - baseline)) }
@@ -212,9 +231,10 @@ fn cluster_jct(
     ctx: &mut EvalContext<'_>,
     base: &Plan,
     timeline: DynTimeline,
+    recovery: RecoveryPolicy,
 ) -> Result<f64, String> {
     timeline.validate(ctx.cluster())?;
-    let cfg = SimConfig { dynamics: timeline, ..SimConfig::default() };
+    let cfg = SimConfig { dynamics: timeline, recovery, ..SimConfig::default() };
     evaluate_with(ctx.dag(), ctx.cluster(), base, &cfg)
         .map(|r| r.makespan)
         .map_err(|e| e.to_string())
@@ -496,6 +516,34 @@ mod tests {
             "no surviving path: {:?}",
             ex.results[0]
         );
+    }
+
+    /// A `FailHost` hypothetical scores under the Retry policy: a crash
+    /// that dooms one job quarantines it instead of deadlocking the
+    /// variant, so the JCT covers the surviving jobs — while a crash
+    /// scheduled past the makespan never fires and scores as a no-op.
+    #[test]
+    fn fail_host_hypothetical_scores_surviving_jobs() {
+        let mut b = MXDag::builder();
+        let a = b.compute("a", 0, 4.0);
+        let c = b.compute("c", 1, 4.0);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(2);
+        let mut base = Plan::fair();
+        base.ann.jobs.insert(a, 0);
+        base.ann.jobs.insert(c, 1);
+        let hypos = vec![
+            Hypothetical::FailHost { host: 1, at: 1.0 },
+            Hypothetical::FailHost { host: 0, at: 100.0 },
+        ];
+        let ex = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+        assert_eq!(ex.results[0].label, "fail_host(1@1)");
+        // host 1's job is quarantined (its core is gone for good); the
+        // score is job 0's unperturbed completion, not a deadlock
+        let jct = ex.results[0].jct().expect("crash variant must score");
+        assert!((jct - 4.0).abs() < 1e-9, "surviving job sets the JCT: {jct}");
+        // a crash after everything finished changes nothing
+        assert!(ex.results[1].delta().unwrap().abs() < 1e-9, "{:?}", ex.results[1]);
     }
 
     /// Unit-level determinism slice of the parallel oracle (the full

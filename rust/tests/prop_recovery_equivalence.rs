@@ -1,0 +1,729 @@
+//! Equivalence oracle for the fault-recovery layer (`sim/recovery.rs`):
+//! host crashes (`DynAction::FailHost`) under `RecoveryPolicy::Retry`
+//! kill in-flight work, re-enqueue it behind exponential-backoff gates
+//! and quarantine terminally-stuck jobs — and every one of those paths
+//! must hold to the same serial whole-set oracle the static engine,
+//! the parallel fill and the dynamics layer already answer to, across
+//! the full {Incremental, FullResort} × {Components, WholeSet} ×
+//! {Eager, Anchored} × threads ∈ {1, 2, 4} matrix (eager corners
+//! bitwise, anchored within `within_tolerance`). On top of the matrix:
+//!
+//! * `FailFast` + any timeline is bit-identical to spelling every
+//!   `fail_host` as `slow_host { factor: 0 }` — the recovery layer off
+//!   is exactly the pre-recovery engine;
+//! * `Retry` + empty timeline is bit-identical to `FailFast` — the
+//!   oracle-pairing convention for the fifth config axis;
+//! * `DynTimeline::merge` preserves last-writer-wins order for
+//!   same-timestamp events (the satellite determinism fix);
+//! * a deterministic two-job scenario where one job's trunk death
+//!   quarantines only that job while the other completes with its solo
+//!   makespan, bitwise (capacity conservation: quarantine released
+//!   every held slot).
+
+use mxdag::sim::{
+    simulate, within_tolerance, AllocKind, Cluster, DynAction, DynTimeline, HorizonKind,
+    JobOutcome, LinkRef, Policy, QueueKind, RecoveryPolicy, SimConfig, SimDag, SimKind,
+    SimResult, SimTask, StuckReason, Topology,
+};
+use mxdag::util::propcheck::{check, Config};
+use mxdag::util::rng::Rng;
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn gen_params(rng: &mut Rng) -> RandomParams {
+    RandomParams {
+        layers: rng.range(2, 5),
+        width: rng.range(2, 5),
+        hosts: rng.range(2, 8),
+        edge_p: rng.range_f64(0.2, 0.9),
+        pipe_frac: 0.0,
+        min_size: 0.1,
+        max_size: 3.0,
+        seed: rng.next_u64(),
+    }
+}
+
+/// The full configuration matrix; the first entry is the serial
+/// whole-set baseline every other corner is compared against.
+const MATRIX: [(QueueKind, AllocKind, HorizonKind); 8] = [
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
+];
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// Run `sim` through the whole matrix with `timeline` and `recovery`
+/// injected into every corner's `SimConfig`.
+fn run_matrix(
+    sim: &SimDag,
+    cluster: &Cluster,
+    policy: Policy,
+    timeline: &DynTimeline,
+    recovery: RecoveryPolicy,
+) -> Result<Vec<Vec<SimResult>>, String> {
+    MATRIX
+        .iter()
+        .map(|&(queue, alloc, horizon)| {
+            THREADS
+                .iter()
+                .map(|&threads| {
+                    simulate(
+                        sim,
+                        cluster,
+                        &SimConfig {
+                            policy,
+                            queue,
+                            alloc,
+                            horizon,
+                            threads,
+                            dynamics: timeline.clone(),
+                            recovery,
+                            ..Default::default()
+                        },
+                    )
+                    .map_err(|e| format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}: {e}"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The standing agreement contract, extended to the recovery outputs:
+/// corner serials against the whole-set baseline (value-equal for
+/// eager, tolerance for anchored; NaN traces — quarantined chunks —
+/// must be NaN everywhere), threaded runs against their own corner's
+/// serial bitwise (eager) / tolerance (anchored). Retry accounting
+/// (`retries`, per-job outcome kinds) is discrete and must agree
+/// exactly wherever the comparison is bitwise.
+fn assert_equivalent(tag: &str, results: &[Vec<SimResult>]) -> Result<(), String> {
+    let base = &results[0][0];
+    for (k, corner) in results.iter().enumerate() {
+        let (queue, alloc, horizon) = MATRIX[k];
+        let serial = &corner[0];
+        let same = |x: f64, y: f64| match horizon {
+            HorizonKind::Eager => (x - y).abs() <= 1e-9 || (x.is_nan() && y.is_nan()),
+            HorizonKind::Anchored => {
+                within_tolerance(x, y) || (x.is_nan() && y.is_nan())
+            }
+        };
+        if k > 0 {
+            let tag = format!("{tag} [{queue:?}/{alloc:?}/{horizon:?}]");
+            if horizon == HorizonKind::Eager {
+                if base.events != serial.events {
+                    return Err(format!("{tag}: events {} vs {}", base.events, serial.events));
+                }
+                if base.retries != serial.retries {
+                    return Err(format!(
+                        "{tag}: retries {} vs {}",
+                        base.retries, serial.retries
+                    ));
+                }
+            }
+            if !same(base.makespan, serial.makespan) {
+                return Err(format!(
+                    "{tag}: makespan {} vs {}",
+                    base.makespan, serial.makespan
+                ));
+            }
+            if base.jobs.len() != serial.jobs.len() {
+                return Err(format!("{tag}: job count differs"));
+            }
+            for (j, (a, b)) in base.jobs.iter().zip(serial.jobs.iter()).enumerate() {
+                if a.is_completed() != b.is_completed() {
+                    return Err(format!("{tag}: job {j} outcome {a:?} vs {b:?}"));
+                }
+            }
+            for (i, (a, b)) in base.trace.iter().zip(serial.trace.iter()).enumerate() {
+                if !same(a.start, b.start) || !same(a.finish, b.finish) {
+                    return Err(format!(
+                        "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                        a.start, a.finish, b.start, b.finish
+                    ));
+                }
+            }
+        }
+        for (j, r) in corner.iter().enumerate().skip(1) {
+            let tag = format!("{tag} [{queue:?}/{alloc:?}/{horizon:?} t{}]", THREADS[j]);
+            if serial.retries != r.retries {
+                return Err(format!("{tag}: retries {} vs {}", serial.retries, r.retries));
+            }
+            if serial.jobs.len() != r.jobs.len() {
+                return Err(format!("{tag}: job count differs"));
+            }
+            match horizon {
+                HorizonKind::Eager => {
+                    if serial.events != r.events {
+                        return Err(format!("{tag}: events {} vs {}", serial.events, r.events));
+                    }
+                    if serial.makespan.to_bits() != r.makespan.to_bits() {
+                        return Err(format!(
+                            "{tag}: makespan bits {} vs {}",
+                            serial.makespan, r.makespan
+                        ));
+                    }
+                    for (i, (a, b)) in serial.trace.iter().zip(r.trace.iter()).enumerate() {
+                        if a.start.to_bits() != b.start.to_bits()
+                            || a.finish.to_bits() != b.finish.to_bits()
+                        {
+                            return Err(format!(
+                                "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                                a.start, a.finish, b.start, b.finish
+                            ));
+                        }
+                    }
+                }
+                HorizonKind::Anchored => {
+                    if !within_tolerance(serial.makespan, r.makespan) {
+                        return Err(format!(
+                            "{tag}: makespan {} vs {}",
+                            serial.makespan, r.makespan
+                        ));
+                    }
+                    for (i, (a, b)) in serial.trace.iter().zip(r.trace.iter()).enumerate() {
+                        let ok = |x: f64, y: f64| {
+                            within_tolerance(x, y) || (x.is_nan() && y.is_nan())
+                        };
+                        if !ok(a.start, b.start) || !ok(a.finish, b.finish) {
+                            return Err(format!(
+                                "{tag}: chunk {i} trace {:?}..{:?} vs {:?}..{:?}",
+                                a.start, a.finish, b.start, b.finish
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The headline recovery oracle: random DAGs with a crash/restore
+/// cycle on a random host under `Retry` — in-flight victims lose
+/// their progress, re-enter behind backoff gates and finish after the
+/// restore — must keep all 24 matrix cells agreeing. Crash instants
+/// are odd fractions so no task-completion boundary coincides with a
+/// kill in one corner but not another.
+#[test]
+fn prop_retry_matrix_agrees() {
+    check(
+        "recovery-equivalence",
+        &Config { cases: 8, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let cluster = Cluster::uniform(p.hosts);
+            let victim = (p.seed % p.hosts as u64) as usize;
+            let timeline = DynTimeline::new()
+                .with(0.7731, DynAction::FailHost { host: victim })
+                .with(1.3371, DynAction::RestoreHost { host: victim })
+                .with(2.7713, DynAction::FailHost { host: victim })
+                .with(3.1337, DynAction::RestoreHost { host: victim });
+            let retry = RecoveryPolicy::Retry { max_attempts: 5, backoff: 0.25 };
+            for policy in [Policy::fair(), Policy::priority()] {
+                let sim = mxdag::sim::expand(&g, &Default::default());
+                let results = run_matrix(&sim, &cluster, policy, &timeline, retry)?;
+                assert_equivalent(&format!("{policy:?}"), &results)?;
+                // the cycle must complete everything: the host comes
+                // back before backoff gates expire a 5th time
+                let base = &results[0][0];
+                if !base.jobs.iter().all(|j| j.is_completed()) {
+                    return Err(format!("jobs not completed: {:?}", base.jobs));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Oracle-pairing convention, side one: under `FailFast` a
+/// `fail_host` is *only* a capacity event — every corner (and thread
+/// count) must be bit-identical to the same timeline with each crash
+/// spelled `slow_host { factor: 0 }`, whether the run completes or
+/// deadlocks.
+#[test]
+fn prop_failfast_crash_is_bitwise_slow_host_zero() {
+    check(
+        "recovery-failfast-corner",
+        &Config { cases: 8, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let cluster = Cluster::uniform(p.hosts);
+            let victim = (p.seed % p.hosts as u64) as usize;
+            let crash = DynTimeline::new()
+                .with(0.7731, DynAction::FailHost { host: victim })
+                .with(2.3371, DynAction::RestoreHost { host: victim });
+            let slow = DynTimeline::new()
+                .with(0.7731, DynAction::SlowHost { host: victim, factor: 0.0 })
+                .with(2.3371, DynAction::RestoreHost { host: victim });
+            let sim = mxdag::sim::expand(&g, &Default::default());
+            for &(queue, alloc, horizon) in MATRIX.iter() {
+                for &threads in THREADS.iter() {
+                    let cfg = |tl: &DynTimeline| SimConfig {
+                        queue,
+                        alloc,
+                        horizon,
+                        threads,
+                        dynamics: tl.clone(),
+                        recovery: RecoveryPolicy::FailFast,
+                        ..Default::default()
+                    };
+                    let a = simulate(&sim, &cluster, &cfg(&crash));
+                    let b = simulate(&sim, &cluster, &cfg(&slow));
+                    let tag = format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}");
+                    match (a, b) {
+                        (Ok(ra), Ok(rb)) => {
+                            if ra.makespan.to_bits() != rb.makespan.to_bits()
+                                || ra.events != rb.events
+                            {
+                                return Err(format!(
+                                    "{tag}: {} / {} vs {} / {}",
+                                    ra.makespan, ra.events, rb.makespan, rb.events
+                                ));
+                            }
+                            for (i, (x, y)) in
+                                ra.trace.iter().zip(rb.trace.iter()).enumerate()
+                            {
+                                if x.start.to_bits() != y.start.to_bits()
+                                    || x.finish.to_bits() != y.finish.to_bits()
+                                {
+                                    return Err(format!("{tag}: chunk {i} diverged"));
+                                }
+                            }
+                        }
+                        (Err(ea), Err(eb)) => {
+                            if format!("{ea:?}") != format!("{eb:?}") {
+                                return Err(format!("{tag}: {ea:?} vs {eb:?}"));
+                            }
+                        }
+                        (x, y) => {
+                            return Err(format!("{tag}: outcome kind diverged {x:?} vs {y:?}"))
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Oracle-pairing convention, side two: `Retry` with an *empty*
+/// timeline takes the exact code path `FailFast` does (no crashes, no
+/// victims, retry gates all zero) — bit-identical results on every
+/// corner and thread count.
+#[test]
+fn prop_retry_with_empty_timeline_is_bitwise_failfast() {
+    check(
+        "recovery-empty-timeline-corner",
+        &Config { cases: 8, ..Default::default() },
+        gen_params,
+        |p| {
+            let g = random_dag(p);
+            let cluster = Cluster::uniform(p.hosts);
+            let sim = mxdag::sim::expand(&g, &Default::default());
+            for &(queue, alloc, horizon) in MATRIX.iter() {
+                for &threads in THREADS.iter() {
+                    let cfg = |recovery| SimConfig {
+                        queue,
+                        alloc,
+                        horizon,
+                        threads,
+                        recovery,
+                        ..Default::default()
+                    };
+                    let ff = simulate(&sim, &cluster, &cfg(RecoveryPolicy::FailFast))
+                        .map_err(|e| format!("failfast: {e}"))?;
+                    let rt = simulate(&sim, &cluster, &cfg(RecoveryPolicy::retry_default()))
+                        .map_err(|e| format!("retry: {e}"))?;
+                    let tag = format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}");
+                    if ff.makespan.to_bits() != rt.makespan.to_bits() || ff.events != rt.events
+                    {
+                        return Err(format!(
+                            "{tag}: {} / {} vs {} / {}",
+                            ff.makespan, ff.events, rt.makespan, rt.events
+                        ));
+                    }
+                    for (i, (x, y)) in ff.trace.iter().zip(rt.trace.iter()).enumerate() {
+                        if x.start.to_bits() != y.start.to_bits()
+                            || x.finish.to_bits() != y.finish.to_bits()
+                        {
+                            return Err(format!("{tag}: chunk {i} diverged"));
+                        }
+                    }
+                    if rt.retries != 0 || rt.lost_work != 0.0 {
+                        return Err(format!("{tag}: phantom retries {}", rt.retries));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The satellite determinism fix: `DynTimeline::merge` must preserve
+/// last-writer-wins order for same-timestamp events. Two timelines
+/// that collide on every instant (a degrade and its restore at the
+/// same `at`) merge into exactly the individually-pushed spelling —
+/// `PartialEq` on the event lists *and* bitwise on a simulation that
+/// is sensitive to which same-instant writer survives.
+#[test]
+fn prop_merge_preserves_same_timestamp_order() {
+    check(
+        "dyn-merge-lww",
+        &Config { cases: 12, ..Default::default() },
+        |rng: &mut Rng| {
+            let n_events = rng.range(1, 6);
+            let mut ats = Vec::new();
+            for _ in 0..n_events {
+                ats.push(rng.range_f64(0.25, 3.0));
+            }
+            (rng.range_f64(0.1, 0.9), ats)
+        },
+        |(factor, ats)| {
+            // a: degrade the uplink at each instant; b: restore it at
+            // the same instants. merge(a, b) must leave every instant
+            // restored (b wrote last); merge(b, a) must leave it
+            // degraded.
+            let link = LinkRef::NicUp(0);
+            let mut a = DynTimeline::new();
+            let mut b = DynTimeline::new();
+            for &at in ats.iter() {
+                a.push(at, DynAction::Degrade { link, factor: *factor });
+                b.push(at, DynAction::Restore { link });
+            }
+            let mut merged = a.clone();
+            merged.merge(&b);
+            let mut reference = a.clone();
+            for e in b.events() {
+                reference.push(e.at, e.action);
+            }
+            if merged != reference {
+                return Err(format!("merge != push-by-push: {merged:?} vs {reference:?}"));
+            }
+            // semantics: every instant nets out restored, so the flow
+            // runs at full rate throughout — bitwise equal to no churn
+            let sim = one_flow(0, 1, 4.0);
+            let cluster = Cluster::uniform(2);
+            let run = |tl: &DynTimeline| {
+                simulate(
+                    &sim,
+                    &cluster,
+                    &SimConfig { dynamics: tl.clone(), ..Default::default() },
+                )
+                .map_err(|e| e.to_string())
+            };
+            let with_merged = run(&merged)?;
+            let clean = run(&DynTimeline::new())?;
+            if with_merged.makespan.to_bits() != clean.makespan.to_bits() {
+                return Err(format!(
+                    "restore must win every instant: {} vs {}",
+                    with_merged.makespan, clean.makespan
+                ));
+            }
+            // and the reversed merge leaves the link degraded from the
+            // first instant on — strictly slower
+            let mut degraded = b.clone();
+            degraded.merge(&a);
+            let with_degraded = run(&degraded)?;
+            if with_degraded.makespan <= with_merged.makespan + 1e-9 {
+                return Err(format!(
+                    "degrade must win when merged last: {} vs {}",
+                    with_degraded.makespan, with_merged.makespan
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Deterministic semantics: quarantine scope, capacity conservation,
+// retry exhaustion.
+// ---------------------------------------------------------------------
+
+/// One flow `src -> dst` of `size`, as a bare `SimDag` (no dummies).
+fn one_flow(src: usize, dst: usize, size: f64) -> SimDag {
+    let mut d = SimDag::default();
+    d.push(SimTask {
+        orig: 0,
+        chunk: (0, 1),
+        kind: SimKind::Flow { src, dst },
+        size,
+        priority: 0,
+        gate: 0.0,
+        coflow: None,
+    });
+    d
+}
+
+fn push_compute(d: &mut SimDag, orig: usize, host: usize, size: f64) {
+    d.push(SimTask {
+        orig,
+        chunk: (0, 1),
+        kind: SimKind::Compute { host },
+        size,
+        priority: 0,
+        gate: 0.0,
+        coflow: None,
+    });
+}
+
+/// The acceptance scenario: two independent jobs on a k = 1 parallel
+/// fabric — job 0 is a flow pinned to the only trunk, job 1 is a
+/// compute that never touches the fabric. The trunk dies mid-flow
+/// with no survivor to reroute to; under `Retry` job 0 is quarantined
+/// `Starved` on the trunk's arena slot while job 1 completes with its
+/// solo makespan, bitwise, in every corner.
+#[test]
+fn trunk_death_quarantines_only_the_stranded_job() {
+    let mut sim = one_flow(0, 1, 4.0);
+    push_compute(&mut sim, 1, 2, 3.0);
+    sim.job_of = vec![0, 1];
+    let cluster = Cluster::parallel_fabrics(3, 1, 1.0);
+    let trunk_slot = Topology::trunk(0, 3);
+    let tl = DynTimeline::new()
+        .with(1.0, DynAction::Degrade { link: LinkRef::Trunk(0), factor: 0.0 });
+
+    // solo oracle: job 1's compute alone on the same cluster/timeline
+    let mut solo = SimDag::default();
+    push_compute(&mut solo, 1, 2, 3.0);
+
+    for &(queue, alloc, horizon) in MATRIX.iter() {
+        for &threads in THREADS.iter() {
+            let cfg = SimConfig {
+                queue,
+                alloc,
+                horizon,
+                threads,
+                dynamics: tl.clone(),
+                recovery: RecoveryPolicy::retry_default(),
+                ..Default::default()
+            };
+            let tag = format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}");
+            let r = simulate(&sim, &cluster, &cfg)
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert_eq!(r.jobs.len(), 2, "{tag}");
+            match r.jobs[0] {
+                JobOutcome::Quarantined {
+                    reason: StuckReason::Starved { resource: Some(res) },
+                    at,
+                } => {
+                    assert_eq!(res, trunk_slot, "{tag}: must name the dead trunk");
+                    assert!((at - 3.0).abs() < 1e-6, "{tag}: quarantined at {at}");
+                }
+                other => panic!("{tag}: job 0 should be starved-quarantined: {other:?}"),
+            }
+            assert!(r.jobs[1].is_completed(), "{tag}: survivor job");
+            assert!(r.trace[0].finish.is_nan(), "{tag}: dead flow keeps a NaN trace");
+
+            // capacity conservation: the survivor is bit-identical to
+            // a fresh run without the quarantined job
+            let solo_r = simulate(&solo, &cluster, &cfg)
+                .unwrap_or_else(|e| panic!("{tag} solo: {e}"));
+            assert_eq!(
+                r.makespan.to_bits(),
+                solo_r.makespan.to_bits(),
+                "{tag}: survivor makespan {} vs solo {}",
+                r.makespan,
+                solo_r.makespan
+            );
+            assert_eq!(
+                r.trace[1].start.to_bits(),
+                solo_r.trace[0].start.to_bits(),
+                "{tag}: survivor start"
+            );
+            assert_eq!(
+                r.trace[1].finish.to_bits(),
+                solo_r.trace[0].finish.to_bits(),
+                "{tag}: survivor finish"
+            );
+        }
+    }
+}
+
+/// Capacity conservation through a *crash* quarantine: host 1 dies and
+/// takes job 0's long compute with it (`max_attempts: 1` — exhausted
+/// on the first kill, quarantined in the same engine event). Job 1
+/// later needs the very slots job 0 held — host 1's core after the
+/// restore — so any cap leak would starve or slow it. The survivor
+/// must match a fresh run of job 1 alone, bitwise, in every corner.
+#[test]
+fn crash_quarantine_releases_every_held_slot() {
+    // job 0: a long compute on host 1, in flight at the crash.
+    // job 1: compute on host 0 -> flow 0 -> 1 -> compute on host 1.
+    let mut sim = SimDag::default();
+    push_compute(&mut sim, 0, 1, 10.0);
+    push_compute(&mut sim, 1, 0, 1.0);
+    sim.push(SimTask {
+        orig: 2,
+        chunk: (0, 1),
+        kind: SimKind::Flow { src: 0, dst: 1 },
+        size: 1.0,
+        priority: 0,
+        gate: 0.0,
+        coflow: None,
+    });
+    push_compute(&mut sim, 3, 1, 1.0);
+    sim.dep(1, 2);
+    sim.dep(2, 3);
+    sim.job_of = vec![0, 1, 1, 1];
+
+    let mut solo = SimDag::default();
+    push_compute(&mut solo, 1, 0, 1.0);
+    solo.push(SimTask {
+        orig: 2,
+        chunk: (0, 1),
+        kind: SimKind::Flow { src: 0, dst: 1 },
+        size: 1.0,
+        priority: 0,
+        gate: 0.0,
+        coflow: None,
+    });
+    push_compute(&mut solo, 3, 1, 1.0);
+    solo.dep(0, 1);
+    solo.dep(1, 2);
+
+    let cluster = Cluster::uniform(2);
+    let tl = DynTimeline::new()
+        .with(0.5, DynAction::FailHost { host: 1 })
+        .with(0.75, DynAction::RestoreHost { host: 1 });
+    let policy = RecoveryPolicy::Retry { max_attempts: 1, backoff: 1.0 };
+
+    for &(queue, alloc, horizon) in MATRIX.iter() {
+        for &threads in THREADS.iter() {
+            let cfg = SimConfig {
+                queue,
+                alloc,
+                horizon,
+                threads,
+                dynamics: tl.clone(),
+                recovery: policy,
+                ..Default::default()
+            };
+            let tag = format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}");
+            let r = simulate(&sim, &cluster, &cfg)
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+            match r.jobs[0] {
+                JobOutcome::Exhausted { attempts } => {
+                    assert_eq!(attempts, 1, "{tag}: one kill exhausts max_attempts: 1")
+                }
+                other => panic!("{tag}: job 0 should be exhausted: {other:?}"),
+            }
+            assert!(r.jobs[1].is_completed(), "{tag}: survivor job");
+            assert!((r.lost_work - 0.5).abs() < 1e-6, "{tag}: lost {}", r.lost_work);
+            assert_eq!(r.retries, 0, "{tag}: exhaustion is not a retry");
+
+            let solo_r = simulate(&solo, &cluster, &cfg)
+                .unwrap_or_else(|e| panic!("{tag} solo: {e}"));
+            assert_eq!(
+                r.makespan.to_bits(),
+                solo_r.makespan.to_bits(),
+                "{tag}: survivor makespan {} vs solo {}",
+                r.makespan,
+                solo_r.makespan
+            );
+            for (i, j) in [(1usize, 0usize), (2, 1), (3, 2)] {
+                assert_eq!(
+                    r.trace[i].start.to_bits(),
+                    solo_r.trace[j].start.to_bits(),
+                    "{tag}: chunk {i} start"
+                );
+                assert_eq!(
+                    r.trace[i].finish.to_bits(),
+                    solo_r.trace[j].finish.to_bits(),
+                    "{tag}: chunk {i} finish"
+                );
+            }
+        }
+    }
+}
+
+/// Backoff is simulated time, not wall time, and progress lost to a
+/// crash really is lost: a size-2 compute killed at t = 1 (1 unit of
+/// work gone) re-enters at `1 + backoff` after the restore and runs
+/// its full size again. With backoff 0.5 and an immediate restore the
+/// finish lands at exactly 1 + 0.5 + 2 = 3.5 in every corner.
+#[test]
+fn retry_backoff_gates_in_simulated_time() {
+    let mut sim = SimDag::default();
+    push_compute(&mut sim, 0, 0, 2.0);
+    let cluster = Cluster::uniform(1);
+    let tl = DynTimeline::new()
+        .with(1.0, DynAction::FailHost { host: 0 })
+        .with(1.25, DynAction::RestoreHost { host: 0 });
+    for &(queue, alloc, horizon) in MATRIX.iter() {
+        for &threads in THREADS.iter() {
+            let cfg = SimConfig {
+                queue,
+                alloc,
+                horizon,
+                threads,
+                dynamics: tl.clone(),
+                recovery: RecoveryPolicy::Retry { max_attempts: 3, backoff: 0.5 },
+                ..Default::default()
+            };
+            let tag = format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}");
+            let r = simulate(&sim, &cluster, &cfg)
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+            assert!(
+                (r.makespan - 3.5).abs() < 1e-6,
+                "{tag}: makespan {} (expected 1 + 0.5 backoff + 2 rerun)",
+                r.makespan
+            );
+            assert_eq!(r.retries, 1, "{tag}");
+            assert!((r.lost_work - 1.0).abs() < 1e-6, "{tag}: lost {}", r.lost_work);
+            assert!(r.jobs[0].is_completed(), "{tag}");
+            // the trace keeps the *first* attempt's start
+            assert_eq!(r.trace[0].start.to_bits(), 0.0f64.to_bits(), "{tag}");
+        }
+    }
+}
+
+/// A host that never comes back exhausts the victim's attempts one
+/// backoff doubling at a time (1, 2, 4, ... simulated seconds), then
+/// quarantines the job as `Exhausted` — no deadlock, makespan pinned
+/// at the final kill.
+#[test]
+fn permanent_crash_exhausts_attempts_and_quarantines() {
+    let mut sim = SimDag::default();
+    push_compute(&mut sim, 0, 0, 10.0);
+    push_compute(&mut sim, 1, 1, 2.0);
+    sim.job_of = vec![0, 1];
+    let cluster = Cluster::uniform(2);
+    // two crashes: the first kills the running task (attempt 1), the
+    // second kills the retried attempt (attempt 2 = max) -> exhausted
+    let tl = DynTimeline::new()
+        .with(1.0, DynAction::FailHost { host: 0 })
+        .with(1.5, DynAction::RestoreHost { host: 0 })
+        .with(3.0, DynAction::FailHost { host: 0 });
+    for &(queue, alloc, horizon) in MATRIX.iter() {
+        for &threads in THREADS.iter() {
+            let cfg = SimConfig {
+                queue,
+                alloc,
+                horizon,
+                threads,
+                dynamics: tl.clone(),
+                recovery: RecoveryPolicy::Retry { max_attempts: 2, backoff: 1.0 },
+                ..Default::default()
+            };
+            let tag = format!("{queue:?}/{alloc:?}/{horizon:?}/t{threads}");
+            let r = simulate(&sim, &cluster, &cfg)
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+            match r.jobs[0] {
+                JobOutcome::Exhausted { attempts } => assert_eq!(attempts, 2, "{tag}"),
+                other => panic!("{tag}: expected exhaustion, got {other:?}"),
+            }
+            assert!(r.jobs[1].is_completed(), "{tag}");
+            assert_eq!(r.retries, 1, "{tag}: only the first kill re-enqueued");
+            // attempt 1 runs [0, 1); retry gate 1 + 1 = 2; attempt 2
+            // runs [2, 3) and dies at 3 -> 1 + 1 = 2 units destroyed
+            assert!((r.lost_work - 2.0).abs() < 1e-6, "{tag}: lost {}", r.lost_work);
+        }
+    }
+}
