@@ -1,0 +1,338 @@
+//! Open-system streaming throughput — what the era-chained open-loop
+//! driver (`sim/openloop.rs`) costs over the closed engine, and what a
+//! loaded stream looks like under admission control. Three regimes per
+//! workload size, all on the incremental-queue + component-allocation
+//! corner:
+//!
+//! 1. **closed** — one closed run of the [`concat_jobs`] concatenation
+//!    (the PR 8 cost profile; the baseline every open run is priced
+//!    against),
+//! 2. **open-t0** — the same jobs streamed through the driver with
+//!    every arrival at `t = 0` and an infinite watermark: exactly one
+//!    era, so the delta is pure driver overhead,
+//! 3. **stream** — Poisson arrivals with a finite watermark and a
+//!    deferral window: eras chain, deferred jobs retest at boundaries,
+//!    overloaded arrivals are shed, and the JCT distribution +
+//!    admitted/shed counters are reported.
+//!
+//! Oracles run on every invocation, before timing:
+//!
+//! * **closed-mode bit-identity** — open-at-t0 must match the closed
+//!   run on every corner of the {queue} × {alloc} × {horizon} matrix ×
+//!   threads ∈ {1, 4} × recovery ∈ {failfast, retry}: event counts,
+//!   makespan and per-job traces bitwise on the eager corners, within
+//!   the shared 1e-6 tolerance on anchored, and exactly one era.
+//! * **stream determinism** — on every matrix corner × recovery
+//!   policy, the loaded stream at threads 2 and 4 must reproduce the
+//!   serial run bit for bit: the admitted/rejected set, every per-job
+//!   outcome, admission instants, JCTs, events and eras (thread count
+//!   shards the refill, never the semantics).
+//!
+//! `BENCH_SMOKE=1` (the CI bench-smoke job) shrinks sizes and still
+//! runs every oracle. Results are printed as tables (README
+//! §Performance) and persisted to `BENCH_sim.json` (section
+//! `open_sweep`) for cross-PR tracking.
+
+use std::time::Instant;
+
+use mxdag::sim::{
+    concat_jobs, expand, poisson_arrivals, run_open, simulate, within_tolerance, AllocKind,
+    Cluster, HorizonKind, OpenConfig, OpenJob, OpenResult, QueueKind, RecoveryPolicy, SimConfig,
+};
+use mxdag::util::bench::{write_bench_json, Table};
+use mxdag::util::json::Json;
+use mxdag::workloads::{random_dag, RandomParams};
+
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// (jobs in the stream, layers, width) per sweep row.
+fn shapes() -> Vec<(usize, usize, usize)> {
+    if smoke() {
+        vec![(4, 3, 3)]
+    } else {
+        vec![(8, 6, 6), (12, 8, 8)]
+    }
+}
+
+/// Best-of-`reps` wall time for `f` (which must be pure).
+fn timed<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+const MATRIX: [(QueueKind, AllocKind, HorizonKind); 8] = [
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
+];
+
+fn corner_cfg(
+    (queue, alloc, horizon): (QueueKind, AllocKind, HorizonKind),
+    threads: usize,
+    recovery: RecoveryPolicy,
+) -> SimConfig {
+    SimConfig { queue, alloc, horizon, threads, recovery, ..Default::default() }
+}
+
+/// The closed-mode oracle (untimed): with every arrival at `t = 0` and
+/// an infinite watermark the driver must collapse to one era that is
+/// the closed run of the concatenated DAG — on every engine corner ×
+/// thread count × recovery policy.
+fn closed_mode_oracle(jobs_t0: &[OpenJob], cluster: &Cluster) {
+    let concat = concat_jobs(jobs_t0);
+    for &corner in MATRIX.iter() {
+        for threads in [1usize, 4] {
+            for recovery in [
+                RecoveryPolicy::FailFast,
+                RecoveryPolicy::Retry { max_attempts: 3, backoff: 0.05 },
+            ] {
+                let cfg = corner_cfg(corner, threads, recovery);
+                let closed = simulate(&concat, cluster, &cfg).expect("closed run completes");
+                let open = run_open(
+                    jobs_t0,
+                    cluster,
+                    &OpenConfig { engine: cfg, ..OpenConfig::default() },
+                )
+                .expect("open-at-t0 run completes");
+                let tag = format!("{corner:?} t{threads} {}", recovery.label());
+                assert_eq!(open.eras, 1, "{tag}: all-at-t0 must be a single era");
+                assert_eq!(closed.events, open.events, "{tag}: event count");
+                let mut base = 0usize;
+                match corner.2 {
+                    HorizonKind::Eager => {
+                        assert_eq!(
+                            closed.makespan.to_bits(),
+                            open.makespan.to_bits(),
+                            "{tag}: makespan"
+                        );
+                        for (j, jr) in open.jobs.iter().enumerate() {
+                            for (k, t) in jr.trace.iter().enumerate() {
+                                let c = &closed.trace[base + k];
+                                assert_eq!(c.start.to_bits(), t.start.to_bits(), "{tag}: j{j} c{k}");
+                                assert_eq!(
+                                    c.finish.to_bits(),
+                                    t.finish.to_bits(),
+                                    "{tag}: j{j} c{k}"
+                                );
+                            }
+                            base += jr.trace.len();
+                        }
+                    }
+                    HorizonKind::Anchored => {
+                        assert!(
+                            within_tolerance(closed.makespan, open.makespan),
+                            "{tag}: makespan {} vs {}",
+                            closed.makespan,
+                            open.makespan
+                        );
+                        let ok =
+                            |x: f64, y: f64| within_tolerance(x, y) || (x.is_nan() && y.is_nan());
+                        for (j, jr) in open.jobs.iter().enumerate() {
+                            for (k, t) in jr.trace.iter().enumerate() {
+                                let c = &closed.trace[base + k];
+                                assert!(
+                                    ok(c.start, t.start) && ok(c.finish, t.finish),
+                                    "{tag}: j{j} c{k}"
+                                );
+                            }
+                            base += jr.trace.len();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The stream-determinism oracle (untimed): the loaded stream rerun at
+/// threads 2 and 4 must reproduce the serial run bit for bit on every
+/// corner × recovery policy — same admitted/rejected set, same per-job
+/// outcomes, same admission instants and JCTs.
+fn stream_determinism_oracle(jobs: &[OpenJob], cluster: &Cluster, watermark: f64, defer_max: f64) {
+    for &corner in MATRIX.iter() {
+        for recovery in [
+            RecoveryPolicy::FailFast,
+            RecoveryPolicy::Retry { max_attempts: 3, backoff: 0.05 },
+        ] {
+            let run_at = |threads| {
+                run_open(
+                    jobs,
+                    cluster,
+                    &OpenConfig {
+                        watermark,
+                        defer_max,
+                        engine: corner_cfg(corner, threads, recovery),
+                    },
+                )
+                .expect("stream run completes")
+            };
+            let base = run_at(1);
+            for threads in [2usize, 4] {
+                let r = run_at(threads);
+                let tag = format!("stream {corner:?} t{threads} {}", recovery.label());
+                assert_eq!(base.eras, r.eras, "{tag}: eras");
+                assert_eq!(base.events, r.events, "{tag}: events");
+                assert_eq!(base.admitted, r.admitted, "{tag}: admitted");
+                assert_eq!(base.rejected, r.rejected, "{tag}: rejected");
+                assert_eq!(base.makespan.to_bits(), r.makespan.to_bits(), "{tag}: makespan");
+                for (j, (a, b)) in base.jobs.iter().zip(r.jobs.iter()).enumerate() {
+                    assert_eq!(
+                        a.admitted_at.map(f64::to_bits),
+                        b.admitted_at.map(f64::to_bits),
+                        "{tag}: job {j} admission instant"
+                    );
+                    assert_eq!(
+                        a.jct.map(f64::to_bits),
+                        b.jct.map(f64::to_bits),
+                        "{tag}: job {j} jct"
+                    );
+                    assert_eq!(
+                        std::mem::discriminant(&a.outcome),
+                        std::mem::discriminant(&b.outcome),
+                        "{tag}: job {j} outcome {:?} vs {:?}",
+                        a.outcome,
+                        b.outcome
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn open_sweep() -> Json {
+    let hosts = 16;
+    let cluster = Cluster::uniform(hosts);
+    let mut table = Table::new(
+        "open sweep events/s (closed baseline vs open-at-t0 vs loaded stream)",
+        &[
+            "jobs", "closed", "open-t0", "stream", "admitted", "shed", "jct p50", "jct p99",
+            "open/closed",
+        ],
+    );
+    let mut rows = Vec::new();
+    for (n_jobs, layers, width) in shapes() {
+        // one random DAG per job (distinct seeds), shared host pool
+        let dags: Vec<_> = (0..n_jobs)
+            .map(|j| {
+                let p = RandomParams {
+                    layers,
+                    width,
+                    hosts,
+                    seed: 47 + j as u64,
+                    ..Default::default()
+                };
+                expand(&random_dag(&p), &Default::default())
+            })
+            .collect();
+        let fast = SimConfig {
+            queue: QueueKind::Incremental,
+            alloc: AllocKind::Components,
+            ..Default::default()
+        };
+        // the solo makespan of the first job sizes arrival rate,
+        // watermark, deferral window and deadline
+        let solo = simulate(&dags[0], &cluster, &fast).expect("solo run").makespan;
+        let arrivals = poisson_arrivals(0xD1CE, 2.0 / solo, n_jobs);
+        let jobs_t0: Vec<OpenJob> = dags
+            .iter()
+            .map(|d| OpenJob { at: 0.0, dag: d.clone(), deadline: None })
+            .collect();
+        let stream_jobs: Vec<OpenJob> = dags
+            .iter()
+            .zip(arrivals.iter())
+            .map(|(d, &at)| OpenJob { at, dag: d.clone(), deadline: Some(solo * 4.0) })
+            .collect();
+        let watermark = solo * 1.5;
+        let defer_max = solo * 0.5;
+
+        // -- oracles first (untimed)
+        closed_mode_oracle(&jobs_t0, &cluster);
+        stream_determinism_oracle(&stream_jobs, &cluster, watermark, defer_max);
+
+        // -- timings
+        let reps = if smoke() { 1 } else { 3 };
+        let concat = concat_jobs(&jobs_t0);
+        let open_t0_cfg = OpenConfig { engine: fast.clone(), ..OpenConfig::default() };
+        let stream_cfg =
+            OpenConfig { watermark, defer_max, engine: fast.clone() };
+        let r_closed = simulate(&concat, &cluster, &fast).expect("closed run");
+        let r_t0 = run_open(&jobs_t0, &cluster, &open_t0_cfg).expect("open-t0 run");
+        let r_stream: OpenResult =
+            run_open(&stream_jobs, &cluster, &stream_cfg).expect("stream run");
+        let t_closed = timed(reps, || {
+            std::hint::black_box(simulate(&concat, &cluster, &fast).unwrap().makespan);
+        });
+        let t_t0 = timed(reps, || {
+            std::hint::black_box(run_open(&jobs_t0, &cluster, &open_t0_cfg).unwrap().makespan);
+        });
+        let t_stream = timed(reps, || {
+            std::hint::black_box(
+                run_open(&stream_jobs, &cluster, &stream_cfg).unwrap().makespan,
+            );
+        });
+        let evps_closed = r_closed.events as f64 / t_closed;
+        let evps_t0 = r_t0.events as f64 / t_t0;
+        let evps_stream = r_stream.events as f64 / t_stream;
+        let p50 = r_stream.jct_percentile(0.5).unwrap_or(f64::NAN);
+        let p99 = r_stream.jct_percentile(0.99).unwrap_or(f64::NAN);
+        table.row(
+            &format!("{n_jobs} x {} tasks", dags[0].len()),
+            &[
+                format!("{n_jobs}"),
+                format!("{evps_closed:.0}"),
+                format!("{evps_t0:.0}"),
+                format!("{evps_stream:.0}"),
+                format!("{}", r_stream.admitted),
+                format!("{}", r_stream.rejected),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+                format!("{:.2}x", t_t0 / t_closed),
+            ],
+        );
+        rows.push(Json::obj(vec![
+            ("jobs", Json::Num(n_jobs as f64)),
+            ("tasks_per_job", Json::Num(dags[0].len() as f64)),
+            ("events_closed", Json::Num(r_closed.events as f64)),
+            ("events_open_t0", Json::Num(r_t0.events as f64)),
+            ("events_stream", Json::Num(r_stream.events as f64)),
+            ("eras_stream", Json::Num(r_stream.eras as f64)),
+            ("admitted", Json::Num(r_stream.admitted as f64)),
+            ("shed", Json::Num(r_stream.rejected as f64)),
+            ("completed", Json::Num(r_stream.completed as f64)),
+            ("jct_p50", Json::Num(p50)),
+            ("jct_p99", Json::Num(p99)),
+            (
+                "deadline_hit_rate",
+                r_stream.deadline_hit_rate().map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("events_per_sec_closed", Json::Num(evps_closed)),
+            ("events_per_sec_open_t0", Json::Num(evps_t0)),
+            ("events_per_sec_stream", Json::Num(evps_stream)),
+            ("overhead_open_t0_vs_closed", Json::Num(t_t0 / t_closed)),
+        ]));
+    }
+    table.print();
+    Json::Arr(rows)
+}
+
+fn main() {
+    println!("== closed-mode bit-identity + stream-determinism oracles run before every timing ==");
+    let rows = open_sweep();
+    write_bench_json(
+        "open_sweep",
+        Json::obj(vec![("smoke", Json::Bool(smoke())), ("rows", rows)]),
+    );
+    println!("\nwrote BENCH_sim.json (section `open_sweep`)");
+}

@@ -17,8 +17,8 @@ use mxdag::sched::{
     FifoScheduler, Grouping, MxScheduler, PackingScheduler, Plan, Scheduler, SelfishScheduler,
 };
 use mxdag::sim::{
-    AllocKind, Annotations, Cluster, HorizonKind, Policy, QueueKind, RecoveryPolicy, SimConfig,
-    SimError,
+    expand, run_open, AllocKind, Annotations, Cluster, HorizonKind, OpenConfig, OpenSpec, Policy,
+    QueueKind, RecoveryPolicy, SimConfig, SimError,
 };
 use mxdag::util::bench::Table;
 use mxdag::util::json::Json;
@@ -59,6 +59,7 @@ fn print_usage() {
                     [--queue incremental|fullresort] [--alloc components|wholeset]\n\
                     [--horizon eager|anchored] [--threads N] [--dynamics FILE.json]\n\
                     [--recovery failfast|retry|retry:MAX_ATTEMPTS:BACKOFF]\n\
+                    [--open ARRIVALS.json [--watermark X] [--defer-max X]]\n\
                     (the DAG file may also declare a \"cluster\" object and an\n\
                      \"engine\" object {{\"queue\", \"alloc\", \"horizon\", \"threads\",\n\
                      \"recovery\"}}; the --topology/--queue/--alloc/--horizon/\n\
@@ -81,7 +82,18 @@ fn print_usage() {
                      and quarantines terminally-stuck jobs instead of failing;\n\
                      the run always ends with one JSON line of per-job\n\
                      outcomes; exit code 0 = ok, 1 = config error,\n\
-                     2 = deadlock, 3 = event-limit)\n\
+                     2 = deadlock, 3 = event-limit;\n\
+                     --open ARRIVALS.json streams one copy of the DAG per\n\
+                     arrival through the open-system driver instead of one\n\
+                     closed run — the file gives {{\"arrivals\": [t0, t1, ...]}}\n\
+                     or {{\"poisson\": {{\"seed\": S, \"rate\": R, \"n\": N}}}} plus\n\
+                     optional \"watermark\" (admission drain-time bound,\n\
+                     default unbounded), \"defer_max\" (how long an arrival\n\
+                     may wait for admission before it is shed, default 0)\n\
+                     and \"deadline\" (per-job, relative to arrival);\n\
+                     --watermark/--defer-max override the file; the JSON\n\
+                     outcome line then carries admitted/rejected/completed\n\
+                     counters, JCT p50/p99 and the deadline hit rate)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -455,6 +467,11 @@ fn cmd_simulate(args: &Args) -> i32 {
         return 1;
     }
     let plan = sched.plan(&g, &cluster);
+    // --open switches from one closed run to the era-chained open-system
+    // driver: one copy of the (planned, expanded) DAG per arrival
+    if let Some(opath) = args.get("open") {
+        return simulate_open(&opath, args, &g, &cluster, &plan, &cfg, sched.name());
+    }
     match evaluate_with(&g, &cluster, &plan, &cfg) {
         Ok(r) => {
             println!(
@@ -497,6 +514,111 @@ fn cmd_simulate(args: &Args) -> i32 {
             // 3 = event limit (the run never converged) — distinct from
             // 1, which is reserved for config/input errors above
             eprintln!("simulation failed: {e}");
+            let (kind, code) = match &e {
+                SimError::Deadlock { .. } => ("deadlock", 2),
+                SimError::EventLimit(_) => ("event_limit", 3),
+            };
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("status", Json::Str("error".into())),
+                    ("kind", Json::Str(kind.into())),
+                    ("error", Json::Str(e.to_string())),
+                    ("jobs", Json::Arr(Vec::new())),
+                ])
+            );
+            code
+        }
+    }
+}
+
+/// The `simulate --open` tail: stream `spec`-driven arrivals of the
+/// planned DAG through the open-loop driver and print the same
+/// human-line + JSON-outcome-line pair as the closed path, extended
+/// with admission/shedding counters and the JCT/deadline metrics.
+fn simulate_open(
+    path: &str,
+    args: &Args,
+    g: &MXDag,
+    cluster: &Cluster,
+    plan: &Plan,
+    cfg: &SimConfig,
+    sched_name: &str,
+) -> i32 {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 1;
+        }
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("parse {path}: {e}");
+            return 1;
+        }
+    };
+    let mut spec = match OpenSpec::from_json(&json) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("--open: {e}");
+            return 1;
+        }
+    };
+    if let Some(v) = args.get("watermark") {
+        match v.parse::<f64>() {
+            Ok(w) if w >= 0.0 => spec.watermark = w,
+            _ => {
+                eprintln!("--watermark: expected a number >= 0, got {v:?}");
+                return 1;
+            }
+        }
+    }
+    if let Some(v) = args.get("defer-max") {
+        match v.parse::<f64>() {
+            Ok(d) if d >= 0.0 && d.is_finite() => spec.defer_max = d,
+            _ => {
+                eprintln!("--defer-max: expected a finite number >= 0, got {v:?}");
+                return 1;
+            }
+        }
+    }
+    let sim = expand(g, &plan.ann);
+    let jobs = spec.jobs(&sim);
+    let ocfg = OpenConfig {
+        watermark: spec.watermark,
+        defer_max: spec.defer_max,
+        engine: SimConfig { policy: plan.policy, ..cfg.clone() },
+    };
+    match run_open(&jobs, cluster, &ocfg) {
+        Ok(r) => {
+            println!(
+                "scheduler={sched_name} hosts={} open_jobs={} watermark={} defer_max={} \
+                 admitted={} rejected={} quarantined={} completed={} eras={} makespan={:.4} \
+                 events={} retries={} lost_work={:.4}",
+                cluster.n_hosts(),
+                jobs.len(),
+                spec.watermark,
+                spec.defer_max,
+                r.admitted,
+                r.rejected,
+                r.quarantined,
+                r.completed,
+                r.eras,
+                r.makespan,
+                r.events,
+                r.retries,
+                r.lost_work
+            );
+            let Json::Obj(mut kv) = r.to_json() else { unreachable!("to_json is an object") };
+            kv.insert("status".into(), Json::Str("ok".into()));
+            kv.insert("jobs".into(), r.jobs_json());
+            println!("{}", Json::Obj(kv));
+            0
+        }
+        Err(e) => {
+            eprintln!("open-loop simulation failed: {e}");
             let (kind, code) = match &e {
                 SimError::Deadlock { .. } => ("deadlock", 2),
                 SimError::EventLimit(_) => ("event_limit", 3),

@@ -84,6 +84,19 @@ fn size_durations(multi: &MultiDag) -> Vec<f64> {
     multi.dag.tasks().iter().map(|t| t.size).collect()
 }
 
+/// Per-job strict-priority tiers from per-tenant weights: jobs sharing
+/// a weight share a tier, higher weight = higher tier. Used by the
+/// weighted multi-job planners for the open-loop's multi-tenant mixes.
+fn weight_tiers(weights: &[i64]) -> Vec<usize> {
+    let mut distinct: Vec<i64> = weights.to_vec();
+    distinct.sort_unstable();
+    distinct.dedup();
+    weights
+        .iter()
+        .map(|w| distinct.binary_search(w).expect("weight must be present"))
+        .collect()
+}
+
 /// Principle-2 scheduler.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AltruisticScheduler;
@@ -116,23 +129,63 @@ impl AltruisticScheduler {
     /// gated to `max(EST, LST − duration)` in whatever duration domain
     /// `costed` expresses.
     fn plan_with_durations(&self, multi: &MultiDag, costed: &[f64]) -> Plan {
+        self.plan_with_durations_tiered(multi, costed, None)
+    }
+
+    /// As [`plan_with_durations`](Self::plan_with_durations), with an
+    /// optional per-job strict-priority tier: priorities within a tier
+    /// keep the Principle-2 band structure (critical over non-critical
+    /// across the tier's jobs), and every task of a higher tier
+    /// outranks every task of a lower one. Gates are tier-independent.
+    /// `None` (and uniform tiers) reproduce the unweighted plan
+    /// bit-for-bit.
+    fn plan_with_durations_tiered(
+        &self,
+        multi: &MultiDag,
+        costed: &[f64],
+        tiers: Option<&[usize]>,
+    ) -> Plan {
         let mut ann = Annotations::default();
         let n = multi.dag.len();
+        // Base priorities span [0, 2n]; one tier step clears the band.
+        let stride = 2 * n as i64 + 1;
         for (job, tasks) in multi.jobs.iter().enumerate() {
+            let lift = tiers.map_or(0, |t| t[job] as i64 * stride);
             let c = per_job_cpm(multi, job, costed);
             let prios = c.priorities();
             for &t in tasks {
                 ann.jobs.insert(t, job);
                 if c.is_critical(t) {
-                    ann.priorities.insert(t, n as i64 + prios[t]);
+                    ann.priorities.insert(t, lift + n as i64 + prios[t]);
                 } else {
-                    ann.priorities.insert(t, prios[t]);
+                    ann.priorities.insert(t, lift + prios[t]);
                     let margin_gate = (c.lst[t] - costed[t]).max(c.est[t]);
                     ann.gates.insert(t, margin_gate);
                 }
             }
         }
         Plan { ann, policy: Policy::priority() }
+    }
+
+    /// Per-tenant weighted Principle-2 plan for the open-loop's
+    /// multi-tenant mixes: jobs with equal weight share a tier in which
+    /// the usual altruistic band structure holds; a heavier tenant's
+    /// tasks strictly outrank a lighter tenant's. With all weights
+    /// equal this delegates to
+    /// [`plan_multi_on`](AltruisticScheduler::plan_multi_on) — the
+    /// unweighted path, bit-identical.
+    pub fn plan_multi_weighted_on(
+        &self,
+        multi: &MultiDag,
+        cluster: &Cluster,
+        weights: &[i64],
+    ) -> Plan {
+        assert_eq!(weights.len(), multi.jobs.len(), "one weight per job");
+        if weights.windows(2).all(|w| w[0] == w[1]) {
+            return self.plan_multi_on(multi, cluster);
+        }
+        let tiers = weight_tiers(weights);
+        self.plan_with_durations_tiered(multi, &cpm_durations(&multi.dag, cluster), Some(&tiers))
     }
 
     /// Principle-2 plan with the paper's guarantee enforced ("without
@@ -226,6 +279,36 @@ impl SelfishScheduler {
             }
         }
         Plan { ann, policy: Policy::fair() }
+    }
+
+    /// Per-tenant weighted fair-path plan. The engine's fair policy is
+    /// unweighted, so unequal weights necessarily switch the plan to
+    /// the priority discipline: tenants are served in strict weight
+    /// tiers (heavier first), per-job critical-path priorities ordering
+    /// tasks within a tier — fair sharing still applies among
+    /// equal-priority tasks. With all weights equal this delegates to
+    /// [`plan_multi`](SelfishScheduler::plan_multi), keeping the plain
+    /// fair path bit-identical.
+    pub fn plan_multi_weighted(&self, multi: &MultiDag, weights: &[i64]) -> Plan {
+        assert_eq!(weights.len(), multi.jobs.len(), "one weight per job");
+        if weights.windows(2).all(|w| w[0] == w[1]) {
+            return self.plan_multi(multi);
+        }
+        let tiers = weight_tiers(weights);
+        let sizes = size_durations(multi);
+        let n = multi.dag.len();
+        let stride = n as i64 + 1; // base priorities span [0, n]
+        let mut ann = Annotations::default();
+        for (job, tasks) in multi.jobs.iter().enumerate() {
+            let lift = tiers[job] as i64 * stride;
+            let c = per_job_cpm(multi, job, &sizes);
+            let prios = c.priorities();
+            for &t in tasks {
+                ann.jobs.insert(t, job);
+                ann.priorities.insert(t, lift + prios[t]);
+            }
+        }
+        Plan { ann, policy: Policy::priority() }
     }
 }
 
@@ -366,6 +449,55 @@ mod tests {
             let sim = crate::sim::expand(&multi.dag, &plan.ann);
             assert_eq!(sim.n_jobs(), 2);
         }
+    }
+
+    #[test]
+    fn equal_weights_are_bit_identical_to_unweighted() {
+        let (j1, j2) = workloads::fig7_jobs();
+        let multi = merge(&[j1, j2]);
+        let cluster = Cluster::uniform(4);
+
+        let flat = SelfishScheduler.plan_multi(&multi);
+        let w = SelfishScheduler.plan_multi_weighted(&multi, &[3, 3]);
+        assert_eq!(flat.policy, w.policy);
+        assert_eq!(flat.ann.priorities, w.ann.priorities);
+
+        let flat = AltruisticScheduler.plan_multi_on(&multi, &cluster);
+        let w = AltruisticScheduler.plan_multi_weighted_on(&multi, &cluster, &[3, 3]);
+        assert_eq!(flat.policy, w.policy);
+        assert_eq!(flat.ann.priorities, w.ann.priorities);
+        assert_eq!(flat.ann.gates.len(), w.ann.gates.len());
+        for (t, g) in &flat.ann.gates {
+            assert_eq!(g.to_bits(), w.ann.gates[t].to_bits(), "gate of task {t}");
+        }
+    }
+
+    #[test]
+    fn heavier_tenant_outranks_lighter_everywhere() {
+        let (j1, j2) = workloads::fig7_jobs();
+        let multi = merge(&[j1, j2]);
+        let cluster = Cluster::uniform(4);
+
+        // Selfish path: weighting switches to the priority discipline.
+        let w = SelfishScheduler.plan_multi_weighted(&multi, &[1, 5]);
+        assert_eq!(w.policy, Policy::priority());
+        let min_heavy = multi.jobs[1].iter().map(|t| w.ann.priorities[t]).min().unwrap();
+        let max_light = multi.jobs[0].iter().map(|t| w.ann.priorities[t]).max().unwrap();
+        assert!(min_heavy > max_light, "tier dominance: {min_heavy} vs {max_light}");
+
+        // Altruistic path: same dominance; gates don't depend on tiers.
+        let w = AltruisticScheduler.plan_multi_weighted_on(&multi, &cluster, &[1, 5]);
+        let flat = AltruisticScheduler.plan_multi_on(&multi, &cluster);
+        let min_heavy = multi.jobs[1].iter().map(|t| w.ann.priorities[t]).min().unwrap();
+        let max_light = multi.jobs[0].iter().map(|t| w.ann.priorities[t]).max().unwrap();
+        assert!(min_heavy > max_light, "tier dominance: {min_heavy} vs {max_light}");
+        for (t, g) in &flat.ann.gates {
+            assert_eq!(g.to_bits(), w.ann.gates[t].to_bits(), "gate of task {t}");
+        }
+
+        // Equal-weight jobs share a tier in input order of bands.
+        let tiers = super::weight_tiers(&[5, 1, 5, 2]);
+        assert_eq!(tiers, vec![2, 0, 2, 1]);
     }
 
     #[test]

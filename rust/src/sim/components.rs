@@ -208,6 +208,36 @@ impl CompSet {
         // `gen_of` stamps carry over (claims are owner-side, all dropped)
     }
 
+    /// Total reserved slots across every internal buffer (outer vectors
+    /// plus the per-component member/resource/spare inner vectors) — the
+    /// memory high-water mark across every run this set has served.
+    /// Read by the open-loop bounded-memory oracle: with epoch GC the
+    /// partition sizes to the largest concurrent live set, never to the
+    /// stream total.
+    pub fn capacity(&self) -> usize {
+        let inner = |v: &Vec<Vec<usize>>| -> usize {
+            v.capacity() + v.iter().map(|i| i.capacity()).sum::<usize>()
+        };
+        self.task_comp.capacity()
+            + self.pos.capacity()
+            + self.owner.capacity()
+            + self.owner_gen.capacity()
+            + inner(&self.members)
+            + inner(&self.res)
+            + self.gen_of.capacity()
+            + self.alive.capacity()
+            + self.dirty_flag.capacity()
+            + self.free.capacity()
+            + self.live.capacity()
+            + self.live_pos.capacity()
+            + self.dirty.capacity()
+            + self.parent.capacity()
+            + self.seen_res.capacity()
+            + self.seen_epoch.capacity()
+            + self.root_comp.capacity()
+            + inner(&self.spare)
+    }
+
     /// The component currently owning resource `r`, if any. Claims by
     /// retired slots are invalid (generation mismatch).
     fn owner_of(&self, r: usize) -> Option<usize> {

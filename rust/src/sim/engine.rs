@@ -288,6 +288,33 @@ pub struct SimResult {
     /// Work destroyed by host crashes: the sum over killed attempts of
     /// the bytes/work completed at kill time.
     pub lost_work: f64,
+    /// In-flight state at an open-loop stop bound ([`SimConfig::stop`]):
+    /// `Some` iff the run halted at the bound with unfinished tasks
+    /// still live. Closed-mode runs (the default `stop: None`) always
+    /// carry `None`. For a stopped run, `jobs` / `orig_*` cover only
+    /// the work that finished inside the window — the open-loop driver
+    /// owns job verdicts across epochs.
+    pub stopped: Option<StopState>,
+}
+
+/// Per-task carry-over exported when a run halts at [`SimConfig::stop`]:
+/// everything the open-loop driver needs to rebuild the next epoch's
+/// compacted DAG. `remaining` is fully materialized as of the stop
+/// instant (anchored runs integrate lazily; the export settles them).
+/// `attempts` / `retry_gate` are empty unless the run used
+/// [`RecoveryPolicy::Retry`]; gates are absolute simulated time within
+/// the stopped run's own clock.
+#[derive(Debug, Clone)]
+pub struct StopState {
+    /// The instant the run actually halted (≥ the requested bound only
+    /// by a completed event landing within `EPS` of it).
+    pub at: f64,
+    /// Materialized unfinished bytes per task (0 for completed tasks).
+    pub remaining: Vec<f64>,
+    /// Failed-attempt counts per task (empty under FailFast).
+    pub attempts: Vec<usize>,
+    /// Backoff-gate expiries per task (empty under FailFast).
+    pub retry_gate: Vec<f64>,
 }
 
 impl SimResult {
@@ -361,6 +388,20 @@ pub struct SimConfig {
     /// and quarantines terminally-stuck jobs instead of failing the
     /// run.
     pub recovery: RecoveryPolicy,
+    /// Open-loop stop bound (see `sim/openloop.rs`): `Some(t)` halts
+    /// the run at simulated time `t` — the next streaming-arrival
+    /// boundary — exporting the in-flight state as
+    /// [`SimResult::stopped`] so the open-loop driver can re-seed the
+    /// next epoch. Checked in the serial prologue alongside the
+    /// dynamics cursor, so a stop is an ordinary event-class boundary:
+    /// no task integrates across it. `None` (the default) leaves every
+    /// code path bit-identical to the closed-mode engine.
+    pub stop: Option<f64>,
+    /// Carried failed-attempt counts for open-loop epoch chaining,
+    /// aligned with `dag` tasks. Empty (the default) means a fresh
+    /// budget for every task — the closed-mode behaviour. Only read
+    /// under [`RecoveryPolicy::Retry`].
+    pub attempts0: Vec<usize>,
 }
 
 /// Default worker-thread count: `1` (serial oracle), or the
@@ -388,6 +429,8 @@ impl Default for SimConfig {
             threads: default_threads(),
             dynamics: DynTimeline::default(),
             recovery: RecoveryPolicy::FailFast,
+            stop: None,
+            attempts0: Vec::new(),
         }
     }
 }
@@ -874,6 +917,53 @@ pub struct SimScratch {
     failed_hosts: Vec<usize>,
 }
 
+impl SimScratch {
+    /// Total reserved slots across the scratch's major per-task,
+    /// per-resource and per-group buffers (capacities, not lengths) —
+    /// the memory high-water mark of every run this scratch has served.
+    /// The open-loop bounded-memory oracle asserts this plateaus over
+    /// an unbounded job stream: epoch GC compacts departed jobs out of
+    /// each epoch's DAG, so the scratch only ever sizes to the largest
+    /// *live* set, never to the stream total.
+    pub fn footprint(&self) -> usize {
+        self.remaining.capacity()
+            + self.indeg.capacity()
+            + self.done.capacity()
+            + self.started.capacity()
+            + self.seq.capacity()
+            + self.queued.capacity()
+            + self.key_of.capacity()
+            + self.rate_of.capacity()
+            + self.anchor_t.capacity()
+            + self.group_of.capacity()
+            + self.virt.capacity()
+            + self.caps.capacity()
+            + self.users.capacity()
+            + self.sat_mark.capacity()
+            + self.load.capacity()
+            + self.members.iter().map(|v| v.capacity()).sum::<usize>()
+            + self.members.capacity()
+            + self.parked.iter().map(|v| v.capacity()).sum::<usize>()
+            + self.parked.capacity()
+            + self.comp_rated.iter().map(|v| v.capacity()).sum::<usize>()
+            + self.comp_rated.capacity()
+            + self.arrivals.capacity()
+            + self.gates.capacity()
+            + self.rated.capacity()
+            + self.completed.capacity()
+            + self.fp_task_res.capacity()
+            + self.fp_is_flow.capacity()
+            + self.dyn_caps.capacity()
+            + self.dyn_task_res.capacity()
+            + self.attempts.capacity()
+            + self.retry_gate.capacity()
+            + self.quarantined.capacity()
+            + self.job_down.capacity()
+            + self.comps.capacity()
+            + self.fins.capacity()
+    }
+}
+
 /// Truncate/grow a nested scratch vector to `n` cleared inner buffers,
 /// keeping inner capacity wherever the shape matches across runs.
 fn reset_nested<T>(v: &mut Vec<Vec<T>>, n: usize) {
@@ -1014,7 +1104,14 @@ pub fn simulate_with_footprints(
     if retry_on {
         debug_assert!(cfg.recovery.validate().is_ok(), "invalid recovery policy");
         attempts.clear();
-        attempts.resize(n, 0);
+        if cfg.attempts0.is_empty() {
+            attempts.resize(n, 0);
+        } else {
+            // open-loop epoch chaining: spent budgets survive the epoch
+            // boundary so a crash-looping task still exhausts
+            debug_assert_eq!(cfg.attempts0.len(), n, "attempts0 must cover every task");
+            attempts.extend_from_slice(&cfg.attempts0);
+        }
         retry_gate.clear();
         retry_gate.resize(n, 0.0);
         quarantined.clear();
@@ -1045,6 +1142,9 @@ pub fn simulate_with_footprints(
     let mut n_done = 0usize;
     let mut now = 0.0f64;
     let mut events = 0usize;
+    // open-loop stop bound: set when the loop breaks at `cfg.stop`
+    // instead of draining the DAG (never set in closed mode)
+    let mut stopped = false;
 
     // FIFO queue positions, assigned per *logical* task at its first
     // chunk's readiness. Semantics of a blocking send queue + concurrent
@@ -1856,10 +1956,27 @@ pub fn simulate_with_footprints(
 
         if rq_cpu.is_empty() && rq_net.is_empty() {
             // nothing runnable: jump to the next gate expiry, quarantine
-            // the stuck jobs (Retry), or give up (FailFast)
+            // the stuck jobs (Retry), or give up (FailFast). An open-loop
+            // stop bound before the next gate (or with no gate at all)
+            // halts the epoch instead — stuck detection is deferred to
+            // the final, unbounded epoch, where the closed-mode paths
+            // below run unchanged.
             if let Some(&Reverse((_, _, tg))) = gates.peek() {
-                now = eff_gate!(tg);
+                let g = eff_gate!(tg);
+                if let Some(stop) = cfg.stop {
+                    if g > stop + EPS {
+                        now = now.max(stop);
+                        stopped = true;
+                        break;
+                    }
+                }
+                now = g;
                 continue;
+            }
+            if let Some(stop) = cfg.stop {
+                now = now.max(stop);
+                stopped = true;
+                break;
             }
             if retry_on && quarantine_stuck!(caps0, task_res) {
                 continue;
@@ -2401,6 +2518,17 @@ pub fn simulate_with_footprints(
                     t_next = t_next.min(at);
                 }
             }
+            // open-loop stop bound: nothing (finish, gate or dynamics
+            // entry) is due before the bound — halt the epoch here,
+            // before the deadlock check, so a cluster that is merely
+            // quiescent until the next arrival stops cleanly
+            if let Some(stop) = cfg.stop {
+                if t_next > stop + EPS {
+                    now = now.max(stop);
+                    stopped = true;
+                    break;
+                }
+            }
             if !t_next.is_finite() {
                 if retry_on && quarantine_stuck!(caps0, task_res) {
                     continue;
@@ -2465,6 +2593,31 @@ pub fn simulate_with_footprints(
             if dyn_on {
                 if let Some(at) = dyn_state.next_at(&cfg.dynamics) {
                     dt = dt.min(at - now);
+                }
+            }
+            // open-loop stop bound: the next completion / gate /
+            // dynamics boundary lies beyond the bound, so no task can
+            // finish inside the remaining span — integrate the partial
+            // span at the standing rates and halt the epoch
+            if let Some(stop) = cfg.stop {
+                if !dt.is_finite() || dt <= 0.0 || now + dt > stop + EPS {
+                    let span = (stop - now).max(0.0);
+                    if span > 0.0 {
+                        if comps_on {
+                            for &c in comps.live_slots() {
+                                for &(t, r) in comp_rated[c].iter() {
+                                    remaining[t] = (remaining[t] - r * span).max(0.0);
+                                }
+                            }
+                        } else {
+                            for &(t, r) in rated.iter() {
+                                remaining[t] = (remaining[t] - r * span).max(0.0);
+                            }
+                        }
+                    }
+                    now = now.max(stop);
+                    stopped = true;
+                    break;
                 }
             }
             if !dt.is_finite() || dt <= 0.0 {
@@ -2572,6 +2725,30 @@ pub fn simulate_with_footprints(
         }
     }
 
+    // Open-loop stop: settle the lazily-integrated byte counts (the
+    // anchored horizon only materializes on component repricing) and
+    // export the carry-over state. Closed-mode runs never set
+    // `stopped`, so this block is unreachable for them.
+    let stop_state = if stopped {
+        if anchored {
+            for t in 0..n {
+                if !done[t] && rate_of[t] > 0.0 {
+                    remaining[t] = (remaining[t] - rate_of[t] * (now - anchor_t[t])).max(0.0);
+                    rate_of[t] = 0.0;
+                    anchor_t[t] = now;
+                }
+            }
+        }
+        Some(StopState {
+            at: now,
+            remaining: remaining.clone(),
+            attempts: if retry_on { attempts.clone() } else { Vec::new() },
+            retry_gate: if retry_on { retry_gate.clone() } else { Vec::new() },
+        })
+    } else {
+        None
+    };
+
     // aggregate per logical task; quarantined chunks keep NaN traces
     // and are skipped (a fully-quarantined logical task has no entry —
     // without recovery every finish is set, so nothing is ever skipped)
@@ -2672,7 +2849,17 @@ pub fn simulate_with_footprints(
     scratch.job_stuck = job_stuck;
     scratch.failed_hosts = failed_hosts;
 
-    Ok(SimResult { makespan: now, trace, orig_start, orig_finish, events, jobs, retries, lost_work })
+    Ok(SimResult {
+        makespan: now,
+        trace,
+        orig_start,
+        orig_finish,
+        events,
+        jobs,
+        retries,
+        lost_work,
+        stopped: stop_state,
+    })
 }
 
 #[cfg(test)]

@@ -136,6 +136,14 @@ impl FinHeap {
         self.pos.resize(n, ABSENT);
     }
 
+    /// Total reserved slots (heap array + position index) — the memory
+    /// high-water mark across every run this heap has served. Read by
+    /// the open-loop bounded-memory oracle: with epoch GC the heap
+    /// sizes to the largest live task set, never to the stream total.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity() + self.pos.capacity()
+    }
+
     /// The earliest `(finish, task)` entry, if any — the event horizon.
     pub fn peek(&self) -> Option<(f64, usize)> {
         self.heap.first().copied()

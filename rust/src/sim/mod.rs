@@ -7,7 +7,10 @@
 //! (`horizon`), plus mid-simulation cluster dynamics — fabric churn,
 //! stragglers, reroute — folded into the event loop (`dynamics`), and a
 //! fault-recovery layer — task retry with exponential backoff, per-job
-//! quarantine and outcome reporting (`recovery`). This is
+//! quarantine and outcome reporting (`recovery`) — and an open-system
+//! streaming driver chaining closed runs era by era with admission
+//! control, overload shedding and bounded-memory epoch GC
+//! (`openloop`). This is
 //! the testbed every scheduler in `sched/` is evaluated on (DESIGN.md §5
 //! records why a fluid model preserves the paper's comparisons;
 //! `docs/ARCHITECTURE.md` documents the engine ↔ scheduler contract).
@@ -18,6 +21,7 @@ pub mod dynamics;
 pub mod engine;
 pub mod expand;
 pub mod horizon;
+pub mod openloop;
 pub mod ready;
 pub mod recovery;
 pub mod spec;
@@ -28,10 +32,14 @@ pub use components::{AllocKind, CompSet};
 pub use dynamics::{DynAction, DynEvent, DynState, DynTimeline, LinkRef};
 pub use engine::{
     simulate, simulate_in, simulate_with_footprints, QueueKind, SimConfig, SimError, SimResult,
-    SimScratch, StuckReason,
+    SimScratch, StopState, StuckReason, TaskTrace,
 };
 pub use horizon::{within_tolerance, FinHeap, HorizonKind, TOLERANCE_REL};
 pub use expand::{apply_annotations, expand, Annotations};
+pub use openloop::{
+    concat_jobs, poisson_arrivals, run_open, run_open_in, OpenConfig, OpenJob, OpenJobResult,
+    OpenResult, OpenSpec,
+};
 pub use recovery::{retry_backoff, JobOutcome, RecoveryPolicy};
 pub use ready::{BucketQueue, Keying, PrioKey, QueueDiscipline, ReadyQueue, ResortQueue};
 pub use spec::{Cluster, CpuPolicy, Host, NetPolicy, Policy, SimDag, SimKind, SimTask};

@@ -1,0 +1,1110 @@
+//! Open-system streaming driver: an unbounded stream of job arrivals
+//! over the closed fluid engine, with admission control, overload
+//! shedding and bounded-memory epoch GC.
+//!
+//! # Era chaining
+//!
+//! The closed engine (`sim/engine.rs`) simulates one fixed DAG to
+//! completion. The open loop turns it into a streaming system by
+//! *chaining* closed runs, one **era** per inter-boundary interval
+//! (boundaries are job arrivals and deferral expiries):
+//!
+//! 1. Build a compacted DAG holding only the **live** jobs' unfinished
+//!    tasks (sizes = carried remaining bytes, gates/retry backoffs
+//!    rebased to the era clock, finished predecessors dropped).
+//! 2. Run the engine with [`SimConfig::stop`] at the next boundary.
+//!    The stop is an ordinary event-class boundary: no task integrates
+//!    across it, and the run exports its in-flight state as
+//!    [`StopState`].
+//! 3. Harvest: record completions (absolute traces), carry remaining /
+//!    attempts / backoff gates, retire finished or quarantined jobs —
+//!    their state leaves the compacted DAG, which is what keeps the
+//!    scratch arena, [`CompSet`](crate::sim::CompSet) and
+//!    [`FinHeap`](crate::sim::FinHeap) sized to the largest *live* set
+//!    rather than the stream total (the epoch GC).
+//! 4. At the boundary: retest deferred jobs, expire overdue ones,
+//!    admit or shed the arrivals due now. Repeat.
+//!
+//! The final era runs with `stop: None`, so deadlock detection and
+//! quarantine semantics in the drained system are exactly the closed
+//! engine's.
+//!
+//! # Admission control
+//!
+//! A job is admitted when the estimated drain time of the settled
+//! cluster — queued live work plus the incoming job, divided by
+//! settled capacity (see [`settled_cluster`]) — stays under
+//! [`OpenConfig::watermark`]:
+//!
+//! ```text
+//! drain = max(Σ compute remaining / Σ settled core caps,
+//!             Σ flow remaining    / Σ settled (NIC up + down)/2)
+//! ```
+//!
+//! Fabric extras are ignored by the estimate (it is an optimistic
+//! bound, mirroring `settled_cluster`'s host-level view). A refused
+//! job waits up to [`OpenConfig::defer_max`] in a deferral queue,
+//! retested at every stream boundary (deferred jobs are retested
+//! *before* same-instant fresh arrivals, oldest first) and gets one
+//! last test at its expiry; a job whose *solo* drain already exceeds
+//! the watermark can never pass and is rejected immediately, which
+//! guarantees termination. Shed jobs get the distinct
+//! [`JobOutcome::Rejected`] — they never entered the engine, so
+//! `lost_work` and retry accounting never see them.
+//!
+//! # Determinism and the closed-mode oracle
+//!
+//! Everything is a pure function of (arrival trace, watermark, seed):
+//! the admitted/rejected set and every per-job outcome are identical
+//! across thread counts (bitwise under the eager horizon; anchored
+//! runs inherit the engine's 1e-6 tolerance pairing). With every
+//! arrival at `t = 0` and an infinite watermark the loop runs exactly
+//! one era with `stop: None` over the [`concat_jobs`] concatenation —
+//! bit-identical to a closed run of the same DAG, which is the oracle
+//! `tests/prop_open_equivalence.rs` asserts across the whole
+//! {queue}×{alloc}×{horizon}×{threads}×{recovery} matrix.
+//!
+//! # Dynamics across eras
+//!
+//! Each era re-folds the absolute [`DynTimeline`]: events strictly
+//! before the era start replay at the era's `t = 0` in original order
+//! (factors are absolute last-writer-wins, so the replay reconstructs
+//! the exact factor state — independent of which jobs have departed,
+//! so a restore arriving after the last touching job completed still
+//! applies to later arrivals), with past [`DynAction::FailHost`]
+//! crashes demoted to capacity-identical `SlowHost { factor: 0.0 }`
+//! so a crash kills in-flight work exactly once. Future events shift
+//! to era-relative time unchanged.
+//!
+//! One accounting caveat: a task killed in a later era than it started
+//! loses *all* its progress (the carry restores the full original
+//! size), and the extra prior-era loss is added to `lost_work` when
+//! the era stops at a boundary; an era that runs to completion has no
+//! per-task attempt export, so cross-era loss of victims that also
+//! finish inside that era is undercounted by their prior-era progress.
+
+use crate::sched::settled_cluster;
+use crate::sim::dynamics::{DynAction, DynTimeline};
+use crate::sim::engine::{simulate_in, SimConfig, SimError, SimScratch, TaskTrace};
+use crate::sim::recovery::{JobOutcome, RecoveryPolicy};
+use crate::sim::spec::{Cluster, SimDag, SimKind, SimTask};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Matches the engine's time-comparison epsilon.
+const EPS: f64 = 1e-9;
+
+/// One streaming arrival: a physical job DAG entering at `at`.
+#[derive(Debug, Clone)]
+pub struct OpenJob {
+    /// Arrival instant on the absolute stream clock.
+    pub at: f64,
+    /// The job's physical DAG. Task gates are relative to the job's
+    /// *admission* instant (the plan was computed as if starting at 0).
+    pub dag: SimDag,
+    /// Completion deadline measured from arrival, if any.
+    pub deadline: Option<f64>,
+}
+
+/// Open-loop driver configuration.
+#[derive(Debug, Clone)]
+pub struct OpenConfig {
+    /// Admission watermark: estimated drain time (module docs) above
+    /// which arrivals are refused. `INFINITY` (default) admits all.
+    pub watermark: f64,
+    /// How long a refused job may wait in the deferral queue before it
+    /// is shed for good. `0.0` (default) sheds immediately.
+    pub defer_max: f64,
+    /// The closed-engine configuration every era runs under.
+    /// `engine.stop` / `engine.attempts0` are owned by the driver and
+    /// overwritten per era.
+    pub engine: SimConfig,
+}
+
+impl Default for OpenConfig {
+    fn default() -> Self {
+        OpenConfig {
+            watermark: f64::INFINITY,
+            defer_max: 0.0,
+            engine: SimConfig::default(),
+        }
+    }
+}
+
+/// Per-job verdict, all times on the absolute stream clock.
+#[derive(Debug, Clone)]
+pub struct OpenJobResult {
+    pub arrival: f64,
+    /// When the job entered the engine (`None` = shed before entry).
+    pub admitted_at: Option<f64>,
+    /// [`JobOutcome::Rejected`] for shed jobs; `Completed` /
+    /// `Quarantined` / `Exhausted` otherwise, times rebased absolute.
+    pub outcome: JobOutcome,
+    /// Completion latency (finish − arrival) for completed jobs.
+    pub jct: Option<f64>,
+    /// Whether `jct ≤ deadline`; `None` when the job has no deadline.
+    /// Non-completed jobs with a deadline report `Some(false)`.
+    pub deadline_met: Option<bool>,
+    /// Absolute per-task trace, parallel to the job's DAG (`start` is
+    /// the first instant work began; `NaN` where unknown). Empty for
+    /// rejected jobs.
+    pub trace: Vec<TaskTrace>,
+}
+
+/// Aggregate outcome of a streamed run.
+#[derive(Debug, Clone)]
+pub struct OpenResult {
+    /// Per-job results, indexed like the input job list.
+    pub jobs: Vec<OpenJobResult>,
+    /// Latest completion / quarantine instant observed (0 if none).
+    pub makespan: f64,
+    /// Number of engine runs chained (idle boundary hops excluded).
+    pub eras: usize,
+    /// Engine iterations summed across eras.
+    pub events: usize,
+    /// Task re-enqueues summed across eras.
+    pub retries: usize,
+    /// Work destroyed by crashes, cross-era losses included (see the
+    /// module-docs caveat).
+    pub lost_work: f64,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub quarantined: usize,
+    pub completed: usize,
+}
+
+impl OpenResult {
+    /// Sorted JCTs of completed jobs.
+    fn jcts(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.jobs.iter().filter_map(|j| j.jct).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Nearest-rank percentile of completed-job JCTs (`q` in [0, 1]);
+    /// `None` when nothing completed.
+    pub fn jct_percentile(&self, q: f64) -> Option<f64> {
+        let v = self.jcts();
+        if v.is_empty() {
+            return None;
+        }
+        let i = ((v.len() - 1) as f64 * q).round() as usize;
+        Some(v[i])
+    }
+
+    /// Fraction of deadline-carrying jobs that completed within their
+    /// deadline (`None` when no job had one). Shed and quarantined
+    /// jobs count as misses.
+    pub fn deadline_hit_rate(&self) -> Option<f64> {
+        let with: Vec<bool> = self.jobs.iter().filter_map(|j| j.deadline_met).collect();
+        if with.is_empty() {
+            return None;
+        }
+        Some(with.iter().filter(|&&m| m).count() as f64 / with.len() as f64)
+    }
+
+    /// Summary object for the CLI outcome line: counters, JCT p50/p99
+    /// and the deadline hit rate (keys omitted when undefined).
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            // `n_jobs`, not `jobs`: the CLI outcome line reserves `jobs`
+            // for the per-job verdict array ([`jobs_json`]), matching the
+            // closed-path schema
+            ("n_jobs", Json::Num(self.jobs.len() as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("quarantined", Json::Num(self.quarantined as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("eras", Json::Num(self.eras as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("lost_work", Json::Num(self.lost_work)),
+            ("makespan", Json::Num(self.makespan)),
+        ];
+        if let Some(p50) = self.jct_percentile(0.5) {
+            kv.push(("jct_p50", Json::Num(p50)));
+        }
+        if let Some(p99) = self.jct_percentile(0.99) {
+            kv.push(("jct_p99", Json::Num(p99)));
+        }
+        if let Some(rate) = self.deadline_hit_rate() {
+            kv.push(("deadline_hit_rate", Json::Num(rate)));
+        }
+        Json::obj(kv)
+    }
+
+    /// Per-job verdict array (one object per input job, input order).
+    pub fn jobs_json(&self) -> Json {
+        Json::Arr(
+            self.jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let mut kv = vec![
+                        ("job", Json::Num(i as f64)),
+                        ("arrival", Json::Num(j.arrival)),
+                        ("outcome", j.outcome.to_json(i)),
+                    ];
+                    if let Some(a) = j.admitted_at {
+                        kv.push(("admitted_at", Json::Num(a)));
+                    }
+                    if let Some(jct) = j.jct {
+                        kv.push(("jct", Json::Num(jct)));
+                    }
+                    if let Some(m) = j.deadline_met {
+                        kv.push(("deadline_met", Json::Bool(m)));
+                    }
+                    Json::obj(kv)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Deterministic Poisson arrival trace: `n` cumulative exponential
+/// inter-arrival gaps at `rate` jobs per time unit, seeded.
+pub fn poisson_arrivals(seed: u64, rate: f64, n: usize) -> Vec<f64> {
+    assert!(rate.is_finite() && rate > 0.0, "rate must be finite and positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // u ∈ [0, 1) so 1 − u ∈ (0, 1] and the gap is finite, ≥ 0
+        t += -(1.0 - rng.f64()).ln() / rate;
+        out.push(t);
+    }
+    out
+}
+
+/// Logical-id namespace width of a job DAG (`max orig + 1`).
+fn n_origs(d: &SimDag) -> usize {
+    d.tasks.iter().map(|t| t.orig + 1).max().unwrap_or(0)
+}
+
+/// Coflow-id namespace width of a job DAG.
+fn n_coflows(d: &SimDag) -> usize {
+    d.tasks
+        .iter()
+        .map(|t| t.coflow.map_or(0, |c| c + 1))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Concatenate whole jobs into one closed-mode DAG with the same
+/// per-job `orig` / coflow offsets the era rebuild uses — the
+/// closed-mode comparison DAG of the open-at-`t = 0` oracle.
+pub fn concat_jobs(jobs: &[OpenJob]) -> SimDag {
+    let mut all = SimDag::default();
+    let (mut orig_off, mut cof_off) = (0usize, 0usize);
+    for (j, job) in jobs.iter().enumerate() {
+        all.append_job(&job.dag, j, orig_off, cof_off);
+        orig_off += n_origs(&job.dag);
+        cof_off += n_coflows(&job.dag);
+    }
+    all
+}
+
+/// Settled aggregate capacities backing the admission estimate.
+struct SettledCaps {
+    compute: f64,
+    net: f64,
+}
+
+fn settled_caps(cluster: &Cluster, tl: &DynTimeline) -> SettledCaps {
+    let settled = settled_cluster(cluster, tl);
+    let mut compute = 0.0;
+    let mut net = 0.0;
+    for h in &settled.hosts {
+        compute += h.cores;
+        net += (h.nic_up + h.nic_down) / 2.0;
+    }
+    SettledCaps { compute, net }
+}
+
+/// (compute bytes, flow bytes) of a whole job DAG.
+fn job_load(d: &SimDag) -> (f64, f64) {
+    let mut c = 0.0;
+    let mut f = 0.0;
+    for t in &d.tasks {
+        match t.kind {
+            SimKind::Compute { .. } => c += t.size,
+            SimKind::Flow { .. } => f += t.size,
+            SimKind::Dummy => {}
+        }
+    }
+    (c, f)
+}
+
+/// Estimated drain time of `(compute, flow)` load (module docs).
+fn drain_time(load: (f64, f64), caps: &SettledCaps) -> f64 {
+    let d = |l: f64, c: f64| {
+        if l <= 0.0 {
+            0.0
+        } else if c <= 0.0 {
+            f64::INFINITY
+        } else {
+            l / c
+        }
+    };
+    d(load.0, caps.compute).max(d(load.1, caps.net))
+}
+
+/// A job currently inside the engine, carried between eras.
+struct Live {
+    /// Index into the input job list.
+    idx: usize,
+    /// Absolute admission instant (gates rebase from it).
+    admit: f64,
+    /// `orig` / coflow namespace widths, fixed at admission.
+    origs: usize,
+    coflows: usize,
+    /// Unfinished bytes per local task (original size until started).
+    remaining: Vec<f64>,
+    /// Task finished (engine reported a finite finish).
+    done: Vec<bool>,
+    /// Effective earliest-start per local task, absolute: admission +
+    /// plan gate, raised by carried retry-backoff gates.
+    gate_abs: Vec<f64>,
+    /// Carried failed-attempt counts (retry recovery only).
+    attempts: Vec<usize>,
+    /// Absolute first-start / finish per local task (`NaN` = unknown).
+    start_abs: Vec<f64>,
+    finish_abs: Vec<f64>,
+}
+
+impl Live {
+    fn new(idx: usize, job: &OpenJob, admit: f64) -> Live {
+        let n = job.dag.len();
+        Live {
+            idx,
+            admit,
+            origs: n_origs(&job.dag),
+            coflows: n_coflows(&job.dag),
+            remaining: job.dag.tasks.iter().map(|t| t.size).collect(),
+            done: vec![false; n],
+            gate_abs: job.dag.tasks.iter().map(|t| admit + t.gate).collect(),
+            attempts: vec![0; n],
+            start_abs: vec![f64::NAN; n],
+            finish_abs: vec![f64::NAN; n],
+        }
+    }
+
+    /// Remaining (compute, flow) bytes.
+    fn load(&self, dag: &SimDag) -> (f64, f64) {
+        let mut c = 0.0;
+        let mut f = 0.0;
+        for (t, task) in dag.tasks.iter().enumerate() {
+            if self.done[t] || self.remaining[t] <= 0.0 {
+                continue;
+            }
+            match task.kind {
+                SimKind::Compute { .. } => c += self.remaining[t],
+                SimKind::Flow { .. } => f += self.remaining[t],
+                SimKind::Dummy => {}
+            }
+        }
+        (c, f)
+    }
+}
+
+/// As [`run_open`], allocating a fresh scratch.
+pub fn run_open(
+    jobs: &[OpenJob],
+    cluster: &Cluster,
+    cfg: &OpenConfig,
+) -> Result<OpenResult, SimError> {
+    run_open_in(jobs, cluster, cfg, &mut SimScratch::default())
+}
+
+/// Run the open-loop stream (module docs), reusing `scratch` across
+/// eras — the bounded-memory entry point: the scratch grows to the
+/// largest live set's high-water mark and plateaus there no matter how
+/// many jobs stream through.
+pub fn run_open_in(
+    jobs: &[OpenJob],
+    cluster: &Cluster,
+    cfg: &OpenConfig,
+    scratch: &mut SimScratch,
+) -> Result<OpenResult, SimError> {
+    assert!(
+        cfg.watermark >= 0.0 && !cfg.watermark.is_nan(),
+        "watermark must be ≥ 0 (INFINITY = admit all)"
+    );
+    assert!(
+        cfg.defer_max >= 0.0 && cfg.defer_max.is_finite(),
+        "defer_max must be finite and ≥ 0"
+    );
+    for j in jobs {
+        assert!(j.at.is_finite() && j.at >= 0.0, "arrival times must be finite and ≥ 0");
+    }
+    let caps = settled_caps(cluster, &cfg.engine.dynamics);
+    let retry_on = matches!(cfg.engine.recovery, RecoveryPolicy::Retry { .. });
+
+    // Arrival order: by time, ties by input index (stable).
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| jobs[a].at.partial_cmp(&jobs[b].at).unwrap().then(a.cmp(&b)));
+
+    let mut out: Vec<Option<OpenJobResult>> = jobs.iter().map(|_| None).collect();
+    let mut live: Vec<Live> = Vec::new();
+    let mut deferred: Vec<(usize, f64)> = Vec::new(); // (job idx, expiry), arrival order
+    let mut next = 0usize;
+    let mut now = 0.0f64;
+    let (mut eras, mut events, mut retries) = (0usize, 0usize, 0usize);
+    let mut lost_work = 0.0f64;
+    let (mut admitted, mut rejected) = (0usize, 0usize);
+
+    // Era-rebuild buffers, reused so per-era allocation is bounded by
+    // the live set (the driver-side half of the epoch GC).
+    let mut era_dag = SimDag::default();
+    let mut era_map: Vec<(usize, usize)> = Vec::new(); // era task -> (slot, local)
+    let mut local: Vec<usize> = Vec::new();
+    let mut attempts0: Vec<usize> = Vec::new();
+
+    let reject = |idx: usize, at: f64, out: &mut Vec<Option<OpenJobResult>>, n: &mut usize| {
+        out[idx] = Some(OpenJobResult {
+            arrival: jobs[idx].at,
+            admitted_at: None,
+            outcome: JobOutcome::Rejected { at },
+            jct: None,
+            deadline_met: jobs[idx].deadline.map(|_| false),
+            trace: Vec::new(),
+        });
+        *n += 1;
+    };
+
+    loop {
+        // ---- stream boundary: admit / defer / shed --------------------
+        let (mut load_c, mut load_f) = live
+            .iter()
+            .fold((0.0, 0.0), |(c, f), lj| {
+                let (jc, jf) = lj.load(&jobs[lj.idx].dag);
+                (c + jc, f + jf)
+            });
+        // Deferred first (oldest first), each getting a final test at
+        // its expiry before it is shed.
+        for (idx, expiry) in std::mem::take(&mut deferred) {
+            let jl = job_load(&jobs[idx].dag);
+            if drain_time((load_c + jl.0, load_f + jl.1), &caps) <= cfg.watermark {
+                live.push(Live::new(idx, &jobs[idx], now));
+                admitted += 1;
+                load_c += jl.0;
+                load_f += jl.1;
+            } else if expiry <= now + EPS {
+                reject(idx, expiry, &mut out, &mut rejected);
+            } else {
+                deferred.push((idx, expiry));
+            }
+        }
+        // Fresh arrivals due now, input order.
+        while next < order.len() && jobs[order[next]].at <= now + EPS {
+            let idx = order[next];
+            next += 1;
+            let jl = job_load(&jobs[idx].dag);
+            let solo = drain_time(jl, &caps);
+            if drain_time((load_c + jl.0, load_f + jl.1), &caps) <= cfg.watermark {
+                live.push(Live::new(idx, &jobs[idx], now));
+                admitted += 1;
+                load_c += jl.0;
+                load_f += jl.1;
+            } else if solo > cfg.watermark || cfg.defer_max <= 0.0 {
+                // Can never pass (or no deferral window): shed now.
+                reject(idx, now, &mut out, &mut rejected);
+            } else {
+                deferred.push((idx, jobs[idx].at + cfg.defer_max));
+            }
+        }
+
+        // ---- next boundary strictly after `now` -----------------------
+        let next_arrival = order.get(next).map(|&i| jobs[i].at);
+        let next_expiry = deferred.iter().fold(f64::INFINITY, |m, &(_, e)| m.min(e));
+        let boundary = match next_arrival {
+            Some(a) => Some(a.min(next_expiry)),
+            None if next_expiry.is_finite() => Some(next_expiry),
+            None => None,
+        };
+
+        // ---- era ------------------------------------------------------
+        if live.is_empty() {
+            match boundary {
+                Some(b) => {
+                    now = b;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // Rebuild the compacted live-jobs DAG on the era clock.
+        era_dag.tasks.clear();
+        era_dag.preds.clear();
+        era_dag.succs.clear();
+        era_dag.job_of.clear();
+        era_map.clear();
+        attempts0.clear();
+        let mut any_attempts = false;
+        let (mut orig_off, mut cof_off) = (0usize, 0usize);
+        for (slot, lj) in live.iter().enumerate() {
+            let jd = &jobs[lj.idx].dag;
+            local.clear();
+            local.resize(jd.len(), usize::MAX);
+            for lt in 0..jd.len() {
+                if lj.done[lt] {
+                    continue;
+                }
+                let t0 = &jd.tasks[lt];
+                let id = era_dag.push(SimTask {
+                    orig: t0.orig + orig_off,
+                    chunk: t0.chunk,
+                    kind: t0.kind,
+                    size: lj.remaining[lt],
+                    priority: t0.priority,
+                    gate: (lj.gate_abs[lt] - now).max(0.0),
+                    coflow: t0.coflow.map(|c| c + cof_off),
+                });
+                era_dag.job_of.push(slot);
+                local[lt] = id;
+                era_map.push((slot, lt));
+                if retry_on {
+                    attempts0.push(lj.attempts[lt]);
+                    any_attempts |= lj.attempts[lt] > 0;
+                }
+            }
+            for lt in 0..jd.len() {
+                if local[lt] == usize::MAX {
+                    continue;
+                }
+                for &p in &jd.preds[lt] {
+                    if local[p] != usize::MAX {
+                        era_dag.dep(local[p], local[lt]);
+                    }
+                }
+            }
+            orig_off += lj.origs;
+            cof_off += lj.coflows;
+        }
+
+        let mut ecfg = cfg.engine.clone();
+        ecfg.stop = boundary.map(|b| b - now);
+        if !cfg.engine.dynamics.is_empty() {
+            ecfg.dynamics = fold_dynamics(&cfg.engine.dynamics, now);
+        }
+        ecfg.attempts0 = if any_attempts { attempts0.clone() } else { Vec::new() };
+
+        let r = simulate_in(&era_dag, cluster, &ecfg, scratch)?;
+        eras += 1;
+        events += r.events;
+        retries += r.retries;
+        lost_work += r.lost_work;
+
+        // ---- harvest --------------------------------------------------
+        for (e, &(slot, lt)) in era_map.iter().enumerate() {
+            let lj = &mut live[slot];
+            let tr = r.trace[e];
+            if tr.start.is_finite() && lj.start_abs[lt].is_nan() {
+                lj.start_abs[lt] = now + tr.start;
+            }
+            if tr.finish.is_finite() {
+                lj.done[lt] = true;
+                lj.remaining[lt] = 0.0;
+                lj.finish_abs[lt] = now + tr.finish;
+            } else if let Some(st) = r.stopped.as_ref() {
+                if !st.attempts.is_empty() && st.attempts[e] > lj.attempts[lt] {
+                    // Killed this era: prior-era progress is lost too —
+                    // restore the loss the engine could not see, then
+                    // rebase remaining onto the original size.
+                    let orig = jobs[lj.idx].dag.tasks[lt].size;
+                    let era_size = lj.remaining[lt];
+                    let kills = (st.attempts[e] - lj.attempts[lt]) as f64;
+                    lost_work += kills * (orig - era_size);
+                    lj.remaining[lt] = st.remaining[e] + (orig - era_size);
+                } else {
+                    lj.remaining[lt] = st.remaining[e];
+                }
+                if !st.attempts.is_empty() {
+                    lj.attempts[lt] = st.attempts[e];
+                    lj.gate_abs[lt] = lj.gate_abs[lt].max(now + st.retry_gate[e]);
+                }
+            }
+        }
+
+        // ---- retire (epoch GC) ----------------------------------------
+        let mut slot = 0usize;
+        live.retain(|lj| {
+            let verdict = match r.jobs[slot] {
+                JobOutcome::Quarantined { reason, at } => {
+                    Some(JobOutcome::Quarantined { reason, at: now + at })
+                }
+                JobOutcome::Exhausted { attempts } => Some(JobOutcome::Exhausted { attempts }),
+                _ if lj.done.iter().all(|&d| d) => {
+                    let finish = lj
+                        .finish_abs
+                        .iter()
+                        .fold(lj.admit, |m, &f| if f.is_finite() { m.max(f) } else { m });
+                    Some(JobOutcome::Completed { finish })
+                }
+                _ => None,
+            };
+            slot += 1;
+            if let Some(outcome) = verdict {
+                let job = &jobs[lj.idx];
+                let jct = outcome.finish().map(|f| f - job.at);
+                out[lj.idx] = Some(OpenJobResult {
+                    arrival: job.at,
+                    admitted_at: Some(lj.admit),
+                    outcome,
+                    jct,
+                    deadline_met: job.deadline.map(|d| jct.map_or(false, |t| t <= d)),
+                    trace: lj
+                        .start_abs
+                        .iter()
+                        .zip(&lj.finish_abs)
+                        .map(|(&s, &f)| TaskTrace { start: s, finish: f })
+                        .collect(),
+                });
+                false
+            } else {
+                true
+            }
+        });
+
+        match boundary {
+            Some(b) => now = b,
+            None => {
+                debug_assert!(live.is_empty(), "final era must retire every live job");
+                break;
+            }
+        }
+    }
+
+    // ---- assemble -----------------------------------------------------
+    let mut makespan = 0.0f64;
+    let mut quarantined = 0usize;
+    let mut completed = 0usize;
+    let results: Vec<OpenJobResult> = out
+        .into_iter()
+        .map(|o| o.expect("every job must have a verdict"))
+        .collect();
+    for j in &results {
+        match j.outcome {
+            JobOutcome::Completed { finish } => {
+                completed += 1;
+                makespan = makespan.max(finish);
+            }
+            JobOutcome::Quarantined { at, .. } => {
+                quarantined += 1;
+                makespan = makespan.max(at);
+            }
+            JobOutcome::Exhausted { .. } => quarantined += 1,
+            JobOutcome::Rejected { .. } => {}
+        }
+    }
+    Ok(OpenResult {
+        jobs: results,
+        makespan,
+        eras,
+        events,
+        retries,
+        lost_work,
+        admitted,
+        rejected,
+        quarantined,
+        completed,
+    })
+}
+
+/// Rebase the absolute timeline onto an era starting at `s`: past
+/// events replay at the era's `t = 0` in original order (absolute
+/// last-writer-wins factors make the replay exact) with `FailHost`
+/// demoted to a capacity-identical slow-down so crashes kill in-flight
+/// work exactly once; future events shift to era-relative time.
+fn fold_dynamics(tl: &DynTimeline, s: f64) -> DynTimeline {
+    let mut out = DynTimeline::new();
+    for e in tl.events() {
+        if e.at < s - EPS {
+            let action = match e.action {
+                DynAction::FailHost { host } => DynAction::SlowHost { host, factor: 0.0 },
+                a => a,
+            };
+            out.push(0.0, action);
+        } else {
+            out.push((e.at - s).max(0.0), e.action);
+        }
+    }
+    out
+}
+
+/// JSON arrival spec for `simulate --open FILE`:
+///
+/// ```json
+/// {"arrivals": [0.0, 1.5, 3.0],
+///  "watermark": 10.0, "defer_max": 2.0, "deadline": 5.0}
+/// ```
+///
+/// or, trace generated from a seeded Poisson process:
+///
+/// ```json
+/// {"poisson": {"seed": 7, "rate": 0.5, "n": 100}, "watermark": 10.0}
+/// ```
+///
+/// `watermark` (default: admit all), `defer_max` (default 0) and
+/// `deadline` (per-job, relative to arrival; default none) are
+/// optional.
+#[derive(Debug, Clone)]
+pub struct OpenSpec {
+    pub arrivals: Vec<f64>,
+    pub watermark: f64,
+    pub defer_max: f64,
+    pub deadline: Option<f64>,
+}
+
+impl OpenSpec {
+    pub fn from_json(j: &Json) -> Result<OpenSpec, String> {
+        let obj = j.as_obj().map_err(|e| format!("open spec: {e}"))?;
+        let arrivals = match (obj.get("arrivals"), obj.get("poisson")) {
+            (Some(_), Some(_)) => {
+                return Err("open spec: give `arrivals` or `poisson`, not both".into())
+            }
+            (Some(a), None) => {
+                let arr = a.as_arr().map_err(|e| format!("open spec arrivals: {e}"))?;
+                let mut v = Vec::with_capacity(arr.len());
+                for (i, x) in arr.iter().enumerate() {
+                    let t = x.as_f64().map_err(|e| format!("open spec arrivals[{i}]: {e}"))?;
+                    if !t.is_finite() || t < 0.0 {
+                        return Err(format!("open spec arrivals[{i}]: bad time {t}"));
+                    }
+                    v.push(t);
+                }
+                v
+            }
+            (None, Some(p)) => {
+                let seed_f = p
+                    .get("seed")
+                    .and_then(|v| v.as_f64())
+                    .map_err(|e| format!("open spec poisson.seed: {e}"))?;
+                if !(seed_f.is_finite() && seed_f >= 0.0 && seed_f.fract() == 0.0) {
+                    return Err(format!("open spec poisson.seed: bad seed {seed_f}"));
+                }
+                let seed = seed_f as u64;
+                let rate = p
+                    .get("rate")
+                    .and_then(|v| v.as_f64())
+                    .map_err(|e| format!("open spec poisson.rate: {e}"))?;
+                let n = p
+                    .get("n")
+                    .and_then(|v| v.as_usize())
+                    .map_err(|e| format!("open spec poisson.n: {e}"))?;
+                if !rate.is_finite() || rate <= 0.0 {
+                    return Err(format!("open spec poisson.rate: bad rate {rate}"));
+                }
+                poisson_arrivals(seed, rate, n)
+            }
+            (None, None) => return Err("open spec: need `arrivals` or `poisson`".into()),
+        };
+        let opt_f64 = |key: &str| -> Result<Option<f64>, String> {
+            match obj.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let x = v.as_f64().map_err(|e| format!("open spec {key}: {e}"))?;
+                    if x.is_nan() || x < 0.0 {
+                        return Err(format!("open spec {key}: bad value {x}"));
+                    }
+                    Ok(Some(x))
+                }
+            }
+        };
+        let watermark = opt_f64("watermark")?.unwrap_or(f64::INFINITY);
+        let defer_max = match opt_f64("defer_max")? {
+            Some(d) if !d.is_finite() => return Err("open spec defer_max: must be finite".into()),
+            Some(d) => d,
+            None => 0.0,
+        };
+        let deadline = match opt_f64("deadline")? {
+            Some(d) if !d.is_finite() => return Err("open spec deadline: must be finite".into()),
+            d => d,
+        };
+        Ok(OpenSpec { arrivals, watermark, defer_max, deadline })
+    }
+
+    /// Instantiate the stream: one clone of `dag` per arrival.
+    pub fn jobs(&self, dag: &SimDag) -> Vec<OpenJob> {
+        self.arrivals
+            .iter()
+            .map(|&at| OpenJob { at, dag: dag.clone(), deadline: self.deadline })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dynamics::LinkRef;
+    use crate::sim::engine::simulate;
+    use crate::sim::spec::SimKind;
+
+    /// One compute task of `size` on `host`.
+    fn one_task_job(at: f64, host: usize, size: f64) -> OpenJob {
+        let mut d = SimDag::default();
+        d.push(SimTask {
+            orig: 0,
+            chunk: (0, 1),
+            kind: SimKind::Compute { host },
+            size,
+            priority: 0,
+            gate: 0.0,
+            coflow: None,
+        });
+        OpenJob { at, dag: d, deadline: None }
+    }
+
+    /// compute → flow chain starting on `host`, flowing to `host + 1`.
+    fn chain_job(at: f64, host: usize, size: f64) -> OpenJob {
+        let mut d = SimDag::default();
+        let c = d.push(SimTask {
+            orig: 0,
+            chunk: (0, 1),
+            kind: SimKind::Compute { host },
+            size,
+            priority: 0,
+            gate: 0.0,
+            coflow: None,
+        });
+        let f = d.push(SimTask {
+            orig: 1,
+            chunk: (0, 1),
+            kind: SimKind::Flow { src: host, dst: host + 1 },
+            size,
+            priority: 0,
+            gate: 0.0,
+            coflow: None,
+        });
+        d.dep(c, f);
+        OpenJob { at, dag: d, deadline: None }
+    }
+
+    #[test]
+    fn poisson_is_deterministic_and_monotone() {
+        let a = poisson_arrivals(7, 0.5, 50);
+        let b = poisson_arrivals(7, 0.5, 50);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!(a.iter().all(|t| t.is_finite() && *t >= 0.0));
+        assert_ne!(a, poisson_arrivals(8, 0.5, 50));
+    }
+
+    #[test]
+    fn single_job_at_zero_matches_closed_run() {
+        let jobs = vec![chain_job(0.0, 0, 2.0)];
+        let cluster = Cluster::uniform(2);
+        let open = run_open(&jobs, &cluster, &OpenConfig::default()).unwrap();
+        let closed = simulate(&jobs[0].dag, &cluster, &SimConfig::default()).unwrap();
+        assert_eq!(open.eras, 1);
+        assert_eq!(open.admitted, 1);
+        assert_eq!(open.completed, 1);
+        assert_eq!(open.makespan.to_bits(), closed.makespan.to_bits());
+        for (o, c) in open.jobs[0].trace.iter().zip(&closed.trace) {
+            assert_eq!(o.start.to_bits(), c.start.to_bits());
+            assert_eq!(o.finish.to_bits(), c.finish.to_bits());
+        }
+        assert_eq!(open.jobs[0].jct, Some(closed.makespan));
+    }
+
+    #[test]
+    fn spaced_stream_completes_all_with_absolute_times() {
+        // Disjoint hosts, spaced arrivals: each job runs solo; its
+        // trace is the solo trace shifted by its arrival.
+        let jobs = vec![one_task_job(0.0, 0, 1.0), one_task_job(5.0, 1, 2.0)];
+        let cluster = Cluster::uniform(2);
+        let r = run_open(&jobs, &cluster, &OpenConfig::default()).unwrap();
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.jobs[0].jct, Some(1.0));
+        assert_eq!(r.jobs[1].jct, Some(2.0));
+        assert_eq!(r.jobs[1].trace[0].start, 5.0);
+        assert_eq!(r.jobs[1].trace[0].finish, 7.0);
+        assert_eq!(r.makespan, 7.0);
+    }
+
+    #[test]
+    fn watermark_sheds_with_distinct_rejected_outcome() {
+        // Host 0, capacity 1: job 0 queues 10 time units of work. The
+        // watermark of 5 admits job 0 (solo drain 10 > 5? no — reject).
+        // Use sizes that make the intent exact: job 0 drains in 4,
+        // job 1 would push the estimate to 8 > 5 → shed.
+        let jobs = vec![one_task_job(0.0, 0, 4.0), one_task_job(1.0, 0, 4.0)];
+        let cluster = Cluster::uniform(1);
+        let cfg = OpenConfig { watermark: 5.0, ..OpenConfig::default() };
+        let r = run_open(&jobs, &cluster, &cfg).unwrap();
+        assert_eq!(r.admitted, 1);
+        assert_eq!(r.rejected, 1);
+        assert!(matches!(r.jobs[1].outcome, JobOutcome::Rejected { at } if at == 1.0));
+        assert_eq!(r.jobs[1].admitted_at, None);
+        assert!(r.jobs[1].trace.is_empty());
+        // The shed job never entered the engine: no lost work.
+        assert_eq!(r.lost_work, 0.0);
+        // Job 0 unaffected.
+        assert_eq!(r.jobs[0].jct, Some(4.0));
+    }
+
+    #[test]
+    fn solo_overweight_job_is_rejected_immediately_despite_deferral() {
+        let jobs = vec![one_task_job(0.0, 0, 100.0)];
+        let cluster = Cluster::uniform(1);
+        let cfg = OpenConfig { watermark: 5.0, defer_max: 50.0, ..OpenConfig::default() };
+        let r = run_open(&jobs, &cluster, &cfg).unwrap();
+        assert!(matches!(r.jobs[0].outcome, JobOutcome::Rejected { at } if at == 0.0));
+    }
+
+    #[test]
+    fn deferred_job_admits_once_load_drains() {
+        // Job 0 drains at t = 4; job 1 arrives at t = 1 over the
+        // watermark, defers, and is retested at its expiry t = 6 when
+        // the cluster is empty → admitted there.
+        let jobs = vec![one_task_job(0.0, 0, 4.0), one_task_job(1.0, 0, 4.0)];
+        let cluster = Cluster::uniform(1);
+        let cfg = OpenConfig { watermark: 5.0, defer_max: 5.0, ..OpenConfig::default() };
+        let r = run_open(&jobs, &cluster, &cfg).unwrap();
+        assert_eq!(r.admitted, 2);
+        assert_eq!(r.rejected, 0);
+        assert_eq!(r.jobs[1].admitted_at, Some(6.0));
+        assert_eq!(r.jobs[1].trace[0].start, 6.0);
+        assert_eq!(r.jobs[1].jct, Some(9.0)); // finished 10, arrived 1
+    }
+
+    #[test]
+    fn deferral_expires_into_rejection_under_sustained_load() {
+        // Job 0 holds the cluster past job 1's deferral window.
+        let jobs = vec![one_task_job(0.0, 0, 20.0), one_task_job(1.0, 0, 4.0)];
+        let cluster = Cluster::uniform(1);
+        let cfg = OpenConfig { watermark: 5.0, defer_max: 2.0, ..OpenConfig::default() };
+        let r = run_open(&jobs, &cluster, &cfg).unwrap();
+        // Job 0's solo drain is 20 > 5: rejected at arrival, so the
+        // cluster is actually empty — rebuild the scenario with an
+        // admissible hog.
+        assert!(matches!(r.jobs[0].outcome, JobOutcome::Rejected { .. }));
+
+        let jobs = vec![one_task_job(0.0, 0, 4.9), one_task_job(1.0, 0, 4.9)];
+        let cfg = OpenConfig { watermark: 5.0, defer_max: 2.0, ..OpenConfig::default() };
+        let r = run_open(&jobs, &Cluster::uniform(1), &cfg).unwrap();
+        assert_eq!(r.admitted, 1);
+        assert_eq!(r.rejected, 1);
+        // Shed at the deferral expiry, not at arrival.
+        assert!(matches!(r.jobs[1].outcome, JobOutcome::Rejected { at } if at == 3.0));
+    }
+
+    #[test]
+    fn deadline_metrics() {
+        let mut early = one_task_job(0.0, 0, 1.0);
+        early.deadline = Some(2.0);
+        let mut late = one_task_job(0.0, 1, 5.0);
+        late.deadline = Some(2.0);
+        let r = run_open(&[early, late], &Cluster::uniform(2), &OpenConfig::default()).unwrap();
+        assert_eq!(r.jobs[0].deadline_met, Some(true));
+        assert_eq!(r.jobs[1].deadline_met, Some(false));
+        assert_eq!(r.deadline_hit_rate(), Some(0.5));
+        let p50 = r.jct_percentile(0.5).unwrap();
+        assert!(p50 == 1.0 || p50 == 5.0);
+        assert_eq!(r.jct_percentile(0.99), Some(5.0));
+    }
+
+    #[test]
+    fn past_dynamics_still_apply_after_their_jobs_departed() {
+        // Satellite regression: host 1 is slowed while only job 0 is
+        // live; job 0 completes; the restore fires in an era where no
+        // live job references host 1 — the *next* arrival must still
+        // see the restored (full) capacity, and an arrival between
+        // slow-down and restore must see the degraded capacity.
+        let mut cfg = OpenConfig::default();
+        cfg.engine.dynamics = DynTimeline::new()
+            .with(0.5, DynAction::SlowHost { host: 1, factor: 0.5 })
+            .with(6.0, DynAction::RestoreHost { host: 1 });
+        let jobs = vec![
+            one_task_job(0.0, 0, 1.0),  // departs at t = 1
+            one_task_job(2.0, 1, 1.0),  // runs at 0.5 → finishes t = 4
+            one_task_job(10.0, 1, 1.0), // after restore → finishes t = 11
+        ];
+        let r = run_open(&jobs, &Cluster::uniform(2), &cfg).unwrap();
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.jobs[1].jct, Some(2.0));
+        assert_eq!(r.jobs[2].jct, Some(1.0));
+    }
+
+    #[test]
+    fn degraded_link_persists_across_idle_eras() {
+        // Link-level flavour of the same regression: up:0 degraded
+        // early, never restored; a job arriving long after every other
+        // job departed must still see the degraded uplink.
+        let mut cfg = OpenConfig::default();
+        cfg.engine.dynamics = DynTimeline::new()
+            .with(0.1, DynAction::Degrade { link: LinkRef::NicUp(0), factor: 0.25 });
+        let jobs = vec![one_task_job(0.0, 1, 1.0), chain_job(5.0, 0, 1.0)];
+        let r = run_open(&jobs, &Cluster::uniform(2), &cfg).unwrap();
+        assert_eq!(r.completed, 2);
+        // compute 1.0 at full rate, then 1.0 bytes at 0.25 → 4.0
+        assert_eq!(r.jobs[1].jct, Some(5.0));
+    }
+
+    #[test]
+    fn concat_jobs_offsets_namespaces() {
+        let jobs = vec![chain_job(0.0, 0, 1.0), chain_job(0.0, 0, 2.0)];
+        let all = concat_jobs(&jobs);
+        assert_eq!(all.len(), 4);
+        assert_eq!(all.job(0), 0);
+        assert_eq!(all.job(2), 1);
+        assert_eq!(all.tasks[2].orig, 2); // shifted by n_origs = 2
+        assert_eq!(all.n_jobs(), 2);
+    }
+
+    #[test]
+    fn open_spec_json_both_modes() {
+        let j = Json::parse(
+            r#"{"arrivals": [0.0, 1.5], "watermark": 10.0, "defer_max": 2.0, "deadline": 5.0}"#,
+        )
+        .unwrap();
+        let s = OpenSpec::from_json(&j).unwrap();
+        assert_eq!(s.arrivals, vec![0.0, 1.5]);
+        assert_eq!(s.watermark, 10.0);
+        assert_eq!(s.defer_max, 2.0);
+        assert_eq!(s.deadline, Some(5.0));
+        let jobs = s.jobs(&chain_job(0.0, 0, 1.0).dag);
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[1].at, 1.5);
+        assert_eq!(jobs[1].deadline, Some(5.0));
+
+        let j = Json::parse(r#"{"poisson": {"seed": 7, "rate": 0.5, "n": 10}}"#).unwrap();
+        let s = OpenSpec::from_json(&j).unwrap();
+        assert_eq!(s.arrivals, poisson_arrivals(7, 0.5, 10));
+        assert!(s.watermark.is_infinite());
+        assert_eq!(s.defer_max, 0.0);
+        assert_eq!(s.deadline, None);
+    }
+
+    #[test]
+    fn open_spec_json_rejects_bad_input() {
+        for bad in [
+            r#"{}"#,
+            r#"{"arrivals": [0.0], "poisson": {"seed": 1, "rate": 1.0, "n": 2}}"#,
+            r#"{"arrivals": [-1.0]}"#,
+            r#"{"poisson": {"seed": 1, "rate": 0.0, "n": 2}}"#,
+            r#"{"arrivals": [0.0], "watermark": -2.0}"#,
+            r#"{"arrivals": [0.0], "defer_max": 1e999}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(OpenSpec::from_json(&j).is_err(), "must reject {bad}");
+        }
+    }
+
+    #[test]
+    fn result_json_has_counters_and_percentiles() {
+        let jobs = vec![one_task_job(0.0, 0, 1.0), one_task_job(0.0, 1, 3.0)];
+        let r = run_open(&jobs, &Cluster::uniform(2), &OpenConfig::default()).unwrap();
+        let j = r.to_json();
+        let s = format!("{j}");
+        assert!(s.contains("\"admitted\""));
+        assert!(s.contains("\"jct_p99\""));
+        assert!(!s.contains("deadline_hit_rate")); // no deadlines given
+        let pj = format!("{}", r.jobs_json());
+        assert!(pj.contains("\"arrival\""));
+    }
+}

@@ -195,6 +195,13 @@ pub enum JobOutcome {
     Quarantined { reason: StuckReason, at: f64 },
     /// A member task burned through its whole failed-attempt budget.
     Exhausted { attempts: usize },
+    /// The open-loop admission controller refused the job at simulated
+    /// time `at` (watermark exceeded, or the deferral window expired
+    /// before load dropped). Distinct from [`JobOutcome::Quarantined`]:
+    /// a rejected job never entered the engine, held no capacity and
+    /// lost no work — `SimResult::lost_work` and the retry accounting
+    /// never see it.
+    Rejected { at: f64 },
 }
 
 impl JobOutcome {
@@ -228,6 +235,11 @@ impl JobOutcome {
                 ("job", Json::Num(job as f64)),
                 ("outcome", Json::Str("exhausted".into())),
                 ("attempts", Json::Num(attempts as f64)),
+            ]),
+            JobOutcome::Rejected { at } => Json::obj(vec![
+                ("job", Json::Num(job as f64)),
+                ("outcome", Json::Str("rejected".into())),
+                ("at", Json::Num(at)),
             ]),
         }
     }
@@ -285,5 +297,20 @@ mod tests {
         assert_eq!(q.finish(), None);
         let row = q.to_json(3).to_string();
         assert!(row.contains("\"quarantined\""), "{row}");
+    }
+
+    #[test]
+    fn rejected_is_distinct_from_quarantined() {
+        let r = JobOutcome::Rejected { at: 4.5 };
+        assert!(!r.is_completed());
+        assert_eq!(r.finish(), None);
+        let row = r.to_json(7).to_string();
+        assert!(row.contains("\"rejected\""), "{row}");
+        assert!(row.contains("4.5"), "{row}");
+        // the admission verdict must never be confused with an
+        // in-engine quarantine: different JSON outcome tags
+        let q = JobOutcome::Quarantined { reason: StuckReason::Blocked, at: 4.5 };
+        assert_ne!(r, q);
+        assert!(!q.to_json(7).to_string().contains("\"rejected\""));
     }
 }

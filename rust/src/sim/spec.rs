@@ -320,6 +320,41 @@ impl SimDag {
         self.job_of.get(t).copied().unwrap_or(0)
     }
 
+    /// Append every task of `other` as job `job`, remapping the edges,
+    /// shifting `orig` logical ids by `orig_offset` and coflow groups
+    /// by `coflow_offset` so concatenated jobs cannot collide on either
+    /// namespace. Returns the index `other`'s task 0 landed at. The
+    /// open-loop era rebuild (`sim/openloop.rs`) concatenates the live
+    /// jobs of each epoch with this.
+    pub fn append_job(
+        &mut self,
+        other: &SimDag,
+        job: usize,
+        orig_offset: TaskId,
+        coflow_offset: usize,
+    ) -> usize {
+        let base = self.tasks.len();
+        // densify the implicit job map before a multi-job append
+        if self.job_of.len() < base {
+            self.job_of.resize(base, 0);
+        }
+        for t in &other.tasks {
+            self.tasks.push(SimTask {
+                orig: t.orig + orig_offset,
+                coflow: t.coflow.map(|c| c + coflow_offset),
+                ..t.clone()
+            });
+            self.job_of.push(job);
+        }
+        for p in &other.preds {
+            self.preds.push(p.iter().map(|&x| x + base).collect());
+        }
+        for s in &other.succs {
+            self.succs.push(s.iter().map(|&x| x + base).collect());
+        }
+        base
+    }
+
     /// Number of jobs — at least 1 (the implicit job `0`).
     pub fn n_jobs(&self) -> usize {
         self.job_of.iter().copied().max().map_or(1, |m| m + 1)
@@ -431,6 +466,37 @@ mod tests {
         d.dep(a, b);
         assert_eq!(d.succs[a], vec![b]);
         assert_eq!(d.preds[b], vec![a]);
+    }
+
+    #[test]
+    fn append_job_remaps_ids_edges_and_coflows() {
+        let task = |orig: usize, host: usize, coflow: Option<usize>| SimTask {
+            orig,
+            chunk: (0, 1),
+            kind: SimKind::Compute { host },
+            size: 1.0,
+            priority: 0,
+            gate: 0.0,
+            coflow,
+        };
+        let mut a = SimDag::default();
+        let t0 = a.push(task(0, 0, None));
+        let mut b = SimDag::default();
+        let u0 = b.push(task(0, 1, Some(0)));
+        let u1 = b.push(task(1, 1, Some(1)));
+        b.dep(u0, u1);
+        let base = a.append_job(&b, 1, 10, 5);
+        assert_eq!(base, 1);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.job(t0), 0);
+        assert_eq!(a.job(base + u1), 1);
+        assert_eq!(a.n_jobs(), 2);
+        assert_eq!(a.tasks[base].orig, 10);
+        assert_eq!(a.tasks[base + 1].orig, 11);
+        assert_eq!(a.tasks[base].coflow, Some(5));
+        assert_eq!(a.tasks[base + 1].coflow, Some(6));
+        assert_eq!(a.succs[base], vec![base + 1]);
+        assert_eq!(a.preds[base + 1], vec![base]);
     }
 
     #[test]

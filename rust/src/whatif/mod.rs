@@ -19,8 +19,9 @@
 //! against.
 
 use crate::mxdag::{MXDag, TaskId, TaskKind};
+use crate::sched::altruistic::merge;
 use crate::sched::mxsched::cpm_on;
-use crate::sched::{evaluate, evaluate_with, EvalContext, Plan};
+use crate::sched::{evaluate, evaluate_with, EvalContext, Plan, SelfishScheduler};
 use crate::sim::{
     Annotations, Cluster, CpuPolicy, DynAction, DynTimeline, LinkRef, NetPolicy, RecoveryPolicy,
     SimConfig, SimError,
@@ -96,6 +97,18 @@ pub enum Hypothetical {
     /// shrinks?" under the oracle FailFast corner, while a crash is
     /// precisely the question the recovery layer exists for.
     FailHost { host: usize, at: f64 },
+    /// Admission hypothetical for the open loop (`sim/openloop.rs`):
+    /// "what would admitting this job *now* cost the incumbents?" The
+    /// incoming DAG is merged next to the base workload
+    /// ([`merge`](crate::sched::altruistic::merge)), the mix is scored
+    /// under the base *policy* with fresh per-job critical-path
+    /// annotations (merge remaps task ids, so the base plan's per-task
+    /// annotations cannot carry over — same constraint as
+    /// [`Hypothetical::Repartition`]), and the reported JCT is the
+    /// *incumbents'* completion time under contention; the delta vs the
+    /// baseline is the admission cost an admission controller weighs
+    /// against the arrival's deadline.
+    Admit { job: Box<MXDag> },
 }
 
 impl Hypothetical {
@@ -115,6 +128,7 @@ impl Hypothetical {
             }
             Hypothetical::Reroute { trunk } => format!("reroute(-trunk:{trunk})"),
             Hypothetical::FailHost { host, at } => format!("fail_host({host}@{at})"),
+            Hypothetical::Admit { job } => format!("admit(+{} tasks)", job.len()),
         }
     }
 }
@@ -219,6 +233,16 @@ fn eval_hypothetical(
             DynTimeline::new().with(*at, DynAction::FailHost { host: *host }),
             RecoveryPolicy::retry_default(),
         ),
+        Hypothetical::Admit { job } => {
+            let multi = merge(&[ctx.dag().clone(), (**job).clone()]);
+            // fresh per-job CPM annotations over the mix (merge remaps
+            // task ids), scored under the base policy
+            let ann = SelfishScheduler.plan_multi(&multi).ann;
+            let plan = Plan { ann, policy: base.policy };
+            evaluate(&multi.dag, ctx.cluster(), &plan)
+                .map(|r| multi.jct(0, &r))
+                .map_err(|e| e.to_string())
+        }
     };
     WhatIf { label, outcome: jct.map(|j| (j, j - baseline)) }
 }
@@ -573,6 +597,46 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Admission hypotheticals report the *incumbents'* completion under
+    /// the mix: a colliding arrival halves the incumbent's rate (fair
+    /// sharing), a disjoint arrival costs nothing — the exact signal an
+    /// open-loop admission controller wants before committing.
+    #[test]
+    fn admit_hypothetical_prices_contention_for_incumbents() {
+        let mut b = MXDag::builder();
+        b.compute("incumbent", 0, 4.0);
+        let g = b.finalize().unwrap();
+        let cluster = Cluster::uniform(2);
+        let base = Plan::fair();
+
+        let mut b = MXDag::builder();
+        b.compute("collider", 0, 4.0);
+        let colliding = b.finalize().unwrap();
+        let mut b = MXDag::builder();
+        b.compute("neighbour", 1, 4.0);
+        let disjoint = b.finalize().unwrap();
+
+        let hypos = vec![
+            Hypothetical::Admit { job: Box::new(colliding) },
+            Hypothetical::Admit { job: Box::new(disjoint) },
+        ];
+        let ex = explore(&g, &cluster, &base, &hypos, 1).unwrap();
+        assert!((ex.baseline - 4.0).abs() < 1e-9);
+        assert_eq!(ex.results[0].label, "admit(+1 tasks)");
+        // fair sharing on host 0's core: the incumbent drops to half rate
+        assert!(
+            (ex.results[0].delta().unwrap() - 4.0).abs() < 1e-9,
+            "colliding admit doubles the incumbent JCT: {:?}",
+            ex.results[0]
+        );
+        // the disjoint arrival never contends with the incumbent
+        assert!(
+            ex.results[1].delta().unwrap().abs() < 1e-9,
+            "disjoint admit is free for incumbents: {:?}",
+            ex.results[1]
+        );
     }
 
     #[test]

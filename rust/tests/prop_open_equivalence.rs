@@ -1,0 +1,460 @@
+//! Equivalence oracle for the open-system streaming driver
+//! (`sim/openloop.rs`). The driver chains closed engine runs era by
+//! era, so its correctness contract is stated *against* the closed
+//! engine:
+//!
+//! * **closed-mode identity** — every arrival at `t = 0` with an
+//!   infinite watermark collapses to exactly one era over the
+//!   [`concat_jobs`] concatenation. The open run and the closed run of
+//!   that DAG are the *same computation* (same DAG bits, same config),
+//!   so events, makespan and per-task traces must agree bitwise on
+//!   every corner of the {queue} × {alloc} × {horizon} matrix ×
+//!   threads ∈ {1, 2, 4} × recovery ∈ {failfast, retry}, anchored
+//!   corners included (the 1e-6 tolerance pairing is a *cross*-corner
+//!   contract; open-vs-closed on one corner is identity).
+//! * **solo-stream identity** — jobs spaced so wide that the live set
+//!   never holds two jobs must each reproduce their solo closed run
+//!   shifted by their arrival instant, bitwise per task.
+//! * **thread determinism under load** — a contended stream with a
+//!   finite watermark and deferral window must produce the identical
+//!   admitted/rejected set, admission instants, outcomes and JCTs for
+//!   every thread count, per corner.
+//! * **bounded memory** — streaming 10× more jobs through a reused
+//!   [`SimScratch`] must not grow its footprint once the live-set
+//!   high-water mark is reached (the epoch GC satellite).
+//! * **shedding accounting** — rejected jobs never enter the engine:
+//!   distinct [`JobOutcome::Rejected`], empty traces, and zero
+//!   `lost_work` contribution.
+
+use mxdag::sim::{
+    concat_jobs, expand, poisson_arrivals, run_open, run_open_in, simulate, AllocKind, Cluster,
+    DynAction, DynTimeline, HorizonKind, JobOutcome, OpenConfig, OpenJob, QueueKind,
+    RecoveryPolicy, SimConfig, SimDag, SimKind, SimScratch, SimTask,
+};
+use mxdag::util::propcheck::{check, Config};
+use mxdag::util::rng::Rng;
+use mxdag::workloads::{random_dag, RandomParams};
+
+const MATRIX: [(QueueKind, AllocKind, HorizonKind); 8] = [
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Eager),
+    (QueueKind::FullResort, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::WholeSet, HorizonKind::Anchored),
+    (QueueKind::FullResort, AllocKind::Components, HorizonKind::Anchored),
+    (QueueKind::Incremental, AllocKind::Components, HorizonKind::Anchored),
+];
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// A stream of 2–4 random job DAGs on a shared host pool.
+#[derive(Debug)]
+struct StreamCase {
+    dags: Vec<SimDag>,
+    hosts: usize,
+    seed: u64,
+}
+
+fn gen_stream(rng: &mut Rng) -> StreamCase {
+    let hosts = rng.range(2, 6);
+    let n_jobs = rng.range(2, 5);
+    let seed = rng.next_u64();
+    let dags = (0..n_jobs)
+        .map(|j| {
+            let p = RandomParams {
+                layers: rng.range(2, 4),
+                width: rng.range(2, 4),
+                hosts,
+                edge_p: rng.range_f64(0.2, 0.9),
+                pipe_frac: 0.0,
+                min_size: 0.1,
+                max_size: 3.0,
+                seed: seed.wrapping_add(j as u64),
+            };
+            expand(&random_dag(&p), &Default::default())
+        })
+        .collect();
+    StreamCase { dags, hosts, seed }
+}
+
+fn cfg_of(
+    (queue, alloc, horizon): (QueueKind, AllocKind, HorizonKind),
+    threads: usize,
+    timeline: &DynTimeline,
+    recovery: RecoveryPolicy,
+) -> SimConfig {
+    SimConfig {
+        queue,
+        alloc,
+        horizon,
+        threads,
+        dynamics: timeline.clone(),
+        recovery,
+        ..Default::default()
+    }
+}
+
+/// Closed-mode identity: open-at-t0 with an infinite watermark is the
+/// closed run of the concatenation, bit for bit, on every matrix
+/// corner × thread count × recovery policy — with a recoverable
+/// crash/restore cycle folded in under `Retry` so the kill/backoff
+/// machinery crosses the era build too.
+#[test]
+fn prop_open_at_t0_is_bitwise_closed() {
+    check(
+        "open-closed-identity",
+        &Config { cases: 6, ..Default::default() },
+        gen_stream,
+        |case| {
+            let cluster = Cluster::uniform(case.hosts);
+            let jobs: Vec<OpenJob> = case
+                .dags
+                .iter()
+                .map(|d| OpenJob { at: 0.0, dag: d.clone(), deadline: None })
+                .collect();
+            let concat = concat_jobs(&jobs);
+            let victim = (case.seed % case.hosts as u64) as usize;
+            let cycle = DynTimeline::new()
+                .with(0.7731, DynAction::FailHost { host: victim })
+                .with(1.3371, DynAction::RestoreHost { host: victim });
+            let regimes: [(&str, DynTimeline, RecoveryPolicy); 2] = [
+                ("failfast", DynTimeline::new(), RecoveryPolicy::FailFast),
+                ("retry", cycle, RecoveryPolicy::Retry { max_attempts: 5, backoff: 0.25 }),
+            ];
+            for (rname, timeline, recovery) in regimes.iter() {
+                for &corner in MATRIX.iter() {
+                    for &threads in THREADS.iter() {
+                        let cfg = cfg_of(corner, threads, timeline, *recovery);
+                        let tag = format!("{corner:?} t{threads} {rname}");
+                        let closed = simulate(&concat, &cluster, &cfg)
+                            .map_err(|e| format!("{tag}: closed {e}"))?;
+                        let open = run_open(
+                            &jobs,
+                            &cluster,
+                            &OpenConfig { engine: cfg, ..OpenConfig::default() },
+                        )
+                        .map_err(|e| format!("{tag}: open {e}"))?;
+                        if open.eras != 1 {
+                            return Err(format!("{tag}: {} eras, expected 1", open.eras));
+                        }
+                        if open.admitted != jobs.len() || open.rejected != 0 {
+                            return Err(format!(
+                                "{tag}: admitted {}/{} rejected {}",
+                                open.admitted,
+                                jobs.len(),
+                                open.rejected
+                            ));
+                        }
+                        if closed.events != open.events {
+                            return Err(format!(
+                                "{tag}: events {} vs {}",
+                                closed.events, open.events
+                            ));
+                        }
+                        if closed.retries != open.retries {
+                            return Err(format!(
+                                "{tag}: retries {} vs {}",
+                                closed.retries, open.retries
+                            ));
+                        }
+                        if closed.lost_work.to_bits() != open.lost_work.to_bits() {
+                            return Err(format!(
+                                "{tag}: lost_work {} vs {}",
+                                closed.lost_work, open.lost_work
+                            ));
+                        }
+                        if closed.makespan.to_bits() != open.makespan.to_bits() {
+                            return Err(format!(
+                                "{tag}: makespan {} vs {}",
+                                closed.makespan, open.makespan
+                            ));
+                        }
+                        let mut base = 0usize;
+                        for (j, jr) in open.jobs.iter().enumerate() {
+                            if jr.admitted_at != Some(0.0) {
+                                return Err(format!("{tag}: job {j} not admitted at 0"));
+                            }
+                            for (k, t) in jr.trace.iter().enumerate() {
+                                let c = &closed.trace[base + k];
+                                let same_bits = |x: f64, y: f64| {
+                                    x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan())
+                                };
+                                if !same_bits(c.start, t.start) || !same_bits(c.finish, t.finish)
+                                {
+                                    return Err(format!(
+                                        "{tag}: job {j} task {k}: {:?}..{:?} vs {:?}..{:?}",
+                                        c.start, c.finish, t.start, t.finish
+                                    ));
+                                }
+                            }
+                            base += jr.trace.len();
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Solo-stream identity: arrivals spaced past each job's solo
+/// makespan never contend, so each job's absolute trace is its solo
+/// closed trace shifted by its arrival — bitwise, since the era run is
+/// the identical computation and the absolute rebase performs the same
+/// `arrival + t` addition the test does.
+#[test]
+fn prop_spaced_stream_matches_solo_runs() {
+    check(
+        "open-solo-stream",
+        &Config { cases: 6, ..Default::default() },
+        gen_stream,
+        |case| {
+            let cluster = Cluster::uniform(case.hosts);
+            let fast = SimConfig {
+                queue: QueueKind::Incremental,
+                alloc: AllocKind::Components,
+                ..Default::default()
+            };
+            let solos: Vec<_> = case
+                .dags
+                .iter()
+                .map(|d| simulate(d, &cluster, &fast))
+                .collect::<Result<_, _>>()
+                .map_err(|e| format!("solo: {e}"))?;
+            // arrivals: each job lands strictly after its predecessor
+            // fully drained
+            let mut jobs = Vec::new();
+            let mut at = 0.0f64;
+            for (d, solo) in case.dags.iter().zip(solos.iter()) {
+                jobs.push(OpenJob { at, dag: d.clone(), deadline: None });
+                at += solo.makespan * 1.5 + 1.0;
+            }
+            let open = run_open(
+                &jobs,
+                &cluster,
+                &OpenConfig { engine: fast.clone(), ..OpenConfig::default() },
+            )
+            .map_err(|e| format!("open: {e}"))?;
+            if open.completed != jobs.len() {
+                return Err(format!("completed {}/{}", open.completed, jobs.len()));
+            }
+            for (j, (jr, solo)) in open.jobs.iter().zip(solos.iter()).enumerate() {
+                let at = jobs[j].at;
+                for (k, (t, s)) in jr.trace.iter().zip(solo.trace.iter()).enumerate() {
+                    if t.start.to_bits() != (at + s.start).to_bits()
+                        || t.finish.to_bits() != (at + s.finish).to_bits()
+                    {
+                        return Err(format!(
+                            "job {j} task {k}: {:?}..{:?} vs shifted solo {:?}..{:?}",
+                            t.start,
+                            t.finish,
+                            at + s.start,
+                            at + s.finish
+                        ));
+                    }
+                }
+                let jct = jr.jct.ok_or_else(|| format!("job {j} has no jct"))?;
+                if (jct - solo.makespan).abs() > 1e-9 {
+                    return Err(format!("job {j} jct {jct} vs solo {}", solo.makespan));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Thread determinism under load: a contended Poisson stream with a
+/// finite watermark and a deferral window must reproduce the identical
+/// admitted/rejected set, admission instants, per-job outcomes and
+/// JCTs at every thread count, on every corner — thread count shards
+/// the refill, never the semantics.
+#[test]
+fn prop_contended_stream_is_thread_deterministic() {
+    check(
+        "open-thread-determinism",
+        &Config { cases: 4, ..Default::default() },
+        gen_stream,
+        |case| {
+            let cluster = Cluster::uniform(case.hosts);
+            let fast = SimConfig {
+                queue: QueueKind::Incremental,
+                alloc: AllocKind::Components,
+                ..Default::default()
+            };
+            let solo = simulate(&case.dags[0], &cluster, &fast)
+                .map_err(|e| format!("solo: {e}"))?
+                .makespan;
+            // arrivals dense enough to overlap; watermark low enough
+            // that shedding is plausible but solo jobs still pass
+            let arrivals = poisson_arrivals(case.seed, 2.0 / solo.max(1e-3), case.dags.len());
+            let jobs: Vec<OpenJob> = case
+                .dags
+                .iter()
+                .zip(arrivals.iter())
+                .map(|(d, &at)| OpenJob { at, dag: d.clone(), deadline: Some(solo * 4.0) })
+                .collect();
+            for &corner in MATRIX.iter() {
+                let run_at = |threads: usize| {
+                    run_open(
+                        &jobs,
+                        &cluster,
+                        &OpenConfig {
+                            watermark: solo * 1.5,
+                            defer_max: solo * 0.5,
+                            engine: cfg_of(
+                                corner,
+                                threads,
+                                &DynTimeline::new(),
+                                RecoveryPolicy::FailFast,
+                            ),
+                        },
+                    )
+                };
+                let base = run_at(1).map_err(|e| format!("{corner:?} t1: {e}"))?;
+                for &threads in THREADS[1..].iter() {
+                    let r = run_at(threads).map_err(|e| format!("{corner:?} t{threads}: {e}"))?;
+                    let tag = format!("{corner:?} t{threads}");
+                    if base.admitted != r.admitted
+                        || base.rejected != r.rejected
+                        || base.eras != r.eras
+                        || base.events != r.events
+                        || base.makespan.to_bits() != r.makespan.to_bits()
+                    {
+                        return Err(format!(
+                            "{tag}: counters diverged ({}/{}/{} vs {}/{}/{})",
+                            base.admitted, base.rejected, base.eras, r.admitted, r.rejected,
+                            r.eras
+                        ));
+                    }
+                    for (j, (a, b)) in base.jobs.iter().zip(r.jobs.iter()).enumerate() {
+                        if a.admitted_at.map(f64::to_bits) != b.admitted_at.map(f64::to_bits) {
+                            return Err(format!("{tag}: job {j} admission instant"));
+                        }
+                        if a.jct.map(f64::to_bits) != b.jct.map(f64::to_bits) {
+                            return Err(format!("{tag}: job {j} jct"));
+                        }
+                        if std::mem::discriminant(&a.outcome)
+                            != std::mem::discriminant(&b.outcome)
+                        {
+                            return Err(format!(
+                                "{tag}: job {j} outcome {:?} vs {:?}",
+                                a.outcome, b.outcome
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One compute task of `size` on `host`.
+fn one_task_job(at: f64, host: usize, size: f64) -> OpenJob {
+    let mut d = SimDag::default();
+    d.push(SimTask {
+        orig: 0,
+        chunk: (0, 1),
+        kind: SimKind::Compute { host },
+        size,
+        priority: 0,
+        gate: 0.0,
+        coflow: None,
+    });
+    OpenJob { at, dag: d, deadline: None }
+}
+
+/// The bounded-memory satellite: after the scratch has seen a 1k-job
+/// stream, pushing a 10k-job stream through the *same* scratch must
+/// not grow its footprint — per-era state is sized by the live set
+/// (which this stream caps at a handful of jobs), not by the stream
+/// length. The arena, `CompSet` and `FinHeap` capacities all feed
+/// `SimScratch::footprint()`.
+#[test]
+fn scratch_footprint_plateaus_over_ten_thousand_jobs() {
+    let cluster = Cluster::uniform(4);
+    let mk_stream = |n: usize| -> Vec<OpenJob> {
+        (0..n).map(|i| one_task_job(i as f64 * 0.5, i % 4, 1.0)).collect()
+    };
+    let cfg = OpenConfig::default();
+    let mut scratch = SimScratch::default();
+
+    let warm = run_open_in(&mk_stream(1_000), &cluster, &cfg, &mut scratch).unwrap();
+    assert_eq!(warm.completed, 1_000, "warm stream completes");
+    let high_water = scratch.footprint();
+    assert!(high_water > 0, "footprint must be measurable");
+
+    let long = run_open_in(&mk_stream(10_000), &cluster, &cfg, &mut scratch).unwrap();
+    assert_eq!(long.completed, 10_000, "long stream completes");
+    assert_eq!(
+        scratch.footprint(),
+        high_water,
+        "10x the stream must not grow the scratch: the live set, not the \
+         stream, sizes the memory"
+    );
+}
+
+/// The shedding satellite: rejected jobs never enter the engine. A
+/// two-job burst over a watermark that only fits one must shed the
+/// second with the distinct `Rejected` outcome, an empty trace, no
+/// admission instant — and `lost_work` stays exactly zero (shedding
+/// is not a crash; nothing was started, nothing was destroyed).
+#[test]
+fn rejected_jobs_are_excluded_from_lost_work_and_traces() {
+    let cluster = Cluster::uniform(1);
+    let jobs = vec![one_task_job(0.0, 0, 4.0), one_task_job(1.0, 0, 4.0)];
+    let r = run_open(
+        &jobs,
+        &cluster,
+        &OpenConfig { watermark: 5.0, defer_max: 0.0, ..OpenConfig::default() },
+    )
+    .unwrap();
+    assert_eq!((r.admitted, r.rejected, r.completed), (1, 1, 1));
+    assert_eq!(r.lost_work, 0.0, "shedding must not count as destroyed work");
+    match r.jobs[1].outcome {
+        JobOutcome::Rejected { at } => assert_eq!(at, 1.0, "shed at its arrival instant"),
+        ref other => panic!("expected Rejected, got {other:?}"),
+    }
+    assert!(r.jobs[1].trace.is_empty(), "shed jobs have no trace");
+    assert_eq!(r.jobs[1].admitted_at, None);
+    assert_eq!(r.jobs[1].jct, None);
+    // the admitted job is untouched by the shed one
+    assert_eq!(r.jobs[0].jct, Some(4.0));
+}
+
+/// The dynamics-vs-GC satellite regression: a restore landing *after*
+/// every job that experienced the degradation has departed must still
+/// lift the factor for later arrivals — link factor state lives on the
+/// timeline fold, not on any job the GC reclaimed. (The same scenario
+/// is unit-tested inside `sim/openloop.rs`; this copy pins it at the
+/// integration surface with a second, disjoint-host stream.)
+#[test]
+fn restore_after_departure_still_lifts_the_cap() {
+    let cluster = Cluster::uniform(3);
+    let mut cfg = OpenConfig::default();
+    cfg.engine.dynamics = DynTimeline::new()
+        .with(0.5, DynAction::SlowHost { host: 0, factor: 0.5 })
+        // by t = 6 the only job that ever saw the slowdown is long gone
+        .with(6.0, DynAction::RestoreHost { host: 0 });
+    let jobs = vec![
+        // runs [0, 0.5) at full rate, then at 0.5x: finishes at 3.5
+        one_task_job(0.0, 0, 2.0),
+        // never touches host 0 and finishes at 5.0 — so no live job
+        // witnesses the t = 6 restore when it fires
+        one_task_job(4.0, 1, 1.0),
+        // admitted after the restore: must see host 0 at full rate
+        one_task_job(10.0, 0, 2.0),
+    ];
+    let r = run_open(&jobs, &cluster, &cfg).unwrap();
+    assert_eq!(r.completed, 3);
+    let jct = |i: usize| r.jobs[i].jct.unwrap();
+    assert!((jct(0) - 3.5).abs() < 1e-9, "job 0 pays the slowdown: {}", jct(0));
+    assert!((jct(1) - 1.0).abs() < 1e-9, "job 1 is on another host: {}", jct(1));
+    assert!(
+        (jct(2) - 2.0).abs() < 1e-9,
+        "job 2 must see the restored host even though the restore fired in an \
+         idle gap after job 0 departed: {}",
+        jct(2)
+    );
+}
