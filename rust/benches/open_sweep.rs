@@ -247,12 +247,12 @@ fn open_sweep() -> Json {
         let arrivals = poisson_arrivals(0xD1CE, 2.0 / solo, n_jobs);
         let jobs_t0: Vec<OpenJob> = dags
             .iter()
-            .map(|d| OpenJob { at: 0.0, dag: d.clone(), deadline: None })
+            .map(|d| OpenJob { at: 0.0, dag: d.clone(), deadline: None, weight: 1 })
             .collect();
         let stream_jobs: Vec<OpenJob> = dags
             .iter()
             .zip(arrivals.iter())
-            .map(|(d, &at)| OpenJob { at, dag: d.clone(), deadline: Some(solo * 4.0) })
+            .map(|(d, &at)| OpenJob { at, dag: d.clone(), deadline: Some(solo * 4.0), weight: 1 })
             .collect();
         let watermark = solo * 1.5;
         let defer_max = solo * 0.5;

@@ -33,13 +33,20 @@ impl Metrics {
     }
 
     pub fn observe(&self, name: &str, d: Duration) {
+        self.observe_secs(name, d.as_secs_f64());
+    }
+
+    /// Record a timing already expressed in seconds. The serve path's
+    /// job-completion times run on the *simulation* clock, not wall
+    /// time, so there is no `Duration` to hand over.
+    pub fn observe_secs(&self, name: &str, secs: f64) {
         self.inner
             .lock()
             .unwrap()
             .timings
             .entry(name.to_string())
             .or_default()
-            .push(d.as_secs_f64());
+            .push(secs);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -114,6 +121,16 @@ mod tests {
         assert_eq!(n, 5);
         assert!(mean > 0.0 && p50 <= p99);
         assert!(m.summary("none").is_none());
+    }
+
+    #[test]
+    fn observe_secs_feeds_the_same_series() {
+        let m = Metrics::new();
+        m.observe("t", Duration::from_millis(10));
+        m.observe_secs("t", 0.5);
+        let (n, _, _, p99) = m.summary("t").unwrap();
+        assert_eq!(n, 2);
+        assert!((p99 - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -14,6 +14,8 @@
 //! * [`whatif`], [`monitor`] — §4.3 usages;
 //! * [`runtime`], [`coordinator`] — the real execution path: PJRT-CPU
 //!   executes AOT-compiled JAX/Pallas artifacts under MXDAG scheduling;
+//! * [`serve`] — crash-safe service mode: a WAL-backed long-lived
+//!   multi-tenant coordinator over the open-system driver;
 //! * [`util`] — substrates built in-repo (JSON, RNG, CLI, bench, propcheck).
 
 pub mod coordinator;
@@ -21,6 +23,7 @@ pub mod monitor;
 pub mod mxdag;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod whatif;

@@ -6,6 +6,7 @@
 //!   whatif    — pipeline what-if analysis on a scenario DAG
 //!   monitor   — straggler-detection demo (host vs network)
 //!   simulate  — schedule+simulate a DAG from a JSON file
+//!   serve     — crash-safe long-lived coordinator (HTTP + WAL resume)
 //!   info      — artifact/platform info
 
 use std::path::Path;
@@ -33,6 +34,7 @@ fn main() {
         Some("whatif") => cmd_whatif(&args),
         Some("monitor") => cmd_monitor(),
         Some("simulate") => cmd_simulate(&args),
+        Some("serve") => mxdag::serve::run(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -94,6 +96,25 @@ fn print_usage() {
                      --watermark/--defer-max override the file; the JSON\n\
                      outcome line then carries admitted/rejected/completed\n\
                      counters, JCT p50/p99 and the deadline hit rate)\n\
+           serve --dir DIR | --resume DIR [--check]\n\
+                 [--host H] [--port P] [--addr-file FILE]\n\
+                 [--hosts N | --cluster FILE.json] [--scheduler NAME]\n\
+                 [--watermark X] [--defer-max X] [--weights a=3,b=1]\n\
+                 [--queue ...] [--alloc ...] [--horizon ...] [--threads N]\n\
+                 [--recovery ...] [--workers N] [--queue-cap N]\n\
+                 [--max-body BYTES] [--read-timeout-ms MS] [--time-scale X]\n\
+                 [--tick-ms MS] [--snap-every N]\n\
+                 (long-lived coordinator: POST /jobs submits an OpenSpec-\n\
+                  compatible {{\"dag\", \"scheduler\", \"deadline\", \"tenant\"}}\n\
+                  JSON, GET /jobs/N polls it, GET /healthz and /metrics\n\
+                  serve liveness + counters; every accepted submission and\n\
+                  clock advance is write-ahead-logged under DIR and\n\
+                  --resume DIR replays the log into bitwise-identical\n\
+                  state (--check prints the recovered report and exits);\n\
+                  SIGTERM drains gracefully: stop admitting, finish live\n\
+                  eras, flush the WAL, exit 0; exit codes 0 = clean\n\
+                  drain, 1 = config error, 2 = deadlock, 3 = event-limit\n\
+                  — the same simulation codes as `simulate`)\n\
            info [--artifacts DIR]        platform + artifact inventory"
     );
 }
@@ -514,22 +535,26 @@ fn cmd_simulate(args: &Args) -> i32 {
             // 3 = event limit (the run never converged) — distinct from
             // 1, which is reserved for config/input errors above
             eprintln!("simulation failed: {e}");
-            let (kind, code) = match &e {
-                SimError::Deadlock { .. } => ("deadlock", 2),
-                SimError::EventLimit(_) => ("event_limit", 3),
-            };
-            println!(
-                "{}",
-                Json::obj(vec![
-                    ("status", Json::Str("error".into())),
-                    ("kind", Json::Str(kind.into())),
-                    ("error", Json::Str(e.to_string())),
-                    ("jobs", Json::Arr(Vec::new())),
-                ])
-            );
-            code
+            sim_error_report(&e)
         }
     }
+}
+
+/// Print the structured error line for a failed simulation and return
+/// the failure-class exit code ([`SimError::exit_code`]: 2 = deadlock,
+/// 3 = event-limit) — shared by the closed and open `simulate` paths
+/// so the documented kind/code mapping cannot drift between them.
+fn sim_error_report(e: &SimError) -> i32 {
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("status", Json::Str("error".into())),
+            ("kind", Json::Str(e.kind_str().into())),
+            ("error", Json::Str(e.to_string())),
+            ("jobs", Json::Arr(Vec::new())),
+        ])
+    );
+    e.exit_code()
 }
 
 /// The `simulate --open` tail: stream `spec`-driven arrivals of the
@@ -619,20 +644,7 @@ fn simulate_open(
         }
         Err(e) => {
             eprintln!("open-loop simulation failed: {e}");
-            let (kind, code) = match &e {
-                SimError::Deadlock { .. } => ("deadlock", 2),
-                SimError::EventLimit(_) => ("event_limit", 3),
-            };
-            println!(
-                "{}",
-                Json::obj(vec![
-                    ("status", Json::Str("error".into())),
-                    ("kind", Json::Str(kind.into())),
-                    ("error", Json::Str(e.to_string())),
-                    ("jobs", Json::Arr(Vec::new())),
-                ])
-            );
-            code
+            sim_error_report(&e)
         }
     }
 }

@@ -176,8 +176,14 @@ impl MXDag {
             .map_err(|e| GraphError::Invalid(e.to_string()))?;
         for e in &edges {
             let pair = e.as_arr().map_err(|e| GraphError::Invalid(e.to_string()))?;
-            let u = pair[0].as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
-            let v = pair[1].as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let [u, v] = pair else {
+                return Err(GraphError::Invalid(format!(
+                    "edge must be a [from, to] pair, got {} elements",
+                    pair.len()
+                )));
+            };
+            let u = u.as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
+            let v = v.as_usize().map_err(|e| GraphError::Invalid(e.to_string()))?;
             if let (Some(Some(u)), Some(Some(v))) = (id_map.get(&u), id_map.get(&v)) {
                 b.dep(*u, *v);
             }
@@ -395,6 +401,19 @@ mod tests {
     fn hosts_collected() {
         let g = diamond();
         assert_eq!(g.hosts(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_edges_without_panicking() {
+        let g = diamond();
+        let Json::Obj(mut m) = g.to_json() else { unreachable!() };
+        m.insert("edges".into(), Json::Arr(vec![Json::Arr(vec![])]));
+        assert!(MXDag::from_json(&Json::Obj(m.clone())).is_err());
+        m.insert(
+            "edges".into(),
+            Json::Arr(vec![Json::Arr(vec![Json::Num(0.0)])]),
+        );
+        assert!(MXDag::from_json(&Json::Obj(m)).is_err());
     }
 
     #[test]

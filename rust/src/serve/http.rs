@@ -1,0 +1,537 @@
+//! Minimal HTTP/1.1 substrate for `mxdag serve` (no HTTP crate in this
+//! image). Deliberately a *subset*: every connection is
+//! `Connection: close`, request bodies require `Content-Length`
+//! (chunked transfer encoding is answered with `501`), and hard caps
+//! bound every read — header bytes (`431`), body bytes (`413`) and
+//! wall time per read (`408` via socket timeouts set by the caller).
+//! The parser never panics on hostile input: every malformed shape maps
+//! to a typed [`HttpError`] carrying the status code the caller should
+//! answer with.
+//!
+//! The listener side lives in `serve/server.rs`; this module only knows
+//! how to read one [`Request`] from a stream, write one [`Response`],
+//! and fan accepted connections across a bounded worker [`Pool`]
+//! (queue full ⇒ the caller answers `503` instead of accepting
+//! unbounded memory).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::util::json::Json;
+
+/// Read-side limits. The socket timeouts themselves are set by the
+/// accept loop (`TcpStream::set_read_timeout`); this struct carries the
+/// byte caps the parser enforces.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Max bytes of request line + headers (before the blank line).
+    pub max_head: usize,
+    /// Max bytes of request body (`Content-Length` above this ⇒ 413).
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_head: 8 * 1024, max_body: 1024 * 1024 }
+    }
+}
+
+/// One parsed request. Header names are lowercased; values are
+/// trimmed. The target is split at the first `?` into `path` and
+/// `query`.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read. [`HttpError::status`] maps each
+/// variant to the response code; `Closed`/`Io` mean the peer is gone
+/// and no response can be written.
+#[derive(Debug)]
+pub enum HttpError {
+    /// A socket read timed out (slow-loris) ⇒ 408.
+    Timeout,
+    /// `Content-Length` exceeds the body cap ⇒ 413.
+    TooLarge,
+    /// Request line + headers exceed the head cap ⇒ 431.
+    HeadTooLarge,
+    /// Syntactically invalid request ⇒ 400.
+    Malformed(String),
+    /// A body-bearing method without `Content-Length` ⇒ 411.
+    LengthRequired,
+    /// A feature this subset does not speak (chunked bodies) ⇒ 501.
+    Unsupported(String),
+    /// Peer closed before a full request arrived; nothing to answer.
+    Closed,
+    /// Transport error mid-read; nothing to answer.
+    Io(String),
+}
+
+impl HttpError {
+    /// Response status for this error, `None` when the peer is gone.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Timeout => Some(408),
+            HttpError::TooLarge => Some(413),
+            HttpError::HeadTooLarge => Some(431),
+            HttpError::Malformed(_) => Some(400),
+            HttpError::LengthRequired => Some(411),
+            HttpError::Unsupported(_) => Some(501),
+            HttpError::Closed | HttpError::Io(_) => None,
+        }
+    }
+
+    pub fn reason(&self) -> String {
+        match self {
+            HttpError::Timeout => "read timed out".into(),
+            HttpError::TooLarge => "request body too large".into(),
+            HttpError::HeadTooLarge => "request header too large".into(),
+            HttpError::Malformed(m) => format!("malformed request: {m}"),
+            HttpError::LengthRequired => "Content-Length required".into(),
+            HttpError::Unsupported(m) => format!("unsupported: {m}"),
+            HttpError::Closed => "peer closed".into(),
+            HttpError::Io(m) => format!("io: {m}"),
+        }
+    }
+}
+
+fn io_err(e: io::Error) -> HttpError {
+    match e.kind() {
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => HttpError::Timeout,
+        io::ErrorKind::UnexpectedEof
+        | io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::BrokenPipe => HttpError::Closed,
+        _ => HttpError::Io(e.to_string()),
+    }
+}
+
+/// Read one request from `stream`. The caller must have set read/write
+/// timeouts on the stream; a timeout surfaces as [`HttpError::Timeout`].
+/// Answers `Expect: 100-continue` inline (curl sends it for bodies over
+/// ~1 KiB) so clients do not stall waiting for the interim response.
+pub fn read_request(stream: &mut TcpStream, limits: &Limits) -> Result<Request, HttpError> {
+    // --- head: read until the blank line, capped at max_head ---
+    let mut head: Vec<u8> = Vec::with_capacity(512);
+    let mut rest: Vec<u8> = Vec::new(); // body bytes read past the head
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_blank_line(&head) {
+            break pos;
+        }
+        if head.len() >= limits.max_head {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let n = stream.read(&mut chunk).map_err(io_err)?;
+        if n == 0 {
+            return if head.is_empty() {
+                Err(HttpError::Closed)
+            } else {
+                Err(HttpError::Malformed("eof inside request head".into()))
+            };
+        }
+        head.extend_from_slice(&chunk[..n]);
+    };
+    // bytes after the blank line belong to the body
+    rest.extend_from_slice(&head[head_end + 4..]);
+    head.truncate(head_end);
+    if head.len() > limits.max_head {
+        return Err(HttpError::HeadTooLarge);
+    }
+
+    let head_str = std::str::from_utf8(&head)
+        .map_err(|_| HttpError::Malformed("non-UTF-8 request head".into()))?;
+    let mut lines = head_str.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::Malformed("empty request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("missing request target".into()))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("missing HTTP version".into()))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("bad version `{version}`")));
+    }
+    if !target.starts_with('/') {
+        return Err(HttpError::Malformed(format!("bad target `{target}`")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header line `{line}`")))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let mut req = Request { method, path, query, headers, body: Vec::new() };
+
+    // --- body ---
+    if let Some(te) = req.header("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::Unsupported(format!("transfer-encoding: {te}")));
+        }
+    }
+    let wants_body = matches!(req.method.as_str(), "POST" | "PUT" | "PATCH");
+    let len = match req.header("content-length") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed(format!("bad Content-Length `{v}`")))?,
+        None if wants_body => return Err(HttpError::LengthRequired),
+        None => 0,
+    };
+    if len > limits.max_body {
+        return Err(HttpError::TooLarge);
+    }
+    if len > 0 {
+        if req
+            .header("expect")
+            .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+            && rest.is_empty()
+        {
+            stream
+                .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .map_err(io_err)?;
+        }
+        let mut body = rest;
+        body.truncate(len.min(body.len()));
+        while body.len() < len {
+            let want = (len - body.len()).min(chunk.len());
+            let n = stream.read(&mut chunk[..want]).map_err(io_err)?;
+            if n == 0 {
+                return Err(HttpError::Malformed("eof inside request body".into()));
+            }
+            body.extend_from_slice(&chunk[..n]);
+        }
+        req.body = body;
+    }
+    Ok(req)
+}
+
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// One response, always `Connection: close`.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers, e.g. `("Retry-After", "3")`.
+    pub extra: Vec<(String, String)>,
+}
+
+impl Response {
+    pub fn json(status: u16, j: Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: j.to_string().into_bytes(),
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.as_bytes().to_vec(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// A JSON error envelope: `{"error": reason}`.
+    pub fn error(status: u16, reason: &str) -> Response {
+        Response::json(status, Json::obj(vec![("error", Json::Str(reason.into()))]))
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.extra.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn write(&self, stream: &mut TcpStream) -> io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+            self.status,
+            status_reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        for (k, v) in &self.extra {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Bounded worker pool for accepted connections. `submit` refuses when
+/// the queue is at capacity (the accept loop then answers `503` and
+/// drops the connection) — backpressure instead of unbounded memory.
+/// `close` drains the queue, lets in-flight handlers finish, and joins
+/// every worker — the graceful-drain half of SIGTERM handling.
+pub struct Pool {
+    inner: Arc<PoolInner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+struct PoolInner {
+    q: Mutex<PoolQueue>,
+    cv: Condvar,
+    cap: usize,
+}
+
+struct PoolQueue {
+    items: VecDeque<TcpStream>,
+    closed: bool,
+}
+
+impl Pool {
+    pub fn new<F>(workers: usize, cap: usize, handler: F) -> Pool
+    where
+        F: Fn(TcpStream) + Send + Sync + 'static,
+    {
+        let inner = Arc::new(PoolInner {
+            q: Mutex::new(PoolQueue { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        });
+        let handler = Arc::new(handler);
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                let handler = Arc::clone(&handler);
+                std::thread::spawn(move || loop {
+                    let next = {
+                        let mut q = inner.q.lock().unwrap();
+                        loop {
+                            if let Some(s) = q.items.pop_front() {
+                                break Some(s);
+                            }
+                            if q.closed {
+                                break None;
+                            }
+                            q = inner.cv.wait(q).unwrap();
+                        }
+                    };
+                    match next {
+                        Some(stream) => handler(stream),
+                        None => return,
+                    }
+                })
+            })
+            .collect();
+        Pool { inner, workers }
+    }
+
+    /// Hand a connection to the pool; `Err` gives the stream back when
+    /// the queue is full or the pool is closed (caller answers 503).
+    pub fn submit(&self, stream: TcpStream) -> Result<(), TcpStream> {
+        let mut q = self.inner.q.lock().unwrap();
+        if q.closed || q.items.len() >= self.inner.cap {
+            return Err(stream);
+        }
+        q.items.push_back(stream);
+        self.inner.cv.notify_one();
+        Ok(())
+    }
+
+    /// Queue depth right now (for /healthz reporting).
+    pub fn depth(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    /// Stop accepting, finish queued + in-flight work, join workers.
+    pub fn close(mut self) {
+        self.inner.q.lock().unwrap().closed = true;
+        self.inner.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    /// Write `raw` into a socket pair and parse it off the other end.
+    fn roundtrip(raw: &[u8], limits: &Limits) -> Result<Request, HttpError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        server
+            .set_read_timeout(Some(Duration::from_millis(500)))
+            .unwrap();
+        client.write_all(raw).unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        read_request(&mut server, limits)
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let raw = b"POST /jobs?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 5\r\n\r\nhello";
+        let r = roundtrip(raw, &Limits::default()).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/jobs");
+        assert_eq!(r.query.as_deref(), Some("x=1"));
+        assert_eq!(r.header("host"), Some("h"));
+        assert_eq!(r.body, b"hello");
+    }
+
+    #[test]
+    fn get_without_length_is_fine() {
+        let raw = b"GET /healthz HTTP/1.1\r\nHost: h\r\n\r\n";
+        let r = roundtrip(raw, &Limits::default()).unwrap();
+        assert_eq!(r.method, "GET");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn post_without_length_is_411() {
+        let raw = b"POST /jobs HTTP/1.1\r\nHost: h\r\n\r\n";
+        let e = roundtrip(raw, &Limits::default()).unwrap_err();
+        assert_eq!(e.status(), Some(411));
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let raw = b"POST /jobs HTTP/1.1\r\nContent-Length: 99\r\n\r\n";
+        let limits = Limits { max_body: 10, ..Limits::default() };
+        let e = roundtrip(raw, &limits).unwrap_err();
+        assert_eq!(e.status(), Some(413));
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend_from_slice(format!("X-Pad: {}\r\n\r\n", "a".repeat(9000)).as_bytes());
+        let e = roundtrip(&raw, &Limits::default()).unwrap_err();
+        assert_eq!(e.status(), Some(431));
+    }
+
+    #[test]
+    fn chunked_is_501_and_garbage_is_400() {
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        let e = roundtrip(raw, &Limits::default()).unwrap_err();
+        assert_eq!(e.status(), Some(501));
+        let e = roundtrip(b"nonsense\r\n\r\n", &Limits::default()).unwrap_err();
+        assert_eq!(e.status(), Some(400), "{e:?}");
+        let e = roundtrip(b"\x00\xff\xfe garbage \r\n\r\n", &Limits::default()).unwrap_err();
+        assert_eq!(e.status(), Some(400));
+    }
+
+    #[test]
+    fn slow_loris_times_out_as_408() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        server
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .unwrap();
+        // send half a request line, then stall
+        client.write_all(b"GET /slow HTT").unwrap();
+        let e = read_request(&mut server, &Limits::default()).unwrap_err();
+        assert_eq!(e.status(), Some(408));
+    }
+
+    #[test]
+    fn response_writes_status_line_and_headers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        Response::json(202, Json::obj(vec![("ok", Json::Bool(true))]))
+            .with_header("Retry-After", "3")
+            .write(&mut server)
+            .unwrap();
+        drop(server);
+        let mut got = String::new();
+        client.read_to_string(&mut got).unwrap();
+        assert!(got.starts_with("HTTP/1.1 202 Accepted\r\n"), "{got}");
+        assert!(got.contains("Retry-After: 3\r\n"));
+        assert!(got.contains("Connection: close\r\n"));
+        assert!(got.ends_with("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn pool_backpressure_and_drain() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let handled = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&handled);
+        let pool = Pool::new(2, 4, move |s| {
+            h.fetch_add(1, Ordering::SeqCst);
+            drop(s);
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut n_ok = 0;
+        let mut clients = Vec::new();
+        for _ in 0..16 {
+            clients.push(TcpStream::connect(addr).unwrap());
+            let (s, _) = listener.accept().unwrap();
+            if pool.submit(s).is_ok() {
+                n_ok += 1;
+            }
+        }
+        // cap 4 + whatever the 2 workers pulled off in time; never all 16
+        assert!(n_ok >= 4);
+        pool.close();
+        assert_eq!(handled.load(Ordering::SeqCst), n_ok);
+    }
+}

@@ -1,0 +1,34 @@
+//! `mxdag serve` — a crash-safe, long-lived multi-tenant coordinator
+//! wrapping the open-system streaming driver (`sim/openloop.rs`) in a
+//! zero-dependency HTTP service. Four layers:
+//!
+//! * [`http`] — an HTTP/1.1 subset over `std::net`: size caps
+//!   (413/431), read timeouts (408), `Content-Length`-only bodies
+//!   (411/501) and a bounded worker pool (queue full ⇒ 503).
+//! * [`wal`] — the write-ahead log + snapshot pair. Because era stops
+//!   are not bitwise-neutral, the WAL records the *exact call
+//!   sequence* (job pushes with bit-exact arrival stamps, advance
+//!   targets) and replay re-issues it, landing in bitwise-identical
+//!   engine state.
+//! * [`service`] — the coordinator: OpenSpec-compatible submissions
+//!   planned by the pinned scheduler, per-tenant deferral weights,
+//!   watermark admission (429 + Retry-After), periodic snapshot
+//!   compaction, graceful drain.
+//! * [`server`] — the process: accept loop + SIGTERM flag on the main
+//!   thread, a dedicated sim thread owning the [`service::Service`],
+//!   `/healthz` `/metrics` `/report` `/jobs` routes, exit codes
+//!   0/1/2/3 mirroring `mxdag simulate`.
+//!
+//! `docs/ARCHITECTURE.md` ("Service mode") documents the WAL record
+//! format, the drain state machine and the determinism-on-resume
+//! contract; `tests/prop_serve_resume.rs` enforces the bitwise
+//! kill/resume property and `tests/serve_http.rs` exercises the real
+//! TCP surface end to end.
+
+pub mod http;
+pub mod server;
+pub mod service;
+pub mod wal;
+
+pub use server::run;
+pub use service::{Fatal, ServeConfig, Service, SubmitError, Submitted};

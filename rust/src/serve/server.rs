@@ -1,0 +1,559 @@
+//! The `mxdag serve` process: TCP accept loop + bounded worker pool on
+//! one side, a dedicated simulation thread owning the [`Service`] on
+//! the other, joined by an mpsc command channel. Thread topology:
+//!
+//! ```text
+//! accept loop (main thread, nonblocking) ──▶ Pool workers (HTTP parse)
+//!        │ queue full ⇒ 503                      │ Cmd over mpsc
+//!        ▼                                       ▼
+//!   SIGTERM flag                     sim thread: Service (OpenLoop+WAL)
+//! ```
+//!
+//! The sim thread is the only owner of engine state — requests block on
+//! a per-request reply channel, so the engine stays single-threaded and
+//! deterministic (its own worker fan-out via `engine.threads` is
+//! internal and bit-exact). Idle gaps become clock ticks:
+//! `recv_timeout` expiring advances virtual time (wall seconds ×
+//! `--time-scale`).
+//!
+//! SIGTERM/SIGINT set an atomic flag (no signal crate in this image —
+//! a raw `signal(2)` binding). The drain sequence: stop accepting →
+//! finish in-flight HTTP work → `Service::drain` (finish live eras,
+//! flush WAL, final snapshot) → exit 0. Engine failures exit 2
+//! (deadlock) / 3 (event limit), mirroring `mxdag simulate`.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Metrics;
+use crate::sim::{AllocKind, Cluster, HorizonKind, QueueKind, RecoveryPolicy, SimConfig};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::http::{self, Limits, Pool, Request, Response};
+use super::service::{pinned_policy, ServeConfig, Service, SubmitError, Submitted};
+
+/// Set by SIGTERM/SIGINT; polled by the accept loop.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    // SIGINT = 2, SIGTERM = 15 on every unix this image targets
+    unsafe {
+        signal(2, on_term as usize);
+        signal(15, on_term as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Commands the HTTP side sends to the sim thread.
+enum Cmd {
+    Submit { body: Json, reply: Sender<Result<Submitted, SubmitError>> },
+    Status { seq: usize, reply: Sender<Option<Json>> },
+    Report { reply: Sender<Json> },
+    Drain { reply: Sender<Result<Json, String>> },
+}
+
+/// Sentinel for "sim thread still running" in the shared exit slot.
+const RUNNING: i32 = i32::MIN;
+
+/// The sim thread: sole owner of the [`Service`]. Returns the process
+/// exit code; also stores it in `exit_slot` so the accept loop notices
+/// a fatal engine error without joining.
+fn sim_loop(
+    mut svc: Service,
+    rx: Receiver<Cmd>,
+    tick: Duration,
+    time_scale: f64,
+    metrics: Arc<Metrics>,
+    exit_slot: Arc<AtomicI32>,
+) -> i32 {
+    let t0 = Instant::now();
+    let finish = |code: i32, slot: &AtomicI32| {
+        slot.store(code, Ordering::SeqCst);
+        code
+    };
+    loop {
+        match rx.recv_timeout(tick) {
+            Ok(Cmd::Submit { body, reply }) => {
+                let vnow = t0.elapsed().as_secs_f64() * time_scale;
+                let r = svc.submit(&body, vnow);
+                let fatal = match &r {
+                    Ok(s) => {
+                        metrics.incr(&format!("submit_{}", s.state), 1);
+                        None
+                    }
+                    Err(SubmitError::Busy { .. }) => {
+                        metrics.incr("submit_rejected", 1);
+                        None
+                    }
+                    Err(SubmitError::Bad(_)) => {
+                        metrics.incr("submit_bad", 1);
+                        None
+                    }
+                    Err(SubmitError::Draining) => None,
+                    Err(SubmitError::Fatal(f)) => Some((f.message.clone(), f.exit_code)),
+                };
+                let _ = reply.send(r);
+                if let Some((msg, code)) = fatal {
+                    eprintln!("serve: fatal: {msg}");
+                    return finish(code, &exit_slot);
+                }
+            }
+            Ok(Cmd::Status { seq, reply }) => {
+                let _ = reply.send(svc.status(seq));
+            }
+            Ok(Cmd::Report { reply }) => {
+                let _ = reply.send(svc.report());
+            }
+            Ok(Cmd::Drain { reply }) => match svc.drain() {
+                Ok(rep) => {
+                    for seq in 0..svc.n_jobs() {
+                        if let Some(st) = svc.status(seq) {
+                            if let Ok(jct) = st.get("jct").and_then(|v| v.as_f64()) {
+                                metrics.observe_secs("job_jct_vsecs", jct);
+                            }
+                        }
+                    }
+                    let _ = reply.send(Ok(rep));
+                    return finish(0, &exit_slot);
+                }
+                Err(f) => {
+                    eprintln!("serve: drain failed: {}", f.message);
+                    let _ = reply.send(Err(f.message));
+                    return finish(f.exit_code, &exit_slot);
+                }
+            },
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let vnow = t0.elapsed().as_secs_f64() * time_scale;
+                if let Err(f) = svc.tick(vnow) {
+                    eprintln!("serve: fatal: {}", f.message);
+                    return finish(f.exit_code, &exit_slot);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // every sender gone without an explicit drain — still
+                // finish the live jobs so the WAL ends quiescent
+                return match svc.drain() {
+                    Ok(_) => finish(0, &exit_slot),
+                    Err(f) => {
+                        eprintln!("serve: drain failed: {}", f.message);
+                        finish(f.exit_code, &exit_slot)
+                    }
+                };
+            }
+        }
+    }
+}
+
+/// Shared request-side context for pool workers. The command sender is
+/// mutex-wrapped because `mpsc::Sender` is not `Sync` on older
+/// toolchains — each request clones its own handle under the lock.
+struct Gateway {
+    tx: std::sync::Mutex<Sender<Cmd>>,
+    metrics: Arc<Metrics>,
+    draining: Arc<AtomicBool>,
+    time_scale: f64,
+    limits: Limits,
+    read_timeout: Duration,
+}
+
+fn handle_conn(gw: &Gateway, mut stream: TcpStream) {
+    let started = Instant::now();
+    let _ = stream.set_read_timeout(Some(gw.read_timeout));
+    let _ = stream.set_write_timeout(Some(gw.read_timeout));
+    let (status, what) = match http::read_request(&mut stream, &gw.limits) {
+        Ok(req) => {
+            let resp = route(gw, &req);
+            let status = resp.status;
+            let _ = resp.write(&mut stream);
+            (status, format!("{} {}", req.method, req.path))
+        }
+        Err(e) => match e.status() {
+            Some(code) => {
+                let _ = Response::error(code, &e.reason()).write(&mut stream);
+                (code, format!("({})", e.reason()))
+            }
+            None => return, // peer gone; nothing to log against
+        },
+    };
+    gw.metrics.incr("http_requests", 1);
+    gw.metrics.incr(&format!("http_{status}"), 1);
+    gw.metrics.observe("http_latency", started.elapsed());
+    eprintln!(
+        "serve: {status} {what} {:.1}ms",
+        started.elapsed().as_secs_f64() * 1e3
+    );
+}
+
+/// Ask the sim thread and wait for its answer; `None` when it is gone.
+fn ask<T>(tx: &Sender<Cmd>, make: impl FnOnce(Sender<T>) -> Cmd) -> Option<T> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(make(rtx)).ok()?;
+    rrx.recv().ok()
+}
+
+fn route(gw: &Gateway, req: &Request) -> Response {
+    let tx = gw.tx.lock().unwrap().clone();
+    match (req.method.as_str(), req.path.as_str()) {
+        // liveness must not block behind a long era: answered from the
+        // accept-side flag, never the sim thread
+        ("GET", "/healthz") => Response::json(
+            200,
+            Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("draining", Json::Bool(gw.draining.load(Ordering::SeqCst))),
+            ]),
+        ),
+        ("GET", "/metrics") => Response::text(200, &gw.metrics.report()),
+        ("GET", "/report") => match ask(&tx, |reply| Cmd::Report { reply }) {
+            Some(rep) => Response::json(200, rep),
+            None => Response::error(503, "shutting down"),
+        },
+        ("POST", "/jobs") => {
+            let body = match Json::parse_bytes(&req.body) {
+                Ok(j) => j,
+                Err(e) => return Response::error(400, &format!("body: {e}")),
+            };
+            match ask(&tx, |reply| Cmd::Submit { body, reply }) {
+                Some(Ok(s)) => Response::json(
+                    202,
+                    Json::obj(vec![
+                        ("seq", Json::Num(s.seq as f64)),
+                        ("state", Json::Str(s.state.into())),
+                        ("at", Json::Num(s.at)),
+                    ]),
+                ),
+                Some(Err(SubmitError::Bad(m))) => Response::error(400, &m),
+                Some(Err(SubmitError::Busy { retry_after })) => {
+                    // virtual seconds → wall seconds, rounded up
+                    let wall = (retry_after / gw.time_scale).ceil().max(1.0);
+                    Response::error(429, "admission control refused the job")
+                        .with_header("Retry-After", &format!("{}", wall as u64))
+                }
+                Some(Err(SubmitError::Draining)) => Response::error(503, "draining"),
+                Some(Err(SubmitError::Fatal(f))) => Response::error(500, &f.message),
+                None => Response::error(503, "shutting down"),
+            }
+        }
+        ("GET", p) if p.starts_with("/jobs/") => match p["/jobs/".len()..].parse::<usize>() {
+            Ok(seq) => match ask(&tx, |reply| Cmd::Status { seq, reply }) {
+                Some(Some(j)) => Response::json(200, j),
+                Some(None) => Response::error(404, &format!("no job {seq}")),
+                None => Response::error(503, "shutting down"),
+            },
+            Err(_) => Response::error(404, "job id must be an integer"),
+        },
+        (_, "/healthz" | "/metrics" | "/report" | "/jobs") => {
+            Response::error(405, "method not allowed")
+        }
+        _ => Response::error(404, "unknown route"),
+    }
+}
+
+/// Apply `--queue/--alloc/--horizon/--threads/--recovery` to an engine
+/// config (the serve-side mirror of `mxdag simulate`'s flags).
+fn engine_from_args(args: &Args, cfg: &mut SimConfig) -> Result<(), String> {
+    if let Some(v) = args.get("queue") {
+        cfg.queue = QueueKind::parse(v).map_err(|e| format!("--queue: {e}"))?;
+    }
+    if let Some(v) = args.get("alloc") {
+        cfg.alloc = AllocKind::parse(v).map_err(|e| format!("--alloc: {e}"))?;
+    }
+    if let Some(v) = args.get("horizon") {
+        cfg.horizon = HorizonKind::parse(v).map_err(|e| format!("--horizon: {e}"))?;
+    }
+    if let Some(v) = args.get("threads") {
+        match v.parse::<usize>() {
+            Ok(t) if t >= 1 => cfg.threads = t,
+            _ => return Err(format!("--threads: expected an integer >= 1, got {v:?}")),
+        }
+    }
+    if let Some(v) = args.get("recovery") {
+        cfg.recovery = RecoveryPolicy::parse(v).map_err(|e| format!("--recovery: {e}"))?;
+    }
+    Ok(())
+}
+
+/// `--weights gold=5,bronze=1`
+fn parse_weights(s: &str) -> Result<std::collections::BTreeMap<String, i64>, String> {
+    let mut m = std::collections::BTreeMap::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| format!("--weights: expected NAME=INT, got `{part}`"))?;
+        let w: i64 = v
+            .trim()
+            .parse()
+            .map_err(|_| format!("--weights: bad integer `{v}`"))?;
+        if w < 1 {
+            return Err(format!("--weights: weight for `{k}` must be >= 1"));
+        }
+        m.insert(k.trim().to_string(), w);
+    }
+    Ok(m)
+}
+
+/// Build a fresh [`ServeConfig`] from CLI flags.
+fn config_from_args(args: &Args) -> Result<ServeConfig, String> {
+    let cluster = match args.get("cluster") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+            let j = Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+            Cluster::from_json(&j).map_err(|e| format!("--cluster: {e}"))?
+        }
+        None => Cluster::uniform(args.usize_or("hosts", 4).max(1)),
+    };
+    let scheduler = args.get_or("scheduler", "mxdag");
+    pinned_policy(&scheduler)?;
+    let mut cfg = ServeConfig::new(cluster, &scheduler)?;
+    let watermark = args.f64_or("watermark", f64::INFINITY);
+    if watermark.is_nan() || watermark < 0.0 {
+        return Err(format!("--watermark: expected a number >= 0, got {watermark}"));
+    }
+    cfg.watermark = watermark;
+    let defer_max = args.f64_or("defer-max", 0.0);
+    if !defer_max.is_finite() || defer_max < 0.0 {
+        return Err(format!("--defer-max: expected a finite number >= 0, got {defer_max}"));
+    }
+    cfg.defer_max = defer_max;
+    engine_from_args(args, &mut cfg.engine)?;
+    if let Some(w) = args.get("weights") {
+        cfg.weights = parse_weights(w)?;
+    }
+    cfg.snap_every = args.usize_or("snap-every", 64).max(1);
+    Ok(cfg)
+}
+
+/// Entry point for `mxdag serve`. Returns the process exit code:
+/// 0 = clean drain, 1 = config/environment error, 2 = engine deadlock,
+/// 3 = engine event-limit.
+pub fn run(args: &Args) -> i32 {
+    let snap_every = args.usize_or("snap-every", 64).max(1);
+    let (dir, resume) = match (args.get("resume"), args.get("dir")) {
+        (Some(d), _) => (d.to_string(), true),
+        (None, Some(d)) => (d.to_string(), false),
+        (None, None) => {
+            eprintln!("serve: --dir DIR (fresh) or --resume DIR required");
+            return 1;
+        }
+    };
+    let svc = if resume {
+        match Service::resume(Path::new(&dir), snap_every) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: resume {dir}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let cfg = match config_from_args(args) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                return 1;
+            }
+        };
+        match Service::create(Path::new(&dir), cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                return 1;
+            }
+        }
+    };
+    // --check: report the recovered state and exit without serving —
+    // the CI resume check asserts zero lost jobs this way
+    if args.flag("check") {
+        println!("{}", svc.report());
+        return 0;
+    }
+
+    let time_scale = args.f64_or("time-scale", 1.0);
+    if !time_scale.is_finite() || time_scale <= 0.0 {
+        eprintln!("serve: --time-scale must be finite and > 0");
+        return 1;
+    }
+    let tick = Duration::from_millis(args.usize_or("tick-ms", 50).max(1) as u64);
+    let limits = Limits {
+        max_body: args.usize_or("max-body", 1024 * 1024).max(1),
+        ..Limits::default()
+    };
+    let read_timeout =
+        Duration::from_millis(args.usize_or("read-timeout-ms", 5000).max(1) as u64);
+
+    let host = args.get_or("host", "127.0.0.1");
+    let port = args.usize_or("port", 0) as u16;
+    let listener = match TcpListener::bind((host.as_str(), port)) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("serve: bind {host}:{port}: {e}");
+            return 1;
+        }
+    };
+    let addr = match listener.local_addr() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("serve: local_addr: {e}");
+            return 1;
+        }
+    };
+    if let Some(path) = args.get("addr-file") {
+        if let Err(e) = std::fs::write(path, format!("{addr}\n")) {
+            eprintln!("serve: write {path}: {e}");
+            return 1;
+        }
+    }
+    if let Err(e) = listener.set_nonblocking(true) {
+        eprintln!("serve: set_nonblocking: {e}");
+        return 1;
+    }
+    install_signal_handlers();
+    eprintln!(
+        "serve: listening on {addr} dir={dir} scheduler={} jobs={} (resume={resume})",
+        svc.config().scheduler,
+        svc.n_jobs()
+    );
+
+    let metrics = Arc::new(Metrics::new());
+    let draining = Arc::new(AtomicBool::new(false));
+    let exit_slot = Arc::new(AtomicI32::new(RUNNING));
+    let (tx, rx) = mpsc::channel::<Cmd>();
+    let sim = {
+        let metrics = Arc::clone(&metrics);
+        let exit_slot = Arc::clone(&exit_slot);
+        std::thread::Builder::new()
+            .name("mxdag-sim".into())
+            .spawn(move || sim_loop(svc, rx, tick, time_scale, metrics, exit_slot))
+            .expect("spawn sim thread")
+    };
+    let gw = Arc::new(Gateway {
+        tx: tx.clone(),
+        metrics: Arc::clone(&metrics),
+        draining: Arc::clone(&draining),
+        time_scale,
+        limits,
+        read_timeout,
+    });
+    let pool = {
+        let gw = Arc::clone(&gw);
+        Pool::new(
+            args.usize_or("workers", 4).max(1),
+            args.usize_or("queue-cap", 64).max(1),
+            move |s| handle_conn(&gw, s),
+        )
+    };
+
+    // accept loop: poll the TERM flag and the sim thread's exit slot
+    loop {
+        if TERM.load(Ordering::SeqCst) {
+            eprintln!("serve: signal received, draining");
+            break;
+        }
+        if exit_slot.load(Ordering::SeqCst) != RUNNING {
+            eprintln!("serve: sim thread stopped, shutting down");
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if let Err(mut refused) = pool.submit(stream) {
+                    // bounded backpressure: answer 503 instead of queueing
+                    let _ = refused.set_write_timeout(Some(read_timeout));
+                    let _ = Response::error(503, "request queue full")
+                        .with_header("Retry-After", "1")
+                        .write(&mut refused);
+                    metrics.incr("http_503_shed", 1);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                eprintln!("serve: accept: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+
+    // graceful drain: stop accepting → finish in-flight HTTP work →
+    // finish live eras + flush WAL → exit
+    drop(listener);
+    draining.store(true, Ordering::SeqCst);
+    drop(gw); // release the pool-side tx clone template
+    pool.close();
+    let (rtx, rrx) = mpsc::channel();
+    if tx.send(Cmd::Drain { reply: rtx }).is_ok() {
+        match rrx.recv() {
+            Ok(Ok(rep)) => eprintln!("serve: drained: {rep}"),
+            Ok(Err(e)) => eprintln!("serve: drain error: {e}"),
+            Err(_) => {}
+        }
+    }
+    drop(tx);
+    let code = sim.join().unwrap_or(1);
+    eprintln!("serve: exit {code}");
+    code
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_parse() {
+        let w = parse_weights("gold=5, bronze=1").unwrap();
+        assert_eq!(w.get("gold"), Some(&5));
+        assert_eq!(w.get("bronze"), Some(&1));
+        assert!(parse_weights("gold").is_err());
+        assert!(parse_weights("gold=0").is_err());
+        assert!(parse_weights("gold=x").is_err());
+        assert!(parse_weights("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn engine_flags_apply() {
+        let args = Args::parse(
+            ["serve", "--queue", "fullresort", "--threads", "2", "--recovery", "retry:2:0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut cfg = SimConfig::default();
+        engine_from_args(&args, &mut cfg).unwrap();
+        assert!(matches!(cfg.queue, QueueKind::FullResort));
+        assert_eq!(cfg.threads, 2);
+        assert!(matches!(cfg.recovery, RecoveryPolicy::Retry { max_attempts: 2, .. }));
+        let bad = Args::parse(["serve", "--queue", "nope"].iter().map(|s| s.to_string()));
+        assert!(engine_from_args(&bad, &mut cfg).is_err());
+    }
+
+    #[test]
+    fn config_from_args_validates() {
+        let ok = Args::parse(
+            ["serve", "--hosts", "3", "--scheduler", "fair", "--watermark", "5", "--weights", "a=2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = config_from_args(&ok).unwrap();
+        assert_eq!(cfg.cluster.n_hosts(), 3);
+        assert_eq!(cfg.scheduler, "fair");
+        assert_eq!(cfg.watermark, 5.0);
+        assert_eq!(cfg.weights.get("a"), Some(&2));
+        let bad = Args::parse(
+            ["serve", "--scheduler", "nope"].iter().map(|s| s.to_string()),
+        );
+        assert!(config_from_args(&bad).is_err());
+    }
+}

@@ -1,0 +1,931 @@
+//! The serve-mode coordinator: a WAL-backed [`OpenLoop`] plus the
+//! submission/replay logic around it. Everything here is
+//! single-threaded — the server runs one `Service` on a dedicated sim
+//! thread and feeds it commands over a channel (`serve/server.rs`);
+//! the tests drive it directly.
+//!
+//! Determinism contract: a job's outcome is a pure function of the
+//! sequence of [`OpenLoop`] calls — pushes (spec, arrival-stamp bits,
+//! weight) and advance targets. `Service` therefore writes a WAL
+//! record *before* every such call (see `serve/wal.rs`) and replays
+//! the log on resume, landing in bitwise-identical state. Job DAGs are
+//! never serialized: the WAL stores the submission JSON, and replay
+//! re-runs the same scheduler plan + expansion — same spec, same code,
+//! same DAG.
+//!
+//! Policy pinning: the era engine runs ONE sharing policy for every
+//! live job, so the service pins it from the configured scheduler name
+//! (`mxdag`/`packing` → priority, `fair` → fair, `fifo` → fifo,
+//! `coflow` → coflow). A submission may name its own `scheduler` only
+//! if it pins the *same* policy (it still gets its own annotation
+//! plan); otherwise the submission is refused with a 400. The
+//! `MxScheduler`'s occasional fair-policy fallback plan is overridden
+//! by the pinned policy for the same reason.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::mxdag::MXDag;
+use crate::sched::{
+    CoflowScheduler, FairScheduler, FifoScheduler, Grouping, MxScheduler, PackingScheduler,
+    Scheduler,
+};
+use crate::sim::{
+    expand, AllocKind, Cluster, HorizonKind, JobOutcome, OpenConfig, OpenJob, OpenLoop, Policy,
+    QueueKind, SimConfig, SimScratch,
+};
+use crate::util::json::{f64_bits_hex, f64_from_bits_hex, Json};
+
+use super::wal::{self, Wal};
+
+/// Instantiate a scheduler by its CLI name (the same registry as
+/// `mxdag simulate --scheduler`, but with unknown names rejected
+/// instead of defaulting — a server must not guess).
+pub fn scheduler_by_name(name: &str) -> Result<Box<dyn Scheduler>, String> {
+    match name {
+        "fair" => Ok(Box::new(FairScheduler)),
+        "fifo" => Ok(Box::new(FifoScheduler)),
+        "packing" => Ok(Box::new(PackingScheduler)),
+        "coflow" => Ok(Box::new(CoflowScheduler::new(Grouping::ByDst))),
+        "mxdag" => Ok(Box::new(MxScheduler::default())),
+        other => Err(format!(
+            "unknown scheduler `{other}` (mxdag|fair|fifo|packing|coflow)"
+        )),
+    }
+}
+
+/// The engine policy a scheduler name pins (see module docs).
+pub fn pinned_policy(name: &str) -> Result<Policy, String> {
+    match name {
+        "fair" => Ok(Policy::fair()),
+        "fifo" => Ok(Policy::fifo()),
+        "coflow" => Ok(Policy::coflow()),
+        "mxdag" | "packing" => Ok(Policy::priority()),
+        other => Err(format!(
+            "unknown scheduler `{other}` (mxdag|fair|fifo|packing|coflow)"
+        )),
+    }
+}
+
+/// Serve configuration. The determinism-relevant part (everything but
+/// `snap_every`) is persisted in the WAL `open` record / snapshot and
+/// wins over CLI flags on resume — changing the cluster or engine
+/// under a half-replayed log would silently change every outcome.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub cluster: Cluster,
+    /// Default scheduler name; also pins the engine policy.
+    pub scheduler: String,
+    /// Admission watermark (estimated drain time above which arrivals
+    /// are refused or deferred).
+    pub watermark: f64,
+    /// How long a refused arrival may wait in the deferral queue.
+    pub defer_max: f64,
+    /// Era-engine configuration; `policy` is overwritten with the
+    /// pinned one.
+    pub engine: SimConfig,
+    /// Per-tenant deferral weights (absent tenants weigh 1).
+    pub weights: BTreeMap<String, i64>,
+    /// Snapshot + truncate the WAL every this many records
+    /// (operational, not persisted).
+    pub snap_every: usize,
+}
+
+impl ServeConfig {
+    pub fn new(cluster: Cluster, scheduler: &str) -> Result<ServeConfig, String> {
+        let policy = pinned_policy(scheduler)?;
+        Ok(ServeConfig {
+            cluster,
+            scheduler: scheduler.to_string(),
+            watermark: f64::INFINITY,
+            defer_max: 0.0,
+            engine: SimConfig { policy, ..SimConfig::default() },
+            weights: BTreeMap::new(),
+            snap_every: 64,
+        })
+    }
+
+    /// The persisted form (WAL `open` record / snapshot `config` key).
+    /// Watermark and defer_max travel as bit-exact hex — they feed the
+    /// admission comparisons, so text rounding would break resume.
+    pub fn to_json(&self) -> Json {
+        let weights: BTreeMap<String, Json> = self
+            .weights
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("cluster", self.cluster.to_json()),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("watermark", Json::Str(f64_bits_hex(self.watermark))),
+            ("defer_max", Json::Str(f64_bits_hex(self.defer_max))),
+            ("engine", engine_json(&self.engine)),
+            ("weights", Json::Obj(weights)),
+        ])
+    }
+
+    pub fn from_json(j: &Json, snap_every: usize) -> Result<ServeConfig, String> {
+        let ctx = |e: crate::util::json::JsonError| format!("serve config: {e}");
+        if j.get("v").map_err(ctx)?.as_f64().map_err(ctx)? != 1.0 {
+            return Err("serve config: unsupported version".into());
+        }
+        let cluster = Cluster::from_json(j.get("cluster").map_err(ctx)?)
+            .map_err(|e| format!("serve config cluster: {e}"))?;
+        let scheduler = j
+            .get("scheduler")
+            .map_err(ctx)?
+            .as_str()
+            .map_err(ctx)?
+            .to_string();
+        let policy = pinned_policy(&scheduler)?;
+        let watermark = f64_from_bits_hex(j.get("watermark").map_err(ctx)?.as_str().map_err(ctx)?)
+            .map_err(ctx)?;
+        let defer_max = f64_from_bits_hex(j.get("defer_max").map_err(ctx)?.as_str().map_err(ctx)?)
+            .map_err(ctx)?;
+        let mut engine = SimConfig::default();
+        engine
+            .apply_json(j.get("engine").map_err(ctx)?)
+            .map_err(|e| format!("serve config engine: {e}"))?;
+        engine.policy = policy;
+        let mut weights = BTreeMap::new();
+        for (k, v) in j.get("weights").map_err(ctx)?.as_obj().map_err(ctx)? {
+            let x = v.as_f64().map_err(ctx)?;
+            if x.fract() != 0.0 || !x.is_finite() {
+                return Err(format!("serve config weight for `{k}` must be an integer"));
+            }
+            weights.insert(k.clone(), x as i64);
+        }
+        Ok(ServeConfig {
+            cluster,
+            scheduler,
+            watermark,
+            defer_max,
+            engine,
+            weights,
+            snap_every,
+        })
+    }
+
+    fn open_config(&self) -> OpenConfig {
+        OpenConfig {
+            watermark: self.watermark,
+            defer_max: self.defer_max,
+            engine: self.engine.clone(),
+        }
+    }
+}
+
+/// Serialize the engine knobs in the `SimConfig::apply_json` wire
+/// format (the enums expose `parse` but no label method, so the
+/// spellings live here).
+fn engine_json(cfg: &SimConfig) -> Json {
+    Json::obj(vec![
+        (
+            "queue",
+            Json::Str(
+                match cfg.queue {
+                    QueueKind::Incremental => "incremental",
+                    QueueKind::FullResort => "fullresort",
+                }
+                .into(),
+            ),
+        ),
+        (
+            "alloc",
+            Json::Str(
+                match cfg.alloc {
+                    AllocKind::Components => "components",
+                    AllocKind::WholeSet => "wholeset",
+                }
+                .into(),
+            ),
+        ),
+        (
+            "horizon",
+            Json::Str(
+                match cfg.horizon {
+                    HorizonKind::Eager => "eager",
+                    HorizonKind::Anchored => "anchored",
+                }
+                .into(),
+            ),
+        ),
+        ("threads", Json::Num(cfg.threads as f64)),
+        ("recovery", cfg.recovery.to_json()),
+    ])
+}
+
+/// A fatal service error: the server should log it, stop serving and
+/// exit with `exit_code` (1 = environment/IO, 2 = deadlock,
+/// 3 = event-limit — the same codes as `mxdag simulate`).
+#[derive(Debug)]
+pub struct Fatal {
+    pub message: String,
+    pub exit_code: i32,
+}
+
+impl Fatal {
+    fn io(what: &str, e: std::io::Error) -> Fatal {
+        Fatal { message: format!("{what}: {e}"), exit_code: 1 }
+    }
+
+    fn sim(e: crate::sim::SimError) -> Fatal {
+        Fatal { message: format!("simulation failed: {e}"), exit_code: e.exit_code() }
+    }
+}
+
+/// Why a submission was refused (the server maps these to HTTP codes).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Invalid submission ⇒ 400.
+    Bad(String),
+    /// Admission control refused it ⇒ 429 with a Retry-After hint in
+    /// *virtual* seconds (the server rescales to wall seconds).
+    Busy { retry_after: f64 },
+    /// The server is draining ⇒ 503.
+    Draining,
+    /// WAL or engine failure ⇒ 500, then shut down.
+    Fatal(Fatal),
+}
+
+/// A successful submission.
+#[derive(Debug)]
+pub struct Submitted {
+    pub seq: usize,
+    /// `"admitted"`, `"deferred"` (waiting for load to drop) or
+    /// `"done"` (a zero-work job can finish within its arrival era).
+    pub state: &'static str,
+    /// The arrival stamp actually used (monotone-floored).
+    pub at: f64,
+}
+
+/// Per-job bookkeeping the engine doesn't hold: tenant, the submission
+/// spec (kept until the job completes so snapshots can rebuild its
+/// DAG, then dropped — bounded memory), and the stamped arrival.
+#[derive(Debug)]
+struct JobMeta {
+    tenant: String,
+    weight: i64,
+    at: f64,
+    spec: Option<Json>,
+}
+
+/// The WAL-backed coordinator state. One instance, one thread.
+pub struct Service {
+    dir: PathBuf,
+    cfg: ServeConfig,
+    lp: OpenLoop,
+    scratch: SimScratch,
+    wal: Wal,
+    jobs: Vec<JobMeta>,
+    last_at: f64,
+    draining: bool,
+    records_since_snap: usize,
+}
+
+impl Service {
+    /// Initialise a fresh serve directory: create it, write the WAL
+    /// `open` record carrying `cfg`. Refuses a directory that already
+    /// holds serve state (use [`Service::resume`]).
+    pub fn create(dir: &Path, cfg: ServeConfig) -> Result<Service, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        if wal::wal_path(dir).exists() || wal::snapshot_path(dir).exists() {
+            return Err(format!(
+                "{} already holds serve state — use --resume",
+                dir.display()
+            ));
+        }
+        let mut w =
+            Wal::create(dir, 0).map_err(|e| format!("create WAL in {}: {e}", dir.display()))?;
+        w.append("open", vec![("config", cfg.to_json())])
+            .map_err(|e| format!("write WAL open record: {e}"))?;
+        let lp = OpenLoop::new(&cfg.cluster, &cfg.open_config());
+        Ok(Service {
+            dir: dir.to_path_buf(),
+            cfg,
+            lp,
+            scratch: SimScratch::default(),
+            wal: w,
+            jobs: Vec::new(),
+            last_at: 0.0,
+            draining: false,
+            records_since_snap: 0,
+        })
+    }
+
+    /// Rebuild from a serve directory: load the snapshot (if any),
+    /// replay the WAL tail. Lands in bitwise-identical state to the
+    /// process that wrote the log. `snap_every` is operational and
+    /// comes from the caller, not the log.
+    pub fn resume(dir: &Path, snap_every: usize) -> Result<Service, String> {
+        let snap = wal::read_snapshot(dir)?;
+        let (recs, valid_len) = wal::read_records_len(&wal::wal_path(dir))?;
+        let sctx = |e: crate::util::json::JsonError| format!("snapshot: {e}");
+
+        // config: snapshot wins; else the WAL must open with one
+        let (cfg, state, mut jobs, snap_lsn) = match &snap {
+            Some(s) => {
+                let cfg = ServeConfig::from_json(s.get("config").map_err(sctx)?, snap_every)?;
+                let lsn = s.get("lsn").map_err(sctx)?.as_f64().map_err(sctx)? as u64;
+                let mut jobs = Vec::new();
+                for (i, jj) in s.get("jobs").map_err(sctx)?.as_arr().map_err(sctx)?.iter().enumerate()
+                {
+                    let jctx = |e: crate::util::json::JsonError| format!("snapshot job {i}: {e}");
+                    let tenant = jj.get("tenant").map_err(jctx)?.as_str().map_err(jctx)?.to_string();
+                    let weight = jj.get("weight").map_err(jctx)?.as_f64().map_err(jctx)? as i64;
+                    let at = f64_from_bits_hex(jj.get("at").map_err(jctx)?.as_str().map_err(jctx)?)
+                        .map_err(jctx)?;
+                    let spec = match jj.get("spec") {
+                        Ok(Json::Null) | Err(_) => None,
+                        Ok(v) => Some(v.clone()),
+                    };
+                    jobs.push(JobMeta { tenant, weight, at, spec });
+                }
+                (cfg, Some(s.get("state").map_err(sctx)?.clone()), jobs, Some(lsn))
+            }
+            None => {
+                let first = recs
+                    .first()
+                    .ok_or_else(|| format!("{}: no snapshot and an empty WAL", dir.display()))?;
+                let octx = |e: crate::util::json::JsonError| format!("WAL open record: {e}");
+                if first.get("kind").map_err(octx)?.as_str().map_err(octx)? != "open" {
+                    return Err("WAL does not start with an open record".into());
+                }
+                let cfg = ServeConfig::from_json(first.get("config").map_err(octx)?, snap_every)?;
+                (cfg, None, Vec::new(), None)
+            }
+        };
+
+        let ocfg = cfg.open_config();
+        let mut lp = match &state {
+            Some(st) => OpenLoop::restore(&cfg.cluster, &ocfg, st, &mut |idx| {
+                let m = jobs
+                    .get(idx)
+                    .ok_or_else(|| format!("snapshot state references unknown job {idx}"))?;
+                let spec = m.spec.as_ref().ok_or_else(|| {
+                    format!("job {idx} is not done but its spec was dropped from the snapshot")
+                })?;
+                build_job(&cfg, spec, m.at, m.weight).map_err(|e| format!("job {idx}: {e}"))
+            })?,
+            None => OpenLoop::new(&cfg.cluster, &ocfg),
+        };
+
+        // replay the tail
+        let mut scratch = SimScratch::default();
+        let mut replayed = 0usize;
+        let mut max_lsn = snap_lsn.unwrap_or(0);
+        for (i, rec) in recs.iter().enumerate() {
+            let rctx = |e: crate::util::json::JsonError| format!("WAL record {i}: {e}");
+            let lsn = rec.get("lsn").map_err(rctx)?.as_f64().map_err(rctx)? as u64;
+            max_lsn = max_lsn.max(lsn);
+            if let Some(s0) = snap_lsn {
+                if lsn <= s0 {
+                    continue; // stale prefix (crash between rename and truncate)
+                }
+            }
+            match rec.get("kind").map_err(rctx)?.as_str().map_err(rctx)? {
+                "open" => {} // config already loaded above
+                "job" => {
+                    let seq = rec.get("seq").map_err(rctx)?.as_usize().map_err(rctx)?;
+                    if seq != jobs.len() {
+                        return Err(format!(
+                            "WAL record {i}: job seq {seq} but {} jobs replayed",
+                            jobs.len()
+                        ));
+                    }
+                    let at =
+                        f64_from_bits_hex(rec.get("at").map_err(rctx)?.as_str().map_err(rctx)?)
+                            .map_err(rctx)?;
+                    let tenant = rec
+                        .get("tenant")
+                        .map_err(rctx)?
+                        .as_str()
+                        .map_err(rctx)?
+                        .to_string();
+                    let weight = rec.get("weight").map_err(rctx)?.as_f64().map_err(rctx)? as i64;
+                    let spec = rec.get("spec").map_err(rctx)?.clone();
+                    let job = build_job(&cfg, &spec, at, weight)
+                        .map_err(|e| format!("WAL record {i}: {e}"))?;
+                    jobs.push(JobMeta { tenant, weight, at, spec: Some(spec) });
+                    let got = lp.push(job);
+                    debug_assert_eq!(got, seq);
+                    replayed += 1;
+                }
+                "adv" => {
+                    let to =
+                        f64_from_bits_hex(rec.get("to").map_err(rctx)?.as_str().map_err(rctx)?)
+                            .map_err(rctx)?;
+                    lp.advance_to(to, &mut scratch)
+                        .map_err(|e| format!("WAL record {i} replay: {e}"))?;
+                    replayed += 1;
+                }
+                "drain" => {
+                    lp.advance_to(f64::INFINITY, &mut scratch)
+                        .map_err(|e| format!("WAL record {i} replay: {e}"))?;
+                    replayed += 1;
+                }
+                other => return Err(format!("WAL record {i}: unknown kind `{other}`")),
+            }
+        }
+
+        let wal = Wal::open_append(dir, max_lsn + 1, valid_len)
+            .map_err(|e| format!("open WAL in {}: {e}", dir.display()))?;
+        let last_at = jobs.iter().fold(0.0_f64, |a, m| a.max(m.at));
+        Ok(Service {
+            dir: dir.to_path_buf(),
+            cfg,
+            lp,
+            scratch,
+            wal,
+            jobs,
+            last_at,
+            draining: false,
+            records_since_snap: replayed,
+        })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn now(&self) -> f64 {
+        self.lp.now()
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Accept one submission at virtual time `stamp` (wall-derived by
+    /// the server; this layer only floors it monotone). Write-ahead:
+    /// the WAL records the push and the advance before either happens.
+    pub fn submit(&mut self, body: &Json, stamp: f64) -> Result<Submitted, SubmitError> {
+        if self.draining {
+            return Err(SubmitError::Draining);
+        }
+        if !stamp.is_finite() || stamp < 0.0 {
+            return Err(SubmitError::Bad(format!("bad arrival stamp {stamp}")));
+        }
+        let obj = body
+            .as_obj()
+            .map_err(|e| SubmitError::Bad(format!("submission: {e}")))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "dag" | "scheduler" | "deadline" | "tenant") {
+                return Err(SubmitError::Bad(format!(
+                    "submission: unknown key `{key}` (dag|scheduler|deadline|tenant)"
+                )));
+            }
+        }
+        let tenant = match obj.get("tenant") {
+            Some(v) => v
+                .as_str()
+                .map_err(|e| SubmitError::Bad(format!("submission tenant: {e}")))?
+                .to_string(),
+            None => "default".to_string(),
+        };
+        let weight = self.cfg.weights.get(&tenant).copied().unwrap_or(1);
+        let at = stamp.max(self.last_at).max(self.lp.now());
+        // validate + plan before touching the WAL: a refused submission
+        // must leave no trace
+        let job = build_job(&self.cfg, body, at, weight).map_err(SubmitError::Bad)?;
+
+        let seq = self.jobs.len();
+        self.wal
+            .append(
+                "job",
+                vec![
+                    ("seq", Json::Num(seq as f64)),
+                    ("at", Json::Str(f64_bits_hex(at))),
+                    ("tenant", Json::Str(tenant.clone())),
+                    ("weight", Json::Num(weight as f64)),
+                    ("spec", body.clone()),
+                ],
+            )
+            .map_err(|e| SubmitError::Fatal(Fatal::io("WAL append", e)))?;
+        self.jobs
+            .push(JobMeta { tenant, weight, at, spec: Some(body.clone()) });
+        self.last_at = at;
+        let got = self.lp.push(job);
+        debug_assert_eq!(got, seq);
+
+        self.wal
+            .append("adv", vec![("to", Json::Str(f64_bits_hex(at)))])
+            .map_err(|e| SubmitError::Fatal(Fatal::io("WAL append", e)))?;
+        self.lp
+            .advance_to(at, &mut self.scratch)
+            .map_err(|e| SubmitError::Fatal(Fatal::sim(e)))?;
+        self.records_since_snap += 2;
+        self.maybe_snapshot().map_err(SubmitError::Fatal)?;
+
+        match self.lp.job_state(seq) {
+            Some("live") => Ok(Submitted { seq, state: "admitted", at }),
+            Some("deferred") => Ok(Submitted { seq, state: "deferred", at }),
+            Some("done") => {
+                let rejected = matches!(
+                    self.lp.result(seq).map(|r| r.outcome),
+                    Some(JobOutcome::Rejected { .. })
+                );
+                if rejected {
+                    let est = (self.lp.max_finish() - self.lp.now()).max(1.0);
+                    Err(SubmitError::Busy { retry_after: est })
+                } else {
+                    Ok(Submitted { seq, state: "done", at })
+                }
+            }
+            s => Err(SubmitError::Fatal(Fatal {
+                message: format!("job {seq} in impossible post-submit state {s:?}"),
+                exit_code: 1,
+            })),
+        }
+    }
+
+    /// Advance the stream clock to `vnow` (a periodic server tick).
+    /// Idle services skip the WAL record — an idle advance is a no-op
+    /// by the [`OpenLoop`] contract, so logging it would only bloat
+    /// the log. Returns whether an advance was issued.
+    pub fn tick(&mut self, vnow: f64) -> Result<bool, Fatal> {
+        if self.draining || self.lp.is_idle() {
+            return Ok(false);
+        }
+        if !vnow.is_finite() || vnow <= self.lp.now() {
+            return Ok(false);
+        }
+        self.wal
+            .append("adv", vec![("to", Json::Str(f64_bits_hex(vnow)))])
+            .map_err(|e| Fatal::io("WAL append", e))?;
+        self.lp.advance_to(vnow, &mut self.scratch).map_err(Fatal::sim)?;
+        self.records_since_snap += 1;
+        self.maybe_snapshot()?;
+        Ok(true)
+    }
+
+    /// Graceful drain: stop admitting, finish every live/deferred job
+    /// (`advance_to(∞)`), flush a final snapshot. Returns the outcome
+    /// report. The service still answers status reads afterwards.
+    pub fn drain(&mut self) -> Result<Json, Fatal> {
+        if !self.draining {
+            self.draining = true;
+            self.wal
+                .append("drain", Vec::new())
+                .map_err(|e| Fatal::io("WAL append", e))?;
+            self.lp
+                .advance_to(f64::INFINITY, &mut self.scratch)
+                .map_err(Fatal::sim)?;
+            self.snapshot()?;
+        }
+        Ok(self.report())
+    }
+
+    /// Status of one job, `None` for an unknown seq.
+    pub fn status(&self, seq: usize) -> Option<Json> {
+        let m = self.jobs.get(seq)?;
+        let state = self.lp.job_state(seq)?;
+        let mut pairs = vec![
+            ("seq", Json::Num(seq as f64)),
+            ("tenant", Json::Str(m.tenant.clone())),
+            ("state", Json::Str(state.into())),
+            ("arrival", Json::Num(m.at)),
+        ];
+        if let Some(r) = self.lp.result(seq) {
+            let outcome = match r.outcome {
+                JobOutcome::Completed { .. } => "completed",
+                JobOutcome::Quarantined { .. } => "quarantined",
+                JobOutcome::Exhausted { .. } => "exhausted",
+                JobOutcome::Rejected { .. } => "rejected",
+            };
+            pairs.push(("outcome", Json::Str(outcome.into())));
+            pairs.push((
+                "admitted_at",
+                r.admitted_at.map(Json::Num).unwrap_or(Json::Null),
+            ));
+            pairs.push(("jct", r.jct.map(Json::Num).unwrap_or(Json::Null)));
+            pairs.push((
+                "deadline_met",
+                r.deadline_met.map(Json::Bool).unwrap_or(Json::Null),
+            ));
+        }
+        Some(Json::obj(pairs))
+    }
+
+    /// Aggregate report: counters plus per-state and per-outcome
+    /// tallies. Every submitted job appears in exactly one state —
+    /// the CI resume check asserts none are lost.
+    pub fn report(&self) -> Json {
+        let c = self.lp.counters();
+        let mut states: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut outcomes: BTreeMap<&str, usize> = BTreeMap::new();
+        for seq in 0..self.jobs.len() {
+            let s = self.lp.job_state(seq).unwrap_or("unknown");
+            *states.entry(s).or_insert(0) += 1;
+            if let Some(r) = self.lp.result(seq) {
+                let o = match r.outcome {
+                    JobOutcome::Completed { .. } => "completed",
+                    JobOutcome::Quarantined { .. } => "quarantined",
+                    JobOutcome::Exhausted { .. } => "exhausted",
+                    JobOutcome::Rejected { .. } => "rejected",
+                };
+                *outcomes.entry(o).or_insert(0) += 1;
+            }
+        }
+        let map = |m: BTreeMap<&str, usize>| {
+            Json::Obj(
+                m.into_iter()
+                    .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("jobs", Json::Num(self.jobs.len() as f64)),
+            ("now", Json::Num(self.lp.now())),
+            ("draining", Json::Bool(self.draining)),
+            ("eras", Json::Num(c.eras as f64)),
+            ("events", Json::Num(c.events as f64)),
+            ("retries", Json::Num(c.retries as f64)),
+            ("lost_work", Json::Num(c.lost_work)),
+            ("admitted", Json::Num(c.admitted as f64)),
+            ("rejected", Json::Num(c.rejected as f64)),
+            ("states", map(states)),
+            ("outcomes", map(outcomes)),
+        ])
+    }
+
+    /// Bitwise engine-state fingerprint (tests compare these across
+    /// kill/resume).
+    pub fn state_text(&self) -> String {
+        self.lp.state_json().to_string()
+    }
+
+    fn maybe_snapshot(&mut self) -> Result<(), Fatal> {
+        if self.records_since_snap >= self.cfg.snap_every.max(1) {
+            self.snapshot()?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot + compact: persist engine state and job metadata, then
+    /// truncate the WAL. Specs of completed jobs are dropped here —
+    /// restore never asks for them — keeping snapshots and memory
+    /// bounded by the *live* set, not stream history.
+    fn snapshot(&mut self) -> Result<(), Fatal> {
+        for seq in 0..self.jobs.len() {
+            if self.lp.job_state(seq) == Some("done") {
+                self.jobs[seq].spec = None;
+            }
+        }
+        let jobs: Vec<Json> = self
+            .jobs
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("tenant", Json::Str(m.tenant.clone())),
+                    ("weight", Json::Num(m.weight as f64)),
+                    ("at", Json::Str(f64_bits_hex(m.at))),
+                    ("spec", m.spec.clone().unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        let snap = Json::obj(vec![
+            ("lsn", Json::Num((self.wal.next_lsn - 1) as f64)),
+            ("config", self.cfg.to_json()),
+            ("state", self.lp.state_json()),
+            ("jobs", Json::Arr(jobs)),
+        ]);
+        wal::write_snapshot(&self.dir, &snap).map_err(|e| Fatal::io("write snapshot", e))?;
+        self.wal =
+            Wal::create(&self.dir, self.wal.next_lsn).map_err(|e| Fatal::io("truncate WAL", e))?;
+        self.records_since_snap = 0;
+        Ok(())
+    }
+}
+
+/// Validate a submission body and build the engine-side job: parse the
+/// DAG, check it fits the cluster, plan it with the named (or default)
+/// scheduler, expand annotations. Pure — replay calls this with the
+/// logged spec and gets the same DAG bit-for-bit.
+fn build_job(cfg: &ServeConfig, spec: &Json, at: f64, weight: i64) -> Result<OpenJob, String> {
+    let obj = spec.as_obj().map_err(|e| format!("submission: {e}"))?;
+    for key in obj.keys() {
+        if !matches!(key.as_str(), "dag" | "scheduler" | "deadline" | "tenant") {
+            return Err(format!(
+                "submission: unknown key `{key}` (dag|scheduler|deadline|tenant)"
+            ));
+        }
+    }
+    let dag_json = obj
+        .get("dag")
+        .ok_or_else(|| "submission: missing key `dag`".to_string())?;
+    let g = MXDag::from_json(dag_json).map_err(|e| format!("submission dag: {e}"))?;
+    if let Some(&h) = g.hosts().iter().max() {
+        if h >= cfg.cluster.n_hosts() {
+            return Err(format!(
+                "submission dag references host {h} but the cluster has {} hosts",
+                cfg.cluster.n_hosts()
+            ));
+        }
+    }
+    let sched_name = match obj.get("scheduler") {
+        Some(v) => v.as_str().map_err(|e| format!("submission scheduler: {e}"))?,
+        None => cfg.scheduler.as_str(),
+    };
+    if pinned_policy(sched_name)? != pinned_policy(&cfg.scheduler)? {
+        return Err(format!(
+            "scheduler `{sched_name}` pins a different engine policy than the server's \
+             `{}` — an era runs one policy for all live jobs",
+            cfg.scheduler
+        ));
+    }
+    let sched = scheduler_by_name(sched_name)?;
+    let plan = sched.plan(&g, &cfg.cluster);
+    let sim = expand(&g, &plan.ann);
+    let deadline = match obj.get("deadline") {
+        Some(v) => {
+            let d = v.as_f64().map_err(|e| format!("submission deadline: {e}"))?;
+            if !d.is_finite() || d <= 0.0 {
+                return Err(format!("submission deadline must be finite and > 0, got {d}"));
+            }
+            Some(d)
+        }
+        None => None,
+    };
+    Ok(OpenJob { at, dag: sim, deadline, weight })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mxdag-serve-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// A two-task chain DAG in the MXDag wire format: compute on host
+    /// 0, then a flow 0 → 1.
+    fn chain_dag(size: f64, dst: usize) -> Json {
+        let mut b = MXDag::builder();
+        let c = b.compute("c", 0, size);
+        let f = b.flow("f", 0, dst, size);
+        b.dep(c, f);
+        b.finalize().unwrap().to_json()
+    }
+
+    fn chain_spec(size: f64) -> Json {
+        Json::obj(vec![("dag", chain_dag(size, 1))])
+    }
+
+    fn test_config(dir_tag: &str) -> (PathBuf, ServeConfig) {
+        let dir = tmpdir(dir_tag);
+        let mut cfg = ServeConfig::new(Cluster::uniform(2), "fair").unwrap();
+        cfg.watermark = 10.0;
+        cfg.defer_max = 0.5;
+        cfg.snap_every = 4;
+        cfg.weights.insert("gold".into(), 5);
+        (dir, cfg)
+    }
+
+    #[test]
+    fn config_roundtrips_through_json() {
+        let (_, cfg) = test_config("cfg");
+        let j = cfg.to_json();
+        let back = ServeConfig::from_json(&j, cfg.snap_every).unwrap();
+        assert_eq!(back.scheduler, "fair");
+        assert_eq!(back.watermark.to_bits(), cfg.watermark.to_bits());
+        assert_eq!(back.defer_max.to_bits(), cfg.defer_max.to_bits());
+        assert_eq!(back.weights.get("gold"), Some(&5));
+        assert_eq!(back.engine.policy, Policy::fair());
+        assert_eq!(back.cluster.n_hosts(), 2);
+    }
+
+    #[test]
+    fn submit_tick_drain_lifecycle() {
+        let (dir, cfg) = test_config("life");
+        let mut svc = Service::create(&dir, cfg).unwrap();
+        let s = svc.submit(&chain_spec(1.0), 0.0).unwrap();
+        assert_eq!(s.seq, 0);
+        assert_eq!(s.state, "admitted");
+        assert!(svc.tick(0.5).unwrap());
+        // stamps are floored monotone even if the clock reads lower
+        let s2 = svc.submit(&chain_spec(1.0), 0.1).unwrap();
+        assert!(s2.at >= 0.5);
+        let rep = svc.drain().unwrap();
+        assert_eq!(rep.get("jobs").unwrap().as_f64().unwrap(), 2.0);
+        let done = rep.get("states").unwrap().get("done").unwrap().as_f64().unwrap();
+        assert_eq!(done, 2.0);
+        let st = svc.status(0).unwrap();
+        assert_eq!(st.get("outcome").unwrap().as_str().unwrap(), "completed");
+        // draining refuses new work
+        assert!(matches!(
+            svc.submit(&chain_spec(1.0), 9.0),
+            Err(SubmitError::Draining)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_submissions_are_400_not_panics() {
+        let (dir, cfg) = test_config("bad");
+        let mut svc = Service::create(&dir, cfg).unwrap();
+        for bad in [
+            Json::Arr(vec![]),
+            Json::obj(vec![("nope", Json::Null)]),
+            Json::obj(vec![]),
+            Json::obj(vec![("dag", Json::Str("x".into()))]),
+            Json::obj(vec![
+                ("dag", chain_spec(1.0).get("dag").unwrap().clone()),
+                ("deadline", Json::Num(-1.0)),
+            ]),
+            Json::obj(vec![
+                ("dag", chain_spec(1.0).get("dag").unwrap().clone()),
+                ("scheduler", Json::Str("mxdag".into())), // pins priority, server is fair
+            ]),
+        ] {
+            match svc.submit(&bad, 0.0) {
+                Err(SubmitError::Bad(_)) => {}
+                other => panic!("expected Bad, got {other:?}"),
+            }
+        }
+        // a DAG referencing a host outside the 2-host cluster
+        let spec = Json::obj(vec![("dag", chain_dag(1.0, 7))]);
+        assert!(matches!(svc.submit(&spec, 0.0), Err(SubmitError::Bad(_))));
+        // none of those left a trace
+        assert_eq!(svc.n_jobs(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overload_is_429_with_retry_hint() {
+        let (dir, mut cfg) = test_config("busy");
+        cfg.watermark = 0.5; // tiny drain budget
+        cfg.defer_max = 0.0; // shed immediately
+        let mut svc = Service::create(&dir, cfg).unwrap();
+        // saturate: a long job holds the cluster past the watermark
+        let s = svc.submit(&chain_spec(50.0), 0.0).unwrap();
+        assert_eq!(s.state, "admitted");
+        match svc.submit(&chain_spec(1.0), 0.1) {
+            Err(SubmitError::Busy { retry_after }) => assert!(retry_after > 0.0),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_matches_uninterrupted_bitwise() {
+        // one uninterrupted service vs one killed+resumed after every
+        // operation batch: identical engine fingerprints
+        let ops: Vec<(f64, Option<Json>)> = vec![
+            (0.0, Some(chain_spec(2.0))),
+            (0.3, Some(chain_spec(1.0))),
+            (0.9, None), // tick
+            (1.4, Some(chain_spec(0.5))),
+            (2.8, None),
+            (4.0, None),
+        ];
+        let run =
+            |dir: &Path, cfg: ServeConfig, kill_resume: bool| -> String {
+                let mut svc = Service::create(dir, cfg.clone()).unwrap();
+                for (t, spec) in &ops {
+                    match spec {
+                        Some(s) => {
+                            let _ = svc.submit(s, *t);
+                        }
+                        None => {
+                            svc.tick(*t).unwrap();
+                        }
+                    }
+                    if kill_resume {
+                        drop(svc); // crash: no drain, no final snapshot
+                        svc = Service::resume(dir, cfg.snap_every).unwrap();
+                    }
+                }
+                svc.drain().unwrap();
+                svc.state_text()
+            };
+        let (dir_a, cfg) = test_config("gold-a");
+        let a = run(&dir_a, cfg.clone(), false);
+        let (dir_b, _) = test_config("gold-b");
+        let b = run(&dir_b, cfg, true);
+        assert_eq!(a, b, "kill+resume diverged from uninterrupted run");
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn weights_come_from_server_config_not_client() {
+        let (dir, cfg) = test_config("w");
+        let mut svc = Service::create(&dir, cfg).unwrap();
+        let mut spec = chain_spec(1.0);
+        if let Json::Obj(m) = &mut spec {
+            m.insert("tenant".into(), Json::Str("gold".into()));
+        }
+        svc.submit(&spec, 0.0).unwrap();
+        let st = svc.status(0).unwrap();
+        assert_eq!(st.get("tenant").unwrap().as_str().unwrap(), "gold");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,306 @@
+//! Write-ahead log + snapshot for crash-safe `mxdag serve`.
+//!
+//! The determinism contract (see `sim/openloop.rs`): an [`OpenLoop`]'s
+//! outcomes are a pure function of its *call sequence* — the pushes and
+//! the advance targets — because era stops are not bitwise-neutral
+//! (splitting an era rounds `remaining`/gate rebasing differently). So
+//! the WAL records exactly that call sequence:
+//!
+//! ```text
+//! {"lsn":0,"kind":"open","config":{...}}        serve config, once
+//! {"lsn":1,"kind":"job","seq":0,"at":"4008...","tenant":"a","weight":3,"spec":{...}}
+//! {"lsn":2,"kind":"adv","to":"4008..."}
+//! {"lsn":3,"kind":"drain"}
+//! ```
+//!
+//! One JSON object per line, strictly increasing `lsn`, arrival stamps
+//! and advance targets as bit-exact `f64` hex (`util::json::f64_bits_hex`
+//! — `Json::Num` cannot round-trip every bit pattern through text).
+//! Records are appended *before* the state change they describe
+//! (write-ahead) and fsynced, so replaying the log re-issues the exact
+//! same call sequence and lands in bitwise-identical state.
+//!
+//! Compaction: every `snap_every` records the service writes
+//! `snapshot.json` (`{"lsn":N,"config":...,"state":<OpenLoop::state_json>,
+//! "jobs":[...]}`) via tmp-file + atomic rename, then truncates
+//! `wal.log`. `lsn` keeps increasing across truncations; replay skips
+//! records with `lsn <= snapshot.lsn`, so a crash between the rename
+//! and the truncate is harmless (the stale WAL prefix is ignored).
+//!
+//! Torn-tail tolerance: a crash mid-append can leave a partial final
+//! line. [`read_records`] drops an unparsable *final* line (its record
+//! was never acknowledged — the write-ahead ordering means the state
+//! change it described never happened) but treats corruption anywhere
+//! else as fatal.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+pub fn wal_path(dir: &Path) -> PathBuf {
+    dir.join("wal.log")
+}
+
+pub fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join("snapshot.json")
+}
+
+/// Append handle for `wal.log`. Every append writes one line and
+/// fsyncs before returning — an acknowledged record survives a crash.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+    /// LSN the next append will carry (strictly increasing for the
+    /// lifetime of the serve directory, across compactions).
+    pub next_lsn: u64,
+}
+
+impl Wal {
+    /// Create (or truncate) `wal.log`; `next_lsn` continues the
+    /// directory-lifetime sequence (0 for a fresh directory).
+    pub fn create(dir: &Path, next_lsn: u64) -> std::io::Result<Wal> {
+        let path = wal_path(dir);
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(Wal { file, path, next_lsn })
+    }
+
+    /// Open `wal.log` for appending after replay decided `next_lsn`.
+    /// `valid_len` is the byte length of the valid record prefix (from
+    /// [`read_records_len`]); anything past it is a torn tail from a
+    /// crash mid-append and is truncated away here — appending *after*
+    /// torn bytes would glue the next record onto the partial line and
+    /// turn a tolerable torn tail into fatal mid-file corruption on the
+    /// following resume.
+    pub fn open_append(dir: &Path, next_lsn: u64, valid_len: u64) -> std::io::Result<Wal> {
+        let path = wal_path(dir);
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        if file.metadata()?.len() > valid_len {
+            file.set_len(valid_len)?;
+            file.sync_data()?;
+        }
+        Ok(Wal { file, path, next_lsn })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record; `fields` is everything but `lsn`/`kind`.
+    /// Returns the record's LSN.
+    pub fn append(&mut self, kind: &str, fields: Vec<(&str, Json)>) -> std::io::Result<u64> {
+        let lsn = self.next_lsn;
+        let mut pairs = vec![
+            ("lsn", Json::Num(lsn as f64)),
+            ("kind", Json::Str(kind.into())),
+        ];
+        pairs.extend(fields);
+        let mut line = Json::obj(pairs).to_string();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()?;
+        self.next_lsn = lsn + 1;
+        Ok(lsn)
+    }
+}
+
+/// Read every record from `wal.log`, tolerating (and dropping) a torn
+/// final line. See [`read_records_len`].
+pub fn read_records(path: &Path) -> Result<Vec<Json>, String> {
+    read_records_len(path).map(|(recs, _)| recs)
+}
+
+/// Read every record from `wal.log`, tolerating (and dropping) a torn
+/// final line. Returns the records in order plus the byte length of
+/// the valid prefix (what [`Wal::open_append`] truncates to); validates
+/// that `lsn`s are strictly increasing. A missing file reads as empty.
+pub fn read_records_len(path: &Path) -> Result<(Vec<Json>, u64), String> {
+    let mut bytes = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut bytes)
+                .map_err(|e| format!("read {}: {e}", path.display()))?;
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok((Vec::new(), 0)),
+        Err(e) => return Err(format!("open {}: {e}", path.display())),
+    }
+    let mut out = Vec::new();
+    let mut last_lsn: Option<u64> = None;
+    let mut valid_len = bytes.len() as u64;
+    let lines: Vec<&[u8]> = bytes.split(|&b| b == b'\n').collect();
+    let mut offset = 0u64; // byte offset of the current line's start
+    for (i, line) in lines.iter().enumerate() {
+        if line.is_empty() {
+            offset += 1; // the newline that produced this empty split
+            continue;
+        }
+        // is any non-empty line after this one? (trailing "" from the
+        // final newline doesn't count)
+        let is_last = lines[i + 1..].iter().all(|l| l.is_empty());
+        let rec = match Json::parse_bytes(line).and_then(|j| {
+            let lsn = j.get("lsn")?.as_f64()? as u64;
+            let _ = j.get("kind")?.as_str()?;
+            Ok((lsn, j))
+        }) {
+            Ok(v) => v,
+            Err(e) if is_last => {
+                // torn tail: the append never acknowledged, the state
+                // change never happened — drop it
+                eprintln!(
+                    "serve: dropping torn WAL tail ({} bytes, line {}): {e}",
+                    line.len(),
+                    i + 1
+                );
+                valid_len = offset;
+                break;
+            }
+            Err(e) => {
+                return Err(format!(
+                    "corrupt WAL {} line {}: {e}",
+                    path.display(),
+                    i + 1
+                ));
+            }
+        };
+        let (lsn, j) = rec;
+        if let Some(prev) = last_lsn {
+            if lsn <= prev {
+                return Err(format!(
+                    "corrupt WAL {}: lsn {lsn} after {prev} (line {})",
+                    path.display(),
+                    i + 1
+                ));
+            }
+        }
+        last_lsn = Some(lsn);
+        out.push(j);
+        offset += line.len() as u64 + 1;
+    }
+    Ok((out, valid_len))
+}
+
+/// Write `snapshot.json` atomically: tmp file + fsync + rename.
+pub fn write_snapshot(dir: &Path, snapshot: &Json) -> std::io::Result<()> {
+    let tmp = dir.join("snapshot.json.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(snapshot.to_string().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, snapshot_path(dir))
+}
+
+/// Read `snapshot.json` if present.
+pub fn read_snapshot(dir: &Path) -> Result<Option<Json>, String> {
+    let path = snapshot_path(dir);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("read {}: {e}", path.display())),
+    };
+    Json::parse(&text)
+        .map(Some)
+        .map_err(|e| format!("parse {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "mxdag-wal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn append_read_roundtrip() {
+        let dir = tmpdir("rt");
+        let mut w = Wal::create(&dir, 0).unwrap();
+        assert_eq!(w.append("open", vec![("config", Json::Null)]).unwrap(), 0);
+        assert_eq!(
+            w.append("adv", vec![("to", Json::Str("3ff0000000000000".into()))])
+                .unwrap(),
+            1
+        );
+        let recs = read_records(&wal_path(&dir)).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("kind").unwrap().as_str().unwrap(), "open");
+        assert_eq!(recs[1].get("lsn").unwrap().as_f64().unwrap(), 1.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_midfile_corruption_is_fatal() {
+        let dir = tmpdir("torn");
+        let mut w = Wal::create(&dir, 5).unwrap();
+        w.append("adv", vec![("to", Json::Str("0".repeat(16)))]).unwrap();
+        // simulate a crash mid-append: partial final line, no newline
+        let mut f = OpenOptions::new()
+            .append(true)
+            .open(wal_path(&dir))
+            .unwrap();
+        f.write_all(b"{\"lsn\":6,\"kind\":\"adv\",\"to\":\"40").unwrap();
+        drop(f);
+        let (recs, valid_len) = read_records_len(&wal_path(&dir)).unwrap();
+        assert_eq!(recs.len(), 1, "torn tail dropped");
+
+        // reopening for append must truncate the torn bytes — else the
+        // next record would glue onto the partial line and a later
+        // resume would see fatal mid-file corruption
+        let mut w = Wal::open_append(&dir, 6, valid_len).unwrap();
+        w.append("adv", vec![("to", Json::Str("1".repeat(16)))]).unwrap();
+        let (recs, len2) = read_records_len(&wal_path(&dir)).unwrap();
+        assert_eq!(recs.len(), 2, "clean append after truncation");
+        assert_eq!(recs[1].get("lsn").unwrap().as_f64().unwrap(), 6.0);
+        assert_eq!(
+            len2,
+            std::fs::metadata(wal_path(&dir)).unwrap().len(),
+            "no torn bytes left"
+        );
+
+        // corruption in the *middle* must not be silently skipped
+        std::fs::write(
+            wal_path(&dir),
+            b"{\"lsn\":1,\"kind\":\"adv\"}\ngarbage\n{\"lsn\":2,\"kind\":\"adv\"}\n",
+        )
+        .unwrap();
+        assert!(read_records(&wal_path(&dir)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lsn_regression_is_fatal_and_missing_file_reads_empty() {
+        let dir = tmpdir("lsn");
+        std::fs::write(
+            wal_path(&dir),
+            b"{\"lsn\":4,\"kind\":\"adv\"}\n{\"lsn\":4,\"kind\":\"adv\"}\n",
+        )
+        .unwrap();
+        assert!(read_records(&wal_path(&dir)).is_err());
+        assert!(read_records(&dir.join("nope.log")).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let dir = tmpdir("snap");
+        assert!(read_snapshot(&dir).unwrap().is_none());
+        let snap = Json::obj(vec![("lsn", Json::Num(7.0)), ("state", Json::Null)]);
+        write_snapshot(&dir, &snap).unwrap();
+        let got = read_snapshot(&dir).unwrap().unwrap();
+        assert_eq!(got.get("lsn").unwrap().as_f64().unwrap(), 7.0);
+        assert!(!dir.join("snapshot.json.tmp").exists(), "tmp renamed away");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -147,6 +147,24 @@ impl StuckReason {
             StuckReason::Blocked => "blocked".into(),
         }
     }
+
+    /// Inverse of [`StuckReason::label`], used when crash-safe state
+    /// (WAL snapshots) round-trips job outcomes through JSON.
+    pub fn parse_label(s: &str) -> Option<StuckReason> {
+        if s == "starved" {
+            return Some(StuckReason::Starved { resource: None });
+        }
+        if s == "blocked" {
+            return Some(StuckReason::Blocked);
+        }
+        if let Some(r) = s.strip_prefix("starved:res") {
+            return r.parse().ok().map(|r| StuckReason::Starved { resource: Some(r) });
+        }
+        if let Some(g) = s.strip_prefix("parked:coflow") {
+            return g.parse().ok().map(|group| StuckReason::Parked { group });
+        }
+        None
+    }
 }
 
 /// Simulation failure modes.
@@ -197,6 +215,27 @@ impl std::fmt::Display for SimError {
                 write!(f, ")")
             }
             SimError::EventLimit(n) => write!(f, "event limit exceeded ({n} events)"),
+        }
+    }
+}
+
+impl SimError {
+    /// Stable machine-readable kind for structured error reports (the
+    /// CLI `outcome` line, `serve` logs).
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            SimError::Deadlock { .. } => "deadlock",
+            SimError::EventLimit(_) => "event_limit",
+        }
+    }
+
+    /// Documented process exit code for this failure: 2 = deadlock,
+    /// 3 = event-limit (1 is reserved for config errors, see README).
+    /// Shared by `simulate` (closed and `--open`) and `serve`.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            SimError::Deadlock { .. } => 2,
+            SimError::EventLimit(_) => 3,
         }
     }
 }

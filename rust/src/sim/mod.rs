@@ -37,8 +37,8 @@ pub use engine::{
 pub use horizon::{within_tolerance, FinHeap, HorizonKind, TOLERANCE_REL};
 pub use expand::{apply_annotations, expand, Annotations};
 pub use openloop::{
-    concat_jobs, poisson_arrivals, run_open, run_open_in, OpenConfig, OpenJob, OpenJobResult,
-    OpenResult, OpenSpec,
+    concat_jobs, poisson_arrivals, run_open, run_open_in, OpenConfig, OpenCounters, OpenJob,
+    OpenJobResult, OpenLoop, OpenResult, OpenSpec,
 };
 pub use recovery::{retry_backoff, JobOutcome, RecoveryPolicy};
 pub use ready::{BucketQueue, Keying, PrioKey, QueueDiscipline, ReadyQueue, ResortQueue};

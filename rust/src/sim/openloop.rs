@@ -85,10 +85,10 @@
 
 use crate::sched::settled_cluster;
 use crate::sim::dynamics::{DynAction, DynTimeline};
-use crate::sim::engine::{simulate_in, SimConfig, SimError, SimScratch, TaskTrace};
+use crate::sim::engine::{simulate_in, SimConfig, SimError, SimScratch, StuckReason, TaskTrace};
 use crate::sim::recovery::{JobOutcome, RecoveryPolicy};
 use crate::sim::spec::{Cluster, SimDag, SimKind, SimTask};
-use crate::util::json::Json;
+use crate::util::json::{f64_bits_hex, f64_from_bits_hex, Json};
 use crate::util::rng::Rng;
 
 /// Matches the engine's time-comparison epsilon.
@@ -104,6 +104,12 @@ pub struct OpenJob {
     pub dag: SimDag,
     /// Completion deadline measured from arrival, if any.
     pub deadline: Option<f64>,
+    /// Tenant weight (default 1). Deferral retests at each boundary run
+    /// in descending-weight order (stable: equal weights keep arrival
+    /// order, so an all-equal stream is bitwise identical to the
+    /// unweighted driver) — under contention a heavier tenant's deferred
+    /// job grabs freed capacity before lighter ones.
+    pub weight: i64,
 }
 
 /// Open-loop driver configuration.
@@ -407,134 +413,339 @@ impl Live {
     }
 }
 
-/// As [`run_open`], allocating a fresh scratch.
-pub fn run_open(
-    jobs: &[OpenJob],
-    cluster: &Cluster,
-    cfg: &OpenConfig,
-) -> Result<OpenResult, SimError> {
-    run_open_in(jobs, cluster, cfg, &mut SimScratch::default())
+/// Aggregate counters of a (possibly still-running) [`OpenLoop`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpenCounters {
+    pub eras: usize,
+    pub events: usize,
+    pub retries: usize,
+    pub lost_work: f64,
+    pub admitted: usize,
+    pub rejected: usize,
 }
 
-/// Run the open-loop stream (module docs), reusing `scratch` across
-/// eras — the bounded-memory entry point: the scratch grows to the
-/// largest live set's high-water mark and plateaus there no matter how
-/// many jobs stream through.
-pub fn run_open_in(
-    jobs: &[OpenJob],
-    cluster: &Cluster,
-    cfg: &OpenConfig,
-    scratch: &mut SimScratch,
-) -> Result<OpenResult, SimError> {
-    assert!(
-        cfg.watermark >= 0.0 && !cfg.watermark.is_nan(),
-        "watermark must be ≥ 0 (INFINITY = admit all)"
-    );
-    assert!(
-        cfg.defer_max >= 0.0 && cfg.defer_max.is_finite(),
-        "defer_max must be finite and ≥ 0"
-    );
-    for j in jobs {
-        assert!(j.at.is_finite() && j.at >= 0.0, "arrival times must be finite and ≥ 0");
-    }
-    let caps = settled_caps(cluster, &cfg.engine.dynamics);
-    let retry_on = matches!(cfg.engine.recovery, RecoveryPolicy::Retry { .. });
-
-    // Arrival order: by time, ties by input index (stable).
-    let mut order: Vec<usize> = (0..jobs.len()).collect();
-    order.sort_by(|&a, &b| jobs[a].at.partial_cmp(&jobs[b].at).unwrap().then(a.cmp(&b)));
-
-    let mut out: Vec<Option<OpenJobResult>> = jobs.iter().map(|_| None).collect();
-    let mut live: Vec<Live> = Vec::new();
-    let mut deferred: Vec<(usize, f64)> = Vec::new(); // (job idx, expiry), arrival order
-    let mut next = 0usize;
-    let mut now = 0.0f64;
-    let (mut eras, mut events, mut retries) = (0usize, 0usize, 0usize);
-    let mut lost_work = 0.0f64;
-    let (mut admitted, mut rejected) = (0usize, 0usize);
-
+/// Incremental open-loop driver: the era-chaining engine behind
+/// [`run_open_in`], exposed as a resumable state machine so a
+/// long-lived coordinator (`mxdag serve`) can feed arrivals one at a
+/// time, advance virtual time in increments, and serialize its exact
+/// state for crash recovery.
+///
+/// # Contract
+///
+/// * [`push`](OpenLoop::push) registers an arrival (its stamp must not
+///   predate the loop clock); [`advance_to`](OpenLoop::advance_to)
+///   processes every boundary up to the target instant, running eras in
+///   between. `advance_to(f64::INFINITY)` drains the system — exactly
+///   what [`run_open_in`] does after pushing the whole trace, so the
+///   batch path and the incremental path share every line of era logic.
+/// * Outcomes are a pure function of the *call sequence* (pushes and
+///   advance targets), not wall-clock time. Extra era stops introduced
+///   by intermediate `advance_to` targets rebase remaining bytes and
+///   gates through extra float round-trips, so two different call
+///   sequences over the same arrivals agree only to the engine's
+///   tolerance — which is why the serve WAL records every advance: a
+///   resume replays the *same* sequence and lands on bitwise-identical
+///   state (see [`state_json`](OpenLoop::state_json)).
+/// * [`state_json`](OpenLoop::state_json) at a quiescent point (between
+///   calls) captures the full driver state with bit-exact floats
+///   (`f64::to_bits` hex); [`restore`](OpenLoop::restore) rebuilds an
+///   identical loop given the original job DAGs (re-derived from logged
+///   submission specs — DAG bytes are never serialized).
+pub struct OpenLoop {
+    cluster: Cluster,
+    cfg: OpenConfig,
+    caps: SettledCaps,
+    retry_on: bool,
+    jobs: Vec<OpenJob>,
+    out: Vec<Option<OpenJobResult>>,
+    live: Vec<Live>,
+    /// (job idx, absolute expiry), in retest order.
+    deferred: Vec<(usize, f64)>,
+    /// Not-yet-arrived job indices sorted by (at, idx); `head` marks the
+    /// consumed prefix (compacted lazily).
+    pending: Vec<usize>,
+    head: usize,
+    now: f64,
+    eras: usize,
+    events: usize,
+    retries: usize,
+    lost_work: f64,
+    admitted: usize,
+    rejected: usize,
     // Era-rebuild buffers, reused so per-era allocation is bounded by
     // the live set (the driver-side half of the epoch GC).
-    let mut era_dag = SimDag::default();
-    let mut era_map: Vec<(usize, usize)> = Vec::new(); // era task -> (slot, local)
-    let mut local: Vec<usize> = Vec::new();
-    let mut attempts0: Vec<usize> = Vec::new();
+    era_dag: SimDag,
+    era_map: Vec<(usize, usize)>,
+    local: Vec<usize>,
+    attempts0: Vec<usize>,
+}
 
-    let reject = |idx: usize, at: f64, out: &mut Vec<Option<OpenJobResult>>, n: &mut usize| {
-        out[idx] = Some(OpenJobResult {
-            arrival: jobs[idx].at,
-            admitted_at: None,
-            outcome: JobOutcome::Rejected { at },
-            jct: None,
-            deadline_met: jobs[idx].deadline.map(|_| false),
-            trace: Vec::new(),
-        });
-        *n += 1;
-    };
+impl OpenLoop {
+    pub fn new(cluster: &Cluster, cfg: &OpenConfig) -> OpenLoop {
+        assert!(
+            cfg.watermark >= 0.0 && !cfg.watermark.is_nan(),
+            "watermark must be ≥ 0 (INFINITY = admit all)"
+        );
+        assert!(
+            cfg.defer_max >= 0.0 && cfg.defer_max.is_finite(),
+            "defer_max must be finite and ≥ 0"
+        );
+        let caps = settled_caps(cluster, &cfg.engine.dynamics);
+        let retry_on = matches!(cfg.engine.recovery, RecoveryPolicy::Retry { .. });
+        OpenLoop {
+            cluster: cluster.clone(),
+            cfg: cfg.clone(),
+            caps,
+            retry_on,
+            jobs: Vec::new(),
+            out: Vec::new(),
+            live: Vec::new(),
+            deferred: Vec::new(),
+            pending: Vec::new(),
+            head: 0,
+            now: 0.0,
+            eras: 0,
+            events: 0,
+            retries: 0,
+            lost_work: 0.0,
+            admitted: 0,
+            rejected: 0,
+            era_dag: SimDag::default(),
+            era_map: Vec::new(),
+            local: Vec::new(),
+            attempts0: Vec::new(),
+        }
+    }
 
-    loop {
-        // ---- stream boundary: admit / defer / shed --------------------
-        let (mut load_c, mut load_f) = live
+    /// Current loop clock (last processed boundary / era stop).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Nothing live, deferred or pending: advancing is a no-op.
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty() && self.deferred.is_empty() && self.head == self.pending.len()
+    }
+
+    pub fn counters(&self) -> OpenCounters {
+        OpenCounters {
+            eras: self.eras,
+            events: self.events,
+            retries: self.retries,
+            lost_work: self.lost_work,
+            admitted: self.admitted,
+            rejected: self.rejected,
+        }
+    }
+
+    /// `"pending" | "deferred" | "live" | "done"`, or `None` for an
+    /// unknown index.
+    pub fn job_state(&self, idx: usize) -> Option<&'static str> {
+        if idx >= self.jobs.len() {
+            return None;
+        }
+        if self.out[idx].is_some() {
+            return Some("done");
+        }
+        if self.live.iter().any(|lj| lj.idx == idx) {
+            return Some("live");
+        }
+        if self.deferred.iter().any(|&(i, _)| i == idx) {
+            return Some("deferred");
+        }
+        Some("pending")
+    }
+
+    /// Final verdict of job `idx`, once it has one.
+    pub fn result(&self, idx: usize) -> Option<&OpenJobResult> {
+        self.out.get(idx).and_then(|o| o.as_ref())
+    }
+
+    /// Latest completion / quarantine instant among settled jobs.
+    pub fn max_finish(&self) -> f64 {
+        self.out
             .iter()
-            .fold((0.0, 0.0), |(c, f), lj| {
-                let (jc, jf) = lj.load(&jobs[lj.idx].dag);
-                (c + jc, f + jf)
+            .flatten()
+            .fold(0.0f64, |m, r| match r.outcome {
+                JobOutcome::Completed { finish } => m.max(finish),
+                JobOutcome::Quarantined { at, .. } => m.max(at),
+                _ => m,
+            })
+    }
+
+    /// Register an arrival. The stamp must be finite, ≥ 0 and must not
+    /// predate the loop clock (the stream is causal). Returns the job's
+    /// index (dense, in push order).
+    pub fn push(&mut self, job: OpenJob) -> usize {
+        assert!(
+            job.at.is_finite() && job.at >= 0.0,
+            "arrival times must be finite and ≥ 0"
+        );
+        assert!(
+            job.at >= self.now - EPS,
+            "arrival at t={} predates the loop clock t={}",
+            job.at,
+            self.now
+        );
+        let idx = self.jobs.len();
+        let at = job.at;
+        self.jobs.push(job);
+        self.out.push(None);
+        // Insert into the unconsumed pending tail, key (at, idx); `idx`
+        // is the largest yet, so `<=` places ties after existing entries
+        // (stable arrival order).
+        let jobs = &self.jobs;
+        let pos = self.pending[self.head..].partition_point(|&j| jobs[j].at <= at);
+        self.pending.insert(self.head + pos, idx);
+        idx
+    }
+
+    /// Process one stream boundary at the current clock: retest deferred
+    /// jobs (descending weight, stable), expire overdue ones, then
+    /// admit / defer / shed the fresh arrivals due now (input order).
+    fn boundary(&mut self) {
+        let now = self.now;
+        let watermark = self.cfg.watermark;
+        let defer_max = self.cfg.defer_max;
+        let jobs = &self.jobs;
+        let caps = &self.caps;
+        let out = &mut self.out;
+        let live = &mut self.live;
+
+        let (mut load_c, mut load_f) = live.iter().fold((0.0, 0.0), |(c, f), lj| {
+            let (jc, jf) = lj.load(&jobs[lj.idx].dag);
+            (c + jc, f + jf)
+        });
+        let reject = |idx: usize, at: f64, out: &mut Vec<Option<OpenJobResult>>, n: &mut usize| {
+            out[idx] = Some(OpenJobResult {
+                arrival: jobs[idx].at,
+                admitted_at: None,
+                outcome: JobOutcome::Rejected { at },
+                jct: None,
+                deadline_met: jobs[idx].deadline.map(|_| false),
+                trace: Vec::new(),
             });
-        // Deferred first (oldest first), each getting a final test at
-        // its expiry before it is shed.
-        for (idx, expiry) in std::mem::take(&mut deferred) {
-            let jl = job_load(&jobs[idx].dag);
-            if drain_time((load_c + jl.0, load_f + jl.1), &caps) <= cfg.watermark {
-                live.push(Live::new(idx, &jobs[idx], now));
-                admitted += 1;
-                load_c += jl.0;
-                load_f += jl.1;
-            } else if expiry <= now + EPS {
-                reject(idx, expiry, &mut out, &mut rejected);
-            } else {
-                deferred.push((idx, expiry));
+            *n += 1;
+        };
+
+        // Deferred first, each getting a final test at its expiry before
+        // it is shed. Heavier tenants retest first (stable sort: equal
+        // weights keep the oldest-first order, bitwise identical to the
+        // unweighted driver); retained jobs keep the processing order.
+        if !self.deferred.is_empty() {
+            let mut dq = std::mem::take(&mut self.deferred);
+            dq.sort_by_key(|&(idx, _)| std::cmp::Reverse(jobs[idx].weight));
+            for (idx, expiry) in dq {
+                let jl = job_load(&jobs[idx].dag);
+                if drain_time((load_c + jl.0, load_f + jl.1), caps) <= watermark {
+                    live.push(Live::new(idx, &jobs[idx], now));
+                    self.admitted += 1;
+                    load_c += jl.0;
+                    load_f += jl.1;
+                } else if expiry <= now + EPS {
+                    reject(idx, expiry, out, &mut self.rejected);
+                } else {
+                    self.deferred.push((idx, expiry));
+                }
             }
         }
         // Fresh arrivals due now, input order.
-        while next < order.len() && jobs[order[next]].at <= now + EPS {
-            let idx = order[next];
-            next += 1;
+        while self.head < self.pending.len() && jobs[self.pending[self.head]].at <= now + EPS {
+            let idx = self.pending[self.head];
+            self.head += 1;
             let jl = job_load(&jobs[idx].dag);
-            let solo = drain_time(jl, &caps);
-            if drain_time((load_c + jl.0, load_f + jl.1), &caps) <= cfg.watermark {
+            let solo = drain_time(jl, caps);
+            if drain_time((load_c + jl.0, load_f + jl.1), caps) <= watermark {
                 live.push(Live::new(idx, &jobs[idx], now));
-                admitted += 1;
+                self.admitted += 1;
                 load_c += jl.0;
                 load_f += jl.1;
-            } else if solo > cfg.watermark || cfg.defer_max <= 0.0 {
+            } else if solo > watermark || defer_max <= 0.0 {
                 // Can never pass (or no deferral window): shed now.
-                reject(idx, now, &mut out, &mut rejected);
+                reject(idx, now, out, &mut self.rejected);
             } else {
-                deferred.push((idx, jobs[idx].at + cfg.defer_max));
+                self.deferred.push((idx, jobs[idx].at + defer_max));
             }
         }
+        // Compact the consumed pending prefix once it dominates.
+        if self.head > 32 && self.head * 2 >= self.pending.len() {
+            self.pending.drain(..self.head);
+            self.head = 0;
+        }
+    }
 
-        // ---- next boundary strictly after `now` -----------------------
-        let next_arrival = order.get(next).map(|&i| jobs[i].at);
-        let next_expiry = deferred.iter().fold(f64::INFINITY, |m, &(_, e)| m.min(e));
-        let boundary = match next_arrival {
+    /// Next boundary strictly after the clock: the earlier of the next
+    /// pending arrival and the nearest deferral expiry.
+    fn next_boundary(&self) -> Option<f64> {
+        let next_arrival = self.pending.get(self.head).map(|&i| self.jobs[i].at);
+        let next_expiry = self.deferred.iter().fold(f64::INFINITY, |m, &(_, e)| m.min(e));
+        match next_arrival {
             Some(a) => Some(a.min(next_expiry)),
             None if next_expiry.is_finite() => Some(next_expiry),
             None => None,
-        };
+        }
+    }
 
-        // ---- era ------------------------------------------------------
-        if live.is_empty() {
-            match boundary {
-                Some(b) => {
-                    now = b;
-                    continue;
+    /// Advance the stream clock to `h`, processing every boundary on the
+    /// way (module docs). `h = INFINITY` drains the system: the final
+    /// era runs with `stop: None`, so deadlock / quarantine semantics in
+    /// the drained system are exactly the closed engine's. A finite `h`
+    /// stops mid-stream with in-flight state carried for the next call.
+    /// Targets at or before the clock still process arrivals due *at*
+    /// the clock (so `push(at); advance_to(at)` admits immediately).
+    pub fn advance_to(&mut self, h: f64, scratch: &mut SimScratch) -> Result<(), SimError> {
+        assert!(!h.is_nan(), "advance target must not be NaN");
+        loop {
+            self.boundary();
+            if h <= self.now + EPS {
+                return Ok(());
+            }
+            let nb = self.next_boundary();
+            if self.live.is_empty() {
+                match nb {
+                    Some(b) if b <= h => {
+                        self.now = b;
+                        continue;
+                    }
+                    // Idle until past `h` (or forever): nothing to run.
+                    // The clock stays put — it only tracks processed
+                    // boundaries, and an idle hop is not one.
+                    _ => return Ok(()),
                 }
-                None => break,
+            }
+            let stop_abs = match nb {
+                Some(b) => Some(b.min(h)),
+                None if h.is_finite() => Some(h),
+                None => None,
+            };
+            self.run_era(stop_abs, scratch)?;
+            match stop_abs {
+                Some(s) => self.now = s,
+                None => {
+                    debug_assert!(self.live.is_empty(), "final era must retire every live job");
+                    return Ok(());
+                }
             }
         }
+    }
 
-        // Rebuild the compacted live-jobs DAG on the era clock.
+    /// One closed-engine era over the compacted live set, stopping at
+    /// `stop_abs` (absolute; `None` = run to completion), then harvest
+    /// carries and retire finished / quarantined jobs (epoch GC).
+    fn run_era(&mut self, stop_abs: Option<f64>, scratch: &mut SimScratch) -> Result<(), SimError> {
+        let now = self.now;
+        let retry_on = self.retry_on;
+
+        // Rebuild the compacted live-jobs DAG on the era clock. Buffers
+        // are taken out and restored so the borrows stay field-disjoint.
+        let mut era_dag = std::mem::take(&mut self.era_dag);
+        let mut era_map = std::mem::take(&mut self.era_map);
+        let mut local = std::mem::take(&mut self.local);
+        let mut attempts0 = std::mem::take(&mut self.attempts0);
         era_dag.tasks.clear();
         era_dag.preds.clear();
         era_dag.succs.clear();
@@ -543,8 +754,8 @@ pub fn run_open_in(
         attempts0.clear();
         let mut any_attempts = false;
         let (mut orig_off, mut cof_off) = (0usize, 0usize);
-        for (slot, lj) in live.iter().enumerate() {
-            let jd = &jobs[lj.idx].dag;
+        for (slot, lj) in self.live.iter().enumerate() {
+            let jd = &self.jobs[lj.idx].dag;
             local.clear();
             local.resize(jd.len(), usize::MAX);
             for lt in 0..jd.len() {
@@ -583,133 +794,529 @@ pub fn run_open_in(
             cof_off += lj.coflows;
         }
 
-        let mut ecfg = cfg.engine.clone();
-        ecfg.stop = boundary.map(|b| b - now);
-        if !cfg.engine.dynamics.is_empty() {
-            ecfg.dynamics = fold_dynamics(&cfg.engine.dynamics, now);
+        let mut ecfg = self.cfg.engine.clone();
+        ecfg.stop = stop_abs.map(|b| b - now);
+        if !self.cfg.engine.dynamics.is_empty() {
+            ecfg.dynamics = fold_dynamics(&self.cfg.engine.dynamics, now);
         }
         ecfg.attempts0 = if any_attempts { attempts0.clone() } else { Vec::new() };
 
-        let r = simulate_in(&era_dag, cluster, &ecfg, scratch)?;
-        eras += 1;
-        events += r.events;
-        retries += r.retries;
-        lost_work += r.lost_work;
+        let res = simulate_in(&era_dag, &self.cluster, &ecfg, scratch);
+        self.era_dag = era_dag;
+        self.local = local;
+        self.attempts0 = attempts0;
+        let r = match res {
+            Ok(r) => r,
+            Err(e) => {
+                self.era_map = era_map;
+                return Err(e);
+            }
+        };
+        self.eras += 1;
+        self.events += r.events;
+        self.retries += r.retries;
+        self.lost_work += r.lost_work;
 
         // ---- harvest --------------------------------------------------
-        for (e, &(slot, lt)) in era_map.iter().enumerate() {
-            let lj = &mut live[slot];
-            let tr = r.trace[e];
-            if tr.start.is_finite() && lj.start_abs[lt].is_nan() {
-                lj.start_abs[lt] = now + tr.start;
-            }
-            if tr.finish.is_finite() {
-                lj.done[lt] = true;
-                lj.remaining[lt] = 0.0;
-                lj.finish_abs[lt] = now + tr.finish;
-            } else if let Some(st) = r.stopped.as_ref() {
-                if !st.attempts.is_empty() && st.attempts[e] > lj.attempts[lt] {
-                    // Killed this era: prior-era progress is lost too —
-                    // restore the loss the engine could not see, then
-                    // rebase remaining onto the original size.
-                    let orig = jobs[lj.idx].dag.tasks[lt].size;
-                    let era_size = lj.remaining[lt];
-                    let kills = (st.attempts[e] - lj.attempts[lt]) as f64;
-                    lost_work += kills * (orig - era_size);
-                    lj.remaining[lt] = st.remaining[e] + (orig - era_size);
-                } else {
-                    lj.remaining[lt] = st.remaining[e];
+        {
+            let jobs = &self.jobs;
+            let live = &mut self.live;
+            let mut extra_lost = 0.0f64;
+            for (e, &(slot, lt)) in era_map.iter().enumerate() {
+                let lj = &mut live[slot];
+                let tr = r.trace[e];
+                if tr.start.is_finite() && lj.start_abs[lt].is_nan() {
+                    lj.start_abs[lt] = now + tr.start;
                 }
-                if !st.attempts.is_empty() {
-                    lj.attempts[lt] = st.attempts[e];
-                    lj.gate_abs[lt] = lj.gate_abs[lt].max(now + st.retry_gate[e]);
+                if tr.finish.is_finite() {
+                    lj.done[lt] = true;
+                    lj.remaining[lt] = 0.0;
+                    lj.finish_abs[lt] = now + tr.finish;
+                } else if let Some(st) = r.stopped.as_ref() {
+                    if !st.attempts.is_empty() && st.attempts[e] > lj.attempts[lt] {
+                        // Killed this era: prior-era progress is lost too —
+                        // restore the loss the engine could not see, then
+                        // rebase remaining onto the original size.
+                        let orig = jobs[lj.idx].dag.tasks[lt].size;
+                        let era_size = lj.remaining[lt];
+                        let kills = (st.attempts[e] - lj.attempts[lt]) as f64;
+                        extra_lost += kills * (orig - era_size);
+                        lj.remaining[lt] = st.remaining[e] + (orig - era_size);
+                    } else {
+                        lj.remaining[lt] = st.remaining[e];
+                    }
+                    if !st.attempts.is_empty() {
+                        lj.attempts[lt] = st.attempts[e];
+                        lj.gate_abs[lt] = lj.gate_abs[lt].max(now + st.retry_gate[e]);
+                    }
                 }
             }
+            self.lost_work += extra_lost;
         }
+        self.era_map = era_map;
 
         // ---- retire (epoch GC) ----------------------------------------
-        let mut slot = 0usize;
-        live.retain(|lj| {
-            let verdict = match r.jobs[slot] {
-                JobOutcome::Quarantined { reason, at } => {
-                    Some(JobOutcome::Quarantined { reason, at: now + at })
+        {
+            let jobs = &mut self.jobs;
+            let out = &mut self.out;
+            let mut slot = 0usize;
+            self.live.retain(|lj| {
+                let verdict = match r.jobs[slot] {
+                    JobOutcome::Quarantined { reason, at } => {
+                        Some(JobOutcome::Quarantined { reason, at: now + at })
+                    }
+                    JobOutcome::Exhausted { attempts } => {
+                        Some(JobOutcome::Exhausted { attempts })
+                    }
+                    _ if lj.done.iter().all(|&d| d) => {
+                        let finish = lj
+                            .finish_abs
+                            .iter()
+                            .fold(lj.admit, |m, &f| if f.is_finite() { m.max(f) } else { m });
+                        Some(JobOutcome::Completed { finish })
+                    }
+                    _ => None,
+                };
+                slot += 1;
+                if let Some(outcome) = verdict {
+                    let job = &jobs[lj.idx];
+                    let jct = outcome.finish().map(|f| f - job.at);
+                    out[lj.idx] = Some(OpenJobResult {
+                        arrival: job.at,
+                        admitted_at: Some(lj.admit),
+                        outcome,
+                        jct,
+                        deadline_met: job.deadline.map(|d| jct.map_or(false, |t| t <= d)),
+                        trace: lj
+                            .start_abs
+                            .iter()
+                            .zip(&lj.finish_abs)
+                            .map(|(&s, &f)| TaskTrace { start: s, finish: f })
+                            .collect(),
+                    });
+                    // The retired job's DAG is never consulted again:
+                    // free it so driver memory tracks the live set.
+                    jobs[lj.idx].dag = SimDag::default();
+                    false
+                } else {
+                    true
                 }
-                JobOutcome::Exhausted { attempts } => Some(JobOutcome::Exhausted { attempts }),
-                _ if lj.done.iter().all(|&d| d) => {
-                    let finish = lj
-                        .finish_abs
-                        .iter()
-                        .fold(lj.admit, |m, &f| if f.is_finite() { m.max(f) } else { m });
-                    Some(JobOutcome::Completed { finish })
+            });
+        }
+        Ok(())
+    }
+
+    /// Finish the stream: every job must already have a verdict (call
+    /// `advance_to(INFINITY)` first).
+    pub fn into_result(self) -> OpenResult {
+        let results: Vec<OpenJobResult> = self
+            .out
+            .into_iter()
+            .map(|o| o.expect("every job must have a verdict"))
+            .collect();
+        let mut makespan = 0.0f64;
+        let mut quarantined = 0usize;
+        let mut completed = 0usize;
+        for j in &results {
+            match j.outcome {
+                JobOutcome::Completed { finish } => {
+                    completed += 1;
+                    makespan = makespan.max(finish);
                 }
-                _ => None,
-            };
-            slot += 1;
-            if let Some(outcome) = verdict {
-                let job = &jobs[lj.idx];
-                let jct = outcome.finish().map(|f| f - job.at);
-                out[lj.idx] = Some(OpenJobResult {
-                    arrival: job.at,
-                    admitted_at: Some(lj.admit),
-                    outcome,
-                    jct,
-                    deadline_met: job.deadline.map(|d| jct.map_or(false, |t| t <= d)),
-                    trace: lj
-                        .start_abs
+                JobOutcome::Quarantined { at, .. } => {
+                    quarantined += 1;
+                    makespan = makespan.max(at);
+                }
+                JobOutcome::Exhausted { .. } => quarantined += 1,
+                JobOutcome::Rejected { .. } => {}
+            }
+        }
+        OpenResult {
+            jobs: results,
+            makespan,
+            eras: self.eras,
+            events: self.events,
+            retries: self.retries,
+            lost_work: self.lost_work,
+            admitted: self.admitted,
+            rejected: self.rejected,
+            quarantined,
+            completed,
+        }
+    }
+
+    /// Serialize the full driver state at a quiescent point, floats as
+    /// `f64::to_bits` hex so [`restore`](OpenLoop::restore) is bitwise.
+    /// Job DAGs are *not* serialized — the restorer re-derives them from
+    /// the logged submission specs (same spec text → same plan → same
+    /// DAG, by determinism of the scheduler pipeline).
+    pub fn state_json(&self) -> Json {
+        let jobs: Vec<Json> = (0..self.jobs.len())
+            .map(|idx| {
+                if let Some(r) = &self.out[idx] {
+                    Json::obj(vec![
+                        ("state", Json::Str("done".into())),
+                        ("result", result_bits_json(r)),
+                    ])
+                } else if let Some(lj) = self.live.iter().find(|lj| lj.idx == idx) {
+                    let hexv = |v: &[f64]| Json::Arr(v.iter().map(|&x| jhex(x)).collect());
+                    Json::obj(vec![
+                        ("state", Json::Str("live".into())),
+                        ("admit", jhex(lj.admit)),
+                        ("remaining", hexv(&lj.remaining)),
+                        ("done", Json::Arr(lj.done.iter().map(|&d| Json::Bool(d)).collect())),
+                        ("gate", hexv(&lj.gate_abs)),
+                        (
+                            "attempts",
+                            Json::Arr(
+                                lj.attempts.iter().map(|&a| Json::Num(a as f64)).collect(),
+                            ),
+                        ),
+                        ("start", hexv(&lj.start_abs)),
+                        ("finish", hexv(&lj.finish_abs)),
+                    ])
+                } else {
+                    Json::obj(vec![("state", Json::Str("queued".into()))])
+                }
+            })
+            .collect();
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("now", jhex(self.now)),
+            ("eras", Json::Num(self.eras as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("lost_work", jhex(self.lost_work)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("jobs", Json::Arr(jobs)),
+            (
+                "deferred",
+                Json::Arr(
+                    self.deferred
                         .iter()
-                        .zip(&lj.finish_abs)
-                        .map(|(&s, &f)| TaskTrace { start: s, finish: f })
+                        .map(|&(i, e)| Json::Arr(vec![Json::Num(i as f64), jhex(e)]))
                         .collect(),
-                });
-                false
-            } else {
-                true
+                ),
+            ),
+            (
+                "pending",
+                Json::Arr(
+                    self.pending[self.head..]
+                        .iter()
+                        .map(|&i| Json::Num(i as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild a loop from [`state_json`](OpenLoop::state_json) output.
+    /// `fetch(idx)` must return the original [`OpenJob`] for every
+    /// not-yet-done job (the caller re-derives it from its logged
+    /// submission spec); it is not called for done jobs.
+    pub fn restore(
+        cluster: &Cluster,
+        cfg: &OpenConfig,
+        state: &Json,
+        fetch: &mut dyn FnMut(usize) -> Result<OpenJob, String>,
+    ) -> Result<OpenLoop, String> {
+        let ctx = |e: crate::util::json::JsonError| format!("open state: {e}");
+        if state.get("v").map_err(ctx)?.as_f64().map_err(ctx)? != 1.0 {
+            return Err("open state: unsupported version".into());
+        }
+        let mut lp = OpenLoop::new(cluster, cfg);
+        lp.now = unhex(state.get("now").map_err(ctx)?, "open state now")?;
+        lp.eras = state.get("eras").map_err(ctx)?.as_usize().map_err(ctx)?;
+        lp.events = state.get("events").map_err(ctx)?.as_usize().map_err(ctx)?;
+        lp.retries = state.get("retries").map_err(ctx)?.as_usize().map_err(ctx)?;
+        lp.lost_work = unhex(state.get("lost_work").map_err(ctx)?, "open state lost_work")?;
+        lp.admitted = state.get("admitted").map_err(ctx)?.as_usize().map_err(ctx)?;
+        lp.rejected = state.get("rejected").map_err(ctx)?.as_usize().map_err(ctx)?;
+
+        let jobs = state.get("jobs").map_err(ctx)?.as_arr().map_err(ctx)?;
+        for (idx, entry) in jobs.iter().enumerate() {
+            let what = || format!("open state jobs[{idx}]");
+            let st = entry
+                .get("state")
+                .and_then(|s| s.as_str())
+                .map_err(|e| format!("{}: {e}", what()))?;
+            match st {
+                "done" => {
+                    let r = result_bits_parse(entry.get("result").map_err(|e| {
+                        format!("{}: {e}", what())
+                    })?)
+                    .map_err(|e| format!("{}: {e}", what()))?;
+                    // The DAG of a settled job is never consulted again.
+                    lp.jobs.push(OpenJob {
+                        at: r.arrival,
+                        dag: SimDag::default(),
+                        deadline: None,
+                        weight: 1,
+                    });
+                    lp.out.push(Some(r));
+                }
+                "live" => {
+                    let job = fetch(idx)?;
+                    let n = job.dag.len();
+                    let f64s = |key: &str| -> Result<Vec<f64>, String> {
+                        let arr = entry
+                            .get(key)
+                            .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+                            .map_err(|e| format!("{} {key}: {e}", what()))?;
+                        arr.iter()
+                            .map(|v| unhex(v, key))
+                            .collect::<Result<Vec<f64>, String>>()
+                            .map_err(|e| format!("{}: {e}", what()))
+                    };
+                    let admit = unhex(
+                        entry.get("admit").map_err(|e| format!("{}: {e}", what()))?,
+                        "admit",
+                    )?;
+                    let mut lj = Live::new(idx, &job, admit);
+                    lj.remaining = f64s("remaining")?;
+                    lj.gate_abs = f64s("gate")?;
+                    lj.start_abs = f64s("start")?;
+                    lj.finish_abs = f64s("finish")?;
+                    lj.done = entry
+                        .get("done")
+                        .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+                        .map_err(|e| format!("{} done: {e}", what()))?
+                        .iter()
+                        .map(|v| v.as_bool())
+                        .collect::<Result<Vec<bool>, _>>()
+                        .map_err(|e| format!("{} done: {e}", what()))?;
+                    lj.attempts = entry
+                        .get("attempts")
+                        .and_then(|v| v.as_arr().map(|a| a.to_vec()))
+                        .map_err(|e| format!("{} attempts: {e}", what()))?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<Vec<usize>, _>>()
+                        .map_err(|e| format!("{} attempts: {e}", what()))?;
+                    for (k, len) in [
+                        ("remaining", lj.remaining.len()),
+                        ("done", lj.done.len()),
+                        ("gate", lj.gate_abs.len()),
+                        ("attempts", lj.attempts.len()),
+                        ("start", lj.start_abs.len()),
+                        ("finish", lj.finish_abs.len()),
+                    ] {
+                        if len != n {
+                            return Err(format!(
+                                "{} {k}: length {len} != dag tasks {n}",
+                                what()
+                            ));
+                        }
+                    }
+                    lp.jobs.push(job);
+                    lp.out.push(None);
+                    lp.live.push(lj);
+                }
+                "queued" => {
+                    let job = fetch(idx)?;
+                    lp.jobs.push(job);
+                    lp.out.push(None);
+                }
+                other => return Err(format!("{}: unknown state `{other}`", what())),
             }
+        }
+
+        let mut queued_seen = vec![false; lp.jobs.len()];
+        for d in state.get("deferred").map_err(ctx)?.as_arr().map_err(ctx)? {
+            let pair = d.as_arr().map_err(ctx)?;
+            if pair.len() != 2 {
+                return Err("open state deferred: expected [idx, expiry]".into());
+            }
+            let idx = pair[0].as_usize().map_err(ctx)?;
+            let expiry = unhex(&pair[1], "open state deferred expiry")?;
+            if idx >= lp.jobs.len() || lp.out[idx].is_some() {
+                return Err(format!("open state deferred: bad job index {idx}"));
+            }
+            if std::mem::replace(&mut queued_seen[idx], true) {
+                return Err(format!("open state: job {idx} queued twice"));
+            }
+            lp.deferred.push((idx, expiry));
+        }
+        for p in state.get("pending").map_err(ctx)?.as_arr().map_err(ctx)? {
+            let idx = p.as_usize().map_err(ctx)?;
+            if idx >= lp.jobs.len() || lp.out[idx].is_some() {
+                return Err(format!("open state pending: bad job index {idx}"));
+            }
+            if std::mem::replace(&mut queued_seen[idx], true) {
+                return Err(format!("open state: job {idx} queued twice"));
+            }
+            lp.pending.push(idx);
+        }
+        for w in lp.pending.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (ta, tb) = (lp.jobs[a].at, lp.jobs[b].at);
+            if ta > tb || (ta == tb && a > b) {
+                return Err("open state pending: not sorted by (at, idx)".into());
+            }
+        }
+        for idx in 0..lp.jobs.len() {
+            let settled = lp.out[idx].is_some()
+                || lp.live.iter().any(|lj| lj.idx == idx)
+                || queued_seen[idx];
+            if !settled {
+                return Err(format!("open state: job {idx} is in no queue and has no verdict"));
+            }
+        }
+        Ok(lp)
+    }
+}
+
+/// Bit-exact float for crash-safe state.
+fn jhex(x: f64) -> Json {
+    Json::Str(f64_bits_hex(x))
+}
+
+fn unhex(j: &Json, what: &str) -> Result<f64, String> {
+    let s = j.as_str().map_err(|e| format!("{what}: {e}"))?;
+    f64_from_bits_hex(s).map_err(|e| format!("{what}: {e}"))
+}
+
+fn opt_jhex(x: Option<f64>) -> Json {
+    x.map_or(Json::Null, jhex)
+}
+
+fn opt_unhex(j: &Json, what: &str) -> Result<Option<f64>, String> {
+    match j {
+        Json::Null => Ok(None),
+        v => unhex(v, what).map(Some),
+    }
+}
+
+/// Bit-exact JSON form of a [`JobOutcome`] (distinct from the human
+/// [`JobOutcome::to_json`]: times are bit-hex strings).
+fn outcome_bits_json(o: &JobOutcome) -> Json {
+    match *o {
+        JobOutcome::Completed { finish } => Json::obj(vec![
+            ("kind", Json::Str("completed".into())),
+            ("finish", jhex(finish)),
+        ]),
+        JobOutcome::Quarantined { reason, at } => Json::obj(vec![
+            ("kind", Json::Str("quarantined".into())),
+            ("reason", Json::Str(reason.label())),
+            ("at", jhex(at)),
+        ]),
+        JobOutcome::Exhausted { attempts } => Json::obj(vec![
+            ("kind", Json::Str("exhausted".into())),
+            ("attempts", Json::Num(attempts as f64)),
+        ]),
+        JobOutcome::Rejected { at } => {
+            Json::obj(vec![("kind", Json::Str("rejected".into())), ("at", jhex(at))])
+        }
+    }
+}
+
+fn outcome_bits_parse(j: &Json) -> Result<JobOutcome, String> {
+    let ctx = |e: crate::util::json::JsonError| format!("outcome: {e}");
+    match j.get("kind").map_err(ctx)?.as_str().map_err(ctx)? {
+        "completed" => Ok(JobOutcome::Completed {
+            finish: unhex(j.get("finish").map_err(ctx)?, "outcome finish")?,
+        }),
+        "quarantined" => {
+            let label = j.get("reason").map_err(ctx)?.as_str().map_err(ctx)?;
+            let reason = StuckReason::parse_label(label)
+                .ok_or_else(|| format!("outcome: bad stuck reason `{label}`"))?;
+            Ok(JobOutcome::Quarantined {
+                reason,
+                at: unhex(j.get("at").map_err(ctx)?, "outcome at")?,
+            })
+        }
+        "exhausted" => Ok(JobOutcome::Exhausted {
+            attempts: j.get("attempts").map_err(ctx)?.as_usize().map_err(ctx)?,
+        }),
+        "rejected" => Ok(JobOutcome::Rejected {
+            at: unhex(j.get("at").map_err(ctx)?, "outcome at")?,
+        }),
+        other => Err(format!("outcome: unknown kind `{other}`")),
+    }
+}
+
+/// Bit-exact JSON form of a settled [`OpenJobResult`].
+fn result_bits_json(r: &OpenJobResult) -> Json {
+    Json::obj(vec![
+        ("arrival", jhex(r.arrival)),
+        ("admitted_at", opt_jhex(r.admitted_at)),
+        ("outcome", outcome_bits_json(&r.outcome)),
+        ("jct", opt_jhex(r.jct)),
+        (
+            "deadline_met",
+            r.deadline_met.map_or(Json::Null, Json::Bool),
+        ),
+        (
+            "trace",
+            Json::Arr(
+                r.trace
+                    .iter()
+                    .map(|t| Json::Arr(vec![jhex(t.start), jhex(t.finish)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn result_bits_parse(j: &Json) -> Result<OpenJobResult, String> {
+    let ctx = |e: crate::util::json::JsonError| format!("result: {e}");
+    let deadline_met = match j.get("deadline_met").map_err(ctx)? {
+        Json::Null => None,
+        v => Some(v.as_bool().map_err(ctx)?),
+    };
+    let mut trace = Vec::new();
+    for t in j.get("trace").map_err(ctx)?.as_arr().map_err(ctx)? {
+        let pair = t.as_arr().map_err(ctx)?;
+        if pair.len() != 2 {
+            return Err("result trace: expected [start, finish]".into());
+        }
+        trace.push(TaskTrace {
+            start: unhex(&pair[0], "trace start")?,
+            finish: unhex(&pair[1], "trace finish")?,
         });
-
-        match boundary {
-            Some(b) => now = b,
-            None => {
-                debug_assert!(live.is_empty(), "final era must retire every live job");
-                break;
-            }
-        }
     }
-
-    // ---- assemble -----------------------------------------------------
-    let mut makespan = 0.0f64;
-    let mut quarantined = 0usize;
-    let mut completed = 0usize;
-    let results: Vec<OpenJobResult> = out
-        .into_iter()
-        .map(|o| o.expect("every job must have a verdict"))
-        .collect();
-    for j in &results {
-        match j.outcome {
-            JobOutcome::Completed { finish } => {
-                completed += 1;
-                makespan = makespan.max(finish);
-            }
-            JobOutcome::Quarantined { at, .. } => {
-                quarantined += 1;
-                makespan = makespan.max(at);
-            }
-            JobOutcome::Exhausted { .. } => quarantined += 1,
-            JobOutcome::Rejected { .. } => {}
-        }
-    }
-    Ok(OpenResult {
-        jobs: results,
-        makespan,
-        eras,
-        events,
-        retries,
-        lost_work,
-        admitted,
-        rejected,
-        quarantined,
-        completed,
+    Ok(OpenJobResult {
+        arrival: unhex(j.get("arrival").map_err(ctx)?, "result arrival")?,
+        admitted_at: opt_unhex(j.get("admitted_at").map_err(ctx)?, "result admitted_at")?,
+        outcome: outcome_bits_parse(j.get("outcome").map_err(ctx)?)?,
+        jct: opt_unhex(j.get("jct").map_err(ctx)?, "result jct")?,
+        deadline_met,
+        trace,
     })
+}
+
+/// As [`run_open`], allocating a fresh scratch.
+pub fn run_open(
+    jobs: &[OpenJob],
+    cluster: &Cluster,
+    cfg: &OpenConfig,
+) -> Result<OpenResult, SimError> {
+    run_open_in(jobs, cluster, cfg, &mut SimScratch::default())
+}
+
+/// Run the open-loop stream (module docs), reusing `scratch` across
+/// eras — the bounded-memory entry point: the scratch grows to the
+/// largest live set's high-water mark and plateaus there no matter how
+/// many jobs stream through. Implemented as push-everything +
+/// `advance_to(INFINITY)` over [`OpenLoop`]; with an infinite target
+/// every era stops exactly at the next stream boundary, so this is
+/// bit-identical to the pre-incremental batch driver.
+pub fn run_open_in(
+    jobs: &[OpenJob],
+    cluster: &Cluster,
+    cfg: &OpenConfig,
+    scratch: &mut SimScratch,
+) -> Result<OpenResult, SimError> {
+    for j in jobs {
+        assert!(j.at.is_finite() && j.at >= 0.0, "arrival times must be finite and ≥ 0");
+    }
+    let mut lp = OpenLoop::new(cluster, cfg);
+    for j in jobs {
+        lp.push(j.clone());
+    }
+    lp.advance_to(f64::INFINITY, scratch)?;
+    Ok(lp.into_result())
 }
 
 /// Rebase the absolute timeline onto an era starting at `s`: past
@@ -760,6 +1367,29 @@ pub struct OpenSpec {
 impl OpenSpec {
     pub fn from_json(j: &Json) -> Result<OpenSpec, String> {
         let obj = j.as_obj().map_err(|e| format!("open spec: {e}"))?;
+        // Reject unknown keys so a misspelled field is a pinpointed 400
+        // from `serve`, not a silently-ignored default.
+        for k in obj.keys() {
+            if !matches!(
+                k.as_str(),
+                "arrivals" | "poisson" | "watermark" | "defer_max" | "deadline"
+            ) {
+                return Err(format!(
+                    "open spec: unknown key `{k}` (known: arrivals, poisson, watermark, \
+                     defer_max, deadline)"
+                ));
+            }
+        }
+        if let Some(p) = obj.get("poisson") {
+            let pobj = p.as_obj().map_err(|e| format!("open spec poisson: {e}"))?;
+            for k in pobj.keys() {
+                if !matches!(k.as_str(), "seed" | "rate" | "n") {
+                    return Err(format!(
+                        "open spec poisson: unknown key `{k}` (known: seed, rate, n)"
+                    ));
+                }
+            }
+        }
         let arrivals = match (obj.get("arrivals"), obj.get("poisson")) {
             (Some(_), Some(_)) => {
                 return Err("open spec: give `arrivals` or `poisson`, not both".into())
@@ -829,7 +1459,7 @@ impl OpenSpec {
     pub fn jobs(&self, dag: &SimDag) -> Vec<OpenJob> {
         self.arrivals
             .iter()
-            .map(|&at| OpenJob { at, dag: dag.clone(), deadline: self.deadline })
+            .map(|&at| OpenJob { at, dag: dag.clone(), deadline: self.deadline, weight: 1 })
             .collect()
     }
 }
@@ -853,7 +1483,7 @@ mod tests {
             gate: 0.0,
             coflow: None,
         });
-        OpenJob { at, dag: d, deadline: None }
+        OpenJob { at, dag: d, deadline: None, weight: 1 }
     }
 
     /// compute → flow chain starting on `host`, flowing to `host + 1`.
@@ -878,7 +1508,7 @@ mod tests {
             coflow: None,
         });
         d.dep(c, f);
-        OpenJob { at, dag: d, deadline: None }
+        OpenJob { at, dag: d, deadline: None, weight: 1 }
     }
 
     #[test]
@@ -1088,11 +1718,182 @@ mod tests {
             r#"{"arrivals": [-1.0]}"#,
             r#"{"poisson": {"seed": 1, "rate": 0.0, "n": 2}}"#,
             r#"{"arrivals": [0.0], "watermark": -2.0}"#,
-            r#"{"arrivals": [0.0], "defer_max": 1e999}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(OpenSpec::from_json(&j).is_err(), "must reject {bad}");
         }
+        // Non-finite defer_max can no longer be written in JSON text (the
+        // hardened parser rejects 1e999), but the spec check still guards
+        // hand-built values.
+        let j = Json::obj(vec![
+            ("arrivals", Json::Arr(vec![Json::Num(0.0)])),
+            ("defer_max", Json::Num(f64::INFINITY)),
+        ]);
+        assert!(OpenSpec::from_json(&j).is_err());
+    }
+
+    /// Satellite: structured spec errors pinpoint the offending key with
+    /// expected/got, and misspelled keys are called out by name.
+    #[test]
+    fn open_spec_errors_are_actionable() {
+        let e = OpenSpec::from_json(
+            &Json::parse(r#"{"arrivals": [0.0], "watermrk": 5}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown key `watermrk`"), "got: {e}");
+        assert!(e.contains("watermark"), "should list known keys: {e}");
+
+        let e = OpenSpec::from_json(
+            &Json::parse(r#"{"arrivals": [0.0], "watermark": "high"}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("watermark"), "got: {e}");
+        assert!(e.contains("wanted number") && e.contains("got string"), "got: {e}");
+
+        let e = OpenSpec::from_json(
+            &Json::parse(r#"{"poisson": {"seed": 1, "rate": 1.0, "count": 5}}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown key `count`"), "got: {e}");
+
+        let e = OpenSpec::from_json(
+            &Json::parse(r#"{"arrivals": [0.0, "soon"]}"#).unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("arrivals[1]"), "got: {e}");
+    }
+
+    #[test]
+    fn incremental_ticks_match_batch_within_tolerance() {
+        // Same arrivals, different advance sequences: intermediate
+        // targets split eras, which perturbs carried floats only at
+        // rounding scale. Pushes arrive out of stamp order to exercise
+        // the pending insertion sort.
+        let jobs = vec![
+            one_task_job(1.0, 1, 3.0),
+            chain_job(0.0, 0, 2.0),
+            chain_job(2.5, 0, 1.0),
+        ];
+        let cluster = Cluster::uniform(3);
+        let cfg = OpenConfig::default();
+        let batch = run_open(&jobs, &cluster, &cfg).unwrap();
+
+        let mut scratch = SimScratch::default();
+        let mut lp = OpenLoop::new(&cluster, &cfg);
+        for j in &jobs {
+            lp.push(j.clone());
+        }
+        for h in [0.5, 1.0, 1.7, 2.5, 3.25, 4.0] {
+            lp.advance_to(h, &mut scratch).unwrap();
+        }
+        lp.advance_to(f64::INFINITY, &mut scratch).unwrap();
+        let inc = lp.into_result();
+        assert_eq!(inc.completed, batch.completed);
+        assert_eq!(inc.admitted, batch.admitted);
+        for (a, b) in inc.jobs.iter().zip(&batch.jobs) {
+            match (a.jct, b.jct) {
+                (Some(x), Some(y)) => {
+                    assert!((x - y).abs() <= 1e-6 * x.abs().max(1.0), "jct {x} vs {y}")
+                }
+                (x, y) => assert_eq!(x.is_some(), y.is_some()),
+            }
+        }
+        assert!((inc.makespan - batch.makespan).abs() <= 1e-6 * batch.makespan.max(1.0));
+    }
+
+    #[test]
+    fn snapshot_restore_is_bitwise() {
+        // Deferral + retry + a mid-stream host crash: the snapshot
+        // carries remaining bytes, retry gates, attempts, the deferred
+        // queue and settled results; a loop restored at any tick must
+        // finish bit-identically to the uninterrupted one under the
+        // same advance sequence.
+        let mut cfg = OpenConfig { watermark: 5.0, defer_max: 6.0, ..OpenConfig::default() };
+        cfg.engine.recovery = RecoveryPolicy::Retry { max_attempts: 3, backoff: 0.5 };
+        cfg.engine.dynamics = DynTimeline::new()
+            .with(1.5, DynAction::FailHost { host: 1 })
+            .with(3.0, DynAction::RestoreHost { host: 1 });
+        let jobs = vec![
+            one_task_job(0.0, 0, 4.0),
+            one_task_job(0.5, 1, 4.0),
+            one_task_job(1.0, 0, 9.0), // over the watermark → defers
+            one_task_job(2.0, 1, 2.0),
+        ];
+        let cluster = Cluster::uniform(2);
+        let ticks = [0.7, 1.2, 2.0, 2.6, 3.5, 5.0];
+
+        let run = |resume_at: Option<usize>| -> String {
+            let mut scratch = SimScratch::default();
+            let mut lp = OpenLoop::new(&cluster, &cfg);
+            for j in &jobs {
+                lp.push(j.clone());
+            }
+            for (i, &h) in ticks.iter().enumerate() {
+                if Some(i) == resume_at {
+                    // "Crash": serialize through text, drop, rebuild
+                    // from state + original specs with a cold scratch.
+                    let state = Json::parse(&lp.state_json().to_string()).unwrap();
+                    lp = OpenLoop::restore(&cluster, &cfg, &state, &mut |idx| {
+                        Ok(jobs[idx].clone())
+                    })
+                    .unwrap();
+                    scratch = SimScratch::default();
+                }
+                lp.advance_to(h, &mut scratch).unwrap();
+            }
+            lp.advance_to(f64::INFINITY, &mut scratch).unwrap();
+            lp.state_json().to_string()
+        };
+
+        let uninterrupted = run(None);
+        for k in 0..ticks.len() {
+            assert_eq!(run(Some(k)), uninterrupted, "kill before tick {k}");
+        }
+    }
+
+    #[test]
+    fn heavier_tenant_wins_deferral_retest() {
+        // Hog admitted at t = 0 drains at t = 4; two deferred jobs
+        // expire at t = 11 when only one fits under the watermark: the
+        // heavier one is retested first and admitted, the lighter one
+        // sheds at its expiry. With equal weights, arrival order wins.
+        let cluster = Cluster::uniform(1);
+        let cfg = OpenConfig { watermark: 5.0, defer_max: 10.0, ..OpenConfig::default() };
+        let mk = |w: i64| {
+            let mut j = one_task_job(1.0, 0, 4.0);
+            j.weight = w;
+            j
+        };
+        let hog = one_task_job(0.0, 0, 4.0);
+
+        let r = run_open(&[hog.clone(), mk(1), mk(1)], &cluster, &cfg).unwrap();
+        assert!(matches!(r.jobs[1].outcome, JobOutcome::Completed { .. }));
+        assert!(matches!(r.jobs[2].outcome, JobOutcome::Rejected { .. }));
+
+        let r = run_open(&[hog, mk(1), mk(5)], &cluster, &cfg).unwrap();
+        assert!(matches!(r.jobs[1].outcome, JobOutcome::Rejected { .. }));
+        assert!(matches!(r.jobs[2].outcome, JobOutcome::Completed { .. }));
+    }
+
+    #[test]
+    fn idle_advance_is_a_noop_and_states_progress() {
+        let cluster = Cluster::uniform(1);
+        let mut scratch = SimScratch::default();
+        let mut lp = OpenLoop::new(&cluster, &OpenConfig::default());
+        assert!(lp.is_idle());
+        lp.advance_to(100.0, &mut scratch).unwrap();
+        // Idle: the clock only tracks processed boundaries.
+        assert_eq!(lp.now(), 0.0);
+        assert_eq!(lp.counters().eras, 0);
+        let i = lp.push(one_task_job(3.0, 0, 1.0));
+        assert_eq!(lp.job_state(i), Some("pending"));
+        lp.advance_to(3.0, &mut scratch).unwrap();
+        assert_eq!(lp.job_state(i), Some("live"));
+        assert_eq!(lp.now(), 3.0);
+        lp.advance_to(f64::INFINITY, &mut scratch).unwrap();
+        assert_eq!(lp.job_state(i), Some("done"));
+        assert_eq!(lp.result(i).unwrap().jct, Some(1.0));
+        assert_eq!(lp.max_finish(), 4.0);
     }
 
     #[test]

@@ -184,7 +184,7 @@ impl Cluster {
             None => Vec::new(),
             Some(Json::Num(n)) => {
                 if !(n.is_finite() && *n >= 0.0 && *n <= 1e6 && n.fract() == 0.0) {
-                    return Err(JsonError::Type("host count (integer 0..=1e6)"));
+                    return Err(JsonError::Type { want: "host count (integer 0..=1e6)", got: "number" });
                 }
                 vec![Host::default(); *n as usize]
             }
@@ -198,7 +198,7 @@ impl Cluster {
                             None => 1.0,
                         };
                         if !(v.is_finite() && v >= 0.0) {
-                            return Err(JsonError::Type("finite non-negative host capacity"));
+                            return Err(JsonError::Type { want: "finite non-negative host capacity", got: "number" });
                         }
                         Ok(v)
                     };

@@ -254,14 +254,14 @@ impl Topology {
         let count = |key: &'static str| -> Result<usize, JsonError> {
             let v = j.get(key)?.as_f64()?;
             if !(v.is_finite() && v >= 1.0 && v <= 1e6 && v.fract() == 0.0) {
-                return Err(JsonError::Type("positive integer count"));
+                return Err(JsonError::Type { want: "positive integer count", got: "number" });
             }
             Ok(v as usize)
         };
         let positive = |key: &'static str| -> Result<f64, JsonError> {
             let v = j.get(key)?.as_f64()?;
             if !(v.is_finite() && v > 0.0) {
-                return Err(JsonError::Type("positive capacity/ratio"));
+                return Err(JsonError::Type { want: "positive capacity/ratio", got: "number" });
             }
             Ok(v)
         };
@@ -277,7 +277,7 @@ impl Topology {
                     Some(s) => match s.as_str()? {
                         "hash" => PathSelect::Hash,
                         "bysrc" => PathSelect::BySrc,
-                        _ => return Err(JsonError::Type("path select (hash|bysrc)")),
+                        _ => return Err(JsonError::Type { want: "path select (hash|bysrc)", got: "string" }),
                     },
                 };
                 Ok(Topology::ParallelFabrics {
@@ -286,7 +286,7 @@ impl Topology {
                     trunk: positive("trunk")?,
                 })
             }
-            _ => Err(JsonError::Type("topology kind")),
+            _ => Err(JsonError::Type { want: "topology kind", got: "string" }),
         }
     }
 }

@@ -1,10 +1,18 @@
 //! Minimal JSON substrate (serde_json is not vendored in this image).
 //!
 //! Supports the full JSON grammar minus exotic number forms; used for the
-//! artifact manifest, workload traces, and CLI experiment dumps.
+//! artifact manifest, workload traces, CLI experiment dumps, and the
+//! `mxdag serve` wire API. Because `serve` feeds *hostile* request bodies
+//! through this parser, it must never panic: malformed UTF-8, truncated
+//! `\uXXXX` escapes, huge numbers and deep nesting all surface as
+//! `JsonError::Parse` (see the `malformed_corpus` test).
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Nesting depth cap: recursive-descent parsing of `[[[[...]]]]` must not
+/// overflow the stack on adversarial input.
+const MAX_DEPTH: usize = 512;
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,7 +30,14 @@ pub enum Json {
 pub enum JsonError {
     Parse(usize, String),
     MissingKey(String),
-    Type(&'static str),
+    Type { want: &'static str, got: &'static str },
+}
+
+impl JsonError {
+    /// Shorthand used by typed accessors across the crate.
+    pub fn type_err(want: &'static str, got: &Json) -> JsonError {
+        JsonError::Type { want, got: got.kind() }
+    }
 }
 
 impl fmt::Display for JsonError {
@@ -30,16 +45,41 @@ impl fmt::Display for JsonError {
         match self {
             JsonError::Parse(at, msg) => write!(f, "parse error at byte {at}: {msg}"),
             JsonError::MissingKey(k) => write!(f, "missing key `{k}`"),
-            JsonError::Type(want) => write!(f, "type mismatch: wanted {want}"),
+            JsonError::Type { want, got } => {
+                write!(f, "type mismatch: wanted {want}, got {got}")
+            }
         }
     }
 }
 
 impl std::error::Error for JsonError {}
 
+/// Bit-exact `f64` serialization for WAL records and snapshots: `Json::Num`
+/// round-trips through decimal text and cannot preserve every bit pattern,
+/// so crash-safe state uses the hex of `f64::to_bits` instead.
+pub fn f64_bits_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_bits_hex`].
+pub fn f64_from_bits_hex(s: &str) -> Result<f64, JsonError> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(JsonError::Parse(0, format!("bad f64 bits `{s}`")));
+    }
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|e| JsonError::Parse(0, format!("bad f64 bits `{s}`: {e}")))?;
+    Ok(f64::from_bits(bits))
+}
+
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        Json::parse_bytes(s.as_bytes())
+    }
+
+    /// Parse from raw bytes (e.g. an HTTP body that may not be UTF-8).
+    /// Non-UTF-8 sequences inside strings are parse errors, not panics.
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, JsonError> {
+        let mut p = Parser { b, i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -49,10 +89,22 @@ impl Json {
         Ok(v)
     }
 
+    /// Human label for this value's variant (used in type-mismatch errors).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
     pub fn as_f64(&self) -> Result<f64, JsonError> {
         match self {
             Json::Num(n) => Ok(*n),
-            _ => Err(JsonError::Type("number")),
+            _ => Err(JsonError::type_err("number", self)),
         }
     }
     pub fn as_usize(&self) -> Result<usize, JsonError> {
@@ -61,25 +113,25 @@ impl Json {
     pub fn as_str(&self) -> Result<&str, JsonError> {
         match self {
             Json::Str(s) => Ok(s),
-            _ => Err(JsonError::Type("string")),
+            _ => Err(JsonError::type_err("string", self)),
         }
     }
     pub fn as_bool(&self) -> Result<bool, JsonError> {
         match self {
             Json::Bool(b) => Ok(*b),
-            _ => Err(JsonError::Type("bool")),
+            _ => Err(JsonError::type_err("bool", self)),
         }
     }
     pub fn as_arr(&self) -> Result<&[Json], JsonError> {
         match self {
             Json::Arr(a) => Ok(a),
-            _ => Err(JsonError::Type("array")),
+            _ => Err(JsonError::type_err("array", self)),
         }
     }
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
         match self {
             Json::Obj(o) => Ok(o),
-            _ => Err(JsonError::Type("object")),
+            _ => Err(JsonError::type_err("object", self)),
         }
     }
     /// `obj["k"]` with a proper error.
@@ -152,6 +204,7 @@ impl fmt::Display for Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -215,10 +268,42 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        s.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|e| JsonError::Parse(start, e.to_string()))
+        // The scanned span is ASCII by construction, but hostile input must
+        // not be able to panic the parser, so no `unwrap` here.
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|e| JsonError::Parse(start, e.to_string()))?;
+        let n: f64 = s
+            .parse()
+            .map_err(|e: std::num::ParseFloatError| JsonError::Parse(start, e.to_string()))?;
+        if !n.is_finite() {
+            return Err(JsonError::Parse(start, format!("number out of range: `{s}`")));
+        }
+        Ok(Json::Num(n))
+    }
+    /// Read exactly four hex digits of a `\uXXXX` escape; `self.i` points at
+    /// the `u`. Truncated or non-hex (including non-UTF-8) bytes are errors.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.i + 5 > self.b.len() {
+            return Err(JsonError::Parse(self.i, "truncated \\u escape".into()));
+        }
+        let mut cp: u32 = 0;
+        for k in 1..=4 {
+            let d = self.b[self.i + k];
+            let v = match d {
+                b'0'..=b'9' => (d - b'0') as u32,
+                b'a'..=b'f' => (d - b'a' + 10) as u32,
+                b'A'..=b'F' => (d - b'A' + 10) as u32,
+                _ => {
+                    return Err(JsonError::Parse(
+                        self.i + k,
+                        "non-hex digit in \\u escape".into(),
+                    ))
+                }
+            };
+            cp = cp << 4 | v;
+        }
+        self.i += 4;
+        Ok(cp)
     }
     fn string(&mut self) -> Result<String, JsonError> {
         self.eat(b'"')?;
@@ -242,37 +327,74 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 5 > self.b.len() {
-                                return Err(JsonError::Parse(self.i, "bad \\u".into()));
+                            let cp = self.hex4()?;
+                            if (0xd800..0xdc00).contains(&cp)
+                                && self.b[self.i + 1..].starts_with(b"\\u")
+                            {
+                                // High surrogate followed by another escape:
+                                // decode the pair per RFC 8259 §7.
+                                let save = self.i;
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                if (0xdc00..0xe000).contains(&lo) {
+                                    let c = 0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
+                                    out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                } else {
+                                    // Not a low surrogate: emit U+FFFD and
+                                    // re-scan the second escape normally.
+                                    self.i = save;
+                                    out.push('\u{fffd}');
+                                }
+                            } else {
+                                // Lone surrogates map to U+FFFD (lenient,
+                                // matching pre-hardening behavior).
+                                out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5]).unwrap();
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|e| JsonError::Parse(self.i, e.to_string()))?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
                         }
                         _ => return Err(JsonError::Parse(self.i, "bad escape".into())),
                     }
                     self.i += 1;
                 }
-                Some(_) => {
-                    // copy a full utf-8 scalar
-                    let s = std::str::from_utf8(&self.b[self.i..])
+                Some(first) => {
+                    if first < 0x20 {
+                        return Err(JsonError::Parse(self.i, "raw control byte in string".into()));
+                    }
+                    // Decode one UTF-8 scalar from its own slice: validating
+                    // only `len` bytes keeps parsing linear and makes invalid
+                    // UTF-8 a local parse error instead of a panic.
+                    let len = match first {
+                        0x00..=0x7f => 1,
+                        0xc2..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        0xf0..=0xf4 => 4,
+                        _ => return Err(JsonError::Parse(self.i, "invalid utf-8 byte".into())),
+                    };
+                    if self.i + len > self.b.len() {
+                        return Err(JsonError::Parse(self.i, "truncated utf-8 sequence".into()));
+                    }
+                    let s = std::str::from_utf8(&self.b[self.i..self.i + len])
                         .map_err(|e| JsonError::Parse(self.i, e.to_string()))?;
-                    let c = s.chars().next().unwrap();
-                    out.push(c);
-                    self.i += c.len_utf8();
+                    out.push_str(s);
+                    self.i += len;
                 }
             }
         }
     }
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(JsonError::Parse(self.i, "nesting too deep".into()));
+        }
+        Ok(())
+    }
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut out = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(out));
         }
         loop {
@@ -284,6 +406,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(out));
                 }
                 _ => return Err(JsonError::Parse(self.i, "expected , or ]".into())),
@@ -292,10 +415,12 @@ impl<'a> Parser<'a> {
     }
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut out = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(out));
         }
         loop {
@@ -312,6 +437,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(out));
                 }
                 _ => return Err(JsonError::Parse(self.i, "expected , or }".into())),
@@ -347,6 +473,17 @@ mod tests {
     fn parse_unicode_escape() {
         let v = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(v, Json::Str("Aé".into()));
+        // \uXXXX escapes, including an astral surrogate pair.
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("\u{1f600}".into())
+        );
+        // Lone surrogate stays lenient: replacement char, not a panic.
+        assert_eq!(
+            Json::parse(r#""\ud83dx""#).unwrap(),
+            Json::Str("\u{fffd}x".into())
+        );
     }
 
     #[test]
@@ -365,6 +502,73 @@ mod tests {
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::Num(1.0).as_str().is_err());
         assert!(Json::obj(vec![]).get("nope").is_err());
+        let e = Json::Num(1.0).as_str().unwrap_err();
+        assert_eq!(e.to_string(), "type mismatch: wanted string, got number");
+    }
+
+    /// Hostile-input corpus: every case must return `Err`, never panic.
+    /// These are exactly the shapes an attacker can put in a request body.
+    #[test]
+    fn malformed_corpus() {
+        let bad: &[&[u8]] = &[
+            // truncated \u escapes (previously panicked via slice/utf8 unwraps)
+            br#""\u"#,
+            br#""\u0"#,
+            br#""\u00"#,
+            br#""\u004"#,
+            br#""\uzzzz""#,
+            b"\"\\u00\xff\xff\"",
+            // non-UTF-8 raw bytes inside and outside strings
+            b"\"\xff\xfe\"",
+            b"\"\xc3\"",        // truncated 2-byte sequence
+            b"\"\xe2\x82\"",    // truncated 3-byte sequence
+            b"\"a\x80b\"",      // bare continuation byte
+            b"\xff",
+            // raw control bytes in strings
+            b"\"a\x00b\"",
+            b"\"a\x1fb\"",
+            // stray / trailing bytes
+            b"nul",
+            b"truex",
+            b"1 2",
+            b"[1,2",
+            b"{\"a\"1}",
+            b"{\"a\":}",
+            b"[,]",
+            b"-",
+            b"1e",
+            b"--1",
+            b".5",
+            b"+1",
+            // huge numbers overflow f64
+            b"1e999",
+            b"-1e999",
+        ];
+        for (k, b) in bad.iter().enumerate() {
+            assert!(
+                Json::parse_bytes(b).is_err(),
+                "corpus case {k} ({:?}) should fail",
+                String::from_utf8_lossy(b)
+            );
+        }
+        // Deep nesting: bounded recursion, clean error past the cap.
+        let deep_ok = format!("{}0{}", "[".repeat(400), "]".repeat(400));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let deep_bad = format!("{}0{}", "[".repeat(4000), "]".repeat(4000));
+        assert!(Json::parse(&deep_bad).is_err());
+        let deep_obj = "{\"k\":".repeat(4000) + "0" + &"}".repeat(4000);
+        assert!(Json::parse(&deep_obj).is_err());
+    }
+
+    #[test]
+    fn f64_bits_roundtrip() {
+        for x in [0.0, -0.0, 1.5, f64::INFINITY, f64::MIN_POSITIVE, 1.0 / 3.0] {
+            let s = f64_bits_hex(x);
+            let y = f64_from_bits_hex(&s).unwrap();
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(f64_from_bits_hex("xyz").is_err());
+        assert!(f64_from_bits_hex("0123").is_err());
     }
 
     #[test]

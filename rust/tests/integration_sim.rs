@@ -181,3 +181,37 @@ fn gates_respected_without_deadlock() {
     .unwrap();
     assert!(r.start_of(f3) >= 2.5 - 1e-9);
 }
+
+/// The CLI documents deadlock => exit 2 and event-limit => exit 3, for
+/// `simulate`, `simulate --open` and `serve` alike.
+/// `SimError::kind_str`/`exit_code` are the single source of that
+/// mapping — this pins both failure classes to their documented codes.
+#[test]
+fn sim_error_kinds_map_to_documented_exit_codes() {
+    use mxdag::sim::SimError;
+    // deadlock: a flow into a dead uplink can never make progress
+    let mut b = MXDag::builder();
+    b.flow("f", 0, 1, 1.0);
+    let g = b.finalize().unwrap();
+    let sim = expand(&g, &Annotations::default());
+    let mut cluster = Cluster::uniform(2);
+    cluster.hosts[0].nic_up = 0.0;
+    let e = simulate(&sim, &cluster, &SimConfig::default()).unwrap_err();
+    assert!(matches!(e, SimError::Deadlock { .. }), "{e}");
+    assert_eq!(e.kind_str(), "deadlock");
+    assert_eq!(e.exit_code(), 2);
+
+    // event limit: a healthy sequential chain, but only one event
+    let mut b = MXDag::builder();
+    let a = b.compute("a", 0, 1.0);
+    let f = b.flow("f", 0, 1, 1.0);
+    let c = b.compute("c", 1, 1.0);
+    b.chain(&[a, f, c]);
+    let g = b.finalize().unwrap();
+    let sim = expand(&g, &Annotations::default());
+    let cfg = SimConfig { max_events: 1, ..SimConfig::default() };
+    let e = simulate(&sim, &Cluster::uniform(2), &cfg).unwrap_err();
+    assert!(matches!(e, SimError::EventLimit(_)), "{e}");
+    assert_eq!(e.kind_str(), "event_limit");
+    assert_eq!(e.exit_code(), 3);
+}

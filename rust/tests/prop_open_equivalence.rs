@@ -111,7 +111,7 @@ fn prop_open_at_t0_is_bitwise_closed() {
             let jobs: Vec<OpenJob> = case
                 .dags
                 .iter()
-                .map(|d| OpenJob { at: 0.0, dag: d.clone(), deadline: None })
+                .map(|d| OpenJob { at: 0.0, dag: d.clone(), deadline: None, weight: 1 })
                 .collect();
             let concat = concat_jobs(&jobs);
             let victim = (case.seed % case.hosts as u64) as usize;
@@ -227,7 +227,7 @@ fn prop_spaced_stream_matches_solo_runs() {
             let mut jobs = Vec::new();
             let mut at = 0.0f64;
             for (d, solo) in case.dags.iter().zip(solos.iter()) {
-                jobs.push(OpenJob { at, dag: d.clone(), deadline: None });
+                jobs.push(OpenJob { at, dag: d.clone(), deadline: None, weight: 1 });
                 at += solo.makespan * 1.5 + 1.0;
             }
             let open = run_open(
@@ -292,7 +292,7 @@ fn prop_contended_stream_is_thread_deterministic() {
                 .dags
                 .iter()
                 .zip(arrivals.iter())
-                .map(|(d, &at)| OpenJob { at, dag: d.clone(), deadline: Some(solo * 4.0) })
+                .map(|(d, &at)| OpenJob { at, dag: d.clone(), deadline: Some(solo * 4.0), weight: 1 })
                 .collect();
             for &corner in MATRIX.iter() {
                 let run_at = |threads: usize| {
@@ -362,7 +362,7 @@ fn one_task_job(at: f64, host: usize, size: f64) -> OpenJob {
         gate: 0.0,
         coflow: None,
     });
-    OpenJob { at, dag: d, deadline: None }
+    OpenJob { at, dag: d, deadline: None, weight: 1 }
 }
 
 /// The bounded-memory satellite: after the scratch has seen a 1k-job

@@ -1,0 +1,265 @@
+//! End-to-end smoke tests for `mxdag serve` over the real TCP surface:
+//! spawn the binary, drive raw HTTP/1.1 through `TcpStream`, SIGTERM
+//! it, and assert a clean drain (exit 0) plus zero lost jobs on
+//! `--resume --check`. These are the same motions CI's serve-smoke job
+//! performs with curl.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use mxdag::mxdag::MXDag;
+use mxdag::util::json::Json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mxdag-http-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A 2-host chain DAG in the submission wire format.
+fn job_body() -> String {
+    let mut b = MXDag::builder();
+    let c = b.compute("c", 0, 0.5);
+    let f = b.flow("f", 0, 1, 0.5);
+    b.dep(c, f);
+    let dag = b.finalize().unwrap().to_json();
+    Json::obj(vec![("dag", dag), ("deadline", Json::Num(60.0))]).to_string()
+}
+
+struct Server {
+    child: Child,
+    addr: String,
+    dir: PathBuf,
+}
+
+impl Server {
+    /// Boot `mxdag serve` on an ephemeral port and wait for the
+    /// addr-file handshake.
+    fn spawn(tag: &str, extra: &[&str]) -> Server {
+        let dir = tmpdir(tag);
+        let addr_file = dir.with_extension("addr");
+        let _ = std::fs::remove_file(&addr_file);
+        let child = Command::new(env!("CARGO_BIN_EXE_mxdag"))
+            .args([
+                "serve",
+                "--dir",
+                dir.to_str().unwrap(),
+                "--addr-file",
+                addr_file.to_str().unwrap(),
+                "--port",
+                "0",
+                "--hosts",
+                "2",
+                "--scheduler",
+                "fair",
+                // 20 virtual seconds per wall second: jobs finish fast
+                "--time-scale",
+                "20",
+                "--tick-ms",
+                "20",
+            ])
+            .args(extra)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn mxdag serve");
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let addr = loop {
+            if let Ok(s) = std::fs::read_to_string(&addr_file) {
+                let s = s.trim().to_string();
+                if !s.is_empty() {
+                    break s;
+                }
+            }
+            assert!(
+                Instant::now() < deadline,
+                "server never wrote its addr file"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        Server { child, addr, dir }
+    }
+
+    /// One HTTP exchange (the server always answers Connection: close).
+    /// Returns (status, body).
+    fn request(&self, raw: &[u8]) -> (u16, String) {
+        let mut s = TcpStream::connect(&self.addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(raw).expect("send request");
+        read_response(&mut s)
+    }
+
+    fn get(&self, path: &str) -> (u16, String) {
+        self.request(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+    }
+
+    fn post(&self, path: &str, body: &str) -> (u16, String) {
+        self.request(
+            format!(
+                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+    }
+
+    /// SIGTERM, then wait (bounded) for the drain to finish.
+    fn terminate(mut self) -> i32 {
+        let ok = Command::new("kill")
+            .arg(self.child.id().to_string())
+            .status()
+            .expect("run kill")
+            .success();
+        assert!(ok, "kill failed");
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Some(st) = self.child.try_wait().expect("try_wait") {
+                return st.code().expect("no exit code (killed by signal?)");
+            }
+            if Instant::now() >= deadline {
+                let _ = self.child.kill();
+                panic!("server did not drain within 30s of SIGTERM");
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+}
+
+fn read_response(s: &mut TcpStream) -> (u16, String) {
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf); // until server-side close
+    let text = String::from_utf8_lossy(&buf).to_string();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|w| w.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text:?}"));
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn submit_poll_drain_resume_roundtrip() {
+    let srv = Server::spawn("roundtrip", &[]);
+
+    let (st, body) = srv.get("/healthz");
+    assert_eq!(st, 200, "healthz: {body}");
+    let h = Json::parse(&body).unwrap();
+    assert_eq!(h.get("draining").unwrap().as_bool().unwrap(), false);
+
+    // submit two jobs; seqs are assigned in order
+    let (st, body) = srv.post("/jobs", &job_body());
+    assert_eq!(st, 202, "submit: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("seq").unwrap().as_f64().unwrap(), 0.0);
+    let (st, _) = srv.post("/jobs", &job_body());
+    assert_eq!(st, 202);
+
+    // poll until job 0 completes (virtual time runs 20x wall)
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (st, body) = srv.get("/jobs/0");
+        assert_eq!(st, 200, "poll: {body}");
+        let j = Json::parse(&body).unwrap();
+        if j.get("state").unwrap().as_str().unwrap() == "done" {
+            assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "completed");
+            assert_eq!(j.get("deadline_met").unwrap().as_bool().unwrap(), true);
+            break;
+        }
+        assert!(Instant::now() < deadline, "job 0 never finished: {body}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let (st, _) = srv.get("/jobs/99");
+    assert_eq!(st, 404);
+    let (st, body) = srv.get("/metrics");
+    assert_eq!(st, 200);
+    assert!(body.contains("http_requests"), "metrics: {body}");
+    let (st, _) = srv.get("/nope");
+    assert_eq!(st, 404);
+    let (st, _) = srv.request(b"DELETE /jobs HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert_eq!(st, 405);
+
+    // graceful drain on SIGTERM: exit 0, nothing lost
+    let dir = srv.dir.clone();
+    assert_eq!(srv.terminate(), 0, "SIGTERM drain must exit 0");
+
+    // resume + check: every submitted job is terminal
+    let out = Command::new(env!("CARGO_BIN_EXE_mxdag"))
+        .args(["serve", "--resume", dir.to_str().unwrap(), "--check"])
+        .output()
+        .expect("run --check");
+    assert!(out.status.success(), "--check failed: {out:?}");
+    let rep = Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(rep.get("jobs").unwrap().as_f64().unwrap(), 2.0);
+    let done = rep
+        .get("states")
+        .unwrap()
+        .get("done")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert_eq!(done, 2.0, "jobs lost across drain+resume: {rep}");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_file(dir.with_extension("addr"));
+}
+
+#[test]
+fn malformed_oversized_and_stalled_requests_never_kill_the_server() {
+    let srv = Server::spawn(
+        "hostile",
+        &["--max-body", "4096", "--read-timeout-ms", "400"],
+    );
+
+    // malformed JSON body → 400, server stays up
+    let (st, _) = srv.post("/jobs", "this is not json");
+    assert_eq!(st, 400);
+    // valid JSON, invalid submission → 400
+    let (st, body) = srv.post("/jobs", "{\"dag\": 12}");
+    assert_eq!(st, 400, "bad dag: {body}");
+    // a DAG naming a host beyond the 2-host cluster → 400
+    let mut b = MXDag::builder();
+    let c = b.compute("c", 0, 1.0);
+    let f = b.flow("f", 0, 7, 1.0);
+    b.dep(c, f);
+    let spec = Json::obj(vec![("dag", b.finalize().unwrap().to_json())]).to_string();
+    let (st, body) = srv.post("/jobs", &spec);
+    assert_eq!(st, 400, "bad host: {body}");
+
+    // oversized: Content-Length above --max-body → 413 without reading
+    let (st, _) = srv.request(
+        b"POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 999999\r\n\r\n",
+    );
+    assert_eq!(st, 413);
+
+    // slow loris: open, send half a request line, stall past the read
+    // timeout → 408
+    let mut s = TcpStream::connect(&srv.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"GET /healthz HT").unwrap();
+    let (st, _) = read_response(&mut s);
+    assert_eq!(st, 408);
+
+    // chunked transfer encoding is unsupported → 501
+    let (st, _) = srv.request(
+        b"POST /jobs HTTP/1.1\r\nHost: x\r\nTransfer-Encoding: chunked\r\n\r\n",
+    );
+    assert_eq!(st, 501);
+
+    // after all that abuse, the server still serves
+    let (st, _) = srv.get("/healthz");
+    assert_eq!(st, 200);
+    let (st, body) = srv.post("/jobs", &job_body());
+    assert_eq!(st, 202, "post-abuse submit: {body}");
+
+    let dir = srv.dir.clone();
+    assert_eq!(srv.terminate(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_file(dir.with_extension("addr"));
+}
